@@ -1,0 +1,219 @@
+"""AOT export: lower every JAX entry point to HLO *text* artifacts.
+
+This is the only place python touches the pipeline; `make artifacts`
+runs it once and the rust binary is self-contained afterwards.
+
+Interchange format is HLO TEXT, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` rust crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (see DESIGN.md §5):
+
+  train_step.hlo.txt      (params, m, v, tokens, step) -> (params', m', v', loss)
+  fwd_loss.hlo.txt        (params, tokens) -> loss
+  router_topk.hlo.txt     (x, w_gate) -> (weights, indices)   [Pallas]
+  expert_ffn_c{C}.hlo.txt (x, w1, w3, w2, mask) -> out        [Pallas]
+                          one per FCDA chunk-capacity bin C
+  params.bin              initial flat f32 parameter vector (raw LE bytes)
+  manifest.json           shapes, dtypes, param layout, config dump
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.expert_ffn import expert_ffn, vmem_bytes, mxu_flops
+from .kernels.router_topk import router_topk
+
+# Coordinator topology: the rust EP demo runs COORD_EP worker threads,
+# each hosting COORD_LOCAL_EXPERTS experts (block layout), with
+# COORD_TOKENS tokens per rank per micro-batch. Drop-free capacity for
+# chunk bin c is ep·tokens·top_k/c — in the worst case every routed
+# copy of a chunk lands on ONE expert, and chunking divides exactly
+# that buffer (paper Eq. 6).
+COORD_EP = 4
+COORD_LOCAL_EXPERTS = 8
+COORD_TOKENS = 512  # tokens per EP rank per micro-batch in the demo
+CHUNK_BINS = [1, 2, 4, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(name, file, inputs, outputs, extra=None):
+    ent = {
+        "name": name,
+        "file": file,
+        "inputs": [{"shape": list(s), "dtype": d} for s, d in inputs],
+        "outputs": [{"shape": list(s), "dtype": d} for s, d in outputs],
+    }
+    if extra:
+        ent.update(extra)
+    return ent
+
+
+def export(out_dir: str, cfg: M.ModelConfig, seed: int = 0,
+           coord_hidden: int | None = None) -> dict:
+    """Lower all entry points and write artifacts. Returns the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "config": {k: getattr(cfg, k) for k in (
+            "vocab", "seq", "d_model", "n_heads", "n_layers",
+            "n_dense_layers", "n_experts", "top_k", "d_ff", "d_ff_dense",
+            "batch", "n_chunks")},
+        "param_count": M.param_count(cfg),
+        "params_file": "params.bin",
+        "param_layout": [
+            {"name": n, "shape": list(s)} for n, s in M.param_shapes(cfg)
+        ],
+        "entries": [],
+    }
+    n = M.param_count(cfg)
+    pvec = _spec((n,))
+    toks = _spec((cfg.batch, cfg.seq), jnp.int32)
+    scalar = _spec(())
+
+    # --- train step -------------------------------------------------------
+    lowered = jax.jit(
+        lambda p, m, v, t, s: M.train_step(cfg, p, m, v, t, s)
+    ).lower(pvec, pvec, pvec, toks, scalar)
+    path = os.path.join(out_dir, "train_step.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["entries"].append(_io_entry(
+        "train_step", "train_step.hlo.txt",
+        inputs=[((n,), "f32"), ((n,), "f32"), ((n,), "f32"),
+                ((cfg.batch, cfg.seq), "i32"), ((), "f32")],
+        outputs=[((n,), "f32"), ((n,), "f32"), ((n,), "f32"), ((), "f32")],
+    ))
+
+    # --- eval loss --------------------------------------------------------
+    lowered = jax.jit(lambda p, t: M.eval_loss(cfg, p, t)).lower(pvec, toks)
+    with open(os.path.join(out_dir, "fwd_loss.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["entries"].append(_io_entry(
+        "fwd_loss", "fwd_loss.hlo.txt",
+        inputs=[((n,), "f32"), ((cfg.batch, cfg.seq), "i32")],
+        outputs=[((), "f32")],
+    ))
+
+    # --- coordinator kernels (Pallas) --------------------------------------
+    # The rust coordinator runs COORD_EP worker ranks, each hosting
+    # COORD_LOCAL_EXPERTS experts; its router and per-chunk expert FFN
+    # are separate executables so the L3 scheduler owns dispatch/combine.
+    h = coord_hidden or cfg.d_model
+    g = cfg.d_ff
+    e_local = COORD_LOCAL_EXPERTS
+    e_global = COORD_EP * COORD_LOCAL_EXPERTS
+    x_r = _spec((COORD_TOKENS, h))
+    wg = _spec((h, e_global))
+    lowered = jax.jit(
+        lambda x, w: router_topk(x, w, cfg.top_k)
+    ).lower(x_r, wg)
+    with open(os.path.join(out_dir, "router_topk.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["entries"].append(_io_entry(
+        "router_topk", "router_topk.hlo.txt",
+        inputs=[((COORD_TOKENS, h), "f32"), ((h, e_global), "f32")],
+        outputs=[((COORD_TOKENS, cfg.top_k), "f32"),
+                 ((COORD_TOKENS, cfg.top_k), "i32")],
+        extra={"top_k": cfg.top_k},
+    ))
+    manifest["coordinator"] = {
+        "ep": COORD_EP,
+        "local_experts": COORD_LOCAL_EXPERTS,
+        "global_experts": e_global,
+        "tokens_per_rank": COORD_TOKENS,
+        "hidden": h,
+        "ffn": g,
+        "top_k": cfg.top_k,
+        "chunk_bins": CHUNK_BINS,
+    }
+
+    kernel_perf = []
+    # 128-token tiles: large enough to amortise grid overhead, small
+    # enough that the per-step VMEM footprint stays well under 16 MiB
+    # at Table-3 dims (see kernels.expert_ffn.vmem_bytes).
+    kernel_tile = 128
+    total_copies = COORD_EP * COORD_TOKENS * cfg.top_k
+    for c_k in CHUNK_BINS:
+        cap = total_copies // c_k
+        name = f"expert_ffn_c{c_k}"
+        lowered = jax.jit(
+            lambda x, w1, w3, w2, mk: expert_ffn(
+                x, w1, w3, w2, mk, token_tile=kernel_tile)
+        ).lower(
+            _spec((e_local, cap, h)), _spec((e_local, h, g)),
+            _spec((e_local, h, g)), _spec((e_local, g, h)),
+            _spec((e_local, cap)),
+        )
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["entries"].append(_io_entry(
+            name, fname,
+            inputs=[((e_local, cap, h), "f32"), ((e_local, h, g), "f32"),
+                    ((e_local, h, g), "f32"), ((e_local, g, h), "f32"),
+                    ((e_local, cap), "f32")],
+            outputs=[((e_local, cap, h), "f32")],
+            extra={"chunk_bin": c_k, "capacity": cap},
+        ))
+        kernel_perf.append({
+            "chunk_bin": c_k,
+            "capacity": cap,
+            "vmem_bytes_per_step": vmem_bytes(kernel_tile, h, g),
+            "mxu_flops_per_expert": mxu_flops(cap, h, g),
+        })
+    manifest["kernel_perf"] = kernel_perf
+
+    # --- initial parameters -------------------------------------------------
+    key = jax.random.PRNGKey(seed)
+    vec = M.flatten(cfg, M.init_params(cfg, key))
+    import numpy as np
+
+    np.asarray(vec, dtype="<f4").tofile(os.path.join(out_dir, "params.bin"))
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--config", default="e2e", choices=["e2e", "tiny"],
+                    help="model config preset")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = M.E2E if args.config == "e2e" else M.TINY
+    manifest = export(args.out, cfg, seed=args.seed)
+    total = sum(
+        os.path.getsize(os.path.join(args.out, e["file"]))
+        for e in manifest["entries"]
+    )
+    print(f"wrote {len(manifest['entries'])} HLO artifacts "
+          f"({total/1e6:.1f} MB text) + params.bin "
+          f"({manifest['param_count']*4/1e6:.1f} MB) to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

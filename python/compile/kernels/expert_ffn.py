@@ -1,0 +1,188 @@
+"""Layer-1 Pallas kernel: chunked grouped SwiGLU expert FFN.
+
+This is the paper's compute hot-spot (the "expert computation" stage of
+dispatch-computation-combine). The FCDA chunk is the unit of invocation:
+one kernel call processes one chunk's worth of gathered tokens, so the
+live activation footprint is bounded by the chunk capacity C — the same
+memory bound MemFine establishes on GPU, expressed here as a Pallas
+BlockSpec schedule.
+
+Hardware adaptation (paper targets GPU, we target the TPU model — see
+DESIGN.md §Hardware-Adaptation):
+
+  * GPU threadblock over (expert, token tile)  →  Pallas grid (E, C/Tc)
+  * shared-memory staging of A/B tiles         →  BlockSpec HBM→VMEM
+    blocks: x tile (Tc, H), per-expert weights (H, G)/(G, H)
+  * epilogue fusion of SiLU·up into the second GEMM's producer →
+    single kernel body computing w2 @ (silu(x·w1) * (x·w3))
+
+VMEM footprint per grid step (fp32 words):
+    Tc·H (x) + 2·H·G (w1,w3) + G·H (w2) + Tc·G (act scratch) + Tc·H (out)
+which is independent of the total token count — only the tile and model
+dims matter. The rust `perf` module uses the same formula for the
+MXU-utilisation estimate recorded in EXPERIMENTS.md §Perf.
+
+Kernels are lowered with interpret=True: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the
+rust runtime executes directly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default token-tile. 8 divides every chunk capacity the AOT pipeline
+# emits (bins × tokens are powers of two) and keeps the VMEM estimate
+# comfortably under 16 MiB for the Table-3 dims.
+DEFAULT_TOKEN_TILE = 8
+
+
+def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, mask_ref, o_ref):
+    """One (expert, token-tile) grid step of the grouped SwiGLU FFN.
+
+    Refs carry the BlockSpec-selected tiles:
+      x_ref:    (1, Tc, H)   token tile for this expert
+      w1_ref:   (1, H, G)    gate projection of this expert
+      w3_ref:   (1, H, G)    up projection
+      w2_ref:   (1, G, H)    down projection
+      mask_ref: (1, Tc)      validity of each token slot
+      o_ref:    (1, Tc, H)   output tile
+    """
+    x = x_ref[0]  # (Tc, H)
+    w1 = w1_ref[0]  # (H, G)
+    w3 = w3_ref[0]
+    w2 = w2_ref[0]  # (G, H)
+    mask = mask_ref[0]  # (Tc,)
+
+    # Fused SwiGLU epilogue: both GEMMs hit the MXU; silu/mul are VPU ops
+    # on the (Tc, G) tile that never round-trips to HBM.
+    gate = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    up = jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    act = (gate * jax.lax.logistic(gate)) * up
+    out = jnp.dot(act.astype(x.dtype), w2, preferred_element_type=jnp.float32)
+    out = out * mask[:, None].astype(out.dtype)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile",))
+def expert_ffn(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w3: jnp.ndarray,
+    w2: jnp.ndarray,
+    mask: jnp.ndarray,
+    token_tile: int = DEFAULT_TOKEN_TILE,
+) -> jnp.ndarray:
+    """Chunked grouped expert FFN via Pallas.
+
+    Args:
+      x:    (E, C, H) tokens gathered per local expert (one FCDA chunk).
+      w1:   (E, H, G) gate projections.
+      w3:   (E, H, G) up projections.
+      w2:   (E, G, H) down projections.
+      mask: (E, C) slot validity (1.0 real token / 0.0 padding).
+      token_tile: Tc, the per-grid-step token count; must divide C.
+
+    Returns:
+      (E, C, H) expert outputs, zero at padded slots. Matches
+      ref.expert_ffn_ref to float tolerance (pytest invariant).
+    """
+    e, c, h = x.shape
+    g = w1.shape[2]
+    if c % token_tile != 0:
+        raise ValueError(f"chunk capacity {c} not divisible by tile {token_tile}")
+    grid = (e, c // token_tile)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, token_tile, h), lambda ei, ti: (ei, ti, 0)),
+            pl.BlockSpec((1, h, g), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, h, g), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, g, h), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, token_tile), lambda ei, ti: (ei, ti)),
+        ],
+        out_specs=pl.BlockSpec((1, token_tile, h), lambda ei, ti: (ei, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, h), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2, mask)
+
+
+def vmem_bytes(token_tile: int, h: int, g: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (used by EXPERIMENTS §Perf
+    and mirrored by rust perf::kernel_vmem_bytes)."""
+    words = (
+        token_tile * h  # x tile
+        + 2 * h * g  # w1 + w3
+        + g * h  # w2
+        + 2 * token_tile * g  # gate/up scratch
+        + token_tile * h  # out tile
+    )
+    return words * dtype_bytes
+
+
+def mxu_flops(c: int, h: int, g: int) -> int:
+    """MAC-pair flops of one expert's chunk: 3 GEMMs (gate, up, down)."""
+    return 2 * c * h * g * 3
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward + chunked-recompute backward.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_expert_ffn_ad(token_tile: int):
+    """Build a custom-VJP expert FFN for a given token tile.
+
+    The VJP embodies the paper's chunked recomputation (Eq. 7): the
+    forward stores ONLY the kernel inputs (the chunk boundary), and the
+    backward re-runs the forward math to rebuild intermediates before
+    differentiating. No (E, C, G) activations survive the forward pass.
+    """
+
+    @jax.custom_vjp
+    def fn(x, w1, w3, w2, mask):
+        return expert_ffn(x, w1, w3, w2, mask, token_tile=token_tile)
+
+    def fwd(x, w1, w3, w2, mask):
+        out = expert_ffn(x, w1, w3, w2, mask, token_tile=token_tile)
+        # Residuals = chunk inputs only: this IS the memory saving.
+        # Storing gate/up activations would cost 2·E·C·G extra words.
+        return out, (x, w1, w3, w2, mask)
+
+    def bwd(res, g_out):
+        x, w1, w3, w2, mask = res
+        # Chunked recomputation: rebuild intermediates through the
+        # reference formulas (identical math) and differentiate those.
+        def f(x_, w1_, w3_, w2_):
+            return ref.expert_ffn_ref(x_, w1_, w3_, w2_, mask)
+
+        _, vjp = jax.vjp(f, x, w1, w3, w2)
+        gx, gw1, gw3, gw2 = vjp(g_out)
+        return gx, gw1, gw3, gw2, None
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def expert_ffn_ad(x, w1, w3, w2, mask, token_tile: int | None = None):
+    """Differentiable chunked expert FFN (Pallas fwd, recompute bwd).
+
+    token_tile defaults to the largest power-of-two tile ≤ 128 that
+    divides the chunk capacity — large tiles amortise grid overhead on
+    CPU while staying inside the VMEM budget on TPU (see vmem_bytes).
+    """
+    c = x.shape[1]
+    if token_tile is None:
+        token_tile = 8
+        while token_tile < 128 and c % (token_tile * 2) == 0:
+            token_tile *= 2
+        if c % token_tile != 0:
+            token_tile = 1
+    return _make_expert_ffn_ad(token_tile)(x, w1, w3, w2, mask)

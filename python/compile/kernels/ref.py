@@ -1,0 +1,207 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package must match its oracle to float tolerance under pytest (see
+python/tests/test_kernels.py). They are also used directly by the L2
+model's backward pass (chunked recomputation recomputes through these
+same formulas).
+
+Shapes follow the grouped-expert layout used throughout MemFine:
+
+  x        : (E, C, H)  tokens pre-gathered per local expert, padded to
+                         the FCDA chunk capacity C
+  w1, w3   : (E, H, G)  SwiGLU up/gate projections per expert
+  w2       : (E, G, H)  down projection per expert
+  mask     : (E, C)     1.0 for real tokens, 0.0 for padding slots
+
+The FCDA chunk capacity C is the memory knob: drop-free routing means a
+single expert may receive every token of the chunk, so C equals the
+chunk's token count. Splitting a batch into c chunks divides C — and
+with it the activation footprint — by c (paper Eq. 6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x: jnp.ndarray) -> jnp.ndarray:
+    """SiLU / swish activation, x * sigmoid(x)."""
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn_ref(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w3: jnp.ndarray,
+    w2: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Grouped SwiGLU expert FFN: w2 @ (silu(x@w1) * (x@w3)) per expert.
+
+    Args:
+      x:    (E, C, H) gathered tokens per expert.
+      w1:   (E, H, G) gate projection.
+      w3:   (E, H, G) up projection.
+      w2:   (E, G, H) down projection.
+      mask: optional (E, C); padded slots are zeroed in the output.
+
+    Returns:
+      (E, C, H) expert outputs.
+    """
+    gate = jnp.einsum("ech,ehg->ecg", x, w1)
+    up = jnp.einsum("ech,ehg->ecg", x, w3)
+    act = silu(gate) * up
+    out = jnp.einsum("ecg,egh->ech", act, w2)
+    if mask is not None:
+        out = out * mask[..., None].astype(out.dtype)
+    return out
+
+
+def router_topk_ref(
+    x: jnp.ndarray, w_gate: jnp.ndarray, top_k: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop-free top-k router: softmax gate, pick top_k experts per token.
+
+    Ties are broken toward the lower expert index (matches the Pallas
+    kernel's iterative argmax, and jnp.argmax semantics).
+
+    Args:
+      x:      (T, H) token activations.
+      w_gate: (H, E) gating projection.
+      top_k:  number of experts per token.
+
+    Returns:
+      weights: (T, top_k) renormalised routing weights (sum to 1).
+      indices: (T, top_k) int32 expert ids, ordered by descending score.
+    """
+    logits = x @ w_gate  # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    idxs = []
+    vals = []
+    remaining = probs
+    for _ in range(top_k):
+        i = jnp.argmax(remaining, axis=-1)
+        v = jnp.take_along_axis(remaining, i[:, None], axis=-1)[:, 0]
+        idxs.append(i.astype(jnp.int32))
+        vals.append(v)
+        remaining = remaining.at[jnp.arange(remaining.shape[0]), i].set(-jnp.inf)
+    indices = jnp.stack(idxs, axis=-1)
+    weights = jnp.stack(vals, axis=-1)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights.astype(x.dtype), indices
+
+
+def dispatch_ref(
+    x: jnp.ndarray, indices: jnp.ndarray, n_experts: int, capacity: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Gather tokens into the (E, C, H) grouped layout (drop-free).
+
+    Slot assignment is first-come-first-served in token order, matching
+    the rust coordinator's dispatch planner. With capacity == T * top_k
+    (worst case) nothing can overflow; smaller capacities surface as -1
+    positions so tests can check drop-free-ness.
+
+    Returns:
+      gathered: (E, C, H)
+      slot_mask: (E, C) 1.0 where a real token landed
+      positions: (T, top_k) int32 flat slot id (e * C + slot), or -1 if
+                 the token overflowed (only possible when C < demand).
+    """
+    t, h = x.shape
+    top_k = indices.shape[1]
+
+    def body(carry, tk):
+        counts, gathered, slot_mask, positions = carry
+        tok, k = tk // top_k, tk % top_k
+        e = indices[tok, k]
+        slot = counts[e]
+        ok = slot < capacity
+        pos = jnp.where(ok, e * capacity + slot, -1)
+        slot_c = jnp.minimum(slot, capacity - 1)
+        # Only write when the slot is fresh (ok); padding slots stay zero.
+        contrib = jnp.where(ok, 1.0, 0.0).astype(x.dtype)
+        gathered = gathered.at[e, slot_c].add(contrib * x[tok])
+        slot_mask = slot_mask.at[e, slot_c].max(jnp.where(ok, 1.0, 0.0))
+        counts = counts.at[e].add(jnp.where(ok, 1, 0))
+        positions = positions.at[tok, k].set(pos)
+        return (counts, gathered, slot_mask, positions), None
+
+    counts0 = jnp.zeros((n_experts,), jnp.int32)
+    gathered0 = jnp.zeros((n_experts, capacity, h), x.dtype)
+    mask0 = jnp.zeros((n_experts, capacity), jnp.float32)
+    pos0 = jnp.full((t, top_k), -1, jnp.int32)
+    (counts, gathered, slot_mask, positions), _ = jax.lax.scan(
+        body, (counts0, gathered0, mask0, pos0), jnp.arange(t * top_k)
+    )
+    del counts
+    return gathered, slot_mask, positions
+
+
+def combine_ref(
+    expert_out: jnp.ndarray,
+    positions: jnp.ndarray,
+    weights: jnp.ndarray,
+) -> jnp.ndarray:
+    """Inverse of dispatch: weighted gather back to token order.
+
+    Args:
+      expert_out: (E, C, H) expert FFN outputs.
+      positions:  (T, top_k) flat slot ids from dispatch_ref (-1 = dropped).
+      weights:    (T, top_k) routing weights.
+
+    Returns:
+      (T, H) combined output.
+    """
+    e, c, h = expert_out.shape
+    flat = expert_out.reshape(e * c, h)
+    safe_pos = jnp.maximum(positions, 0)
+    picked = flat[safe_pos]  # (T, top_k, H)
+    valid = (positions >= 0).astype(picked.dtype)[..., None]
+    w = weights[..., None].astype(picked.dtype)
+    return jnp.sum(picked * w * valid, axis=1)
+
+
+def moe_layer_ref(
+    x: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w1: jnp.ndarray,
+    w3: jnp.ndarray,
+    w2: jnp.ndarray,
+    top_k: int,
+    capacity: int | None = None,
+) -> jnp.ndarray:
+    """Full drop-free MoE layer on a flat token batch: route, dispatch,
+    expert FFN, combine. Capacity defaults to the drop-free worst case
+    (every routed copy lands on one expert)."""
+    t = x.shape[0]
+    n_experts = w_gate.shape[1]
+    if capacity is None:
+        capacity = t * top_k
+    weights, indices = router_topk_ref(x, w_gate, top_k)
+    gathered, slot_mask, positions = dispatch_ref(x, indices, n_experts, capacity)
+    out = expert_ffn_ref(gathered, w1, w3, w2, slot_mask)
+    return combine_ref(out, positions, weights)
+
+
+def moe_layer_chunked_ref(
+    x: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    w1: jnp.ndarray,
+    w3: jnp.ndarray,
+    w2: jnp.ndarray,
+    top_k: int,
+    n_chunks: int,
+) -> jnp.ndarray:
+    """FCDA forward (paper Eq. 6): split tokens into n_chunks, run
+    dispatch-compute-combine per chunk, concat. Must equal moe_layer_ref
+    exactly (routing is per-token, so chunking is semantically invisible)
+    — this equivalence is a pytest invariant."""
+    t = x.shape[0]
+    assert t % n_chunks == 0, "chunk split must be exact"
+    outs = [
+        moe_layer_ref(xc, w_gate, w1, w3, w2, top_k)
+        for xc in jnp.split(x, n_chunks, axis=0)
+    ]
+    return jnp.concatenate(outs, axis=0)

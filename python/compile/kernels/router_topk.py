@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernel: drop-free top-k softmax router.
+
+The gating network of the MoE layer: per token, softmax over expert
+logits, then iterative argmax selection of the top-k experts with
+renormalised weights. Unrestricted (no capacity factor) — the whole
+point of MemFine is to keep routing drop-free and tame memory elsewhere.
+
+Grid: one step per token tile. The (H, E) gating matrix is small enough
+to live in VMEM for every step; the iterative top-k loop is unrolled
+k times (k ≤ 8 in all paper configs).
+
+interpret=True for the CPU PJRT path, as everywhere in this repo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TOKEN_TILE = 32
+
+
+def _router_kernel(top_k, x_ref, wg_ref, w_ref, i_ref):
+    """One token-tile grid step.
+
+    x_ref:  (Tc, H) token tile
+    wg_ref: (H, E) gating matrix
+    w_ref:  (Tc, K) out: renormalised top-k weights
+    i_ref:  (Tc, K) out: int32 expert indices
+    """
+    x = x_ref[...]
+    wg = wg_ref[...]
+    logits = jnp.dot(x, wg, preferred_element_type=jnp.float32)  # (Tc, E)
+    # Numerically-stable softmax on the tile.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    ex = jnp.exp(logits - m)
+    probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
+
+    tc, e = probs.shape
+    remaining = probs
+    idxs = []
+    vals = []
+    col = jax.lax.broadcasted_iota(jnp.int32, (tc, e), 1)
+    for _ in range(top_k):
+        i = jnp.argmax(remaining, axis=-1).astype(jnp.int32)  # (Tc,)
+        v = jnp.max(remaining, axis=-1)
+        idxs.append(i)
+        vals.append(v)
+        hit = col == i[:, None]
+        remaining = jnp.where(hit, -jnp.inf, remaining)
+    indices = jnp.stack(idxs, axis=-1)  # (Tc, K)
+    weights = jnp.stack(vals, axis=-1)  # (Tc, K)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    w_ref[...] = weights.astype(w_ref.dtype)
+    i_ref[...] = indices
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "token_tile"))
+def router_topk(
+    x: jnp.ndarray,
+    w_gate: jnp.ndarray,
+    top_k: int,
+    token_tile: int = DEFAULT_TOKEN_TILE,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pallas drop-free top-k router.
+
+    Args:
+      x:      (T, H) token activations; T must be divisible by token_tile.
+      w_gate: (H, E) gating projection.
+      top_k:  experts per token (static).
+
+    Returns:
+      (weights (T, top_k), indices (T, top_k) int32); matches
+      ref.router_topk_ref (pytest invariant, ties → lower index).
+    """
+    t, h = x.shape
+    e = w_gate.shape[1]
+    if t % token_tile != 0:
+        raise ValueError(f"token count {t} not divisible by tile {token_tile}")
+    grid = (t // token_tile,)
+    kernel = functools.partial(_router_kernel, top_k)
+    weights, indices = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, h), lambda ti: (ti, 0)),
+            pl.BlockSpec((h, e), lambda ti: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((token_tile, top_k), lambda ti: (ti, 0)),
+            pl.BlockSpec((token_tile, top_k), lambda ti: (ti, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, top_k), x.dtype),
+            jax.ShapeDtypeStruct((t, top_k), jnp.int32),
+        ],
+        interpret=True,
+    )(x, w_gate)
+    return weights, indices

@@ -1,0 +1,305 @@
+"""Layer-2: the MoE transformer in JAX (build-time only).
+
+Defines the model whose train step is AOT-lowered to HLO text and driven
+from the rust coordinator (examples/train_moe.rs). The MoE layer uses the
+Layer-1 Pallas kernels through `expert_ffn_ad`, whose custom VJP performs
+the paper's *chunked recomputation* (Eq. 7): forward stores only chunk
+inputs, backward re-runs the expert math per chunk.
+
+FCDA appears here as `n_chunks`: the flat token batch is split into
+n_chunks chunks and each chunk flows through router→dispatch→expert→
+combine independently (Eq. 6). Chunked and unchunked forward are
+identical in exact arithmetic (routing is per-token) — pytest checks
+this equivalence to float tolerance.
+
+For differentiability the training path evaluates experts densely
+(every token through every expert, combined with the sparse router
+weights, zero weight ⇒ zero contribution — numerically identical to
+sparse dispatch). The *sparse* dispatch path lives in the rust
+coordinator, which is the component the paper actually contributes; the
+rust side drives the same per-chunk expert kernel artifact.
+
+Parameters travel as ONE flat f32 vector across the rust boundary, so
+the train-step executable has a tiny, stable signature:
+    (params, m, v, tokens, step) -> (params', m', v', loss)
+The slice layout is recorded in artifacts/manifest.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.expert_ffn import expert_ffn_ad
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Mini-DeepSeek-style MoE transformer configuration.
+
+    Mirrors the paper's Table 1 notation where applicable: L layers of
+    which the first `n_dense_layers` use a dense FFN (paper's d_l), the
+    rest MoE with `n_experts` experts, top_k routing, expert intermediate
+    size g_e = d_ff.
+    """
+
+    vocab: int = 8192
+    seq: int = 128
+    d_model: int = 256
+    n_heads: int = 4
+    n_layers: int = 4
+    n_dense_layers: int = 1
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff: int = 512  # expert intermediate (g_e)
+    d_ff_dense: int = 1024  # dense-layer intermediate (g_d)
+    batch: int = 4
+    n_chunks: int = 2  # FCDA chunk count used in the exported train step
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def tokens_per_batch(self) -> int:
+        return self.batch * self.seq
+
+
+TINY = ModelConfig(
+    vocab=512, seq=32, d_model=64, n_heads=2, n_layers=2, n_dense_layers=1,
+    n_experts=4, top_k=2, d_ff=128, d_ff_dense=256, batch=2, n_chunks=2,
+)
+
+# The E2E config for examples/train_moe.rs: ~20M params. (The brief asks
+# ~100M; this box has a single CPU core — documented in EXPERIMENTS.md.)
+E2E = ModelConfig()
+
+
+# ---------------------------------------------------------------------------
+# Parameter pytree <-> flat vector
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) table — the single source of truth for the
+    flat-vector layout shared with rust via manifest.json."""
+    shapes: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        shapes += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+        ]
+        if i < cfg.n_dense_layers:
+            shapes += [
+                (p + "ffn_w1", (cfg.d_model, cfg.d_ff_dense)),
+                (p + "ffn_w3", (cfg.d_model, cfg.d_ff_dense)),
+                (p + "ffn_w2", (cfg.d_ff_dense, cfg.d_model)),
+            ]
+        else:
+            shapes += [
+                (p + "gate", (cfg.d_model, cfg.n_experts)),
+                (p + "moe_w1", (cfg.n_experts, cfg.d_model, cfg.d_ff)),
+                (p + "moe_w3", (cfg.n_experts, cfg.d_model, cfg.d_ff)),
+                (p + "moe_w2", (cfg.n_experts, cfg.d_ff, cfg.d_model)),
+            ]
+    shapes += [
+        ("ln_f", (cfg.d_model,)),
+        ("head", (cfg.d_model, cfg.vocab)),
+    ]
+    return shapes
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_shapes(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def unflatten(cfg: ModelConfig, vec: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """Slice the flat parameter vector back into the named pytree."""
+    params = {}
+    off = 0
+    for name, shape in param_shapes(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        params[name] = vec[off : off + n].reshape(shape)
+        off += n
+    assert off == vec.shape[0], (off, vec.shape)
+    return params
+
+
+def flatten(cfg: ModelConfig, params: dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_shapes(cfg)]
+    )
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jnp.ndarray]:
+    """Scaled-normal init; norm gains start at 1."""
+    params = {}
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            params[name] = (jax.random.normal(sub, shape) * scale).astype(
+                jnp.float32
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Model blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def attention(p: dict[str, jnp.ndarray], prefix: str, x: jnp.ndarray,
+              n_heads: int) -> jnp.ndarray:
+    """Causal multi-head attention over (B, S, D)."""
+    b, s, d = x.shape
+    hd = d // n_heads
+
+    def proj(w):
+        return (x @ w).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q = proj(p[prefix + "wq"])
+    k = proj(p[prefix + "wk"])
+    v = proj(p[prefix + "wv"])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal, scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ p[prefix + "wo"]
+
+
+def dense_ffn(p: dict[str, jnp.ndarray], prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+    gate = x @ p[prefix + "ffn_w1"]
+    up = x @ p[prefix + "ffn_w3"]
+    return (ref.silu(gate) * up) @ p[prefix + "ffn_w2"]
+
+
+def moe_ffn_chunk(p: dict[str, jnp.ndarray], prefix: str, xc: jnp.ndarray,
+                  cfg: ModelConfig) -> jnp.ndarray:
+    """One FCDA chunk through the MoE layer (dense differentiable eval).
+
+    xc: (Tc, D) chunk of flat tokens. Every token is evaluated by every
+    expert via the Pallas kernel (chunked-recompute VJP) and combined
+    with the sparse top-k router weights — numerically identical to
+    sparse drop-free dispatch.
+    """
+    tc, d = xc.shape
+    e = cfg.n_experts
+    weights, indices = ref.router_topk_ref(xc, p[prefix + "gate"], cfg.top_k)
+    # Dense (T, E) combine matrix from the sparse top-k selection.
+    onehot = jax.nn.one_hot(indices, e, dtype=xc.dtype)  # (Tc, K, E)
+    w_dense = jnp.einsum("tk,tke->te", weights, onehot)  # (Tc, E)
+    # Every expert sees the full chunk: (E, Tc, D).
+    x_tiled = jnp.broadcast_to(xc[None], (e, tc, d))
+    mask = jnp.ones((e, tc), jnp.float32)
+    out = expert_ffn_ad(
+        x_tiled, p[prefix + "moe_w1"], p[prefix + "moe_w3"],
+        p[prefix + "moe_w2"], mask,
+    )  # (E, Tc, D)
+    return jnp.einsum("etd,te->td", out, w_dense)
+
+
+def moe_ffn(p: dict[str, jnp.ndarray], prefix: str, x: jnp.ndarray,
+            cfg: ModelConfig) -> jnp.ndarray:
+    """FCDA forward over the flat token batch (paper Eq. 6): split into
+    cfg.n_chunks chunks, process each sequentially, concatenate."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    n_chunks = cfg.n_chunks
+    assert (b * s) % n_chunks == 0
+    outs = [
+        moe_ffn_chunk(p, prefix, xc, cfg)
+        for xc in jnp.split(flat, n_chunks, axis=0)
+    ]
+    return jnp.concatenate(outs, axis=0).reshape(b, s, d)
+
+
+def forward(cfg: ModelConfig, p: dict[str, jnp.ndarray],
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """Logits for next-token prediction. tokens: (B, S) int32."""
+    x = p["embed"][tokens] + p["pos_embed"][None, :, :]
+    for i in range(cfg.n_layers):
+        pref = f"layer{i}."
+        x = x + attention(p, pref, rmsnorm(x, p[pref + "ln1"]), cfg.n_heads)
+        h = rmsnorm(x, p[pref + "ln2"])
+        if i < cfg.n_dense_layers:
+            x = x + dense_ffn(p, pref, h)
+        else:
+            x = x + moe_ffn(p, pref, h, cfg)
+    x = rmsnorm(x, p["ln_f"])
+    return x @ p["head"]
+
+
+def loss_fn(cfg: ModelConfig, p: dict[str, jnp.ndarray],
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy over (B, S-1) positions."""
+    logits = forward(cfg, p, tokens)  # (B, S, V)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Train step (Adam) over the flat parameter vector
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def train_step(cfg: ModelConfig, params: jnp.ndarray, m: jnp.ndarray,
+               v: jnp.ndarray, tokens: jnp.ndarray, step: jnp.ndarray,
+               lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+               eps: float = 1e-8) -> tuple[jnp.ndarray, ...]:
+    """One Adam step. All state is flat f32; `step` is a float scalar
+    (1-based) used for bias correction. Returns (params', m', v', loss).
+
+    Gradients are taken w.r.t. the *pytree* and flattened afterwards:
+    differentiating through the unflatten slices makes XLA build a
+    scatter-shaped cotangent per slice and runs ~3× slower (measured
+    4.1 s vs 1.4 s per step on the E2E config — EXPERIMENTS.md §Perf).
+    """
+    tree = unflatten(cfg, params)
+    loss, grad_tree = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens)
+    )(tree)
+    grad = flatten(cfg, grad_tree)
+    m2 = b1 * m + (1 - b1) * grad
+    v2 = b2 * v + (1 - b2) * jnp.square(grad)
+    mhat = m2 / (1 - b1**step)
+    vhat = v2 / (1 - b2**step)
+    new_params = params - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_params, m2, v2, loss
+
+
+def eval_loss(cfg: ModelConfig, params: jnp.ndarray,
+              tokens: jnp.ndarray) -> jnp.ndarray:
+    """Loss without update (exported as the fwd_loss artifact)."""
+    return loss_fn(cfg, unflatten(cfg, params), tokens)

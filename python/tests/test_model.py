@@ -1,0 +1,114 @@
+"""L2 model correctness: shapes, chunk equivalence, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jax.random.randint(
+        jax.random.PRNGKey(1), (CFG.batch, CFG.seq), 0, CFG.vocab)
+
+
+class TestParams:
+    def test_flatten_roundtrip(self, params):
+        vec = M.flatten(CFG, params)
+        back = M.unflatten(CFG, vec)
+        assert set(back) == set(params)
+        for k in params:
+            np.testing.assert_array_equal(params[k], back[k])
+
+    def test_param_count_matches_vector(self, params):
+        assert M.flatten(CFG, params).shape[0] == M.param_count(CFG)
+
+    def test_layer_structure(self):
+        names = [n for n, _ in M.param_shapes(CFG)]
+        # first n_dense_layers use dense FFN, rest MoE
+        assert "layer0.ffn_w1" in names and "layer0.gate" not in names
+        assert "layer1.gate" in names and "layer1.ffn_w1" not in names
+
+    def test_norm_gains_init_to_one(self, params):
+        assert np.all(np.asarray(params["layer0.ln1"]) == 1.0)
+
+    def test_e2e_param_count_in_target_band(self):
+        # examples/train_moe.rs trains this; keep it in the documented band
+        n = M.param_count(M.E2E)
+        assert 10_000_000 < n < 60_000_000
+
+
+class TestForward:
+    def test_logits_shape(self, params, tokens):
+        logits = M.forward(CFG, params, tokens)
+        assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+
+    def test_loss_finite_positive(self, params, tokens):
+        loss = M.loss_fn(CFG, params, tokens)
+        assert np.isfinite(float(loss)) and float(loss) > 0
+
+    def test_initial_loss_near_uniform(self, params, tokens):
+        """Random init ⇒ loss ≈ ln(vocab)."""
+        loss = float(M.loss_fn(CFG, params, tokens))
+        assert abs(loss - np.log(CFG.vocab)) < 1.5
+
+    def test_causality(self, params):
+        """Changing a future token must not affect earlier logits."""
+        t1 = jnp.zeros((1, CFG.seq), jnp.int32)
+        t2 = t1.at[0, -1].set(5)
+        l1 = M.forward(CFG, params, t1)
+        l2 = M.forward(CFG, params, t2)
+        np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("n_chunks", [1, 2, 4])
+    def test_fcda_chunk_equivalence(self, params, tokens, n_chunks):
+        """Paper Eq. 6: the chunk count must not change the math."""
+        import dataclasses
+        cfg_c = dataclasses.replace(CFG, n_chunks=n_chunks)
+        base = M.forward(CFG, params, tokens)
+        out = M.forward(cfg_c, params, tokens)
+        np.testing.assert_allclose(out, base, rtol=5e-4, atol=5e-5)
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, params, tokens):
+        vec = M.flatten(CFG, params)
+        m = jnp.zeros_like(vec)
+        v = jnp.zeros_like(vec)
+        losses = []
+        for i in range(8):
+            vec, m, v, loss = M.train_step(CFG, vec, m, v, tokens,
+                                           jnp.float32(i + 1))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5, losses
+
+    def test_state_shapes_preserved(self, params, tokens):
+        vec = M.flatten(CFG, params)
+        z = jnp.zeros_like(vec)
+        out = M.train_step(CFG, vec, z, z, tokens, jnp.float32(1.0))
+        assert out[0].shape == vec.shape
+        assert out[1].shape == vec.shape
+        assert out[2].shape == vec.shape
+        assert out[3].shape == ()
+
+    def test_eval_loss_matches_loss_fn(self, params, tokens):
+        vec = M.flatten(CFG, params)
+        np.testing.assert_allclose(
+            float(M.eval_loss(CFG, vec, tokens)),
+            float(M.loss_fn(CFG, params, tokens)), rtol=1e-6)
+
+    def test_deterministic(self, params, tokens):
+        vec = M.flatten(CFG, params)
+        z = jnp.zeros_like(vec)
+        a = M.train_step(CFG, vec, z, z, tokens, jnp.float32(1.0))
+        b = M.train_step(CFG, vec, z, z, tokens, jnp.float32(1.0))
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))

@@ -1,0 +1,28 @@
+//! `cargo bench --bench fig2_distribution` — regenerates Fig. 2 (tokens
+//! received per MoE layer at iteration 7, Model I) and times the
+//! routing path that produces it.
+
+use memfine::bench::{fmt_time, time_fn};
+use memfine::config::{model_i, paper_parallel};
+use memfine::router::GatingSim;
+use memfine::sim::repro;
+
+fn main() {
+    memfine::logging::init();
+    repro::fig2(7, 7).expect("fig2 repro");
+
+    let sim = GatingSim::new(model_i(), paper_parallel(), 7);
+    let t = time_fn("route one (iteration, layer)", 3, 20, || {
+        sim.route(7, 15).max_received()
+    });
+    println!(
+        "\n[bench] {}: median {} ({:.0} routes/s)",
+        t.name,
+        fmt_time(t.median_s),
+        t.per_sec()
+    );
+    let t = time_fn("full 16-layer iteration profile", 1, 10, || {
+        sim.iteration_profile(7).len()
+    });
+    println!("[bench] {}: median {}", t.name, fmt_time(t.median_s));
+}

@@ -1,0 +1,26 @@
+//! `cargo bench --bench fig4_throughput` — regenerates Fig. 4 (TGS per
+//! iteration, 3 methods × 2 models) with the headline deltas
+//! (paper Model II: M3 +4.42 % vs M1, M2 −5.40 % vs M1; Model I:
+//! M3 +18.26 % vs M2, M1 OOM), and times the per-iteration simulation.
+
+use memfine::bench::{fmt_time, time_fn};
+use memfine::config::{model_ii, paper_run, Method};
+use memfine::sim::{repro, Simulator};
+
+fn main() {
+    memfine::logging::init();
+    repro::fig4(7, 25).expect("fig4 repro");
+
+    let mut run = paper_run(model_ii(), Method::Mact(vec![1, 2, 4, 8]));
+    run.iterations = 1;
+    let sim = Simulator::new(run).unwrap();
+    let t = time_fn("simulate one iteration (model II, MACT)", 2, 20, || {
+        sim.iteration(7).tgs
+    });
+    println!(
+        "\n[bench] {}: median {} ({:.0} iterations/s)",
+        t.name,
+        fmt_time(t.median_s),
+        t.per_sec()
+    );
+}

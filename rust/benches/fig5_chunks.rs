@@ -1,0 +1,26 @@
+//! `cargo bench --bench fig5_chunks` — regenerates Fig. 5 (MACT chunk
+//! values per layer × iteration, Model I) and times the MACT decision
+//! hot path (it runs once per MoE layer per micro-batch in the real
+//! coordinator, so it must be cheap).
+
+use memfine::bench::{fmt_time, time_fn};
+use memfine::chunk::Mact;
+use memfine::config::{model_i, paper_run, Method};
+use memfine::sim::repro;
+
+fn main() {
+    memfine::logging::init();
+    repro::fig5(7, 25).expect("fig5 repro");
+
+    let run = paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+    let mact = Mact::new(&run, vec![1, 2, 4, 8]);
+    let t = time_fn("MACT decide()", 1000, 50_000, || {
+        mact.decide(1, 250_000).chosen_c
+    });
+    println!(
+        "\n[bench] {}: median {} ({:.2}M decisions/s)",
+        t.name,
+        fmt_time(t.median_s),
+        t.per_sec() / 1e6
+    );
+}

@@ -1,0 +1,121 @@
+//! `cargo bench --bench hotpaths` — micro-benchmarks of the Layer-3
+//! hot paths (EXPERIMENTS.md §Perf tracks these before/after):
+//!
+//!   * router sampling (multinomial over 256 experts)
+//!   * dispatch planning (token-level all-to-all plan)
+//!   * MACT decision
+//!   * FCDA schedule construction
+//!   * memory-model evaluation
+//!   * JSON parse of a manifest-sized document
+//!   * PJRT execute round-trip overhead (when artifacts are present)
+
+use memfine::bench::{fmt_time, time_fn, BenchReport};
+use memfine::chunk::{Mact, RecomputeSchedule};
+use memfine::config::{model_i, paper_parallel, paper_run, Method};
+use memfine::dispatch;
+use memfine::memory::ActivationModel;
+use memfine::router::GatingSim;
+use memfine::util::rng::Rng;
+
+fn main() {
+    memfine::logging::init();
+    let mut report = BenchReport::new(
+        "L3 hot paths",
+        &["path", "median", "p90", "ops/s"],
+    );
+    let mut add = |t: memfine::bench::Timing| {
+        report.row(&[
+            t.name.clone(),
+            fmt_time(t.median_s),
+            fmt_time(t.p90_s),
+            format!("{:.0}", t.per_sec()),
+        ]);
+    };
+
+    // Router sampling.
+    let sim = GatingSim::new(model_i(), paper_parallel(), 7);
+    add(time_fn("router.route (256 experts, 1M copies)", 3, 30, || {
+        sim.route(7, 15).max_received()
+    }));
+
+    // Dispatch planning at coordinator scale: 4 ranks × 512 tokens × top-2.
+    let parallel = {
+        let mut p = paper_parallel();
+        p.ep = 4;
+        p
+    };
+    let assignments: Vec<Vec<Vec<u32>>> = {
+        let mut rng = Rng::new(3);
+        (0..4)
+            .map(|_| {
+                (0..512)
+                    .map(|_| {
+                        let a = rng.below(32) as u32;
+                        let mut b = rng.below(32) as u32;
+                        if b == a {
+                            b = (b + 1) % 32;
+                        }
+                        vec![a, b]
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+    add(time_fn("dispatch.plan (4096 copies)", 10, 100, || {
+        dispatch::plan(&parallel, 32, &assignments, 4096).unwrap().placed()
+    }));
+
+    // MACT decision.
+    let run = paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+    let mact = Mact::new(&run, vec![1, 2, 4, 8]);
+    add(time_fn("mact.decide", 1000, 10_000, || {
+        mact.decide(1, 250_000).chosen_c
+    }));
+
+    // FCDA schedule.
+    add(time_fn("RecomputeSchedule::build(4096, 8)", 100, 5_000, || {
+        RecomputeSchedule::build(4096, 8).steps.len()
+    }));
+
+    // Memory model.
+    let act = ActivationModel::new(&run);
+    add(time_fn("memory.peak_bytes_chunked", 1000, 50_000, || {
+        act.peak_bytes_chunked(1, 250_000, 4, true)
+    }));
+
+    // JSON parse (manifest-sized doc).
+    let doc = {
+        let mut s = String::from("{\"entries\":[");
+        for i in 0..64 {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"name\":\"e{i}\",\"shape\":[8,1024,256],\"dtype\":\"f32\",\"n\":{i}}}"
+            ));
+        }
+        s.push_str("]}");
+        s
+    };
+    add(time_fn("json.parse (manifest-sized)", 50, 2_000, || {
+        memfine::json::parse(&doc).unwrap()
+    }));
+
+    // PJRT execute overhead (only with artifacts present).
+    if let Ok(store) = memfine::runtime::ArtifactStore::open("artifacts") {
+        if store.entries.contains_key("router_topk") {
+            let spec = &store.entries["router_topk"].inputs;
+            let x = memfine::runtime::HostTensor::F32(vec![0.1; spec[0].elements()]);
+            let w = memfine::runtime::HostTensor::F32(vec![0.1; spec[1].elements()]);
+            // compile once outside the timer
+            store.execute("router_topk", &[x.clone(), w.clone()]).unwrap();
+            add(time_fn("pjrt execute router_topk (512×256)", 3, 30, || {
+                store.execute("router_topk", &[x.clone(), w.clone()]).unwrap().len()
+            }));
+        }
+    } else {
+        eprintln!("(artifacts/ not built — skipping PJRT hot path; run `make artifacts`)");
+    }
+
+    report.print();
+}

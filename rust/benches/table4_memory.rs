@@ -1,0 +1,29 @@
+//! `cargo bench --bench table4_memory` — regenerates the paper's
+//! Table 4 (memory comparison of Methods 1/2/3 on Models I/II) and
+//! times the full simulation pipeline that produces it.
+//!
+//! Expected shape (paper): Method 1 OOMs on Model I; fixed c=8 cuts
+//! activation ~84 %; MACT cuts ~48 % and keeps the best throughput.
+
+use memfine::bench::{fmt_time, time_fn};
+use memfine::config::{model_i, paper_run, Method};
+use memfine::sim::{repro, Simulator};
+
+fn main() {
+    memfine::logging::init();
+    repro::table4(7).expect("table4 repro");
+
+    // Timing: a full 25-iteration Model-I MACT simulation.
+    let t = time_fn("simulate model-I mact 25 iters", 1, 5, || {
+        let mut run = paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        run.iterations = 25;
+        Simulator::new(run).unwrap().run_all().peak_act_bytes
+    });
+    println!(
+        "\n[bench] {}: median {} (p10 {} / p90 {})",
+        t.name,
+        fmt_time(t.median_s),
+        fmt_time(t.p10_s),
+        fmt_time(t.p90_s)
+    );
+}

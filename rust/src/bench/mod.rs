@@ -1,0 +1,175 @@
+//! Timing harness for the `rust/benches/*.rs` targets (no `criterion`
+//! in the offline registry).
+//!
+//! `time_fn` warms up, then reports median / mean / p10 / p90 over N
+//! timed runs of a closure; `BenchReport` renders aligned tables that
+//! `cargo bench` prints — each paper table/figure bench uses this to
+//! emit its rows.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Result of timing one closure.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub runs: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        if self.median_s > 0.0 {
+            1.0 / self.median_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Time `f` with `warmup` discarded runs then `runs` measured runs.
+/// The closure's return value is black-boxed to keep the optimiser
+/// honest.
+pub fn time_fn<T>(name: &str, warmup: usize, runs: usize, mut f: impl FnMut() -> T) -> Timing {
+    assert!(runs > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Summary::new();
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        name: name.to_string(),
+        runs,
+        median_s: samples.p50(),
+        mean_s: samples.mean(),
+        p10_s: samples.percentile(10.0),
+        p90_s: samples.percentile(90.0),
+    }
+}
+
+/// Identity function the optimiser cannot elide.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Pretty time for humans: picks ns/µs/ms/s.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds < 1e-6 {
+        format!("{:.0} ns", seconds * 1e9)
+    } else if seconds < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{seconds:.3} s")
+    }
+}
+
+/// Aligned table printer for bench output.
+pub struct BenchReport {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl BenchReport {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        BenchReport {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures_positive() {
+        let t = time_fn("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(t.median_s > 0.0);
+        assert!(t.p10_s <= t.median_s && t.median_s <= t.p90_s);
+        assert_eq!(t.runs, 5);
+        assert!(t.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with(" s"));
+    }
+
+    #[test]
+    fn report_renders_aligned() {
+        let mut r = BenchReport::new("t", &["name", "value"]);
+        r.row(&["a".into(), "1".into()]);
+        r.row(&["long-name".into(), "22".into()]);
+        let text = r.render();
+        assert!(text.contains("== t =="));
+        let lines: Vec<&str> = text.lines().filter(|l| !l.is_empty()).collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn report_rejects_bad_row() {
+        let mut r = BenchReport::new("t", &["a", "b"]);
+        r.row(&["only-one".into()]);
+    }
+}

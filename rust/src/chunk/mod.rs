@@ -1,0 +1,376 @@
+//! FCDA + MACT — the paper's §4: fine-grained chunk distribution and
+//! memory-aware chunk tuning.
+//!
+//! **FCDA** ([`split_chunks`], [`RecomputeSchedule`]) decomposes a
+//! micro-batch's token set into `c` chunks. Forward runs
+//! dispatch→expert→combine per chunk sequentially (Eq. 6), storing only
+//! each chunk's boundary input; backward walks chunks in reverse,
+//! recomputing each chunk's forward before differentiating it (Eq. 7).
+//! Peak MoE activation memory drops from `f(s')` to `max_i f(s'_i)`.
+//!
+//! **MACT** ([`Mact`]) closes the loop: before each micro-batch it
+//! evaluates the memory model's token budget `s'_max` (Eq. 8) per
+//! pipeline stage, derives the ideal chunk count `c = ⌈s''/s'_max⌉`
+//! (Eq. 9), and rounds **up** to the nearest configured bin so the
+//! runtime only ever sees a handful of chunk shapes (one compiled
+//! executable per bin — exactly how the AOT artifacts are exported).
+
+use crate::config::RunConfig;
+use crate::memory::{ActivationModel, StaticModel};
+use crate::util::ceil_div;
+
+/// One FCDA chunk: a contiguous token range of the micro-batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub index: u64,
+    pub start: u64,
+    pub len: u64,
+}
+
+/// Split `total_tokens` into `c` near-equal contiguous chunks
+/// (remainder spread over the leading chunks). `c` is clamped to
+/// `total_tokens` so no chunk is empty.
+pub fn split_chunks(total_tokens: u64, c: u64) -> Vec<Chunk> {
+    if total_tokens == 0 {
+        return Vec::new();
+    }
+    let c = c.clamp(1, total_tokens);
+    let base = total_tokens / c;
+    let rem = total_tokens % c;
+    let mut chunks = Vec::with_capacity(c as usize);
+    let mut start = 0;
+    for i in 0..c {
+        let len = base + u64::from(i < rem);
+        chunks.push(Chunk { index: i, start, len });
+        start += len;
+    }
+    chunks
+}
+
+/// A step of the chunked forward/backward schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Forward of chunk i (dispatch→expert→combine), storing only the
+    /// chunk's boundary input.
+    Forward(u64),
+    /// Recompute chunk i's forward from its stored boundary (backward
+    /// phase, Eq. 7).
+    Recompute(u64),
+    /// Backward of chunk i through the recomputed activations.
+    Backward(u64),
+    /// Free chunk i's recomputed activations.
+    Free(u64),
+}
+
+/// The full FCDA execution schedule for one MoE layer invocation.
+#[derive(Clone, Debug)]
+pub struct RecomputeSchedule {
+    pub chunks: Vec<Chunk>,
+    pub steps: Vec<Step>,
+}
+
+impl RecomputeSchedule {
+    /// Build the Eq. 6/Eq. 7 schedule: all forwards in order, then per
+    /// chunk (reverse order): recompute → backward → free.
+    pub fn build(total_tokens: u64, c: u64) -> Self {
+        let chunks = split_chunks(total_tokens, c);
+        let mut steps = Vec::with_capacity(chunks.len() * 4);
+        for ch in &chunks {
+            steps.push(Step::Forward(ch.index));
+        }
+        for ch in chunks.iter().rev() {
+            steps.push(Step::Recompute(ch.index));
+            steps.push(Step::Backward(ch.index));
+            steps.push(Step::Free(ch.index));
+        }
+        RecomputeSchedule { chunks, steps }
+    }
+
+    /// Walk the schedule tracking live activation cost, where chunk i's
+    /// recomputed activations cost `cost(len_i)` units while alive.
+    /// Returns the peak. This is the executable form of the paper's
+    /// claim that peak = max over chunks, not the sum.
+    pub fn peak_live_cost(&self, cost: impl Fn(u64) -> u64) -> u64 {
+        let mut live = 0u64;
+        let mut peak = 0u64;
+        for step in &self.steps {
+            match step {
+                Step::Recompute(i) => {
+                    live += cost(self.chunks[*i as usize].len);
+                    peak = peak.max(live);
+                }
+                Step::Free(i) => {
+                    live -= cost(self.chunks[*i as usize].len);
+                }
+                _ => {}
+            }
+        }
+        peak
+    }
+
+    /// Validity: every chunk is forwarded once, then recomputed,
+    /// backwarded and freed exactly once, with backward before free and
+    /// recompute before backward.
+    pub fn validate(&self) -> bool {
+        let n = self.chunks.len();
+        let mut fwd = vec![0u32; n];
+        let mut rec = vec![0u32; n];
+        let mut bwd = vec![0u32; n];
+        let mut freed = vec![0u32; n];
+        for s in &self.steps {
+            match *s {
+                Step::Forward(i) => fwd[i as usize] += 1,
+                Step::Recompute(i) => {
+                    if fwd[i as usize] == 0 {
+                        return false;
+                    }
+                    rec[i as usize] += 1;
+                }
+                Step::Backward(i) => {
+                    if rec[i as usize] == 0 {
+                        return false;
+                    }
+                    bwd[i as usize] += 1;
+                }
+                Step::Free(i) => {
+                    if bwd[i as usize] == 0 {
+                        return false;
+                    }
+                    freed[i as usize] += 1;
+                }
+            }
+        }
+        (0..n).all(|i| fwd[i] == 1 && rec[i] == 1 && bwd[i] == 1 && freed[i] == 1)
+    }
+}
+
+/// The MACT controller (paper §4.2).
+#[derive(Clone, Debug)]
+pub struct Mact {
+    act: ActivationModel,
+    /// Per-stage static bytes, precomputed once before training.
+    static_per_stage: Vec<u64>,
+    /// α·M_GPU, the usable budget (Eq. 3).
+    budget: u64,
+    /// Threshold bins (strictly increasing, e.g. [1, 2, 4, 8]).
+    pub bins: Vec<u64>,
+}
+
+/// One MACT decision with its audit trail (logged to the Fig. 5 trace).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MactDecision {
+    /// Eq. 8 token budget of this stage.
+    pub s_prime_max: u64,
+    /// Observed/predicted received tokens (`s''`).
+    pub s_received: u64,
+    /// Eq. 9 ideal chunk count.
+    pub ideal_c: u64,
+    /// Chosen bin (≥ ideal_c, or the largest bin if none suffices).
+    pub chosen_c: u64,
+    /// Whether even the largest bin violates the budget (residual OOM
+    /// risk — the caller may fall back to offloading or fail fast).
+    pub feasible: bool,
+}
+
+impl Mact {
+    /// Precompute the memory model for a run ("before training, the
+    /// MACT system models the training memory usage").
+    pub fn new(run: &RunConfig, bins: Vec<u64>) -> Self {
+        assert!(!bins.is_empty(), "MACT needs at least one bin");
+        assert!(
+            bins.windows(2).all(|w| w[0] < w[1]),
+            "bins must be strictly increasing"
+        );
+        let act = ActivationModel::new(run);
+        let sta = StaticModel::new(run);
+        let static_per_stage = (0..run.parallel.pp)
+            .map(|r| sta.bytes_on_rank(r))
+            .collect();
+        let budget = (run.alpha * run.gpu_mem_bytes as f64) as u64;
+        Mact { act, static_per_stage, budget, bins }
+    }
+
+    /// Eq. 8 for a pipeline stage (memoised inputs, cheap to call in
+    /// the per-micro-batch hot path).
+    pub fn s_prime_max(&self, pp_rank: u64) -> u64 {
+        self.act.s_prime_max(
+            pp_rank,
+            self.static_per_stage[pp_rank as usize],
+            self.budget,
+            true, // MemFine keeps full recompute for the dense part
+        )
+    }
+
+    /// The MACT decision for one (stage, s'') query: Eq. 9 + threshold
+    /// binning ("select the larger bin that is closest to c").
+    pub fn decide(&self, pp_rank: u64, s_received: u64) -> MactDecision {
+        let s_max = self.s_prime_max(pp_rank);
+        let ideal = if s_max == 0 {
+            u64::MAX // nothing fits: force the largest bin, flag infeasible
+        } else {
+            ceil_div(s_received, s_max).max(1)
+        };
+        let chosen = self
+            .bins
+            .iter()
+            .copied()
+            .find(|&b| b >= ideal)
+            .unwrap_or(*self.bins.last().unwrap());
+        let feasible = s_max > 0 && ceil_div(s_received, chosen) <= s_max.max(1)
+            && ideal <= *self.bins.last().unwrap();
+        MactDecision {
+            s_prime_max: s_max,
+            s_received,
+            ideal_c: if ideal == u64::MAX { u64::MAX } else { ideal },
+            chosen_c: chosen,
+            feasible,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_i, paper_run, Method};
+
+    #[test]
+    fn split_even() {
+        let ch = split_chunks(100, 4);
+        assert_eq!(ch.len(), 4);
+        assert!(ch.iter().all(|c| c.len == 25));
+        assert_eq!(ch[3].start, 75);
+    }
+
+    #[test]
+    fn split_remainder_spread() {
+        let ch = split_chunks(10, 3);
+        assert_eq!(ch.iter().map(|c| c.len).collect::<Vec<_>>(), vec![4, 3, 3]);
+        // contiguity
+        assert_eq!(ch[1].start, 4);
+        assert_eq!(ch[2].start, 7);
+    }
+
+    #[test]
+    fn split_conserves_tokens() {
+        for (n, c) in [(1u64, 1u64), (7, 3), (4096, 8), (100, 100), (5, 9)] {
+            let ch = split_chunks(n, c);
+            assert_eq!(ch.iter().map(|x| x.len).sum::<u64>(), n);
+            assert!(ch.iter().all(|x| x.len > 0), "empty chunk at n={n} c={c}");
+        }
+    }
+
+    #[test]
+    fn split_zero_tokens_empty() {
+        assert!(split_chunks(0, 4).is_empty());
+    }
+
+    #[test]
+    fn schedule_shape_eq6_eq7() {
+        let s = RecomputeSchedule::build(100, 4);
+        assert_eq!(s.steps.len(), 4 + 3 * 4);
+        // forwards first, in order
+        assert_eq!(s.steps[0], Step::Forward(0));
+        assert_eq!(s.steps[3], Step::Forward(3));
+        // backward phase reversed, chunk 3 first
+        assert_eq!(s.steps[4], Step::Recompute(3));
+        assert_eq!(s.steps[5], Step::Backward(3));
+        assert_eq!(s.steps[6], Step::Free(3));
+        assert!(s.validate());
+    }
+
+    #[test]
+    fn schedule_peak_is_single_chunk() {
+        // cost linear in tokens → peak live = one (largest) chunk,
+        // NOT the sum: the paper's memory-saving claim.
+        let s = RecomputeSchedule::build(1000, 8);
+        let peak = s.peak_live_cost(|len| len);
+        assert_eq!(peak, 125);
+        let s1 = RecomputeSchedule::build(1000, 1);
+        assert_eq!(s1.peak_live_cost(|len| len), 1000);
+    }
+
+    #[test]
+    fn schedule_validate_rejects_wrong_order() {
+        let mut s = RecomputeSchedule::build(10, 2);
+        // steps: [F0, F1, R1, B1, Free1, R0, B0, Free0]
+        s.steps.swap(2, 3); // Backward(1) before Recompute(1)
+        assert!(!s.validate());
+    }
+
+    fn mact() -> Mact {
+        let run = paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        Mact::new(&run, vec![1, 2, 4, 8])
+    }
+
+    #[test]
+    fn decide_balanced_needs_one_chunk() {
+        let m = mact();
+        // perfectly balanced: each rank gets total/ep copies
+        let balanced = 4096 * 8; // s·t_k with e ranks sharing equally
+        let d = m.decide(0, balanced);
+        assert_eq!(d.chosen_c, 1, "{d:?}");
+        assert!(d.feasible);
+    }
+
+    #[test]
+    fn decide_extreme_needs_more_chunks() {
+        let m = mact();
+        let extreme = 32 * 4096 * 8; // theoretical peak
+        let d = m.decide(0, extreme);
+        assert!(d.ideal_c >= 2, "{d:?}");
+        assert!(d.chosen_c >= d.ideal_c.min(8));
+        // chunk memory after split must fit: s''/c ≤ s'_max whenever
+        // feasible is reported
+        if d.feasible {
+            assert!(extreme.div_ceil(d.chosen_c) <= d.s_prime_max);
+        }
+    }
+
+    #[test]
+    fn decide_rounds_up_to_bin() {
+        let m = mact();
+        let s_max = m.s_prime_max(0);
+        // choose s'' so ideal_c = 3 → bin must be 4
+        let d = m.decide(0, s_max * 3 - 1);
+        assert_eq!(d.ideal_c, 3);
+        assert_eq!(d.chosen_c, 4);
+    }
+
+    #[test]
+    fn decide_monotone_in_load() {
+        let m = mact();
+        let s_max = m.s_prime_max(1);
+        let mut last = 0;
+        for mult in [1u64, 2, 3, 5, 8] {
+            let d = m.decide(1, s_max * mult);
+            assert!(d.chosen_c >= last, "not monotone at mult {mult}");
+            last = d.chosen_c;
+        }
+    }
+
+    #[test]
+    fn stage0_has_smallest_budget() {
+        // Stage 0 carries the embedding → less headroom → smaller
+        // s'_max (the "varying memory pressure across PP stages"
+        // motivation for MACT).
+        let m = mact();
+        assert!(m.s_prime_max(0) < m.s_prime_max(1));
+    }
+
+    #[test]
+    fn infeasible_when_budget_tiny() {
+        let mut run = paper_run(model_i(), Method::Mact(vec![1, 2]));
+        run.gpu_mem_bytes = 30 * crate::config::GB; // below static
+        let m = Mact::new(&run, vec![1, 2]);
+        let d = m.decide(0, 100_000);
+        assert!(!d.feasible);
+        assert_eq!(d.chosen_c, 2); // falls back to largest bin
+    }
+
+    #[test]
+    #[should_panic]
+    fn unsorted_bins_panic() {
+        let run = paper_run(model_i(), Method::Mact(vec![1, 2]));
+        Mact::new(&run, vec![4, 2]);
+    }
+}

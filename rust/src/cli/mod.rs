@@ -1,0 +1,216 @@
+//! Tiny CLI argument parser (the registry carries no `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+/// Declarative option spec used for usage text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]).
+    ///
+    /// Every `--name` token is treated as an option if followed by a
+    /// non-`--` token and `known_value_opts` lists it (or the token
+    /// contains `=`); otherwise it is a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        known_value_opts: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let tokens: Vec<String> = raw.into_iter().collect();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err(Error::Cli("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_value_opts.contains(&stripped)
+                    && i + 1 < tokens.len()
+                    && !tokens[i + 1].starts_with("--")
+                {
+                    args.options
+                        .insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Cli(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    /// Parse a comma-separated u64 list (e.g. `--bins 1,2,4,8`).
+    pub fn get_u64_list(&self, name: &str, default: &[u64]) -> Result<Vec<u64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| {
+                        Error::Cli(format!("--{name} expects u64 list, got '{v}'"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render aligned usage text from option specs.
+pub fn usage(program: &str, about: &str, commands: &[(&str, &str)], opts: &[OptSpec]) -> String {
+    let mut out = format!("{about}\n\nUSAGE:\n    {program} <command> [options]\n");
+    if !commands.is_empty() {
+        out.push_str("\nCOMMANDS:\n");
+        let w = commands.iter().map(|(c, _)| c.len()).max().unwrap_or(0);
+        for (c, h) in commands {
+            out.push_str(&format!("    {c:w$}    {h}\n"));
+        }
+    }
+    if !opts.is_empty() {
+        out.push_str("\nOPTIONS:\n");
+        let w = opts.iter().map(|o| o.name.len()).max().unwrap_or(0) + 2;
+        for o in opts {
+            let name = format!("--{}", o.name);
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("    {name:w$}  {}{def}\n", o.help));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], known: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), known).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["simulate", "foo", "bar"], &[]);
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.positional, vec!["foo", "bar"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&["run", "--iters", "25", "--model=ii"], &["iters"]);
+        assert_eq!(a.get("iters"), Some("25"));
+        assert_eq!(a.get("model"), Some("ii"));
+    }
+
+    #[test]
+    fn flags_vs_options() {
+        let a = parse(&["run", "--verbose", "--seed", "7"], &["seed"]);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("seed"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_value_opt_becomes_flag() {
+        // "--fast 3": fast not declared as value-taking → flag + positional
+        let a = parse(&["cmd", "--fast", "3"], &[]);
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.positional, vec!["3"]);
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = parse(&["x", "--alpha=0.8"], &[]);
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 0.8);
+        assert_eq!(a.get_u64("missing", 42).unwrap(), 42);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = parse(&["x", "--n=abc"], &[]);
+        assert!(a.get_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn u64_list_parses() {
+        let a = parse(&["x", "--bins=1,2,4,8"], &[]);
+        assert_eq!(a.get_u64_list("bins", &[]).unwrap(), vec![1, 2, 4, 8]);
+        let b = parse(&["x"], &[]);
+        assert_eq!(b.get_u64_list("bins", &[3]).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn usage_lists_commands_and_defaults() {
+        let text = usage(
+            "memfine",
+            "MemFine",
+            &[("plan", "memory plan")],
+            &[OptSpec { name: "seed", help: "rng seed", takes_value: true, default: Some("0") }],
+        );
+        assert!(text.contains("plan"));
+        assert!(text.contains("--seed"));
+        assert!(text.contains("[default: 0]"));
+    }
+}

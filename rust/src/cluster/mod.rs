@@ -1,0 +1,220 @@
+//! Simulated cluster substrate: devices with tracked memory, process
+//! groups, and OOM detection.
+//!
+//! The paper ran on 32 × 64 GB GPUs; this module gives the simulator
+//! and the real-execution coordinator a common memory-accounting layer
+//! with the same semantics a CUDA allocator presents: explicit
+//! alloc/free, a high-water mark, and a hard capacity that turns
+//! over-allocation into an [`Error::Oom`] event instead of a crash.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Tracked memory of one device.
+#[derive(Clone, Debug)]
+pub struct MemoryTracker {
+    device: usize,
+    capacity: u64,
+    used: u64,
+    peak: u64,
+    /// Live allocations: id → bytes.
+    allocs: HashMap<u64, u64>,
+    next_id: u64,
+    /// Count of rejected allocations (OOM events survived).
+    pub oom_events: u64,
+}
+
+impl MemoryTracker {
+    pub fn new(device: usize, capacity: u64) -> Self {
+        MemoryTracker {
+            device,
+            capacity,
+            used: 0,
+            peak: 0,
+            allocs: HashMap::new(),
+            next_id: 0,
+            oom_events: 0,
+        }
+    }
+
+    /// Allocate `bytes`; returns a handle for `free`. Fails with
+    /// [`Error::Oom`] when the capacity would be exceeded.
+    pub fn alloc(&mut self, bytes: u64) -> Result<u64> {
+        if self.used + bytes > self.capacity {
+            self.oom_events += 1;
+            return Err(Error::Oom {
+                device: self.device,
+                requested: bytes,
+                used: self.used,
+                capacity: self.capacity,
+            });
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.allocs.insert(id, bytes);
+        Ok(id)
+    }
+
+    /// Free a previous allocation.
+    pub fn free(&mut self, id: u64) -> Result<()> {
+        match self.allocs.remove(&id) {
+            Some(bytes) => {
+                self.used -= bytes;
+                Ok(())
+            }
+            None => Err(Error::schedule(format!(
+                "double free / unknown alloc id {id} on device {}",
+                self.device
+            ))),
+        }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+    pub fn available(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// Reset the high-water mark (e.g. per iteration) keeping live
+    /// allocations.
+    pub fn reset_peak(&mut self) {
+        self.peak = self.used;
+    }
+}
+
+/// A process-group view of the cluster: `ep × pp` devices with
+/// per-device trackers, addressed by (pp_rank, ep_rank).
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub ep: u64,
+    pub pp: u64,
+    trackers: Vec<MemoryTracker>,
+}
+
+impl Cluster {
+    pub fn new(ep: u64, pp: u64, capacity_per_device: u64) -> Self {
+        let n = (ep * pp) as usize;
+        let trackers = (0..n)
+            .map(|d| MemoryTracker::new(d, capacity_per_device))
+            .collect();
+        Cluster { ep, pp, trackers }
+    }
+
+    pub fn device_index(&self, pp_rank: u64, ep_rank: u64) -> usize {
+        assert!(pp_rank < self.pp && ep_rank < self.ep);
+        (pp_rank * self.ep + ep_rank) as usize
+    }
+
+    pub fn tracker(&mut self, pp_rank: u64, ep_rank: u64) -> &mut MemoryTracker {
+        let i = self.device_index(pp_rank, ep_rank);
+        &mut self.trackers[i]
+    }
+
+    pub fn tracker_ref(&self, pp_rank: u64, ep_rank: u64) -> &MemoryTracker {
+        &self.trackers[self.device_index(pp_rank, ep_rank)]
+    }
+
+    /// EP group of one pipeline stage.
+    pub fn ep_group(&self, pp_rank: u64) -> Vec<usize> {
+        (0..self.ep).map(|e| self.device_index(pp_rank, e)).collect()
+    }
+
+    /// Highest peak across all devices (the cluster's memory headline).
+    pub fn max_peak(&self) -> u64 {
+        self.trackers.iter().map(|t| t.peak()).max().unwrap_or(0)
+    }
+
+    /// Total OOM events across devices.
+    pub fn oom_events(&self) -> u64 {
+        self.trackers.iter().map(|t| t.oom_events).sum()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.trackers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut t = MemoryTracker::new(0, 100);
+        let a = t.alloc(40).unwrap();
+        let b = t.alloc(60).unwrap();
+        assert_eq!(t.used(), 100);
+        assert_eq!(t.available(), 0);
+        t.free(a).unwrap();
+        assert_eq!(t.used(), 60);
+        t.free(b).unwrap();
+        assert_eq!(t.used(), 0);
+        assert_eq!(t.peak(), 100);
+    }
+
+    #[test]
+    fn oom_is_reported_not_fatal() {
+        let mut t = MemoryTracker::new(3, 50);
+        t.alloc(40).unwrap();
+        match t.alloc(20) {
+            Err(Error::Oom { device, requested, used, capacity }) => {
+                assert_eq!((device, requested, used, capacity), (3, 20, 40, 50));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(t.oom_events, 1);
+        assert_eq!(t.used(), 40); // state unchanged after rejection
+        t.alloc(10).unwrap(); // exact fit still works
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut t = MemoryTracker::new(0, 10);
+        let a = t.alloc(5).unwrap();
+        t.free(a).unwrap();
+        assert!(t.free(a).is_err());
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut t = MemoryTracker::new(0, 100);
+        let a = t.alloc(80).unwrap();
+        t.free(a).unwrap();
+        t.alloc(10).unwrap();
+        assert_eq!(t.peak(), 80);
+        t.reset_peak();
+        assert_eq!(t.peak(), 10);
+    }
+
+    #[test]
+    fn cluster_addressing() {
+        let c = Cluster::new(32, 4, 64);
+        assert_eq!(c.device_count(), 128);
+        assert_eq!(c.device_index(0, 0), 0);
+        assert_eq!(c.device_index(1, 0), 32);
+        assert_eq!(c.device_index(3, 31), 127);
+        assert_eq!(c.ep_group(2).len(), 32);
+    }
+
+    #[test]
+    fn cluster_tracks_per_device() {
+        let mut c = Cluster::new(2, 2, 100);
+        c.tracker(0, 0).alloc(70).unwrap();
+        c.tracker(1, 1).alloc(30).unwrap();
+        assert_eq!(c.tracker_ref(0, 0).used(), 70);
+        assert_eq!(c.tracker_ref(0, 1).used(), 0);
+        assert_eq!(c.max_peak(), 70);
+        assert!(c.tracker(0, 0).alloc(40).is_err());
+        assert_eq!(c.oom_events(), 1);
+    }
+}

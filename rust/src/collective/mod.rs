@@ -1,0 +1,132 @@
+//! Collective-communication cost models (α–β) for the simulator.
+//!
+//! The paper's testbed fabric is undisclosed; we use the standard
+//! latency–bandwidth (α–β) model with defaults in the NVLink/IB class.
+//! Only *relative* timing matters for the Fig. 4 trends (chunking adds
+//! per-chunk all-to-all launches; recompute doubles expert compute),
+//! and those relations are structural, not constants.
+
+/// Link/fabric parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Fabric {
+    /// Per-message latency in seconds (α).
+    pub alpha_s: f64,
+    /// Per-byte time in seconds (1/bandwidth, β).
+    pub beta_s_per_byte: f64,
+}
+
+impl Default for Fabric {
+    fn default() -> Self {
+        // 200 GB/s effective per-GPU all-to-all bandwidth (NVLink-class
+        // intra-group fabric), 15 µs launch.
+        Fabric { alpha_s: 15e-6, beta_s_per_byte: 1.0 / 200e9 }
+    }
+}
+
+impl Fabric {
+    /// Point-to-point send of `bytes`.
+    pub fn p2p(&self, bytes: u64) -> f64 {
+        self.alpha_s + bytes as f64 * self.beta_s_per_byte
+    }
+
+    /// All-to-all over `n` ranks where each rank exchanges
+    /// `bytes_per_rank` with every peer: time of the bottleneck rank.
+    /// Pairwise-exchange algorithm: (n−1) rounds of α plus the full
+    /// egress volume at β.
+    pub fn all_to_all(&self, n: u64, bytes_per_rank: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n - 1) as f64 * self.alpha_s
+            + ((n - 1) * bytes_per_rank) as f64 * self.beta_s_per_byte
+    }
+
+    /// Imbalanced all-to-all: the bottleneck is the rank with the
+    /// largest ingress volume (`max_recv_bytes`); launch cost as above.
+    pub fn all_to_all_imbalanced(&self, n: u64, max_recv_bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n - 1) as f64 * self.alpha_s + max_recv_bytes as f64 * self.beta_s_per_byte
+    }
+
+    /// Ring all-reduce of `bytes` over `n` ranks: 2(n−1)/n of the data
+    /// crosses each link, 2(n−1) launches.
+    pub fn all_reduce(&self, n: u64, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        2.0 * (n - 1) as f64 * self.alpha_s
+            + 2.0 * ((n - 1) as f64 / n as f64) * bytes as f64 * self.beta_s_per_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fab() -> Fabric {
+        Fabric { alpha_s: 1e-5, beta_s_per_byte: 1e-9 }
+    }
+
+    #[test]
+    fn p2p_is_affine() {
+        let f = fab();
+        assert!((f.p2p(0) - 1e-5).abs() < 1e-12);
+        assert!((f.p2p(1_000_000) - (1e-5 + 1e-3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_to_all_single_rank_free() {
+        assert_eq!(fab().all_to_all(1, 123), 0.0);
+        assert_eq!(fab().all_to_all_imbalanced(1, 123), 0.0);
+    }
+
+    #[test]
+    fn all_to_all_scales_with_ranks_and_bytes() {
+        let f = fab();
+        let t1 = f.all_to_all(8, 1_000_000);
+        let t2 = f.all_to_all(8, 2_000_000);
+        let t3 = f.all_to_all(16, 1_000_000);
+        assert!(t2 > t1 && t3 > t1);
+        // doubling bytes roughly doubles the β term
+        let beta1 = t1 - 7.0 * f.alpha_s;
+        let beta2 = t2 - 7.0 * f.alpha_s;
+        assert!((beta2 / beta1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn imbalanced_bottleneck_dominates() {
+        let f = fab();
+        // same total volume, hot rank receives it all → slower than the
+        // balanced exchange of the per-rank share
+        let balanced = f.all_to_all(32, 1_000_000 / 31);
+        let hot = f.all_to_all_imbalanced(32, 1_000_000);
+        assert!(hot > balanced);
+    }
+
+    #[test]
+    fn all_reduce_volume_factor() {
+        let f = fab();
+        let n = 4;
+        let t = f.all_reduce(n, 1_000_000);
+        let beta = t - 2.0 * 3.0 * f.alpha_s;
+        let want = 2.0 * 0.75 * 1_000_000.0 * f.beta_s_per_byte;
+        assert!((beta - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunking_adds_launch_overhead_only() {
+        // c chunks of v/c bytes vs one launch of v bytes: β equal,
+        // extra (c−1)(n−1)α — the MACT performance trade-off.
+        let f = fab();
+        let n = 32u64;
+        let v = 8_000_000u64;
+        let one = f.all_to_all(n, v);
+        let c = 8u64;
+        let chunked: f64 = (0..c).map(|_| f.all_to_all(n, v / c)).sum();
+        let extra = chunked - one;
+        let want = (c - 1) as f64 * (n - 1) as f64 * f.alpha_s;
+        assert!((extra - want).abs() < 1e-9, "extra {extra} want {want}");
+    }
+}

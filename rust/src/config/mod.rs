@@ -1,0 +1,536 @@
+//! Configuration: model dimensions (paper Table 1/3), parallelism
+//! layout, training setup, and the MemFine method selection.
+//!
+//! Presets `model_i()` / `model_ii()` reproduce Table 3 exactly; the
+//! `tiny()` preset matches the AOT-exported mini model used by the
+//! real-execution coordinator. Configs round-trip through the crate's
+//! JSON module and are validated before use.
+
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+
+/// Model architecture parameters — the paper's Table 1 notation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Total transformer layers (paper `L`).
+    pub layers: u64,
+    /// Leading dense (non-MoE) layers (paper `d_l`).
+    pub dense_layers: u64,
+    /// Sequence length (paper `s`).
+    pub seq: u64,
+    /// Hidden size (paper `h`).
+    pub hidden: u64,
+    /// Attention head count (paper `a`).
+    pub heads: u64,
+    /// Per-head dimension (paper `h_d`).
+    pub head_dim: u64,
+    /// KV head count (paper `k_a`).
+    pub kv_heads: u64,
+    /// Dense-layer FFN intermediate size (paper `g_d`).
+    pub ffn_dense: u64,
+    /// Expert FFN intermediate size (paper `g_e`).
+    pub ffn_expert: u64,
+    /// Routed experts in total (paper router width `e_n`).
+    pub n_experts: u64,
+    /// Experts activated per token (paper `t_k`).
+    pub top_k: u64,
+    /// Vocabulary size (paper `V`).
+    pub vocab: u64,
+    /// Low-rank attention projection rank (Table 3 column `r`; enters
+    /// static memory only).
+    pub q_lora_rank: u64,
+}
+
+impl ModelConfig {
+    /// Parameter count of one MoE layer's experts that live on a single
+    /// EP rank hosting `local_experts` experts (SwiGLU: 3 matrices).
+    pub fn expert_params_per_rank(&self, local_experts: u64) -> u64 {
+        3 * self.hidden * self.ffn_expert * local_experts
+    }
+
+    /// Parameter count of one layer's attention block. With
+    /// `q_lora_rank > 0` this models DeepSeek-style MLA (low-rank q and
+    /// kv projections, kv rank 512 as in DeepSeek-V3); otherwise plain
+    /// dense q/k/v/o.
+    pub fn attention_params(&self) -> u64 {
+        let out = (self.heads * self.head_dim) * self.hidden;
+        if self.q_lora_rank > 0 {
+            const KV_RANK: u64 = 512;
+            let q = self.hidden * self.q_lora_rank
+                + self.q_lora_rank * self.heads * self.head_dim;
+            let kv = self.hidden * KV_RANK
+                + 2 * KV_RANK * self.kv_heads * self.head_dim;
+            q + kv + out
+        } else {
+            let qkv = self.hidden * (self.heads * self.head_dim)
+                + 2 * self.hidden * (self.kv_heads * self.head_dim);
+            qkv + out
+        }
+    }
+
+    /// Dense FFN parameters of one dense layer (SwiGLU: 3 matrices).
+    pub fn dense_ffn_params(&self) -> u64 {
+        3 * self.hidden * self.ffn_dense
+    }
+
+    /// Router (gating) parameters of one MoE layer.
+    pub fn router_params(&self) -> u64 {
+        self.hidden * self.n_experts
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.layers == 0 || self.hidden == 0 || self.seq == 0 {
+            return Err(Error::config("layers/hidden/seq must be positive"));
+        }
+        if self.dense_layers > self.layers {
+            return Err(Error::config(format!(
+                "dense_layers {} > layers {}",
+                self.dense_layers, self.layers
+            )));
+        }
+        if self.top_k == 0 || self.top_k > self.n_experts {
+            return Err(Error::config(format!(
+                "top_k {} must be in [1, n_experts={}]",
+                self.top_k, self.n_experts
+            )));
+        }
+        if self.kv_heads > self.heads {
+            return Err(Error::config("kv_heads > heads"));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("layers", json::num(self.layers as f64)),
+            ("dense_layers", json::num(self.dense_layers as f64)),
+            ("seq", json::num(self.seq as f64)),
+            ("hidden", json::num(self.hidden as f64)),
+            ("heads", json::num(self.heads as f64)),
+            ("head_dim", json::num(self.head_dim as f64)),
+            ("kv_heads", json::num(self.kv_heads as f64)),
+            ("ffn_dense", json::num(self.ffn_dense as f64)),
+            ("ffn_expert", json::num(self.ffn_expert as f64)),
+            ("n_experts", json::num(self.n_experts as f64)),
+            ("top_k", json::num(self.top_k as f64)),
+            ("vocab", json::num(self.vocab as f64)),
+            ("q_lora_rank", json::num(self.q_lora_rank as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let cfg = ModelConfig {
+            layers: v.req_u64("layers")?,
+            dense_layers: v.req_u64("dense_layers")?,
+            seq: v.req_u64("seq")?,
+            hidden: v.req_u64("hidden")?,
+            heads: v.req_u64("heads")?,
+            head_dim: v.req_u64("head_dim")?,
+            kv_heads: v.req_u64("kv_heads")?,
+            ffn_dense: v.req_u64("ffn_dense")?,
+            ffn_expert: v.req_u64("ffn_expert")?,
+            n_experts: v.req_u64("n_experts")?,
+            top_k: v.req_u64("top_k")?,
+            vocab: v.req_u64("vocab")?,
+            q_lora_rank: v.req_u64("q_lora_rank")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Parallelism layout — Table 1's `t, p, c, e, d, v, b, g_bs`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParallelConfig {
+    /// Tensor parallel size (`t`).
+    pub tp: u64,
+    /// Pipeline parallel size (`p`).
+    pub pp: u64,
+    /// Context parallel size (`c`).
+    pub cp: u64,
+    /// Expert parallel size (`e`).
+    pub ep: u64,
+    /// Data parallel size (`d`).
+    pub dp: u64,
+    /// Virtual pipeline stages per GPU (`v`).
+    pub vpp: u64,
+    /// Micro-batch size (`b`).
+    pub micro_batch: u64,
+    /// Global batch size in sequences (`g_bs`).
+    pub global_batch: u64,
+}
+
+impl ParallelConfig {
+    /// Total GPUs in the job.
+    pub fn world_size(&self) -> u64 {
+        // EP ranks are carved out of the DP×TP group in Megatron-style
+        // layouts; for the paper's setting (t=1, d=1, e=32, p=4) the
+        // world is e × p.
+        self.tp.max(self.ep) * self.pp * self.dp.max(1) * self.cp
+    }
+
+    /// Transformer layers hosted by one pipeline stage.
+    pub fn layers_per_stage(&self, total_layers: u64) -> u64 {
+        total_layers.div_ceil(self.pp * self.vpp)
+    }
+
+    /// Micro-batches per iteration per DP replica.
+    pub fn micro_batches(&self) -> u64 {
+        self.global_batch / (self.micro_batch * self.dp.max(1))
+    }
+
+    /// The paper's stored-activation multiplier
+    /// `m_g = v·p + p − 2·r_pp − 1` for pipeline rank `r_pp`
+    /// (1F1B with interleaving; stage 0 holds the most).
+    pub fn m_g(&self, pp_rank: u64) -> u64 {
+        let raw = (self.vpp * self.pp + self.pp) as i64 - 2 * pp_rank as i64 - 1;
+        raw.max(1) as u64
+    }
+
+    pub fn validate(&self, model: &ModelConfig) -> Result<()> {
+        for (name, v) in [
+            ("tp", self.tp),
+            ("pp", self.pp),
+            ("cp", self.cp),
+            ("ep", self.ep),
+            ("dp", self.dp),
+            ("vpp", self.vpp),
+            ("micro_batch", self.micro_batch),
+            ("global_batch", self.global_batch),
+        ] {
+            if v == 0 {
+                return Err(Error::config(format!("{name} must be positive")));
+            }
+        }
+        if model.layers % (self.pp * self.vpp) != 0 {
+            return Err(Error::config(format!(
+                "layers {} not divisible by pp*vpp {}",
+                model.layers,
+                self.pp * self.vpp
+            )));
+        }
+        if model.n_experts % self.ep != 0 {
+            return Err(Error::config(format!(
+                "n_experts {} not divisible by ep {}",
+                model.n_experts, self.ep
+            )));
+        }
+        if self.global_batch % (self.micro_batch * self.dp) != 0 {
+            return Err(Error::config(
+                "global_batch must be divisible by micro_batch*dp",
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("tp", json::num(self.tp as f64)),
+            ("pp", json::num(self.pp as f64)),
+            ("cp", json::num(self.cp as f64)),
+            ("ep", json::num(self.ep as f64)),
+            ("dp", json::num(self.dp as f64)),
+            ("vpp", json::num(self.vpp as f64)),
+            ("micro_batch", json::num(self.micro_batch as f64)),
+            ("global_batch", json::num(self.global_batch as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(ParallelConfig {
+            tp: v.req_u64("tp")?,
+            pp: v.req_u64("pp")?,
+            cp: v.req_u64("cp")?,
+            ep: v.req_u64("ep")?,
+            dp: v.req_u64("dp")?,
+            vpp: v.req_u64("vpp")?,
+            micro_batch: v.req_u64("micro_batch")?,
+            global_batch: v.req_u64("global_batch")?,
+        })
+    }
+}
+
+/// Which memory strategy a run uses — the paper's Methods 1/2/3.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// Method 1: no chunk splitting; full activation recomputation
+    /// (the Megatron-LM baseline).
+    FullRecompute,
+    /// Method 2: MemFine with a fixed chunk threshold `c_k`.
+    FixedChunk(u64),
+    /// Method 3: MemFine with MACT dynamic tuning over the given bins.
+    Mact(Vec<u64>),
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::FullRecompute => "method1/full-recompute".into(),
+            Method::FixedChunk(c) => format!("method2/fixed-c{c}"),
+            Method::Mact(bins) => format!(
+                "method3/mact-bins{}",
+                bins.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",")
+            ),
+        }
+    }
+}
+
+/// Hardware + method envelope for a training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub parallel: ParallelConfig,
+    pub method: Method,
+    /// GPU memory capacity in bytes (paper: 64 GB).
+    pub gpu_mem_bytes: u64,
+    /// Usable fraction α of GPU memory (paper Eq. 3).
+    pub alpha: f64,
+    /// Bytes per activation element (paper `D_t`; BF16 ⇒ 2).
+    pub dtype_bytes: u64,
+    /// Bytes per parameter for static memory (weights+grads+optimizer,
+    /// Megatron-style distributed optimizer; see memory::static docs).
+    pub static_bytes_per_param: f64,
+    /// Constant per-GPU framework overhead counted as static memory:
+    /// CUDA context, NCCL buffers, allocator workspace/fragmentation.
+    pub static_overhead_bytes: u64,
+    /// Allow MemFine's selective recomputation (store attention
+    /// activations when the chunked MoE peak leaves headroom). Always
+    /// true in the paper's method; the ablation bench toggles it.
+    pub allow_selective_recompute: bool,
+    /// Training iterations to simulate.
+    pub iterations: u64,
+    /// RNG seed for routing traces.
+    pub seed: u64,
+}
+
+impl RunConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.model.validate()?;
+        self.parallel.validate(&self.model)?;
+        if !(0.0..=1.0).contains(&self.alpha) {
+            return Err(Error::config("alpha must be in [0,1]"));
+        }
+        if self.gpu_mem_bytes == 0 {
+            return Err(Error::config("gpu_mem_bytes must be positive"));
+        }
+        if let Method::FixedChunk(0) = self.method {
+            return Err(Error::config("fixed chunk must be ≥ 1"));
+        }
+        if let Method::Mact(bins) = &self.method {
+            if bins.is_empty() {
+                return Err(Error::config("MACT bins must be non-empty"));
+            }
+            if bins.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(Error::config("MACT bins must be strictly increasing"));
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const GB: u64 = 1024 * 1024 * 1024;
+
+/// Table 3, Model I: 16-layer reduced DeepSeek-V3.
+pub fn model_i() -> ModelConfig {
+    ModelConfig {
+        layers: 16,
+        dense_layers: 3,
+        seq: 4096,
+        hidden: 7168,
+        heads: 128,
+        head_dim: 128,
+        kv_heads: 128,
+        ffn_dense: 18432,
+        ffn_expert: 2048,
+        n_experts: 256,
+        top_k: 8,
+        vocab: 129280,
+        q_lora_rank: 1536,
+    }
+}
+
+/// Table 3, Model II: the 8-layer variant.
+pub fn model_ii() -> ModelConfig {
+    ModelConfig { layers: 8, ..model_i() }
+}
+
+/// The paper's parallelism: t=1, p=4, e=32, d=1, c=1, v=1, b=1, g_bs=960.
+pub fn paper_parallel() -> ParallelConfig {
+    ParallelConfig {
+        tp: 1,
+        pp: 4,
+        cp: 1,
+        ep: 32,
+        dp: 1,
+        vpp: 1,
+        micro_batch: 1,
+        global_batch: 960,
+    }
+}
+
+/// Paper experiment envelope for the given model and method
+/// (32 GPUs × 64 GB, BF16).
+pub fn paper_run(model: ModelConfig, method: Method) -> RunConfig {
+    RunConfig {
+        model,
+        parallel: paper_parallel(),
+        method,
+        gpu_mem_bytes: 64 * GB,
+        // Table 4 shows Model II Method 1 training at 62.4 GB total on
+        // a 64 GB device — the usable fraction is ≈ 0.98.
+        alpha: 0.98,
+        dtype_bytes: 2,
+        // d = 1 means the FP32 optimizer is NOT sharded: BF16 weights
+        // (2) + FP32 main grads (4) + FP32 master/m/v (12) ≈ 18 B/param
+        // upper bound; 16 calibrated to Table 4's static column
+        // (43.0 GB Model I / 39.5 GB Model II).
+        static_bytes_per_param: 16.0,
+        // CUDA context + NCCL rings + allocator slack on a production
+        // Megatron job — calibrated with the bytes/param so Table 4's
+        // static column lands on 43.0 / 39.5 GB.
+        static_overhead_bytes: 10 * GB,
+        allow_selective_recompute: true,
+        iterations: 25,
+        seed: 7,
+    }
+}
+
+/// Config matching the AOT-exported mini model (python compile.model.E2E)
+/// used by the real-execution coordinator.
+pub fn tiny() -> ModelConfig {
+    ModelConfig {
+        layers: 4,
+        dense_layers: 1,
+        seq: 128,
+        hidden: 256,
+        heads: 4,
+        head_dim: 64,
+        kv_heads: 4,
+        ffn_dense: 1024,
+        ffn_expert: 512,
+        n_experts: 8,
+        top_k: 2,
+        vocab: 8192,
+        q_lora_rank: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_model_i_exact() {
+        let m = model_i();
+        assert_eq!(m.layers, 16);
+        assert_eq!(m.seq, 4096);
+        assert_eq!(m.hidden, 7168);
+        assert_eq!(m.heads, 128);
+        assert_eq!(m.ffn_dense, 18432);
+        assert_eq!(m.ffn_expert, 2048);
+        assert_eq!(m.top_k, 8);
+        assert_eq!(m.vocab, 129280);
+        assert_eq!(m.q_lora_rank, 1536);
+        assert_eq!(m.dense_layers, 3);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn table3_model_ii_is_8_layers() {
+        let m = model_ii();
+        assert_eq!(m.layers, 8);
+        assert_eq!(m.hidden, model_i().hidden);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_parallel_matches_setup() {
+        let p = paper_parallel();
+        assert_eq!((p.tp, p.pp, p.ep, p.dp, p.cp, p.vpp), (1, 4, 32, 1, 1, 1));
+        assert_eq!(p.micro_batches(), 960);
+        assert_eq!(p.world_size(), 128); // 32 EP ranks × 4 PP stages
+    }
+
+    #[test]
+    fn m_g_formula() {
+        let p = paper_parallel();
+        // v=1, p=4: m_g = vp + p - 2r - 1 = 7 - 2r
+        assert_eq!(p.m_g(0), 7);
+        assert_eq!(p.m_g(1), 5);
+        assert_eq!(p.m_g(3), 1);
+    }
+
+    #[test]
+    fn m_g_never_below_one() {
+        let mut p = paper_parallel();
+        p.pp = 1;
+        assert_eq!(p.m_g(0), 1);
+    }
+
+    #[test]
+    fn layers_per_stage() {
+        let p = paper_parallel();
+        assert_eq!(p.layers_per_stage(16), 4);
+        assert_eq!(p.layers_per_stage(8), 2);
+    }
+
+    #[test]
+    fn validation_rejects_bad_topk() {
+        let mut m = model_i();
+        m.top_k = 500;
+        assert!(m.validate().is_err());
+        m.top_k = 0;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_indivisible_experts() {
+        let m = model_i();
+        let mut p = paper_parallel();
+        p.ep = 33;
+        assert!(p.validate(&m).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_mact_bins() {
+        let mut r = paper_run(model_i(), Method::Mact(vec![1, 2, 2]));
+        assert!(r.validate().is_err());
+        r.method = Method::Mact(vec![]);
+        assert!(r.validate().is_err());
+        r.method = Method::Mact(vec![1, 2, 4, 8]);
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_model() {
+        let m = model_i();
+        let v = m.to_json();
+        let back = ModelConfig::from_json(&v).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn json_roundtrip_parallel() {
+        let p = paper_parallel();
+        let parsed =
+            ParallelConfig::from_json(&crate::json::parse(&p.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(p, parsed);
+    }
+
+    #[test]
+    fn method_names_stable() {
+        assert_eq!(Method::FullRecompute.name(), "method1/full-recompute");
+        assert_eq!(Method::FixedChunk(8).name(), "method2/fixed-c8");
+        assert!(Method::Mact(vec![1, 2, 4, 8]).name().contains("1,2,4,8"));
+    }
+
+    #[test]
+    fn expert_params_scale_with_local_experts() {
+        let m = model_i();
+        assert_eq!(
+            m.expert_params_per_rank(8),
+            8 * 3 * 7168 * 2048
+        );
+    }
+}

@@ -1,0 +1,584 @@
+//! Thread-per-EP-rank coordinator: dispatch → expert → combine with
+//! real row movement over channels and real Pallas-kernel executables.
+//!
+//! Topology comes from the manifest's `coordinator` block: `ep` worker
+//! ranks × `local_experts` experts each, `tokens_per_rank` tokens per
+//! micro-batch. The PJRT client is `Rc`-based (not `Send`), so each
+//! worker owns its *own* client and compiled executables — exactly the
+//! per-device runtime context a real EP group has.
+//!
+//! One layer pass (Eq. 4, chunked per Eq. 6):
+//!
+//! 1. every rank routes its tokens with the `router_topk` executable;
+//! 2. the leader plans the all-to-all per chunk ([`crate::dispatch`])
+//!    and picks the chunk bin — [`ChunkPolicy::Mact`] applies the
+//!    Eq. 8/9 logic against each rank's memory budget;
+//! 3. per chunk, rows cross `mpsc` channels to their expert's owner,
+//!    which assembles the grouped `(E_local, cap, H)` buffer (memory
+//!    tracked — OOM surfaces as [`crate::Error::Oom`]), runs the
+//!    matching `expert_ffn_c{bin}` executable, and ships results back;
+//! 4. source ranks combine with router weights.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::cluster::MemoryTracker;
+use crate::dispatch::{self, DispatchPlan};
+use crate::error::{Error, Result};
+use crate::json::Value;
+use crate::runtime::{ArtifactStore, HostTensor};
+use crate::util::rng::Rng;
+
+/// Coordinator topology (manifest `coordinator` block).
+#[derive(Clone, Debug)]
+pub struct EpTopology {
+    pub ep: usize,
+    pub local_experts: usize,
+    pub tokens_per_rank: usize,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub top_k: usize,
+    pub chunk_bins: Vec<u64>,
+}
+
+impl EpTopology {
+    pub fn from_manifest(config: &Value) -> Result<Self> {
+        let c = config
+            .get("coordinator")
+            .ok_or_else(|| Error::artifact("manifest missing coordinator block"))?;
+        Ok(EpTopology {
+            ep: c.req_u64("ep")? as usize,
+            local_experts: c.req_u64("local_experts")? as usize,
+            tokens_per_rank: c.req_u64("tokens_per_rank")? as usize,
+            hidden: c.req_u64("hidden")? as usize,
+            ffn: c.req_u64("ffn")? as usize,
+            top_k: c.req_u64("top_k")? as usize,
+            chunk_bins: c
+                .get("chunk_bins")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| Error::artifact("missing chunk_bins"))?
+                .iter()
+                .filter_map(Value::as_u64)
+                .collect(),
+        })
+    }
+
+    pub fn global_experts(&self) -> usize {
+        self.ep * self.local_experts
+    }
+
+    /// Total routed copies per micro-batch across the EP group.
+    pub fn total_copies(&self) -> u64 {
+        (self.ep * self.tokens_per_rank * self.top_k) as u64
+    }
+
+    /// Drop-free per-expert capacity of chunk bin `c` (matches aot.py).
+    pub fn capacity(&self, c: u64) -> u64 {
+        self.total_copies() / c
+    }
+
+    /// Grouped-buffer bytes a rank allocates for one chunk at bin `c`
+    /// (input + output + mask, f32).
+    pub fn buffer_bytes(&self, c: u64) -> u64 {
+        let cap = self.capacity(c);
+        let e = self.local_experts as u64;
+        let h = self.hidden as u64;
+        4 * (e * cap * h /*x*/ + e * cap * h /*out*/ + e * cap /*mask*/)
+    }
+}
+
+/// Chunk-count policy for the real coordinator.
+#[derive(Clone, Copy, Debug)]
+pub enum ChunkPolicy {
+    /// Always use this bin (Method 2).
+    Fixed(u64),
+    /// MACT (Method 3): smallest bin whose grouped buffers fit the
+    /// per-rank budget (Eq. 8/9 with bytes in place of tokens).
+    Mact { budget_bytes: u64 },
+}
+
+/// The decision made for one layer pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoordDecision {
+    pub chunk_bin: u64,
+    pub capacity: u64,
+    pub buffer_bytes: u64,
+}
+
+/// Output of one coordinated layer pass.
+#[derive(Debug)]
+pub struct LayerResult {
+    /// Combined outputs per rank: `tokens_per_rank × hidden`, row-major.
+    pub outputs: Vec<Vec<f32>>,
+    pub decision: CoordDecision,
+    /// Peak tracked bytes per rank.
+    pub peak_bytes: Vec<u64>,
+    /// Received copies per rank (the `s''` vector this pass).
+    pub received: Vec<u64>,
+}
+
+/// Deterministic expert/gate weights for rank `r` (shared generator so
+/// the native verifier can rebuild them).
+pub fn rank_weights(topo: &EpTopology, seed: u64, rank: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let e = topo.local_experts;
+    let h = topo.hidden;
+    let g = topo.ffn;
+    let mut rng = Rng::new(seed).fork(1000 + rank as u64);
+    let scale_h = 1.0 / (h as f64).sqrt();
+    let scale_g = 1.0 / (g as f64).sqrt();
+    let mut w1 = Vec::with_capacity(e * h * g);
+    let mut w3 = Vec::with_capacity(e * h * g);
+    let mut w2 = Vec::with_capacity(e * g * h);
+    for _ in 0..e * h * g {
+        w1.push((rng.normal() * scale_h) as f32);
+    }
+    for _ in 0..e * h * g {
+        w3.push((rng.normal() * scale_h) as f32);
+    }
+    for _ in 0..e * g * h {
+        w2.push((rng.normal() * scale_g) as f32);
+    }
+    (w1, w3, w2)
+}
+
+/// Deterministic gating matrix (replicated on every rank).
+pub fn gate_weights(topo: &EpTopology, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed).fork(999);
+    let n = topo.hidden * topo.global_experts();
+    (0..n).map(|_| (rng.normal() * 0.5) as f32).collect()
+}
+
+/// Deterministic input tokens for rank `r`.
+pub fn rank_tokens(topo: &EpTopology, seed: u64, rank: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed).fork(2000 + rank as u64);
+    (0..topo.tokens_per_rank * topo.hidden)
+        .map(|_| rng.normal() as f32)
+        .collect()
+}
+
+// ---- channel messages -----------------------------------------------------
+
+/// A token row travelling src → expert owner.
+struct RowMsg {
+    local_expert: u32,
+    slot: u32,
+    row: Vec<f32>,
+    src_rank: u32,
+    token: u32,
+    k: u8,
+}
+
+/// An expert output row travelling owner → src.
+struct ResultMsg {
+    token: u32,
+    k: u8,
+    row: Vec<f32>,
+}
+
+/// Per-rank worker state living on its own thread.
+struct Worker {
+    #[allow(dead_code)]
+    rank: usize,
+    topo: EpTopology,
+    store: ArtifactStore,
+    w1: Vec<f32>,
+    w3: Vec<f32>,
+    w2: Vec<f32>,
+    tracker: MemoryTracker,
+}
+
+impl Worker {
+    /// Assemble the grouped buffer from incoming rows and run the
+    /// expert executable for one chunk. Returns per-incoming-row
+    /// outputs keyed back to (src, token, k).
+    fn run_chunk(
+        &mut self,
+        bin: u64,
+        incoming: Vec<RowMsg>,
+    ) -> Result<Vec<(u32, ResultMsg)>> {
+        let e = self.topo.local_experts;
+        let h = self.topo.hidden;
+        let cap = self.topo.capacity(bin) as usize;
+        let alloc = self.tracker.alloc(self.topo.buffer_bytes(bin))?;
+        let mut x = vec![0.0f32; e * cap * h];
+        let mut mask = vec![0.0f32; e * cap];
+        for msg in &incoming {
+            let le = msg.local_expert as usize;
+            let slot = msg.slot as usize;
+            debug_assert!(slot < cap, "slot {slot} >= cap {cap}");
+            x[(le * cap + slot) * h..(le * cap + slot + 1) * h]
+                .copy_from_slice(&msg.row);
+            mask[le * cap + slot] = 1.0;
+        }
+        let name = format!("expert_ffn_c{bin}");
+        let out = self.store.execute(
+            &name,
+            &[
+                HostTensor::F32(x),
+                HostTensor::F32(self.w1.clone()),
+                HostTensor::F32(self.w3.clone()),
+                HostTensor::F32(self.w2.clone()),
+                HostTensor::F32(mask),
+            ],
+        )?;
+        let out = match out.into_iter().next() {
+            Some(HostTensor::F32(o)) => o,
+            _ => return Err(Error::runtime("expert output not f32")),
+        };
+        let results = incoming
+            .into_iter()
+            .map(|msg| {
+                let le = msg.local_expert as usize;
+                let slot = msg.slot as usize;
+                let row = out[(le * cap + slot) * h..(le * cap + slot + 1) * h].to_vec();
+                (
+                    msg.src_rank,
+                    ResultMsg { token: msg.token, k: msg.k, row },
+                )
+            })
+            .collect();
+        self.tracker.free(alloc)?;
+        Ok(results)
+    }
+}
+
+/// The coordinator facade.
+pub struct EpCoordinator {
+    pub topo: EpTopology,
+    artifact_dir: std::path::PathBuf,
+    pub policy: ChunkPolicy,
+    seed: u64,
+    /// Per-rank memory capacity for the trackers.
+    pub rank_capacity_bytes: u64,
+}
+
+impl EpCoordinator {
+    pub fn new(
+        artifact_dir: impl Into<std::path::PathBuf>,
+        policy: ChunkPolicy,
+        seed: u64,
+    ) -> Result<Self> {
+        let dir = artifact_dir.into();
+        let store = ArtifactStore::open(&dir)?;
+        let topo = EpTopology::from_manifest(&store.manifest)?;
+        Ok(EpCoordinator {
+            topo,
+            artifact_dir: dir,
+            policy,
+            seed,
+            rank_capacity_bytes: 256 << 20,
+        })
+    }
+
+    /// Apply the policy: MACT = smallest bin whose buffers fit.
+    pub fn decide(&self) -> Result<CoordDecision> {
+        let bin = match self.policy {
+            ChunkPolicy::Fixed(c) => {
+                if !self.topo.chunk_bins.contains(&c) {
+                    return Err(Error::config(format!(
+                        "chunk bin {c} has no exported executable (bins {:?})",
+                        self.topo.chunk_bins
+                    )));
+                }
+                c
+            }
+            ChunkPolicy::Mact { budget_bytes } => *self
+                .topo
+                .chunk_bins
+                .iter()
+                .find(|&&c| self.topo.buffer_bytes(c) <= budget_bytes)
+                .unwrap_or(self.topo.chunk_bins.last().unwrap()),
+        };
+        Ok(CoordDecision {
+            chunk_bin: bin,
+            capacity: self.topo.capacity(bin),
+            buffer_bytes: self.topo.buffer_bytes(bin),
+        })
+    }
+
+    /// Run one full MoE layer pass over deterministic tokens.
+    pub fn run_layer(&self) -> Result<LayerResult> {
+        let topo = self.topo.clone();
+        let ep = topo.ep;
+        let decision = self.decide()?;
+        let bin = decision.chunk_bin;
+        let seed = self.seed;
+        let gate = Arc::new(gate_weights(&topo, seed));
+
+        // Phase 1: routing on the main thread's store (replicated gate;
+        // any rank's client computes identical results).
+        let store = ArtifactStore::open(&self.artifact_dir)?;
+        let mut assignments: Vec<Vec<Vec<u32>>> = Vec::with_capacity(ep);
+        let mut route_weights: Vec<Vec<f32>> = Vec::with_capacity(ep);
+        let mut all_tokens: Vec<Arc<Vec<f32>>> = Vec::with_capacity(ep);
+        for rank in 0..ep {
+            let tokens = rank_tokens(&topo, seed, rank);
+            let out = store.execute(
+                "router_topk",
+                &[
+                    HostTensor::F32(tokens.clone()),
+                    HostTensor::F32(gate.as_ref().clone()),
+                ],
+            )?;
+            let weights = out[0].as_f32()?.to_vec();
+            let indices = out[1].as_i32()?;
+            let per_token: Vec<Vec<u32>> = indices
+                .chunks(topo.top_k)
+                .map(|c| c.iter().map(|&i| i as u32).collect())
+                .collect();
+            assignments.push(per_token);
+            route_weights.push(weights);
+            all_tokens.push(Arc::new(tokens));
+        }
+
+        // Phase 2: per-chunk dispatch plans (leader).
+        let chunk_tokens = topo.tokens_per_rank / bin as usize;
+        let mut plans: Vec<DispatchPlan> = Vec::with_capacity(bin as usize);
+        let parallel = crate::config::ParallelConfig {
+            tp: 1,
+            pp: 1,
+            cp: 1,
+            ep: ep as u64,
+            dp: 1,
+            vpp: 1,
+            micro_batch: 1,
+            global_batch: 1,
+        };
+        for ci in 0..bin as usize {
+            let lo = ci * chunk_tokens;
+            let hi = lo + chunk_tokens;
+            let chunk_assign: Vec<Vec<Vec<u32>>> = assignments
+                .iter()
+                .map(|r| r[lo..hi].to_vec())
+                .collect();
+            plans.push(dispatch::plan(
+                &parallel,
+                topo.global_experts() as u32,
+                &chunk_assign,
+                decision.capacity as u32,
+            )?);
+        }
+
+        // Phase 3: workers. Row channels per rank; a results channel per
+        // rank; a final-output channel back to the leader.
+        let mut row_txs = Vec::with_capacity(ep);
+        let mut row_rxs = Vec::with_capacity(ep);
+        for _ in 0..ep {
+            let (tx, rx) = mpsc::channel::<RowMsg>();
+            row_txs.push(tx);
+            row_rxs.push(Some(rx));
+        }
+        let mut res_txs = Vec::with_capacity(ep);
+        let mut res_rxs = Vec::with_capacity(ep);
+        for _ in 0..ep {
+            let (tx, rx) = mpsc::channel::<ResultMsg>();
+            res_txs.push(tx);
+            res_rxs.push(Some(rx));
+        }
+        let (done_tx, done_rx) = mpsc::channel::<Result<(usize, Vec<f32>, u64, u64)>>();
+
+        let plans = Arc::new(plans);
+        let mut handles = Vec::with_capacity(ep);
+        for rank in 0..ep {
+            let topo_c = topo.clone();
+            let dir = self.artifact_dir.clone();
+            let my_rows = row_rxs[rank].take().unwrap();
+            let my_results = res_rxs[rank].take().unwrap();
+            let row_txs = row_txs.clone();
+            let res_txs = res_txs.clone();
+            let done = done_tx.clone();
+            let plans = plans.clone();
+            let tokens = all_tokens[rank].clone();
+            let weights = route_weights[rank].clone();
+            let cap_bytes = self.rank_capacity_bytes;
+            let h = topo.hidden;
+            let tpr = topo.tokens_per_rank;
+            let tk = topo.top_k;
+            handles.push(std::thread::spawn(move || {
+                let work = || -> Result<(Vec<f32>, u64, u64)> {
+                    let store = ArtifactStore::open(&dir)?;
+                    let (w1, w3, w2) = rank_weights(&topo_c, seed, rank);
+                    let mut worker = Worker {
+                        rank,
+                        topo: topo_c.clone(),
+                        store,
+                        w1,
+                        w3,
+                        w2,
+                        tracker: MemoryTracker::new(rank, cap_bytes),
+                    };
+                    let mut combined = vec![0.0f32; tpr * h];
+                    let mut received_total = 0u64;
+                    let chunk_tokens = tpr / plans.len();
+                    for (ci, plan) in plans.iter().enumerate() {
+                        // send my rows
+                        let mut expected_results = 0usize;
+                        for p in &plan.placements {
+                            if p.route.src_rank as usize != rank {
+                                continue;
+                            }
+                            expected_results += 1;
+                            let slot = p.slot.ok_or_else(|| {
+                                Error::schedule("drop-free plan overflowed")
+                            })?;
+                            // chunk-local token index → global token index
+                            let tok_global = p.route.token as usize + ci * chunk_tokens;
+                            let row = tokens[tok_global * h..(tok_global + 1) * h].to_vec();
+                            row_txs[p.dst_rank as usize]
+                                .send(RowMsg {
+                                    local_expert: p.local_expert,
+                                    slot,
+                                    row,
+                                    src_rank: rank as u32,
+                                    token: tok_global as u32,
+                                    k: p.route.k,
+                                })
+                                .map_err(|_| Error::runtime("row channel closed"))?;
+                        }
+                        // receive the rows destined to me
+                        let mine: u64 = plan
+                            .send_counts
+                            .iter()
+                            .map(|src| src[rank])
+                            .sum();
+                        received_total += mine;
+                        let mut incoming = Vec::with_capacity(mine as usize);
+                        for _ in 0..mine {
+                            incoming.push(my_rows.recv().map_err(|_| {
+                                Error::runtime("row channel closed early")
+                            })?);
+                        }
+                        // expert compute for this chunk
+                        let results = worker.run_chunk(bin, incoming)?;
+                        for (src, res) in results {
+                            res_txs[src as usize]
+                                .send(res)
+                                .map_err(|_| Error::runtime("result channel closed"))?;
+                        }
+                        // combine my own tokens' results for this chunk
+                        for _ in 0..expected_results {
+                            let r = my_results.recv().map_err(|_| {
+                                Error::runtime("result channel closed early")
+                            })?;
+                            let w = weights[r.token as usize * tk + r.k as usize];
+                            let dst =
+                                &mut combined[r.token as usize * h..(r.token as usize + 1) * h];
+                            for (d, s) in dst.iter_mut().zip(&r.row) {
+                                *d += w * s;
+                            }
+                        }
+                    }
+                    Ok((combined, worker.tracker.peak(), received_total))
+                };
+                let _ = done.send(work().map(|(c, p, r)| (rank, c, p, r)));
+            }));
+        }
+        drop(done_tx);
+        drop(row_txs);
+        drop(res_txs);
+
+        let mut outputs = vec![Vec::new(); ep];
+        let mut peaks = vec![0u64; ep];
+        let mut received = vec![0u64; ep];
+        let mut first_err = None;
+        for _ in 0..ep {
+            match done_rx.recv() {
+                Ok(Ok((rank, out, peak, recv))) => {
+                    outputs[rank] = out;
+                    peaks[rank] = peak;
+                    received[rank] = recv;
+                }
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(Error::runtime("worker vanished"));
+                }
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(LayerResult { outputs, decision, peak_bytes: peaks, received })
+    }
+}
+
+/// A pure-rust verifier of the coordinated layer: recomputes the full
+/// drop-free MoE pass (softmax router, top-k ties toward lower index,
+/// SwiGLU experts, weighted combine) on the CPU with the same seeded
+/// weights/tokens. Integration tests assert the coordinator's channel +
+/// executable pipeline matches this to float tolerance, and that the
+/// result is invariant to the chunk bin.
+pub fn native_reference(topo: &EpTopology, seed: u64) -> Vec<Vec<f32>> {
+    let h = topo.hidden;
+    let g = topo.ffn;
+    let e_l = topo.local_experts;
+    let gate = gate_weights(topo, seed);
+    let per_rank_w: Vec<_> = (0..topo.ep).map(|r| rank_weights(topo, seed, r)).collect();
+    let mut outputs = Vec::with_capacity(topo.ep);
+    for rank in 0..topo.ep {
+        let tokens = rank_tokens(topo, seed, rank);
+        let mut out = vec![0.0f32; topo.tokens_per_rank * h];
+        for t in 0..topo.tokens_per_rank {
+            let x = &tokens[t * h..(t + 1) * h];
+            // router: logits = x @ gate  (gate is h × E_global)
+            let eg = topo.global_experts();
+            let mut logits = vec![0.0f64; eg];
+            for (i, &xi) in x.iter().enumerate() {
+                let row = &gate[i * eg..(i + 1) * eg];
+                for (l, &w) in logits.iter_mut().zip(row) {
+                    *l += xi as f64 * w as f64;
+                }
+            }
+            let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let exps: Vec<f64> = logits.iter().map(|&l| (l - max).exp()).collect();
+            let denom: f64 = exps.iter().sum();
+            let mut probs: Vec<f64> = exps.iter().map(|&e| e / denom).collect();
+            // top-k, ties toward lower index
+            let mut picks = Vec::with_capacity(topo.top_k);
+            for _ in 0..topo.top_k {
+                let (mut bi, mut bv) = (0usize, f64::NEG_INFINITY);
+                for (i, &p) in probs.iter().enumerate() {
+                    if p > bv {
+                        bv = p;
+                        bi = i;
+                    }
+                }
+                picks.push((bi, bv));
+                probs[bi] = f64::NEG_INFINITY;
+            }
+            let wsum: f64 = picks.iter().map(|&(_, v)| v).sum();
+            for &(expert, pv) in &picks {
+                let owner = expert / e_l;
+                let local = expert % e_l;
+                let (w1, w3, w2) = &per_rank_w[owner];
+                // SwiGLU: out = (silu(x·w1) * (x·w3)) · w2
+                let mut act = vec![0.0f64; g];
+                for gi in 0..g {
+                    let mut a1 = 0.0f64;
+                    let mut a3 = 0.0f64;
+                    for (i, &xi) in x.iter().enumerate() {
+                        a1 += xi as f64 * w1[(local * h + i) * g + gi] as f64;
+                        a3 += xi as f64 * w3[(local * h + i) * g + gi] as f64;
+                    }
+                    let silu = a1 / (1.0 + (-a1).exp());
+                    act[gi] = silu * a3;
+                }
+                let weight = (pv / wsum) as f32;
+                let dst = &mut out[t * h..(t + 1) * h];
+                for (i, d) in dst.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for (gi, &a) in act.iter().enumerate() {
+                        acc += a * w2[(local * g + gi) * h + i] as f64;
+                    }
+                    *d += weight * acc as f32;
+                }
+            }
+        }
+        outputs.push(out);
+    }
+    outputs
+}

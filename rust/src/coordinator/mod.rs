@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the paper's system contribution running with
+//! REAL buffers and REAL executables.
+//!
+//! Two components:
+//!
+//! * [`train::TrainDriver`] — the end-to-end training loop: loads the
+//!   AOT `train_step` executable and the initial parameters, streams
+//!   synthetic corpus batches, and logs loss/TGS
+//!   (examples/train_moe.rs).
+//! * [`ep::EpCoordinator`] — a thread-per-EP-rank mini-cluster for the
+//!   MoE layer path: each rank routes its own tokens with the Pallas
+//!   router executable, the leader plans the all-to-all
+//!   ([`crate::dispatch`]), MACT picks the chunk bin against a memory
+//!   budget, and each chunk's grouped expert buffers are assembled from
+//!   real `mpsc` messages, executed with the matching
+//!   `expert_ffn_c{bin}` executable, and combined back — Eq. 4/6 end
+//!   to end, with [`crate::cluster::MemoryTracker`] accounting every
+//!   buffer and surfacing OOM exactly where the paper's Table 4 does.
+
+pub mod ep;
+pub mod train;

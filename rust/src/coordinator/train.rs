@@ -1,0 +1,160 @@
+//! End-to-end train driver: rust loop over the AOT `train_step`
+//! executable. Python is not involved — the artifacts are loaded and
+//! executed through PJRT directly.
+
+use crate::data::Corpus;
+use crate::error::Result;
+use crate::json::Value;
+use crate::metrics::Timer;
+use crate::runtime::{ArtifactStore, HostTensor};
+
+/// One logged training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepLog {
+    pub step: u64,
+    pub loss: f32,
+    pub step_s: f64,
+    /// Tokens per second over this step (single simulated GPU).
+    pub tgs: f64,
+}
+
+/// Summary of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub steps: Vec<StepLog>,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub mean_tgs: f64,
+    pub total_s: f64,
+}
+
+impl TrainReport {
+    /// Smoothed final loss (mean of the last k steps).
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        let n = self.steps.len();
+        let k = k.min(n).max(1);
+        self.steps[n - k..].iter().map(|s| s.loss).sum::<f32>() / k as f32
+    }
+}
+
+/// The driver.
+pub struct TrainDriver {
+    store: ArtifactStore,
+    batch: usize,
+    seq: usize,
+}
+
+impl TrainDriver {
+    pub fn new(store: ArtifactStore) -> Result<Self> {
+        let cfg = &store.config;
+        let batch = cfg
+            .get("batch")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| crate::Error::artifact("manifest config missing batch"))?
+            as usize;
+        let seq = cfg
+            .get("seq")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| crate::Error::artifact("manifest config missing seq"))?
+            as usize;
+        Ok(TrainDriver { store, batch, seq })
+    }
+
+    pub fn tokens_per_step(&self) -> usize {
+        self.batch * self.seq
+    }
+
+    /// Run `steps` optimisation steps on the synthetic corpus; calls
+    /// `on_step` after each (for live logging).
+    pub fn train(
+        &self,
+        steps: u64,
+        data_seed: u64,
+        mut on_step: impl FnMut(&StepLog),
+    ) -> Result<TrainReport> {
+        let mut params = self.store.initial_params()?;
+        let n = params.len();
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        let mut corpus = Corpus::new(
+            self.store
+                .config
+                .get("vocab")
+                .and_then(Value::as_u64)
+                .unwrap_or(8192) as u32,
+            data_seed,
+        );
+        let total = Timer::start();
+        let mut logs = Vec::with_capacity(steps as usize);
+        let mut first_loss = f32::NAN;
+        for step in 1..=steps {
+            let tokens = corpus.batch(self.batch, self.seq);
+            let t = Timer::start();
+            let outputs = self.store.execute(
+                "train_step",
+                &[
+                    HostTensor::F32(std::mem::take(&mut params)),
+                    HostTensor::F32(std::mem::take(&mut m)),
+                    HostTensor::F32(std::mem::take(&mut v)),
+                    HostTensor::I32(tokens),
+                    HostTensor::F32(vec![step as f32]),
+                ],
+            )?;
+            let step_s = t.elapsed_s();
+            let mut it = outputs.into_iter();
+            params = match it.next() {
+                Some(HostTensor::F32(p)) => p,
+                _ => return Err(crate::Error::runtime("train_step output 0 not f32")),
+            };
+            m = match it.next() {
+                Some(HostTensor::F32(p)) => p,
+                _ => return Err(crate::Error::runtime("train_step output 1 not f32")),
+            };
+            v = match it.next() {
+                Some(HostTensor::F32(p)) => p,
+                _ => return Err(crate::Error::runtime("train_step output 2 not f32")),
+            };
+            let loss = it
+                .next()
+                .ok_or_else(|| crate::Error::runtime("missing loss output"))?
+                .scalar_f32()?;
+            if step == 1 {
+                first_loss = loss;
+            }
+            let log = StepLog {
+                step,
+                loss,
+                step_s,
+                tgs: self.tokens_per_step() as f64 / step_s,
+            };
+            on_step(&log);
+            logs.push(log);
+        }
+        let total_s = total.elapsed_s();
+        let final_loss = logs.last().map(|l| l.loss).unwrap_or(f32::NAN);
+        let mean_tgs = if logs.is_empty() {
+            0.0
+        } else {
+            logs.iter().map(|l| l.tgs).sum::<f64>() / logs.len() as f64
+        };
+        Ok(TrainReport { steps: logs, first_loss, final_loss, mean_tgs, total_s })
+    }
+
+    /// Evaluate the loss of the given parameters on a fixed batch.
+    pub fn eval(&self, params: Vec<f32>, data_seed: u64) -> Result<f32> {
+        let mut corpus = Corpus::new(
+            self.store
+                .config
+                .get("vocab")
+                .and_then(Value::as_u64)
+                .unwrap_or(8192) as u32,
+            data_seed,
+        );
+        let tokens = corpus.batch(self.batch, self.seq);
+        let out = self.store.execute(
+            "fwd_loss",
+            &[HostTensor::F32(params), HostTensor::I32(tokens)],
+        )?;
+        out[0].scalar_f32()
+    }
+}

@@ -1,0 +1,317 @@
+//! All-to-all dispatch planning: the token movement of Eq. 4's
+//! `dispatch(X)` / `combine(...)`, planned by the Layer-3 coordinator.
+//!
+//! Given per-token expert assignments on each source rank, the planner
+//! builds (a) the per-(src, expert) send counts that drive the
+//! all-to-all, (b) the slot placement of every token copy in the
+//! destination rank's grouped `(local_expert, capacity)` buffer, and
+//! (c) the inverse permutation used by combine. The real-execution
+//! coordinator moves actual `f32` rows with this plan; the simulator
+//! only uses the counts.
+//!
+//! Invariants (property-tested here and mirrored in python ref.py):
+//!   * conservation: every routed copy lands in exactly one slot or is
+//!     counted as overflow (overflow = 0 when capacity is drop-free);
+//!   * combine ∘ dispatch = identity on token ids;
+//!   * slot ids are unique per destination buffer.
+
+use crate::config::ParallelConfig;
+use crate::error::{Error, Result};
+
+/// A token copy's route: source rank, token index, k-th choice, expert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    pub src_rank: u32,
+    pub token: u32,
+    pub k: u8,
+    pub expert: u32,
+}
+
+/// Placement of one token copy in a destination buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub route: Route,
+    /// Destination EP rank (owner of the expert).
+    pub dst_rank: u32,
+    /// Local expert index on the destination rank.
+    pub local_expert: u32,
+    /// Slot within the expert's capacity region, or `None` if the copy
+    /// overflowed a non-drop-free capacity.
+    pub slot: Option<u32>,
+}
+
+/// The computed all-to-all plan for one chunk of tokens.
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    /// Experts per rank.
+    pub experts_per_rank: u32,
+    /// Per-expert capacity of the destination buffers.
+    pub capacity: u32,
+    /// send_counts[src][dst] = token copies moving src → dst.
+    pub send_counts: Vec<Vec<u64>>,
+    /// Every copy's placement, in (src_rank, token, k) order.
+    pub placements: Vec<Placement>,
+    /// Copies that exceeded capacity (0 under drop-free sizing).
+    pub overflow: u64,
+}
+
+impl DispatchPlan {
+    /// Received copies per destination rank (the `s''` vector).
+    pub fn received_per_rank(&self) -> Vec<u64> {
+        let ranks = self.send_counts.len();
+        let mut recv = vec![0u64; ranks];
+        for src in &self.send_counts {
+            for (dst, &c) in src.iter().enumerate() {
+                recv[dst] += c;
+            }
+        }
+        recv
+    }
+
+    /// Total placed (non-overflow) copies.
+    pub fn placed(&self) -> u64 {
+        self.placements.iter().filter(|p| p.slot.is_some()).count() as u64
+    }
+}
+
+/// Expert owner under block layout (rank k hosts experts
+/// [k·per, (k+1)·per)).
+pub fn owner_of(expert: u32, experts_per_rank: u32) -> u32 {
+    expert / experts_per_rank
+}
+
+/// Build the all-to-all plan for one chunk.
+///
+/// `assignments[src][token]` lists the top-k expert choices of that
+/// token. `capacity` is the per-(rank, local expert) buffer size; pass
+/// [`drop_free_capacity`] for the paper's unrestricted routing.
+pub fn plan(
+    parallel: &ParallelConfig,
+    n_experts: u32,
+    assignments: &[Vec<Vec<u32>>],
+    capacity: u32,
+) -> Result<DispatchPlan> {
+    let ranks = parallel.ep as usize;
+    if assignments.len() != ranks {
+        return Err(Error::schedule(format!(
+            "assignments for {} ranks, expected ep={}",
+            assignments.len(),
+            ranks
+        )));
+    }
+    if n_experts % parallel.ep as u32 != 0 {
+        return Err(Error::schedule("experts not divisible by ep"));
+    }
+    let experts_per_rank = n_experts / parallel.ep as u32;
+    let mut send_counts = vec![vec![0u64; ranks]; ranks];
+    // next free slot per expert, flat-indexed — one cache line per few
+    // experts instead of a Vec<Vec> indirection in the inner loop.
+    let mut next_slot = vec![0u32; n_experts as usize];
+    let total_copies: usize = assignments
+        .iter()
+        .map(|r| r.iter().map(Vec::len).sum::<usize>())
+        .sum();
+    let mut placements = Vec::with_capacity(total_copies);
+    let mut overflow = 0u64;
+
+    for (src, tokens) in assignments.iter().enumerate() {
+        for (tok, choices) in tokens.iter().enumerate() {
+            for (k, &expert) in choices.iter().enumerate() {
+                if expert >= n_experts {
+                    return Err(Error::schedule(format!(
+                        "expert {expert} out of range (n={n_experts})"
+                    )));
+                }
+                let dst = owner_of(expert, experts_per_rank);
+                let local = expert % experts_per_rank;
+                send_counts[src][dst as usize] += 1;
+                let slot_ref = &mut next_slot[expert as usize];
+                let slot = if *slot_ref < capacity {
+                    let s = *slot_ref;
+                    *slot_ref += 1;
+                    Some(s)
+                } else {
+                    overflow += 1;
+                    None
+                };
+                placements.push(Placement {
+                    route: Route {
+                        src_rank: src as u32,
+                        token: tok as u32,
+                        k: k as u8,
+                        expert,
+                    },
+                    dst_rank: dst,
+                    local_expert: local,
+                    slot,
+                });
+            }
+        }
+    }
+    Ok(DispatchPlan {
+        experts_per_rank,
+        capacity,
+        send_counts,
+        placements,
+        overflow,
+    })
+}
+
+/// Drop-free capacity for a chunk of `chunk_tokens` tokens with top-k
+/// routing: in the worst case every copy of every token in the chunk
+/// (from all `ep` source ranks) lands on ONE expert.
+pub fn drop_free_capacity(chunk_tokens: u32, top_k: u32, ep: u32) -> u32 {
+    chunk_tokens * top_k * ep
+}
+
+/// Combine: given per-copy outputs keyed by placement, accumulate the
+/// weighted sum back per (src_rank, token). Returns
+/// `out[src][token] = Σ_k weight · value` for scalar values — the
+/// coordinator uses the same traversal for full hidden vectors.
+pub fn combine_scalar(
+    plan: &DispatchPlan,
+    n_tokens_per_rank: &[usize],
+    value_of: impl Fn(&Placement) -> f64,
+    weight_of: impl Fn(&Route) -> f64,
+) -> Vec<Vec<f64>> {
+    let mut out: Vec<Vec<f64>> = n_tokens_per_rank
+        .iter()
+        .map(|&n| vec![0.0; n])
+        .collect();
+    for p in &plan.placements {
+        if p.slot.is_some() {
+            out[p.route.src_rank as usize][p.route.token as usize] +=
+                weight_of(&p.route) * value_of(p);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::paper_parallel;
+
+    fn small_parallel() -> ParallelConfig {
+        let mut p = paper_parallel();
+        p.ep = 4;
+        p
+    }
+
+    /// 4 ranks × 3 tokens, top-2, 8 experts (2 per rank).
+    fn assignments() -> Vec<Vec<Vec<u32>>> {
+        vec![
+            vec![vec![0, 1], vec![2, 3], vec![4, 5]],
+            vec![vec![6, 7], vec![0, 2], vec![4, 6]],
+            vec![vec![1, 3], vec![5, 7], vec![0, 4]],
+            vec![vec![2, 6], vec![3, 5], vec![1, 7]],
+        ]
+    }
+
+    #[test]
+    fn conservation_total_copies() {
+        let p = small_parallel();
+        let plan = plan(&p, 8, &assignments(), 64).unwrap();
+        assert_eq!(plan.placements.len(), 4 * 3 * 2);
+        assert_eq!(plan.overflow, 0);
+        assert_eq!(plan.placed(), 24);
+        let total_sent: u64 = plan.send_counts.iter().flatten().sum();
+        assert_eq!(total_sent, 24);
+    }
+
+    #[test]
+    fn received_matches_send_matrix() {
+        let p = small_parallel();
+        let plan = plan(&p, 8, &assignments(), 64).unwrap();
+        let recv = plan.received_per_rank();
+        assert_eq!(recv.iter().sum::<u64>(), 24);
+        // every expert appears exactly 3 times in assignments()
+        assert_eq!(recv, vec![6, 6, 6, 6]);
+    }
+
+    #[test]
+    fn slots_unique_per_buffer() {
+        let p = small_parallel();
+        let plan = plan(&p, 8, &assignments(), 64).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for pl in &plan.placements {
+            if let Some(slot) = pl.slot {
+                assert!(seen.insert((pl.dst_rank, pl.local_expert, slot)));
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_when_capacity_small() {
+        let p = small_parallel();
+        // capacity 1 but each expert receives 3 copies → 2 overflow each
+        let plan = plan(&p, 8, &assignments(), 1).unwrap();
+        assert_eq!(plan.overflow, 8 * 2);
+        assert_eq!(plan.placed(), 8);
+    }
+
+    #[test]
+    fn drop_free_capacity_never_overflows() {
+        let p = small_parallel();
+        let cap = drop_free_capacity(3, 2, 4);
+        let plan = plan(&p, 8, &assignments(), cap).unwrap();
+        assert_eq!(plan.overflow, 0);
+    }
+
+    #[test]
+    fn combine_roundtrip_identity() {
+        // With value(placement) = src·100 + token and top-1 weight 1.0,
+        // combine must reproduce each token's own id.
+        let p = small_parallel();
+        let top1: Vec<Vec<Vec<u32>>> = assignments()
+            .iter()
+            .map(|r| r.iter().map(|t| vec![t[0]]).collect())
+            .collect();
+        let plan = plan(&p, 8, &top1, 64).unwrap();
+        let out = combine_scalar(
+            &plan,
+            &[3, 3, 3, 3],
+            |pl| (pl.route.src_rank * 100 + pl.route.token) as f64,
+            |_| 1.0,
+        );
+        for (src, tokens) in out.iter().enumerate() {
+            for (tok, &v) in tokens.iter().enumerate() {
+                assert_eq!(v, (src * 100 + tok) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn combine_weights_sum() {
+        // top-2 with weights 0.5/0.5 over identical values = the value.
+        let p = small_parallel();
+        let plan = plan(&p, 8, &assignments(), 64).unwrap();
+        let out = combine_scalar(&plan, &[3, 3, 3, 3], |_| 2.0, |_| 0.5);
+        for tokens in out {
+            for v in tokens {
+                assert!((v - 2.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn owner_block_layout() {
+        assert_eq!(owner_of(0, 2), 0);
+        assert_eq!(owner_of(1, 2), 0);
+        assert_eq!(owner_of(2, 2), 1);
+        assert_eq!(owner_of(7, 2), 3);
+    }
+
+    #[test]
+    fn rejects_bad_expert_id() {
+        let p = small_parallel();
+        let bad = vec![vec![vec![99u32]], vec![], vec![], vec![]];
+        assert!(plan(&p, 8, &bad, 4).is_err());
+    }
+
+    #[test]
+    fn rejects_rank_mismatch() {
+        let p = small_parallel();
+        assert!(plan(&p, 8, &[vec![]], 4).is_err());
+    }
+}

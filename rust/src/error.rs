@@ -1,0 +1,81 @@
+//! Crate-wide error type.
+
+/// Unified error for every MemFine subsystem.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Configuration rejected by validation.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// JSON parse/serialise failure (see [`crate::json`]).
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// CLI argument error.
+    #[error("cli error: {0}")]
+    Cli(String),
+
+    /// A simulated or real device ran out of memory. Carries the
+    /// requesting device and the attempted allocation so OOM tests can
+    /// assert on the exact failure site.
+    #[error("OOM on device {device}: requested {requested} B, used {used} B of {capacity} B")]
+    Oom {
+        device: usize,
+        requested: u64,
+        used: u64,
+        capacity: u64,
+    },
+
+    /// Violation of a scheduling invariant (pipeline, dispatch, chunk).
+    #[error("schedule error: {0}")]
+    Schedule(String),
+
+    /// PJRT runtime failure (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Underlying I/O failure.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Shorthand constructor used across modules.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn schedule(msg: impl Into<String>) -> Self {
+        Error::Schedule(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    pub fn artifact(msg: impl Into<String>) -> Self {
+        Error::Artifact(msg.into())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oom_message_carries_accounting() {
+        let e = Error::Oom { device: 3, requested: 10, used: 60, capacity: 64 };
+        let s = e.to_string();
+        assert!(s.contains("device 3") && s.contains("10 B") && s.contains("64 B"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

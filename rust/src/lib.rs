@@ -1,0 +1,55 @@
+//! # MemFine — memory-aware fine-grained scheduling for MoE training
+//!
+//! Rust + JAX + Pallas reproduction of *"MemFine: Memory-Aware
+//! Fine-Grained Scheduling for MoE Training"* (ZTE AIH Team, CS.DC 2025).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): Pallas kernels for the
+//!   expert FFN hot-spot and the top-k router, validated against
+//!   pure-jnp oracles.
+//! * **Layer 2** (`python/compile/model.py`): the MoE transformer in
+//!   JAX, AOT-lowered once to HLO-text artifacts.
+//! * **Layer 3** (this crate): everything the paper contributes —
+//!   the fine-grained chunk distribution algorithm ([`chunk`]::Fcda),
+//!   memory-aware chunk tuning ([`chunk`]::Mact), the theoretical
+//!   memory cost model ([`memory`]), plus the distributed-training
+//!   substrate it needs: routing simulation ([`router`]), all-to-all
+//!   dispatch planning ([`dispatch`]), pipeline scheduling
+//!   ([`pipeline`]), a simulated cluster ([`cluster`]), collective
+//!   cost models ([`collective`]), a performance model ([`perf`]), a
+//!   whole-training-run simulator ([`sim`]), and a real-execution
+//!   coordinator ([`coordinator`]) that drives the AOT artifacts
+//!   through the PJRT runtime ([`runtime`]).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! JAX entry points once, and this crate is self-contained afterwards.
+//!
+//! Entry points: the `memfine` binary (`memfine --help`), the
+//! `examples/` drivers, and the `rust/benches/` harnesses that
+//! regenerate every table and figure of the paper (DESIGN.md §4).
+
+pub mod bench;
+pub mod chunk;
+pub mod cli;
+pub mod cluster;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dispatch;
+pub mod error;
+pub mod json;
+pub mod logging;
+pub mod memory;
+pub mod metrics;
+pub mod perf;
+pub mod pipeline;
+pub mod prop;
+pub mod router;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,81 @@
+//! Minimal `log::Log` backend (no `env_logger` offline).
+//!
+//! Level comes from `MEMFINE_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`. Messages go to stderr with a monotonic
+//! timestamp so example/bench output on stdout stays machine-parsable.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct Logger {
+    start: Instant,
+}
+
+static LOGGER: OnceLock<Logger> = OnceLock::new();
+
+impl log::Log for Logger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name, case-insensitive; unknown names yield None.
+pub fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Install the logger (idempotent; later calls only adjust the level).
+pub fn init() {
+    let level = std::env::var("MEMFINE_LOG")
+        .ok()
+        .and_then(|s| parse_level(&s))
+        .unwrap_or(LevelFilter::Info);
+    let logger = LOGGER.get_or_init(|| Logger { start: Instant::now() });
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_level_names() {
+        assert_eq!(parse_level("info"), Some(LevelFilter::Info));
+        assert_eq!(parse_level("TRACE"), Some(LevelFilter::Trace));
+        assert_eq!(parse_level("bogus"), None);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        log::info!("logger smoke test");
+    }
+}

@@ -1,0 +1,244 @@
+//! `memfine` — CLI for the MemFine reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's artifacts (DESIGN.md §4):
+//!
+//! ```text
+//! memfine plan    [--model i|ii]             memory model walkthrough (Eq. 1–3, 8)
+//! memfine simulate [--model i|ii] [--method 1|2|3] [--iters N]
+//! memfine repro   table4|fig2|fig4|fig5      regenerate a paper artifact
+//! memfine train   [--steps N] [--artifacts DIR]  E2E mini-model training
+//! memfine coord   [--policy mact|fixed] [--budget-mb N]  real EP layer pass
+//! ```
+
+use memfine::cli::{usage, Args, OptSpec};
+use memfine::config::{model_i, model_ii, paper_run, Method, ModelConfig};
+use memfine::coordinator::ep::{ChunkPolicy, EpCoordinator};
+use memfine::coordinator::train::TrainDriver;
+use memfine::memory::{ActivationModel, StaticModel};
+use memfine::runtime::ArtifactStore;
+use memfine::sim::Simulator;
+use memfine::util::fmt_bytes;
+
+const VALUE_OPTS: &[&str] = &[
+    "model", "method", "iters", "seed", "steps", "artifacts", "policy",
+    "budget-mb", "bins", "chunk",
+];
+
+fn main() {
+    memfine::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match Args::parse(args, VALUE_OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if parsed.command.is_none() || parsed.has_flag("help") {
+        print_usage();
+        return;
+    }
+    let cmd = parsed.command.clone().unwrap();
+    let result = match cmd.as_str() {
+        "plan" => cmd_plan(&parsed),
+        "simulate" => cmd_simulate(&parsed),
+        "repro" => cmd_repro(&parsed),
+        "train" => cmd_train(&parsed),
+        "coord" => cmd_coord(&parsed),
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    print!(
+        "{}",
+        usage(
+            "memfine",
+            "MemFine: memory-aware fine-grained scheduling for MoE training",
+            &[
+                ("plan", "memory model walkthrough (Eq. 1-3, Eq. 8)"),
+                ("simulate", "simulate a training run (methods 1/2/3)"),
+                ("repro", "regenerate a paper artifact: table4|fig2|fig4|fig5"),
+                ("train", "end-to-end mini-model training via PJRT"),
+                ("coord", "real EP coordinator layer pass"),
+            ],
+            &[
+                OptSpec { name: "model", help: "table-3 model: i or ii", takes_value: true, default: Some("i") },
+                OptSpec { name: "method", help: "1=full-recompute 2=fixed-chunk 3=mact", takes_value: true, default: Some("3") },
+                OptSpec { name: "chunk", help: "fixed chunk bin for method 2", takes_value: true, default: Some("8") },
+                OptSpec { name: "iters", help: "iterations to simulate", takes_value: true, default: Some("25") },
+                OptSpec { name: "steps", help: "training steps (train)", takes_value: true, default: Some("50") },
+                OptSpec { name: "seed", help: "rng seed", takes_value: true, default: Some("7") },
+                OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: Some("artifacts") },
+                OptSpec { name: "policy", help: "coord policy: mact or fixed", takes_value: true, default: Some("mact") },
+                OptSpec { name: "budget-mb", help: "coord per-rank memory budget", takes_value: true, default: Some("48") },
+            ],
+        )
+    );
+}
+
+fn model_arg(args: &Args) -> Result<ModelConfig, memfine::Error> {
+    match args.get_or("model", "i").as_str() {
+        "i" | "I" | "1" => Ok(model_i()),
+        "ii" | "II" | "2" => Ok(model_ii()),
+        other => Err(memfine::Error::Cli(format!("unknown model '{other}'"))),
+    }
+}
+
+fn method_arg(args: &Args) -> Result<Method, memfine::Error> {
+    match args.get_or("method", "3").as_str() {
+        "1" => Ok(Method::FullRecompute),
+        "2" => Ok(Method::FixedChunk(args.get_u64("chunk", 8)?)),
+        "3" => Ok(Method::Mact(args.get_u64_list("bins", &[1, 2, 4, 8])?)),
+        other => Err(memfine::Error::Cli(format!("unknown method '{other}'"))),
+    }
+}
+
+fn cmd_plan(args: &Args) -> memfine::Result<()> {
+    let model = model_arg(args)?;
+    let run = paper_run(model, Method::Mact(vec![1, 2, 4, 8]));
+    let act = ActivationModel::new(&run);
+    let sta = StaticModel::new(&run);
+    let budget = (run.alpha * run.gpu_mem_bytes as f64) as u64;
+    println!(
+        "MemFine memory plan — {} layers, e={}, p={}",
+        run.model.layers, run.parallel.ep, run.parallel.pp
+    );
+    println!("GPU budget α·M = {}", fmt_bytes(budget));
+    println!("theoretical peak s' = {}", act.s_prime_theoretical_peak());
+    println!();
+    println!(
+        "{:>5} {:>12} {:>12} {:>14} {:>10}",
+        "stage", "static", "dense act", "s'_max (Eq.8)", "ideal c"
+    );
+    for stage in 0..run.parallel.pp {
+        let st = sta.bytes_on_rank(stage);
+        let s_max = act.s_prime_max(stage, st, budget, true);
+        let worst = act.s_prime_theoretical_peak();
+        let need = worst.div_ceil(s_max.max(1));
+        println!(
+            "{:>5} {:>12} {:>12} {:>14} {:>10}",
+            stage,
+            fmt_bytes(st),
+            fmt_bytes(act.dense_bytes()),
+            s_max,
+            need
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> memfine::Result<()> {
+    let model = model_arg(args)?;
+    let method = method_arg(args)?;
+    let mut run = paper_run(model, method);
+    run.iterations = args.get_u64("iters", 25)?;
+    run.seed = args.get_u64("seed", 7)?;
+    let sim = Simulator::new(run)?;
+    let out = sim.run_all();
+    println!("method: {}", out.method.name());
+    println!("static memory (max stage): {}", fmt_bytes(out.static_bytes));
+    println!("peak activation: {}", fmt_bytes(out.peak_act_bytes));
+    println!("OOM iterations: {}/{}", out.oom_iterations, out.iterations.len());
+    println!("avg TGS (non-OOM): {:.0}", out.avg_tgs);
+    for it in &out.iterations {
+        println!(
+            "  iter {:>2}  act={}  t={:.2}s  TGS={:>7.0}{}",
+            it.iteration,
+            fmt_bytes(it.peak_act_bytes),
+            it.iteration_s,
+            it.tgs,
+            if it.oom { "  ** OOM **" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> memfine::Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("table4");
+    match what {
+        "table4" => memfine::sim::repro::table4(args.get_u64("seed", 7)?),
+        "fig2" => memfine::sim::repro::fig2(args.get_u64("seed", 7)?, 7),
+        "fig4" => memfine::sim::repro::fig4(args.get_u64("seed", 7)?, args.get_u64("iters", 25)?),
+        "fig5" => memfine::sim::repro::fig5(args.get_u64("seed", 7)?, args.get_u64("iters", 25)?),
+        other => Err(memfine::Error::Cli(format!(
+            "unknown artifact '{other}' (table4|fig2|fig4|fig5)"
+        ))),
+    }
+}
+
+fn cmd_train(args: &Args) -> memfine::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let steps = args.get_u64("steps", 50)?;
+    let store = ArtifactStore::open(&dir)?;
+    let driver = TrainDriver::new(store)?;
+    println!(
+        "training {} steps (tokens/step = {})",
+        steps,
+        driver.tokens_per_step()
+    );
+    let report = driver.train(steps, args.get_u64("seed", 7)?, |log| {
+        if log.step == 1 || log.step % 10 == 0 {
+            println!(
+                "step {:>4}  loss {:.4}  {:.2}s  TGS {:.0}",
+                log.step, log.loss, log.step_s, log.tgs
+            );
+        }
+    })?;
+    println!(
+        "done: first loss {:.4} → final {:.4} (tail-5 {:.4}), mean TGS {:.0}, total {:.1}s",
+        report.first_loss,
+        report.final_loss,
+        report.tail_loss(5),
+        report.mean_tgs,
+        report.total_s
+    );
+    Ok(())
+}
+
+fn cmd_coord(args: &Args) -> memfine::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let budget = args.get_u64("budget-mb", 48)? << 20;
+    let policy = match args.get_or("policy", "mact").as_str() {
+        "mact" => ChunkPolicy::Mact { budget_bytes: budget },
+        "fixed" => ChunkPolicy::Fixed(args.get_u64("chunk", 8)?),
+        other => return Err(memfine::Error::Cli(format!("unknown policy '{other}'"))),
+    };
+    let coord = EpCoordinator::new(dir, policy, args.get_u64("seed", 7)?)?;
+    println!(
+        "EP coordinator: {} ranks × {} local experts, {} tokens/rank, top-{}",
+        coord.topo.ep, coord.topo.local_experts, coord.topo.tokens_per_rank, coord.topo.top_k
+    );
+    let d = coord.decide()?;
+    println!(
+        "decision: chunk bin {} (capacity {}, buffers {})",
+        d.chunk_bin,
+        d.capacity,
+        fmt_bytes(d.buffer_bytes)
+    );
+    let result = coord.run_layer()?;
+    println!("received per rank: {:?}", result.received);
+    println!(
+        "peak tracked bytes per rank: {:?}",
+        result
+            .peak_bytes
+            .iter()
+            .map(|&b| fmt_bytes(b))
+            .collect::<Vec<_>>()
+    );
+    let norm: f32 = result.outputs[0].iter().map(|x| x * x).sum::<f32>().sqrt();
+    println!("rank-0 output L2 = {norm:.3} (layer pass complete)");
+    Ok(())
+}

@@ -1,0 +1,427 @@
+//! The theoretical memory cost model — paper §3 (Eq. 1–3, Table 2) and
+//! the MACT token budget (Eq. 8).
+//!
+//! All quantities are **bytes on one GPU**. The model splits GPU memory
+//! into *static* (weights + gradients + optimizer state, Eq. 1) and
+//! *activated* (stored activations of the in-flight micro-batches,
+//! Eq. 2 built from Table 2's per-module rows).
+//!
+//! The key structural fact the whole paper rests on: the activation
+//! term has a dense part proportional to the local sequence length `s`
+//! and a MoE part proportional to `s'`, the tokens *received* by this
+//! rank's experts after all-to-all. Load imbalance can push
+//! `s' → e·s·t_k` (every routed copy lands here), which overflows
+//! memory even under full recomputation — and chunking divides exactly
+//! that term by the chunk count (Eq. 6).
+
+use crate::config::{ModelConfig, ParallelConfig, RunConfig};
+
+/// Per-module stored activations of ONE transformer layer for ONE
+/// micro-batch — the rows of Table 2, in bytes. `s` and `s_recv` (`s'`)
+/// are token counts after any context/tensor-parallel split is applied
+/// by the caller via [`ActivationModel`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerActivation {
+    pub norm1: u64,
+    pub qkv_in: u64,
+    pub q: u64,
+    pub k: u64,
+    pub v: u64,
+    pub attn_out: u64,
+    pub norm2: u64,
+    pub router_in: u64,
+    pub router_logits: u64,
+    pub expert_in: u64,
+    pub expert_hidden: u64,
+    pub score_mul: u64,
+}
+
+impl LayerActivation {
+    /// Total stored bytes (the Table 2 "Total" row).
+    pub fn total(&self) -> u64 {
+        self.norm1
+            + self.qkv_in
+            + self.q
+            + self.k
+            + self.v
+            + self.attn_out
+            + self.norm2
+            + self.router_in
+            + self.router_logits
+            + self.expert_in
+            + self.expert_hidden
+            + self.score_mul
+    }
+
+    /// The dense (∝ s) component.
+    pub fn dense_part(&self) -> u64 {
+        self.total() - self.moe_part()
+    }
+
+    /// The MoE (∝ s') component — what FCDA chunking divides.
+    pub fn moe_part(&self) -> u64 {
+        self.expert_in + self.expert_hidden + self.score_mul
+    }
+}
+
+/// Evaluates the paper's activation formulas for a (model, parallel,
+/// dtype) triple.
+#[derive(Clone, Debug)]
+pub struct ActivationModel {
+    pub model: ModelConfig,
+    pub parallel: ParallelConfig,
+    /// Bytes per element (`D_t`).
+    pub dtype_bytes: u64,
+}
+
+impl ActivationModel {
+    pub fn new(run: &RunConfig) -> Self {
+        ActivationModel {
+            model: run.model.clone(),
+            parallel: run.parallel.clone(),
+            dtype_bytes: run.dtype_bytes,
+        }
+    }
+
+    /// Table 2 rows for one layer, one micro-batch.
+    ///
+    /// `s_recv` is the number of token copies this rank's experts
+    /// receive for this micro-batch (`s'` in the paper).
+    pub fn layer(&self, s_recv: u64) -> LayerActivation {
+        let m = &self.model;
+        let p = &self.parallel;
+        let tc = p.tp * p.cp;
+        let dt = self.dtype_bytes;
+        let b = p.micro_batch;
+        let s = m.seq;
+        let per = |elems: u64| dt * b * elems / tc;
+        LayerActivation {
+            norm1: per(s * m.hidden),
+            qkv_in: per(s * m.hidden),
+            q: per(s * m.heads * m.head_dim),
+            k: per(s * m.kv_heads * m.head_dim),
+            v: per(s * m.kv_heads * m.head_dim),
+            attn_out: per(s * m.hidden),
+            norm2: per(s * m.hidden),
+            router_in: per(s * m.hidden),
+            router_logits: per(s * m.n_experts),
+            expert_in: per(s_recv * m.hidden),
+            expert_hidden: per(2 * s_recv * m.ffn_expert),
+            score_mul: per(s_recv * m.hidden),
+        }
+    }
+
+    /// Eq. 2 closed form for one layer, one micro-batch:
+    /// `D_t·b/(t·c) · [ s(5h + a·h_d + 2k_a·h_d + e_n) + s'(2h + 2g_e) ]`.
+    pub fn layer_bytes(&self, s_recv: u64) -> u64 {
+        self.layer(s_recv).total()
+    }
+
+    /// Only the dense term of Eq. 2 (∝ s).
+    pub fn dense_bytes(&self) -> u64 {
+        self.layer(0).total()
+    }
+
+    /// Per-received-token MoE bytes: `D_t·b·(2h + 2g_e)/(t·c)`.
+    pub fn moe_bytes_per_token(&self) -> u64 {
+        let m = &self.model;
+        let p = &self.parallel;
+        self.dtype_bytes * p.micro_batch * (2 * m.hidden + 2 * m.ffn_expert)
+            / (p.tp * p.cp)
+    }
+
+    /// Peak activated memory (Eq. 2) on pipeline rank `pp_rank` when
+    /// the hottest layer of the stage receives `s_recv` token copies
+    /// and recomputation stores `m_g` micro-batch boundaries.
+    ///
+    /// `full_recompute = true` forces `m_g = 1` (the paper's note under
+    /// Eq. 2); otherwise `m_g = vp + p − 2·r − 1`.
+    pub fn peak_bytes(&self, pp_rank: u64, s_recv: u64, full_recompute: bool) -> u64 {
+        let m_g = if full_recompute { 1 } else { self.parallel.m_g(pp_rank) };
+        m_g * self.layer_bytes(s_recv)
+    }
+
+    /// Peak activation with FCDA chunking: the dense part is unchanged
+    /// while the MoE part is bounded by the largest chunk
+    /// (Eq. 6: `F(X) − max_i F(X_i)` is saved).
+    pub fn peak_bytes_chunked(
+        &self,
+        pp_rank: u64,
+        s_recv: u64,
+        chunks: u64,
+        full_recompute: bool,
+    ) -> u64 {
+        assert!(chunks >= 1);
+        let m_g = if full_recompute { 1 } else { self.parallel.m_g(pp_rank) };
+        let act = self.layer(s_recv.div_ceil(chunks));
+        let dense = self.layer(0).total();
+        m_g * (dense + act.moe_part())
+    }
+
+    /// Eq. 8: the largest `s'` a stage can host without violating
+    /// Eq. 3, given the static memory and budget. Returns 0 when even
+    /// the dense part overflows.
+    pub fn s_prime_max(
+        &self,
+        pp_rank: u64,
+        static_bytes: u64,
+        budget_bytes: u64,
+        full_recompute: bool,
+    ) -> u64 {
+        let m_g = if full_recompute { 1 } else { self.parallel.m_g(pp_rank) };
+        let dense = m_g * self.dense_bytes();
+        let per_token = m_g * self.moe_bytes_per_token();
+        if budget_bytes <= static_bytes + dense || per_token == 0 {
+            return 0;
+        }
+        (budget_bytes - static_bytes - dense) / per_token
+    }
+
+    /// Theoretical worst-case received tokens per rank per micro-batch:
+    /// every routed copy of every EP peer's tokens lands on this rank
+    /// (`s' → e·s·b·t_k`, the Fig. 2 "theoretical peak").
+    pub fn s_prime_theoretical_peak(&self) -> u64 {
+        self.parallel.ep * self.model.seq * self.parallel.micro_batch * self.model.top_k
+    }
+}
+
+/// Static memory (Eq. 1): per-GPU bytes for weights (+grads+optimizer,
+/// folded into `bytes_per_param`).
+#[derive(Clone, Debug)]
+pub struct StaticModel {
+    pub model: ModelConfig,
+    pub parallel: ParallelConfig,
+    /// Combined bytes per parameter (weights + grads + optimizer).
+    pub bytes_per_param: f64,
+    /// Constant per-GPU overhead (CUDA context, NCCL, workspace).
+    pub overhead_bytes: u64,
+}
+
+impl StaticModel {
+    pub fn new(run: &RunConfig) -> Self {
+        StaticModel {
+            model: run.model.clone(),
+            parallel: run.parallel.clone(),
+            bytes_per_param: run.static_bytes_per_param,
+            overhead_bytes: run.static_overhead_bytes,
+        }
+    }
+
+    /// Parameters resident on one GPU of pipeline rank `pp_rank`
+    /// (embedding on stage 0, LM head on the last stage, experts
+    /// sharded over EP, attention/dense replicated inside the EP group
+    /// but sharded over TP).
+    pub fn params_on_rank(&self, pp_rank: u64) -> u64 {
+        let m = &self.model;
+        let p = &self.parallel;
+        let stage_layers = p.layers_per_stage(m.layers);
+        let first_layer = pp_rank * stage_layers;
+        let mut params = 0u64;
+        for layer in first_layer..(first_layer + stage_layers).min(m.layers) {
+            params += m.attention_params() / p.tp;
+            params += 2 * m.hidden; // norm gains
+            if layer < m.dense_layers {
+                params += m.dense_ffn_params() / p.tp;
+            } else {
+                params += m.router_params();
+                let local_experts = m.n_experts / p.ep;
+                params += m.expert_params_per_rank(local_experts);
+            }
+        }
+        // Embedding (stage 0) and LM head (last stage). At d=1 their
+        // optimizer state cannot live unsharded (129k×7168 ≈ 0.93 B
+        // params ⇒ ~17 GB of fp32 Adam alone would sink every budget
+        // in Table 4), so it is ZeRO-sharded across the EP group —
+        // the only replicated group available in the paper's layout.
+        if pp_rank == 0 {
+            params += m.vocab * m.hidden / (p.tp * p.ep);
+        }
+        if pp_rank == p.pp - 1 {
+            params += m.vocab * m.hidden / (p.tp * p.ep);
+        }
+        params
+    }
+
+    /// Eq. 1: static bytes on the given rank (parameter-derived state
+    /// plus the constant framework overhead).
+    pub fn bytes_on_rank(&self, pp_rank: u64) -> u64 {
+        (self.params_on_rank(pp_rank) as f64 * self.bytes_per_param) as u64
+            + self.overhead_bytes
+    }
+
+    /// The stage with the largest static footprint (embedding stage,
+    /// usually rank 0).
+    pub fn max_bytes(&self) -> u64 {
+        (0..self.parallel.pp)
+            .map(|r| self.bytes_on_rank(r))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Eq. 3 feasibility: can the run fit on every stage at the given
+/// worst-case `s'`?
+pub fn fits(
+    run: &RunConfig,
+    s_recv_worst: u64,
+    chunks: u64,
+    full_recompute: bool,
+) -> bool {
+    let act = ActivationModel::new(run);
+    let sta = StaticModel::new(run);
+    let budget = (run.alpha * run.gpu_mem_bytes as f64) as u64;
+    (0..run.parallel.pp).all(|r| {
+        let a = if chunks <= 1 {
+            act.peak_bytes(r, s_recv_worst, full_recompute)
+        } else {
+            act.peak_bytes_chunked(r, s_recv_worst, chunks, full_recompute)
+        };
+        sta.bytes_on_rank(r) + a <= budget
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_i, paper_run, Method, GB};
+
+    fn run() -> RunConfig {
+        paper_run(model_i(), Method::FullRecompute)
+    }
+
+    #[test]
+    fn table2_total_matches_closed_form() {
+        // Eq. 2 closed form: D_t·b/(tc)·[s(5h + a·h_d + 2k_a·h_d + e_n)
+        //                               + s'(2h + 2g_e)]
+        let r = run();
+        let am = ActivationModel::new(&r);
+        let m = &r.model;
+        let s_recv = 100_000u64;
+        let want = r.dtype_bytes
+            * r.parallel.micro_batch
+            * (m.seq * (5 * m.hidden + m.heads * m.head_dim + 2 * m.kv_heads * m.head_dim + m.n_experts)
+                + s_recv * (2 * m.hidden + 2 * m.ffn_expert))
+            / (r.parallel.tp * r.parallel.cp);
+        assert_eq!(am.layer_bytes(s_recv), want);
+    }
+
+    #[test]
+    fn moe_part_is_linear_in_s_recv() {
+        let am = ActivationModel::new(&run());
+        let a = am.layer(1000).moe_part();
+        let b = am.layer(2000).moe_part();
+        assert_eq!(b, 2 * a);
+        assert_eq!(am.layer(0).moe_part(), 0);
+    }
+
+    #[test]
+    fn dense_part_independent_of_s_recv() {
+        let am = ActivationModel::new(&run());
+        assert_eq!(am.layer(0).dense_part(), am.layer(123_456).dense_part());
+    }
+
+    #[test]
+    fn chunking_divides_moe_part_only() {
+        let am = ActivationModel::new(&run());
+        let s_recv = 131_072;
+        let full = am.peak_bytes(0, s_recv, true);
+        let c2 = am.peak_bytes_chunked(0, s_recv, 2, true);
+        let c8 = am.peak_bytes_chunked(0, s_recv, 8, true);
+        let dense = am.dense_bytes();
+        assert_eq!(full - dense, (c2 - dense) * 2);
+        assert_eq!(full - dense, (c8 - dense) * 8);
+        assert!(c8 < c2 && c2 < full);
+    }
+
+    #[test]
+    fn chunk_of_one_equals_unchunked() {
+        let am = ActivationModel::new(&run());
+        assert_eq!(
+            am.peak_bytes(2, 50_000, true),
+            am.peak_bytes_chunked(2, 50_000, 1, true)
+        );
+    }
+
+    #[test]
+    fn full_recompute_sets_mg_one() {
+        let am = ActivationModel::new(&run());
+        let no_rc = am.peak_bytes(0, 10_000, false);
+        let rc = am.peak_bytes(0, 10_000, true);
+        // stage 0 of p=4,v=1 has m_g = 7
+        assert_eq!(no_rc, 7 * rc);
+    }
+
+    #[test]
+    fn s_prime_max_inverts_peak() {
+        // peak(s'_max) must fit the budget; peak(s'_max + slack) must not.
+        let r = run();
+        let am = ActivationModel::new(&r);
+        let sta = StaticModel::new(&r);
+        let budget = (r.alpha * r.gpu_mem_bytes as f64) as u64;
+        for rank in 0..4 {
+            let s_max = am.s_prime_max(rank, sta.bytes_on_rank(rank), budget, true);
+            assert!(s_max > 0, "rank {rank} has no token budget at all");
+            let used = sta.bytes_on_rank(rank) + am.peak_bytes(rank, s_max, true);
+            assert!(used <= budget, "rank {rank}: {used} > {budget}");
+            let over = sta.bytes_on_rank(rank) + am.peak_bytes(rank, s_max + 2, true);
+            assert!(over > budget, "rank {rank}: s'_max not tight");
+        }
+    }
+
+    #[test]
+    fn s_prime_max_zero_when_static_overflows() {
+        let mut r = run();
+        r.gpu_mem_bytes = 1 * GB;
+        let am = ActivationModel::new(&r);
+        let sta = StaticModel::new(&r);
+        let budget = (r.alpha * r.gpu_mem_bytes as f64) as u64;
+        assert_eq!(am.s_prime_max(0, sta.bytes_on_rank(0), budget, true), 0);
+    }
+
+    #[test]
+    fn theoretical_peak_matches_fig2() {
+        // e=32, s=4096, b=1, t_k=8 → 1,048,576 token copies
+        let am = ActivationModel::new(&run());
+        assert_eq!(am.s_prime_theoretical_peak(), 32 * 4096 * 8);
+    }
+
+    #[test]
+    fn static_memory_stage0_largest() {
+        let sta = StaticModel::new(&run());
+        let s0 = sta.bytes_on_rank(0);
+        let s1 = sta.bytes_on_rank(1);
+        assert!(s0 > s1, "embedding stage should dominate: {s0} vs {s1}");
+        assert_eq!(sta.max_bytes(), s0.max(sta.bytes_on_rank(3)));
+    }
+
+    #[test]
+    fn static_memory_model_ii_smaller() {
+        use crate::config::model_ii;
+        let a = StaticModel::new(&paper_run(model_i(), Method::FullRecompute));
+        let b = StaticModel::new(&paper_run(model_ii(), Method::FullRecompute));
+        assert!(b.max_bytes() < a.max_bytes());
+    }
+
+    #[test]
+    fn static_in_paper_ballpark() {
+        // Table 4 reports 43.0 GB (Model I) / 39.5 GB (Model II). Our
+        // inventory with 6 B/param should land within ~35% — the paper
+        // does not disclose its optimizer sharding exactly.
+        let sta = StaticModel::new(&run());
+        let gb = sta.max_bytes() as f64 / GB as f64;
+        assert!(gb > 25.0 && gb < 60.0, "static {gb:.1} GB out of band");
+    }
+
+    #[test]
+    fn fits_detects_oom_at_extreme_imbalance() {
+        let r = run();
+        // Balanced routing fits...
+        let balanced = r.model.seq * r.model.top_k; // s' ≈ s·t_k/e·e = s·t_k
+        assert!(fits(&r, balanced, 1, true));
+        // ...but the theoretical worst case does not (Model I, Method 1 OOM).
+        let worst = ActivationModel::new(&r).s_prime_theoretical_peak();
+        assert!(!fits(&r, worst, 1, true));
+        // Chunking by 8 rescues it (Method 2 trains).
+        assert!(fits(&r, worst, 8, true));
+    }
+}

@@ -1,0 +1,185 @@
+//! Metrics: counters, timers, and CSV emission for traces and benches.
+//!
+//! Deliberately simple — a `Registry` of named counters/gauges plus a
+//! `CsvWriter` with schema checking. Everything the benches print comes
+//! through here so output formats stay consistent across tables.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+/// A monotonically increasing counter.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(u64);
+
+impl Counter {
+    pub fn inc(&mut self) {
+        self.0 += 1;
+    }
+    pub fn add(&mut self, n: u64) {
+        self.0 += n;
+    }
+    pub fn get(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Named metrics registry (single-threaded by design: each worker owns
+/// one and the coordinator merges).
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn count(&mut self, name: &str, n: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Merge another registry (summing counters, last-writer gauges).
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+    }
+
+    /// Render as a JSON object (sorted keys — stable for goldens).
+    pub fn to_json(&self) -> crate::json::Value {
+        use crate::json::{num, Value};
+        let mut obj = std::collections::BTreeMap::new();
+        for (k, v) in &self.counters {
+            obj.insert(format!("counter.{k}"), num(*v as f64));
+        }
+        for (k, v) in &self.gauges {
+            obj.insert(format!("gauge.{k}"), num(*v));
+        }
+        Value::Obj(obj)
+    }
+}
+
+/// Scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// CSV writer with header schema enforcement.
+pub struct CsvWriter<W: Write> {
+    out: W,
+    columns: usize,
+}
+
+impl<W: Write> CsvWriter<W> {
+    pub fn new(mut out: W, header: &[&str]) -> Result<Self> {
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, columns: header.len() })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        if cells.len() != self.columns {
+            return Err(Error::schedule(format!(
+                "csv row has {} cells, header has {}",
+                cells.len(),
+                self.columns
+            )));
+        }
+        writeln!(self.out, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let mut c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn registry_counts_and_gauges() {
+        let mut r = Registry::new();
+        r.count("tokens", 10);
+        r.count("tokens", 5);
+        r.gauge("loss", 3.5);
+        assert_eq!(r.counter("tokens"), 15);
+        assert_eq!(r.gauge_value("loss"), Some(3.5));
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn registry_merge() {
+        let mut a = Registry::new();
+        a.count("x", 1);
+        a.gauge("g", 1.0);
+        let mut b = Registry::new();
+        b.count("x", 2);
+        b.gauge("g", 2.0);
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 3);
+        assert_eq!(a.gauge_value("g"), Some(2.0));
+    }
+
+    #[test]
+    fn registry_json_stable() {
+        let mut r = Registry::new();
+        r.count("b", 1);
+        r.count("a", 2);
+        let j = r.to_json().to_string_compact();
+        assert!(j.find("counter.a").unwrap() < j.find("counter.b").unwrap());
+    }
+
+    #[test]
+    fn csv_schema_enforced() {
+        let mut w = CsvWriter::new(Vec::new(), &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+        let bytes = w.into_inner();
+        assert_eq!(String::from_utf8(bytes).unwrap(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn timer_progresses() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_s() > 0.0);
+    }
+}

@@ -1,0 +1,424 @@
+//! Performance model: per-layer compute/communication timing, method
+//! overheads, and the paper's TGS metric (Eq. 10).
+//!
+//! The EP group runs synchronously: each MoE layer's step time is gated
+//! by the *hottest* rank (max received tokens) for both expert compute
+//! and the imbalanced all-to-all — this coupling of load imbalance to
+//! throughput is why Fig. 4's curves dip exactly where Fig. 2's
+//! imbalance peaks.
+//!
+//! Why the three methods order as Fig. 4 shows (Model II:
+//! M3 > M1 > M2):
+//!
+//! * **Method 1** executes dispatch → expert → combine **serially** on
+//!   the full token set, and full recomputation repeats all of it in
+//!   the backward pass.
+//! * **MemFine** (Methods 2/3) runs the same stages **chunk-pipelined**
+//!   (Eq. 6): chunk i's expert compute overlaps chunk i+1's dispatch,
+//!   so the MoE wall-clock approaches `max(comm, compute)` instead of
+//!   their sum — a large win exactly when imbalance makes the hot
+//!   rank's all-to-all expensive.
+//! * Chunking is not free: smaller per-chunk grouped GEMMs lose MXU
+//!   efficiency and smaller per-peer messages lose fabric efficiency
+//!   (saturating roofline curves below). A fixed c=8 (Method 2)
+//!   over-chunks the *balanced* iterations and ends up slower than
+//!   Method 1 on average; MACT (Method 3) picks c=1 when balanced and
+//!   c>1 only under pressure — best of both.
+
+use crate::collective::Fabric;
+use crate::config::{ModelConfig, ParallelConfig};
+
+/// Hardware envelope of one simulated GPU.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    /// Peak sustained BF16 throughput in FLOP/s at large tile sizes.
+    pub flops: f64,
+    /// Fixed kernel-launch / scheduling overhead per fused region.
+    pub launch_s: f64,
+    /// Grouped-GEMM half-saturation point: per-expert token count at
+    /// which the MXU reaches 50 % of peak (wave-quantisation model).
+    pub gemm_half_sat_tokens: f64,
+}
+
+impl Default for GpuSpec {
+    fn default() -> Self {
+        // 64 GB-class accelerator, ~40 % MFU of ~320 TFLOP/s peak.
+        // Half-saturation at 1536 tokens/expert: grouped GEMMs over
+        // DeepSeek-dim experts need ≥ a few thousand rows to fill the
+        // MXU/SM waves — this is what penalises over-chunking (Fig. 4,
+        // Method 2's −5.4 %).
+        GpuSpec { flops: 128e12, launch_s: 25e-6, gemm_half_sat_tokens: 1536.0 }
+    }
+}
+
+impl GpuSpec {
+    /// Efficiency of a grouped GEMM whose per-expert token count is
+    /// `tokens`: saturating `t/(t + t_half)` roofline.
+    pub fn gemm_efficiency(&self, tokens: f64) -> f64 {
+        if tokens <= 0.0 {
+            return 1.0;
+        }
+        tokens / (tokens + self.gemm_half_sat_tokens)
+    }
+}
+
+/// Per-layer FLOP counts for one micro-batch on one rank (tp split
+/// applied). All counts are multiply-add pairs × 2.
+#[derive(Clone, Debug)]
+pub struct FlopModel {
+    pub model: ModelConfig,
+    pub parallel: ParallelConfig,
+}
+
+impl FlopModel {
+    pub fn new(model: ModelConfig, parallel: ParallelConfig) -> Self {
+        FlopModel { model, parallel }
+    }
+
+    fn per_rank(&self, flops: u64) -> f64 {
+        flops as f64 / self.parallel.tp as f64
+    }
+
+    /// Attention block forward FLOPs (projections + scores + context).
+    pub fn attention_fwd(&self) -> f64 {
+        let m = &self.model;
+        let s = m.seq * self.parallel.micro_batch;
+        let proj = 2 * s * m.hidden * (m.heads * m.head_dim + 2 * m.kv_heads * m.head_dim)
+            + 2 * s * (m.heads * m.head_dim) * m.hidden;
+        let attn = 2 * 2 * s * s * m.heads * m.head_dim / self.parallel.cp;
+        self.per_rank(proj + attn)
+    }
+
+    /// Dense SwiGLU FFN forward FLOPs.
+    pub fn dense_ffn_fwd(&self) -> f64 {
+        let m = &self.model;
+        let s = m.seq * self.parallel.micro_batch;
+        self.per_rank(6 * s * m.hidden * m.ffn_dense)
+    }
+
+    /// Router forward FLOPs.
+    pub fn router_fwd(&self) -> f64 {
+        let m = &self.model;
+        let s = m.seq * self.parallel.micro_batch;
+        self.per_rank(2 * s * m.hidden * m.n_experts)
+    }
+
+    /// Expert FFN forward FLOPs for `recv` received token copies on
+    /// this rank (SwiGLU: 3 GEMMs).
+    pub fn expert_fwd(&self, recv: u64) -> f64 {
+        let m = &self.model;
+        self.per_rank(6 * recv * m.hidden * m.ffn_expert)
+    }
+
+    /// Bytes landing on the hottest rank in one all-to-all direction.
+    pub fn a2a_bytes(&self, recv: u64, dtype_bytes: u64) -> u64 {
+        recv * self.model.hidden * dtype_bytes / self.parallel.tp
+    }
+
+    /// Local experts per EP rank.
+    pub fn local_experts(&self) -> u64 {
+        self.model.n_experts / self.parallel.ep
+    }
+}
+
+/// Timing of one layer's forward+backward under a given method.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerTime {
+    /// Compute on the critical path (attention, router, experts).
+    pub compute_s: f64,
+    /// All-to-all on the critical path (after overlap).
+    pub comm_s: f64,
+    /// Fixed per-chunk/per-kernel overheads.
+    pub overhead_s: f64,
+}
+
+impl LayerTime {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.comm_s + self.overhead_s
+    }
+
+    fn add(self, o: LayerTime) -> LayerTime {
+        LayerTime {
+            compute_s: self.compute_s + o.compute_s,
+            comm_s: self.comm_s + o.comm_s,
+            overhead_s: self.overhead_s + o.overhead_s,
+        }
+    }
+}
+
+/// The method-aware per-layer timing engine.
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    pub flops: FlopModel,
+    pub gpu: GpuSpec,
+    pub fabric: Fabric,
+    pub dtype_bytes: u64,
+}
+
+impl PerfModel {
+    pub fn new(model: ModelConfig, parallel: ParallelConfig, dtype_bytes: u64) -> Self {
+        PerfModel {
+            flops: FlopModel::new(model, parallel),
+            gpu: GpuSpec::default(),
+            fabric: Fabric::default(),
+            dtype_bytes,
+        }
+    }
+
+    fn t(&self, f: f64) -> f64 {
+        f / self.gpu.flops + self.gpu.launch_s
+    }
+
+    /// Expert compute time for `recv` copies split into `c` chunks:
+    /// FLOPs are constant, efficiency follows the per-chunk per-expert
+    /// token count.
+    fn expert_time(&self, recv: u64, c: u64) -> f64 {
+        if recv == 0 {
+            return 0.0;
+        }
+        let per_chunk_per_expert =
+            recv as f64 / (c as f64 * self.flops.local_experts() as f64);
+        let eff = self.gpu.gemm_efficiency(per_chunk_per_expert);
+        self.flops.expert_fwd(recv) / (self.gpu.flops * eff)
+    }
+
+    /// One all-to-all pass (dispatch or combine) for `recv` copies at
+    /// the hottest rank, split into `c` chunks (α paid per chunk; β
+    /// paid once).
+    fn a2a_time(&self, recv: u64, c: u64) -> f64 {
+        let per_chunk = recv.div_ceil(c);
+        (0..c)
+            .map(|_| {
+                self.fabric.all_to_all_imbalanced(
+                    self.flops.parallel.ep,
+                    self.flops.a2a_bytes(per_chunk, self.dtype_bytes),
+                )
+            })
+            .sum()
+    }
+
+    /// Chunk-pipelined stage composition: dispatch `d`, compute `x`,
+    /// combine `k` (full-volume times) over `c` chunks:
+    /// `T = (d + x + k)/c + (c−1)/c · max(d, x, k)`.
+    /// c = 1 degenerates to the serial sum; c → ∞ approaches the
+    /// bottleneck stage (perfect overlap).
+    fn pipelined(d: f64, x: f64, k: f64, c: u64) -> f64 {
+        let c = c.max(1) as f64;
+        (d + x + k) / c + (c - 1.0) / c * d.max(x).max(k)
+    }
+
+    /// Dense layer (no MoE): forward + backward (+ full recompute).
+    pub fn dense_layer(&self, full_recompute: bool) -> LayerTime {
+        let fwd = self.t(self.flops.attention_fwd()) + self.t(self.flops.dense_ffn_fwd());
+        let rc = if full_recompute { fwd } else { 0.0 };
+        LayerTime { compute_s: 3.0 * fwd + rc, comm_s: 0.0, overhead_s: 0.0 }
+    }
+
+    /// MoE layer under Method 1: serial dispatch → expert → combine on
+    /// the full token set; full recompute re-runs the whole layer
+    /// (attention included) in backward.
+    pub fn moe_layer_method1(&self, max_recv: u64) -> LayerTime {
+        let attn = self.t(self.flops.attention_fwd());
+        let router = self.t(self.flops.router_fwd());
+        let x = self.expert_time(max_recv, 1);
+        let d = self.a2a_time(max_recv, 1);
+        // forward + full-layer recompute + backward (2× compute, grads
+        // cross the fabric twice) — all serial.
+        let fwd = attn + router + x;
+        let compute = fwd + fwd + 2.0 * fwd;
+        let comm = 2.0 * d /*fwd*/ + 2.0 * d /*recompute*/ + 2.0 * d /*bwd grads*/;
+        LayerTime { compute_s: compute, comm_s: comm, overhead_s: 2.0 * self.gpu.launch_s }
+    }
+
+    /// MoE layer under MemFine with `c` chunks: chunk-pipelined
+    /// dispatch/expert/combine in forward, chunked recompute + backward
+    /// (Eq. 7) with the same overlap.
+    ///
+    /// `recompute_attn = false` is MemFine's *selective* recomputation:
+    /// with the MoE peak tamed by chunking, the attention activations
+    /// of the stage fit in the freed headroom and need no re-run — the
+    /// throughput edge over Method 1 (paper: +4.42 % on Model II). The
+    /// simulator grants it only when the memory model proves the stored
+    /// dense part fits (sim::iteration).
+    pub fn moe_layer_memfine(&self, max_recv: u64, c: u64, recompute_attn: bool) -> LayerTime {
+        assert!(c >= 1);
+        let attn = self.t(self.flops.attention_fwd());
+        let router = self.t(self.flops.router_fwd());
+        let x = self.expert_time(max_recv, c);
+        let d = self.a2a_time(max_recv, c);
+        // forward: pipelined D|X|K; recompute: same; backward: 2× the
+        // expert compute with grad dispatch/combine, also pipelined.
+        let fwd_moe = Self::pipelined(d, x, d, c);
+        let rc_moe = fwd_moe;
+        let bwd_moe = Self::pipelined(d, 2.0 * x, d, c);
+        // dense blocks: fwd + 2× bwd, plus recompute unless selective.
+        let dense = if recompute_attn {
+            4.0 * (attn + router)
+        } else {
+            3.0 * attn + 4.0 * router
+        };
+        // Split the pipelined MoE times into comm/compute attribution
+        // for reporting: attribute min(d·2, moe_time) to comm.
+        let moe_total = fwd_moe + rc_moe + bwd_moe;
+        let moe_comm = (6.0 * d / c as f64).min(moe_total); // β floor after overlap
+        LayerTime {
+            compute_s: dense + (moe_total - moe_comm),
+            comm_s: moe_comm,
+            overhead_s: 2.0 * c as f64 * 3.0 * self.gpu.launch_s,
+        }
+    }
+
+    /// Time of one micro-batch through one pipeline stage hosting
+    /// `dense_layers` dense and the given per-MoE-layer (recv, chunks).
+    pub fn stage_time(
+        &self,
+        dense_layers: u64,
+        moe: &[(u64, u64)],
+        method1: bool,
+    ) -> f64 {
+        let mut t = LayerTime::default();
+        for _ in 0..dense_layers {
+            t = t.add(self.dense_layer(true));
+        }
+        for &(recv, c) in moe {
+            t = t.add(if method1 {
+                self.moe_layer_method1(recv)
+            } else {
+                self.moe_layer_memfine(recv, c, true)
+            });
+        }
+        t.total()
+    }
+
+    /// Iteration time over the whole pipeline: bottleneck stage time ×
+    /// (m + p − 1) (1F1B bubble).
+    pub fn iteration_time(&self, per_stage_mb_time: &[f64], micro_batches: u64) -> f64 {
+        let bottleneck = per_stage_mb_time.iter().cloned().fold(0.0, f64::max);
+        bottleneck * (micro_batches + per_stage_mb_time.len() as u64 - 1) as f64
+    }
+
+    /// Eq. 10: tokens per GPU per second.
+    pub fn tgs(&self, iteration_s: f64) -> f64 {
+        let p = &self.flops.parallel;
+        let n = p.world_size();
+        (p.global_batch * self.flops.model.seq) as f64 / (iteration_s * n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_i, paper_parallel};
+
+    fn pm() -> PerfModel {
+        PerfModel::new(model_i(), paper_parallel(), 2)
+    }
+
+    #[test]
+    fn expert_flops_linear_in_recv() {
+        let p = pm();
+        assert!((p.flops.expert_fwd(2000) - 2.0 * p.flops.expert_fwd(1000)).abs() < 1.0);
+        assert_eq!(p.flops.expert_fwd(0), 0.0);
+    }
+
+    #[test]
+    fn gemm_efficiency_saturates() {
+        let g = GpuSpec::default();
+        let half = g.gemm_half_sat_tokens;
+        assert!(g.gemm_efficiency(half / 10.0) < 0.2);
+        assert!(g.gemm_efficiency(half * 20.0) > 0.9);
+        assert!((g.gemm_efficiency(half) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelined_degenerates_serial_at_c1() {
+        let t1 = PerfModel::pipelined(1.0, 2.0, 1.5, 1);
+        assert!((t1 - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipelined_approaches_bottleneck() {
+        let t = PerfModel::pipelined(1.0, 2.0, 1.0, 1000);
+        assert!(t < 2.01 && t >= 2.0);
+    }
+
+    #[test]
+    fn overlap_wins_at_high_imbalance() {
+        // At peak imbalance the hot rank is comm-heavy; MemFine c=2
+        // must beat Method 1's serial pipeline.
+        let p = pm();
+        let recv = 600_000;
+        let m1 = p.moe_layer_method1(recv).total();
+        let m3 = p.moe_layer_memfine(recv, 2, true).total();
+        assert!(m3 < m1, "m3 {m3} !< m1 {m1}");
+    }
+
+    #[test]
+    fn overchunking_loses_when_balanced() {
+        // On a balanced iteration (s' = s·t_k), fixed c=8 over-chunks:
+        // per-expert-chunk tokens drop into the inefficient GEMM regime
+        // → slower than Method 1 (Fig. 4 Model II, Method 2 −5.4 %).
+        let p = pm();
+        let balanced = 4096 * 8;
+        let m1 = p.moe_layer_method1(balanced).total();
+        let m2 = p.moe_layer_memfine(balanced, 8, true).total();
+        assert!(m2 > m1, "m2 {m2} !> m1 {m1}");
+    }
+
+    #[test]
+    fn mact_choice_best_of_both() {
+        // c=1 when balanced ≈ Method 1 minus serial penalty; never
+        // worse than c=8 at balance, never worse than c=1 at extreme.
+        let p = pm();
+        let balanced = 4096 * 8;
+        let c1 = p.moe_layer_memfine(balanced, 1, true).total();
+        let c8 = p.moe_layer_memfine(balanced, 8, true).total();
+        assert!(c1 < c8);
+        let extreme = 600_000;
+        let e2 = p.moe_layer_memfine(extreme, 2, true).total();
+        let e1 = p.moe_layer_memfine(extreme, 1, true).total();
+        assert!(e2 < e1);
+    }
+
+    #[test]
+    fn hotter_rank_slower_layer() {
+        let p = pm();
+        let cold = p.moe_layer_method1(50_000).total();
+        let hot = p.moe_layer_method1(500_000).total();
+        assert!(hot > 2.0 * cold);
+    }
+
+    #[test]
+    fn stage_time_accumulates_layers() {
+        let p = pm();
+        let one = p.stage_time(0, &[(100_000, 1)], true);
+        let two = p.stage_time(0, &[(100_000, 1), (100_000, 1)], true);
+        assert!((two - 2.0 * one).abs() < 1e-9);
+        let with_dense = p.stage_time(2, &[(100_000, 1)], true);
+        assert!(with_dense > one);
+    }
+
+    #[test]
+    fn iteration_time_bubble_factor() {
+        let p = pm();
+        let stage_times = vec![0.01, 0.012, 0.011, 0.0115];
+        let t = p.iteration_time(&stage_times, 960);
+        assert!((t - 0.012 * 963.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tgs_matches_eq10() {
+        let p = pm();
+        let t_iter = 10.0;
+        let want = (960.0 * 4096.0) / (10.0 * 128.0);
+        assert!((p.tgs(t_iter) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dense_layer_recompute_toggle() {
+        let p = pm();
+        let with = p.dense_layer(true);
+        let without = p.dense_layer(false);
+        assert!(with.total() > without.total());
+    }
+}

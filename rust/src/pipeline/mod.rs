@@ -1,0 +1,274 @@
+//! Pipeline-parallel scheduling: Megatron-style 1F1B with optional
+//! interleaved virtual stages.
+//!
+//! The memory model's `m_g = v·p + p − 2·r − 1` (paper Eq. 2 note) is
+//! *derived* here from the actual schedule — the number of forward
+//! activations a stage holds before its first backward — and the unit
+//! tests assert the closed form matches the constructed schedule, so
+//! the simulator and the paper's formula cannot drift apart.
+
+use crate::error::{Error, Result};
+
+/// One pipeline operation on a stage's timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipeOp {
+    /// Forward of micro-batch `mb` on virtual stage `v`.
+    Forward { mb: u64, v: u64 },
+    /// Backward of micro-batch `mb` on virtual stage `v`.
+    Backward { mb: u64, v: u64 },
+}
+
+/// The schedule of one pipeline rank: ordered ops.
+#[derive(Clone, Debug)]
+pub struct StageSchedule {
+    pub pp_rank: u64,
+    pub ops: Vec<PipeOp>,
+}
+
+impl StageSchedule {
+    /// Maximum number of micro-batch activations simultaneously alive
+    /// (forward issued, backward not yet) — the schedule-derived `m_g`.
+    pub fn peak_in_flight(&self) -> u64 {
+        let mut live = 0i64;
+        let mut peak = 0i64;
+        for op in &self.ops {
+            match op {
+                PipeOp::Forward { .. } => {
+                    live += 1;
+                    peak = peak.max(live);
+                }
+                PipeOp::Backward { .. } => live -= 1,
+            }
+        }
+        peak.max(0) as u64
+    }
+
+    /// Every forward has a matching backward, each exactly once, and
+    /// no backward precedes its forward.
+    pub fn validate(&self, micro_batches: u64, vpp: u64) -> Result<()> {
+        use std::collections::HashMap;
+        let mut state: HashMap<(u64, u64), u8> = HashMap::new();
+        for op in &self.ops {
+            match *op {
+                PipeOp::Forward { mb, v } => {
+                    if mb >= micro_batches || v >= vpp {
+                        return Err(Error::schedule(format!("op out of range: {op:?}")));
+                    }
+                    let e = state.entry((mb, v)).or_insert(0);
+                    if *e != 0 {
+                        return Err(Error::schedule(format!("double forward {op:?}")));
+                    }
+                    *e = 1;
+                }
+                PipeOp::Backward { mb, v } => {
+                    let e = state.entry((mb, v)).or_insert(0);
+                    if *e != 1 {
+                        return Err(Error::schedule(format!(
+                            "backward without forward {op:?}"
+                        )));
+                    }
+                    *e = 2;
+                }
+            }
+        }
+        if state.len() as u64 != micro_batches * vpp
+            || state.values().any(|&s| s != 2)
+        {
+            return Err(Error::schedule("schedule incomplete"));
+        }
+        Ok(())
+    }
+}
+
+/// Build the 1F1B schedule for `pp_rank` of `pp` stages over
+/// `micro_batches` micro-batches (vpp = 1).
+///
+/// Warm-up: `p − r − 1` forwards; steady state alternates 1F1B;
+/// cool-down drains backwards.
+pub fn one_f_one_b(pp: u64, pp_rank: u64, micro_batches: u64) -> StageSchedule {
+    assert!(pp_rank < pp);
+    let warmup = (pp - pp_rank - 1).min(micro_batches);
+    let mut ops = Vec::new();
+    let mut next_fwd = 0;
+    let mut next_bwd = 0;
+    for _ in 0..warmup {
+        ops.push(PipeOp::Forward { mb: next_fwd, v: 0 });
+        next_fwd += 1;
+    }
+    while next_fwd < micro_batches {
+        ops.push(PipeOp::Forward { mb: next_fwd, v: 0 });
+        next_fwd += 1;
+        ops.push(PipeOp::Backward { mb: next_bwd, v: 0 });
+        next_bwd += 1;
+    }
+    while next_bwd < micro_batches {
+        ops.push(PipeOp::Backward { mb: next_bwd, v: 0 });
+        next_bwd += 1;
+    }
+    StageSchedule { pp_rank, ops }
+}
+
+/// Megatron-style interleaved 1F1B (virtual pipeline): each rank hosts
+/// `vpp` model chunks and warms up `2(p − r − 1) + (vpp − 1)·p`
+/// forward chunks before the first backward. The peak in-flight count
+/// is therefore `vp + p − 2r − 1` — exactly the paper's `m_g` (Eq. 2
+/// note), which the tests assert against the constructed schedule.
+/// Note this differs from the textbook non-interleaved 1F1B
+/// ([`one_f_one_b`]), whose warm-up is `p − r − 1` (peak `p − r`).
+pub fn interleaved_1f1b(
+    pp: u64,
+    pp_rank: u64,
+    vpp: u64,
+    micro_batches: u64,
+) -> StageSchedule {
+    assert!(pp_rank < pp && vpp >= 1);
+    let total = micro_batches * vpp;
+    let warmup = (2 * (pp - pp_rank - 1) + (vpp - 1) * pp).min(total);
+    // forward order: round-robin micro-batch groups of size p over
+    // virtual stages (Megatron interleaving)
+    let fwd_seq: Vec<(u64, u64)> = {
+        let mut seq = Vec::with_capacity(total as usize);
+        let groups = micro_batches.div_ceil(pp);
+        for g in 0..groups {
+            for v in 0..vpp {
+                for i in 0..pp {
+                    let mb = g * pp + i;
+                    if mb < micro_batches {
+                        seq.push((mb, v));
+                    }
+                }
+            }
+        }
+        seq
+    };
+    // backward order mirrors forward order (reverse virtual stage)
+    let bwd_seq: Vec<(u64, u64)> = fwd_seq
+        .iter()
+        .map(|&(mb, v)| (mb, vpp - 1 - v))
+        .collect();
+    let mut ops = Vec::new();
+    let mut fi = 0usize;
+    let mut bi = 0usize;
+    for _ in 0..warmup {
+        let (mb, v) = fwd_seq[fi];
+        ops.push(PipeOp::Forward { mb, v });
+        fi += 1;
+    }
+    while fi < fwd_seq.len() {
+        let (mb, v) = fwd_seq[fi];
+        ops.push(PipeOp::Forward { mb, v });
+        fi += 1;
+        let (mb, v) = bwd_seq[bi];
+        ops.push(PipeOp::Backward { mb, v });
+        bi += 1;
+    }
+    while bi < bwd_seq.len() {
+        let (mb, v) = bwd_seq[bi];
+        ops.push(PipeOp::Backward { mb, v });
+        bi += 1;
+    }
+    StageSchedule { pp_rank, ops }
+}
+
+/// Closed-form in-flight bound from the paper: `vp + p − 2r − 1`,
+/// clamped to the number of forward units available.
+pub fn m_g_closed_form(pp: u64, pp_rank: u64, vpp: u64, micro_batches: u64) -> u64 {
+    let raw = (vpp * pp + pp) as i64 - 2 * pp_rank as i64 - 1;
+    (raw.max(1) as u64).min(micro_batches * vpp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_f_one_b_valid_all_ranks() {
+        for rank in 0..4 {
+            let s = one_f_one_b(4, rank, 16);
+            s.validate(16, 1).unwrap();
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_peak_is_p_minus_r() {
+        // textbook non-interleaved 1F1B: warm-up p−r−1 → peak p−r
+        for pp in [2u64, 4, 8] {
+            for rank in 0..pp {
+                let s = one_f_one_b(pp, rank, 32);
+                assert_eq!(s.peak_in_flight(), (pp - rank).min(32), "pp={pp} rank={rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn last_stage_holds_one() {
+        let s = one_f_one_b(4, 3, 16);
+        assert_eq!(s.peak_in_flight(), 1);
+    }
+
+    #[test]
+    fn few_microbatches_cap_in_flight() {
+        let s = one_f_one_b(8, 0, 2);
+        assert_eq!(s.peak_in_flight(), 2);
+        s.validate(2, 1).unwrap();
+    }
+
+    #[test]
+    fn interleaved_valid_and_deeper() {
+        for rank in 0..4 {
+            let s = interleaved_1f1b(4, rank, 2, 8);
+            s.validate(8, 2).unwrap();
+            // interleaving holds MORE in flight than plain 1F1B
+            let plain = one_f_one_b(4, rank, 8).peak_in_flight();
+            assert!(s.peak_in_flight() >= plain, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn interleaved_peak_matches_paper_m_g() {
+        // Megatron interleaved warm-up 2(p−r−1) + (v−1)p ⇒ peak
+        // in-flight = vp + p − 2r − 1, the paper's m_g, for v = 1 and 2.
+        for vpp in [1u64, 2] {
+            for rank in 0..4u64 {
+                let s = interleaved_1f1b(4, rank, vpp, 16);
+                let bound = m_g_closed_form(4, rank, vpp, 16);
+                assert_eq!(
+                    s.peak_in_flight(),
+                    bound,
+                    "vpp={vpp} rank={rank}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_missing_backward() {
+        let mut s = one_f_one_b(2, 0, 4);
+        s.ops.pop();
+        assert!(s.validate(4, 1).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_double_forward() {
+        let s = StageSchedule {
+            pp_rank: 0,
+            ops: vec![
+                PipeOp::Forward { mb: 0, v: 0 },
+                PipeOp::Forward { mb: 0, v: 0 },
+            ],
+        };
+        assert!(s.validate(1, 1).is_err());
+    }
+
+    #[test]
+    fn paper_setting_m_g() {
+        // p=4, v=1, 960 micro-batches: stage 0 = 7, stage 3 = 1 —
+        // matches config::ParallelConfig::m_g, via the interleaved
+        // (Megatron) scheduler the paper models.
+        assert_eq!(m_g_closed_form(4, 0, 1, 960), 7);
+        assert_eq!(m_g_closed_form(4, 3, 1, 960), 1);
+        let s = interleaved_1f1b(4, 0, 1, 960);
+        assert_eq!(s.peak_in_flight(), 7);
+        assert_eq!(interleaved_1f1b(4, 3, 1, 960).peak_in_flight(), 1);
+    }
+}

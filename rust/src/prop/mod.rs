@@ -1,0 +1,210 @@
+//! Mini property-testing harness (no `proptest` in the offline
+//! registry).
+//!
+//! `check(seed_cases, gen, prop)` draws `seed_cases` random inputs from
+//! `gen` and asserts `prop` on each; on failure it attempts a bounded
+//! greedy shrink via the generator's `shrink` candidates and reports
+//! the smallest failing case. Enough machinery for the coordinator
+//! invariants (routing conservation, dispatch round-trips, chunk
+//! schedules, memory monotonicity) that the brief calls for.
+
+use crate::util::rng::Rng;
+
+/// A generator of random values with optional shrinking.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate simpler values (default: none).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform u64 in [lo, hi].
+pub struct U64Range(pub u64, pub u64);
+
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vector of fixed length from an element generator.
+pub struct VecGen<G: Gen>(pub G, pub usize);
+
+impl<G: Gen> Gen for VecGen<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (0..self.1).map(|_| self.0.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        // shrink one element at a time (first shrinkable position)
+        let mut out = Vec::new();
+        for (i, elem) in v.iter().enumerate() {
+            for cand in self.0.shrink(elem) {
+                let mut copy = v.clone();
+                copy[i] = cand;
+                out.push(copy);
+                if out.len() >= 8 {
+                    return out;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairGen<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum Outcome<V> {
+    Pass { cases: usize },
+    Fail { case: V, shrunk: bool, message: String },
+}
+
+/// Run `cases` random checks of `prop`. Returns `Outcome::Fail` with a
+/// (possibly shrunk) counterexample instead of panicking, so tests can
+/// assert and report cleanly via [`assert_prop`].
+pub fn check<G: Gen>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) -> Outcome<G::Value> {
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // bounded greedy shrink
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut shrunk = false;
+            'outer: for _round in 0..64 {
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        shrunk = true;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            return Outcome::Fail { case: best, shrunk, message: best_msg };
+        }
+    }
+    Outcome::Pass { cases }
+}
+
+/// Panicking wrapper for use inside `#[test]`s.
+pub fn assert_prop<G: Gen>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    match check(seed, cases, gen, prop) {
+        Outcome::Pass { .. } => {}
+        Outcome::Fail { case, shrunk, message } => {
+            panic!("property failed (shrunk={shrunk}): {message}\ncase: {case:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        match check(1, 200, &U64Range(0, 100), |&v| {
+            if v <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        }) {
+            Outcome::Pass { cases } => assert_eq!(cases, 200),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_toward_minimum() {
+        // property "v < 50" fails for v ≥ 50; shrinking should walk
+        // toward small failing values (not necessarily exactly 50, but
+        // strictly smaller than an unshrunk random failure on average).
+        match check(2, 500, &U64Range(0, 1000), |&v| {
+            if v < 50 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 50"))
+            }
+        }) {
+            Outcome::Fail { case, .. } => assert!(case >= 50 && case <= 500),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn vec_gen_shapes() {
+        let g = VecGen(U64Range(1, 5), 7);
+        let mut rng = Rng::new(3);
+        let v = g.generate(&mut rng);
+        assert_eq!(v.len(), 7);
+        assert!(v.iter().all(|&x| (1..=5).contains(&x)));
+    }
+
+    #[test]
+    fn pair_gen_and_shrink() {
+        let g = PairGen(U64Range(0, 10), U64Range(0, 10));
+        let mut rng = Rng::new(4);
+        let v = g.generate(&mut rng);
+        let shrinks = g.shrink(&v);
+        if v.0 > 0 || v.1 > 0 {
+            assert!(!shrinks.is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn assert_prop_panics_on_failure() {
+        assert_prop(5, 100, &U64Range(0, 10), |&v| {
+            if v < 5 {
+                Ok(())
+            } else {
+                Err("nope".into())
+            }
+        });
+    }
+}

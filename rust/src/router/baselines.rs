@@ -1,0 +1,142 @@
+//! Load-balancing baselines the paper compares against conceptually:
+//! GShard-style expert capacity (hard drop) and DeepSeek's
+//! auxiliary-loss-free bias adjustment (soft steering). MemFine's
+//! thesis is that both are insufficient on small-memory GPUs — capacity
+//! hurts accuracy (token drops) and bias steering still admits extreme
+//! iterations — so these exist to quantify that trade-off in the
+//! ablation benches.
+
+/// Outcome of applying an expert-capacity limit (GShard §3.2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CapacityOutcome {
+    /// Post-drop tokens per expert.
+    pub per_expert: Vec<u64>,
+    /// Token copies dropped by the cap.
+    pub dropped: u64,
+    /// The applied per-expert cap.
+    pub capacity: u64,
+}
+
+/// Apply a capacity factor: each expert accepts at most
+/// `cf · total/ n_experts` copies; the excess is dropped (GShard routes
+/// overflow to the residual path, which for memory purposes is a drop).
+pub fn apply_capacity_factor(per_expert: &[u64], capacity_factor: f64) -> CapacityOutcome {
+    assert!(capacity_factor > 0.0);
+    let total: u64 = per_expert.iter().sum();
+    let n = per_expert.len() as u64;
+    let capacity = ((capacity_factor * total as f64 / n as f64).ceil() as u64).max(1);
+    let mut dropped = 0;
+    let clipped: Vec<u64> = per_expert
+        .iter()
+        .map(|&c| {
+            let keep = c.min(capacity);
+            dropped += c - keep;
+            keep
+        })
+        .collect();
+    CapacityOutcome { per_expert: clipped, dropped, capacity }
+}
+
+/// DeepSeek-style auxiliary-loss-free balancing: per-expert bias nudged
+/// against recent load. Returns updated biases; the caller mixes them
+/// into the popularity vector for the next iteration.
+///
+/// `biases[i] -= rate` if expert i was overloaded, `+= rate` otherwise
+/// (sign update, as in the paper arXiv:2408.15664).
+pub fn update_bias(biases: &mut [f64], per_expert: &[u64], rate: f64) {
+    let total: u64 = per_expert.iter().sum();
+    if total == 0 {
+        return;
+    }
+    let mean = total as f64 / per_expert.len() as f64;
+    for (b, &c) in biases.iter_mut().zip(per_expert) {
+        if (c as f64) > mean {
+            *b -= rate;
+        } else {
+            *b += rate;
+        }
+    }
+}
+
+/// Mix a bias vector into a popularity vector (softmax-free version:
+/// additive in probability space with renormalisation, clamped ≥ 0).
+pub fn biased_popularity(popularity: &[f64], biases: &[f64]) -> Vec<f64> {
+    let mixed: Vec<f64> = popularity
+        .iter()
+        .zip(biases)
+        .map(|(&p, &b)| (p + b).max(0.0))
+        .collect();
+    let sum: f64 = mixed.iter().sum();
+    if sum <= 0.0 {
+        return vec![1.0 / popularity.len() as f64; popularity.len()];
+    }
+    mixed.iter().map(|&x| x / sum).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_clips_and_counts_drops() {
+        let out = apply_capacity_factor(&[100, 0, 0, 0], 1.0);
+        assert_eq!(out.capacity, 25);
+        assert_eq!(out.per_expert, vec![25, 0, 0, 0]);
+        assert_eq!(out.dropped, 75);
+    }
+
+    #[test]
+    fn generous_capacity_drops_nothing() {
+        let counts = vec![30, 20, 25, 25];
+        let out = apply_capacity_factor(&counts, 2.0);
+        assert_eq!(out.per_expert, counts);
+        assert_eq!(out.dropped, 0);
+    }
+
+    #[test]
+    fn conservation_kept_plus_dropped() {
+        let counts = vec![50, 10, 90, 5, 45];
+        let out = apply_capacity_factor(&counts, 1.2);
+        let kept: u64 = out.per_expert.iter().sum();
+        assert_eq!(kept + out.dropped, 200);
+    }
+
+    #[test]
+    fn bias_pushes_toward_uniform() {
+        let mut biases = vec![0.0; 4];
+        update_bias(&mut biases, &[100, 0, 0, 0], 0.01);
+        assert!(biases[0] < 0.0);
+        assert!(biases[1] > 0.0);
+        let pop = biased_popularity(&[0.97, 0.01, 0.01, 0.01], &biases);
+        assert!(pop[0] < 0.97);
+        assert!((pop.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeated_bias_updates_converge_cv() {
+        // Iterating the bias rule on a fixed skewed popularity must
+        // reduce the coefficient of variation of the effective load.
+        use crate::util::rng::Rng;
+        use crate::util::stats::Summary;
+        let raw = [0.7, 0.1, 0.1, 0.1];
+        let mut biases = vec![0.0; 4];
+        let mut rng = Rng::new(3);
+        let mut first_cv = None;
+        let mut last_cv = 0.0;
+        for _ in 0..50 {
+            let pop = biased_popularity(&raw, &biases);
+            let counts = rng.multinomial(100_000, &pop);
+            last_cv = Summary::from_iter(counts.iter().map(|&c| c as f64)).cv();
+            first_cv.get_or_insert(last_cv);
+            update_bias(&mut biases, &counts, 0.02);
+        }
+        assert!(last_cv < first_cv.unwrap() * 0.5, "{last_cv} vs {first_cv:?}");
+    }
+
+    #[test]
+    fn zero_total_is_noop() {
+        let mut biases = vec![0.1; 3];
+        update_bias(&mut biases, &[0, 0, 0], 0.5);
+        assert_eq!(biases, vec![0.1; 3]);
+    }
+}

@@ -1,0 +1,286 @@
+//! Routing simulation: the stochastic token-to-expert process that
+//! drives every memory/throughput experiment.
+//!
+//! The paper's Fig. 2 shows the phenomenology this module reproduces:
+//! with drop-free top-k routing, deep layers develop strongly
+//! non-uniform expert popularity, and during early-training iterations
+//! (~5–15) the distribution is most chaotic — the max tokens received
+//! by one rank approaches the theoretical peak `e·s·b·t_k` while other
+//! ranks receive almost nothing. After ~10+ iterations the router
+//! stabilises (Fig. 5 discussion).
+//!
+//! Model: per (iteration, layer) the expert popularity vector is drawn
+//! from `Dirichlet(α·1)` where the concentration α shrinks with layer
+//! depth and follows a chaos schedule over iterations. Token copies
+//! (`e·s·b` tokens × `t_k` choices) are then multinomially assigned.
+//! All draws are seeded forks — identical traces for identical seeds.
+
+use crate::config::{ModelConfig, ParallelConfig};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+pub mod baselines;
+
+/// Parameters of the imbalance process. Defaults are calibrated so the
+/// Fig. 2-style trace at iteration 7 reaches ~50–65 % of the
+/// theoretical peak on the deepest layers (paper: "approaching the
+/// theoretical peak").
+#[derive(Clone, Debug)]
+pub struct GatingParams {
+    /// Baseline Dirichlet concentration for layer 0 at a calm
+    /// iteration. Larger ⇒ more uniform.
+    pub base_alpha: f64,
+    /// How much depth sharpens imbalance: α is divided by
+    /// `1 + depth_slope · (layer / max(1, L-1))`.
+    pub depth_slope: f64,
+    /// Center of the early-training chaos bump (iterations).
+    pub chaos_peak_iter: f64,
+    /// Width (std dev) of the chaos bump.
+    pub chaos_width: f64,
+    /// Peak multiplier of imbalance intensity at the bump.
+    pub chaos_gain: f64,
+    /// Intensity decay rate after stabilisation begins.
+    pub stabilize_rate: f64,
+}
+
+impl Default for GatingParams {
+    fn default() -> Self {
+        GatingParams {
+            base_alpha: 0.55,
+            depth_slope: 9.0,
+            chaos_peak_iter: 8.0,
+            chaos_width: 4.5,
+            chaos_gain: 10.0,
+            stabilize_rate: 0.12,
+        }
+    }
+}
+
+/// The routing process for one training job.
+#[derive(Clone, Debug)]
+pub struct GatingSim {
+    pub model: ModelConfig,
+    pub parallel: ParallelConfig,
+    pub params: GatingParams,
+    seed: u64,
+}
+
+/// Per-layer routing outcome for one iteration.
+#[derive(Clone, Debug)]
+pub struct LayerRouting {
+    /// Token copies received by each expert (len = n_experts).
+    pub per_expert: Vec<u64>,
+    /// Token copies received by each EP rank (len = ep).
+    pub per_rank: Vec<u64>,
+}
+
+impl LayerRouting {
+    /// `s''` of the hottest rank — the input to MACT (Eq. 9).
+    pub fn max_received(&self) -> u64 {
+        self.per_rank.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn min_received(&self) -> u64 {
+        self.per_rank.iter().copied().min().unwrap_or(0)
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::from_iter(self.per_rank.iter().map(|&c| c as f64))
+    }
+}
+
+impl GatingSim {
+    pub fn new(model: ModelConfig, parallel: ParallelConfig, seed: u64) -> Self {
+        GatingSim { model, parallel, params: GatingParams::default(), seed }
+    }
+
+    pub fn with_params(mut self, params: GatingParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Imbalance intensity ≥ 1 for (iteration, layer); α = base/intensity.
+    fn intensity(&self, iteration: u64, layer: u64) -> f64 {
+        let p = &self.params;
+        let l_frac = if self.model.layers <= 1 {
+            0.0
+        } else {
+            layer as f64 / (self.model.layers - 1) as f64
+        };
+        let depth = 1.0 + p.depth_slope * l_frac * l_frac;
+        let it = iteration as f64;
+        let bump = ((it - p.chaos_peak_iter) / p.chaos_width).powi(2);
+        let chaos = 1.0 + p.chaos_gain * (-0.5 * bump).exp();
+        // Post-bump stabilisation: intensity decays toward 1.
+        let settle = if it > p.chaos_peak_iter {
+            (-(it - p.chaos_peak_iter) * p.stabilize_rate).exp()
+        } else {
+            1.0
+        };
+        1.0 + (depth * chaos - 1.0) * settle.max(0.05)
+    }
+
+    /// Expert popularity vector for (iteration, layer): Dirichlet draw
+    /// with depth/iteration-dependent concentration. Dense layers
+    /// (`layer < dense_layers`) return a uniform vector (no routing).
+    pub fn expert_popularity(&self, iteration: u64, layer: u64) -> Vec<f64> {
+        let e_n = self.model.n_experts as usize;
+        if layer < self.model.dense_layers {
+            return vec![1.0 / e_n as f64; e_n];
+        }
+        let alpha = (self.params.base_alpha / self.intensity(iteration, layer))
+            .max(1e-3);
+        let mut rng = Rng::new(self.seed)
+            .fork(iteration.wrapping_mul(1_000_003).wrapping_add(layer));
+        rng.dirichlet(&vec![alpha; e_n])
+    }
+
+    /// Total token copies entering every MoE layer per micro-batch
+    /// across the EP group: `e · s · b · t_k`.
+    pub fn total_copies(&self) -> u64 {
+        self.parallel.ep
+            * self.model.seq
+            * self.parallel.micro_batch
+            * self.model.top_k
+    }
+
+    /// Route one (iteration, layer): returns per-expert and per-rank
+    /// received counts. Conservation: counts sum to `total_copies()`.
+    pub fn route(&self, iteration: u64, layer: u64) -> LayerRouting {
+        let probs = self.expert_popularity(iteration, layer);
+        let mut rng = Rng::new(self.seed ^ 0x5EED_0001)
+            .fork(iteration.wrapping_mul(7_368_787).wrapping_add(layer));
+        let per_expert = rng.multinomial(self.total_copies(), &probs);
+        let per_rank = per_rank_from_experts(&per_expert, self.parallel.ep);
+        LayerRouting { per_expert, per_rank }
+    }
+
+    /// Fig. 2 data: per-layer (min, mean, max) received tokens at one
+    /// iteration.
+    pub fn iteration_profile(&self, iteration: u64) -> Vec<(u64, f64, u64)> {
+        (0..self.model.layers)
+            .map(|l| {
+                let r = self.route(iteration, l);
+                let s = r.summary();
+                (r.min_received(), s.mean(), r.max_received())
+            })
+            .collect()
+    }
+}
+
+/// Sum per-expert counts into per-EP-rank counts (block layout:
+/// rank k hosts experts [k·E/ep, (k+1)·E/ep)). Matches Megatron's
+/// contiguous expert placement.
+pub fn per_rank_from_experts(per_expert: &[u64], ep: u64) -> Vec<u64> {
+    let e_n = per_expert.len() as u64;
+    assert!(ep > 0 && e_n % ep == 0, "experts {e_n} not divisible by ep {ep}");
+    let per = (e_n / ep) as usize;
+    per_expert
+        .chunks(per)
+        .map(|c| c.iter().sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_i, paper_parallel};
+
+    fn sim() -> GatingSim {
+        GatingSim::new(model_i(), paper_parallel(), 7)
+    }
+
+    #[test]
+    fn conservation_every_layer() {
+        let s = sim();
+        for layer in [0, 3, 8, 15] {
+            let r = s.route(7, layer);
+            assert_eq!(r.per_expert.iter().sum::<u64>(), s.total_copies());
+            assert_eq!(r.per_rank.iter().sum::<u64>(), s.total_copies());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = sim().route(7, 10);
+        let b = sim().route(7, 10);
+        assert_eq!(a.per_expert, b.per_expert);
+        let c = GatingSim::new(model_i(), paper_parallel(), 8).route(7, 10);
+        assert_ne!(a.per_expert, c.per_expert);
+    }
+
+    #[test]
+    fn dense_layers_route_uniformly() {
+        let s = sim();
+        let p = s.expert_popularity(7, 0); // layer 0 is dense (d_l = 3)
+        let first = p[0];
+        assert!(p.iter().all(|&x| (x - first).abs() < 1e-12));
+    }
+
+    #[test]
+    fn depth_increases_imbalance() {
+        // Fig. 2: deeper layers more imbalanced. Compare CV of received
+        // tokens at a shallow vs deep MoE layer, averaged over seeds.
+        let (mut shallow, mut deep) = (0.0, 0.0);
+        for seed in 0..10 {
+            let s = GatingSim::new(model_i(), paper_parallel(), seed);
+            shallow += s.route(7, 3).summary().cv();
+            deep += s.route(7, 15).summary().cv();
+        }
+        assert!(deep > shallow, "deep {deep:.2} <= shallow {shallow:.2}");
+    }
+
+    #[test]
+    fn chaos_bump_then_stabilise() {
+        // Imbalance at iteration ~8 must exceed both iteration 0 and
+        // iteration 24 (Fig. 5: stabilises after ~10 iterations).
+        let (mut early, mut peak, mut late) = (0.0, 0.0, 0.0);
+        for seed in 0..10 {
+            let s = GatingSim::new(model_i(), paper_parallel(), seed);
+            early += s.route(0, 15).summary().cv();
+            peak += s.route(8, 15).summary().cv();
+            late += s.route(24, 15).summary().cv();
+        }
+        assert!(peak > early, "peak {peak:.2} <= early {early:.2}");
+        assert!(peak > late, "peak {peak:.2} <= late {late:.2}");
+    }
+
+    #[test]
+    fn peak_iteration_approaches_theoretical_max() {
+        // At the chaos peak the hottest rank should receive a large
+        // fraction of all copies on deep layers (Fig. 2's outliers).
+        let s = sim();
+        let total = s.total_copies() as f64;
+        let max_frac = (5..=15)
+            .map(|l| s.route(7, l).max_received() as f64 / total)
+            .fold(0.0, f64::max);
+        assert!(max_frac > 0.35, "max fraction {max_frac:.2} too balanced");
+    }
+
+    #[test]
+    fn profile_has_layer_rows() {
+        let prof = sim().iteration_profile(7);
+        assert_eq!(prof.len(), 16);
+        for (min, mean, max) in prof {
+            assert!(min as f64 <= mean && mean <= max as f64);
+        }
+    }
+
+    #[test]
+    fn per_rank_block_layout() {
+        let per_expert = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        assert_eq!(per_rank_from_experts(&per_expert, 4), vec![3, 7, 11, 15]);
+        assert_eq!(per_rank_from_experts(&per_expert, 2), vec![10, 26]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn per_rank_requires_divisibility() {
+        per_rank_from_experts(&[1, 2, 3], 2);
+    }
+
+    #[test]
+    fn total_copies_matches_paper() {
+        assert_eq!(sim().total_copies(), 32 * 4096 * 8);
+    }
+}

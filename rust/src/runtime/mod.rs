@@ -1,0 +1,360 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute from
+//! the rust hot path. Python never runs here — `make artifacts` is the
+//! only compile-path step.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. The interchange format is HLO *text*
+//! because jax ≥ 0.5 emits 64-bit instruction ids that this XLA
+//! rejects in proto form (see /opt/xla-example/README.md).
+//!
+//! [`ArtifactStore`] reads `artifacts/manifest.json` (via the crate's
+//! own JSON parser), exposes typed entry metadata, and memoises
+//! compiled executables so each variant is compiled exactly once per
+//! process — one executable per FCDA chunk bin, exactly as MACT
+//! assumes.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+
+/// Shape + dtype of one executable input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::artifact("entry missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().map(|x| x as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| Error::artifact("bad shape"))?;
+        Ok(TensorSpec { shape, dtype: v.req_str("dtype")?.to_string() })
+    }
+}
+
+/// One AOT entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// FCDA chunk bin for expert kernels (None otherwise).
+    pub chunk_bin: Option<u64>,
+    /// Per-expert capacity for expert kernels.
+    pub capacity: Option<u64>,
+}
+
+/// Parameter-vector slice layout from the manifest.
+#[derive(Clone, Debug)]
+pub struct ParamLayout {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+}
+
+/// The artifact directory: manifest + lazily compiled executables.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    pub entries: HashMap<String, ArtifactEntry>,
+    pub param_count: usize,
+    pub param_layout: ParamLayout,
+    /// The manifest `config` block (model dims).
+    pub config: Value,
+    /// The full manifest root (coordinator block, kernel_perf, ...).
+    pub manifest: Value,
+    client: xla::PjRtClient,
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactStore {
+    /// Open an artifact directory produced by `make artifacts`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = json::parse(&text)?;
+        let mut entries = HashMap::new();
+        for e in manifest
+            .get("entries")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::artifact("manifest missing entries"))?
+        {
+            let name = e.req_str("name")?.to_string();
+            let inputs = e
+                .get("inputs")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| Error::artifact("entry missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| Error::artifact("entry missing outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name,
+                    file: e.req_str("file")?.to_string(),
+                    inputs,
+                    outputs,
+                    chunk_bin: e.get("chunk_bin").and_then(Value::as_u64),
+                    capacity: e.get("capacity").and_then(Value::as_u64),
+                },
+            );
+        }
+        let param_layout = {
+            let arr = manifest
+                .get("param_layout")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| Error::artifact("manifest missing param_layout"))?;
+            let mut names = Vec::new();
+            let mut shapes = Vec::new();
+            for p in arr {
+                names.push(p.req_str("name")?.to_string());
+                shapes.push(
+                    p.get("shape")
+                        .and_then(Value::as_arr)
+                        .ok_or_else(|| Error::artifact("param missing shape"))?
+                        .iter()
+                        .filter_map(Value::as_u64)
+                        .map(|x| x as usize)
+                        .collect(),
+                );
+            }
+            ParamLayout { names, shapes }
+        };
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PJRT CPU client: {e:?}")))?;
+        Ok(ArtifactStore {
+            dir,
+            entries,
+            param_count: manifest.req_u64("param_count")? as usize,
+            param_layout,
+            config: manifest.get("config").cloned().unwrap_or(Value::Null),
+            manifest,
+            client,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load the initial parameter vector (params.bin, little-endian f32).
+    pub fn initial_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("params.bin");
+        let bytes = std::fs::read(&path)?;
+        if bytes.len() != self.param_count * 4 {
+            return Err(Error::artifact(format!(
+                "params.bin has {} bytes, expected {}",
+                bytes.len(),
+                self.param_count * 4
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Compile (or fetch memoised) executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.compiled.lock().unwrap();
+            if let Some(exe) = cache.get(name) {
+                return Ok(exe.clone());
+            }
+        }
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::artifact(format!("no artifact entry '{name}'")))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::artifact("non-utf8 path"))?,
+        )
+        .map_err(|e| Error::runtime(format!("parse {}: {e:?}", entry.file)))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile {name}: {e:?}")))?;
+        let exe = std::sync::Arc::new(exe);
+        self.compiled
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute `name` on f32/i32 host buffers, validating shapes against
+    /// the manifest. Returns the flattened f32 outputs (i32 outputs are
+    /// converted losslessly for ids ≤ 2^24; the router indices fit).
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::artifact(format!("no artifact entry '{name}'")))?
+            .clone();
+        if inputs.len() != entry.inputs.len() {
+            return Err(Error::runtime(format!(
+                "{name}: {} inputs given, expects {}",
+                inputs.len(),
+                entry.inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (spec, input)) in entry.inputs.iter().zip(inputs).enumerate() {
+            if input.elements() != spec.elements() {
+                return Err(Error::runtime(format!(
+                    "{name} input {i}: {} elements, expects {:?}",
+                    input.elements(),
+                    spec.shape
+                )));
+            }
+            literals.push(input.to_literal(&spec.shape)?);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::runtime(format!("execute {name}: {e:?}")))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("fetch {name}: {e:?}")))?;
+        // aot.py lowers with return_tuple=True: decompose.
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| Error::runtime(format!("untuple {name}: {e:?}")))?;
+        if parts.len() != entry.outputs.len() {
+            return Err(Error::runtime(format!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                entry.outputs.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .zip(&entry.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// A host-side tensor: f32 or i32 flat buffer + logical shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn elements(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => Err(Error::runtime("expected f32 tensor")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => Err(Error::runtime("expected i32 tensor")),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            return Err(Error::runtime(format!("expected scalar, len {}", v.len())));
+        }
+        Ok(v[0])
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        if shape.len() == 1 {
+            return Ok(lit);
+        }
+        lit.reshape(&dims)
+            .map_err(|e| Error::runtime(format!("reshape to {shape:?}: {e:?}")))
+    }
+
+    fn from_literal(lit: xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        match spec.dtype.as_str() {
+            "i32" => Ok(HostTensor::I32(lit.to_vec::<i32>().map_err(|e| {
+                Error::runtime(format!("literal→i32: {e:?}"))
+            })?)),
+            _ => Ok(HostTensor::F32(lit.to_vec::<f32>().map_err(|e| {
+                Error::runtime(format!("literal→f32: {e:?}"))
+            })?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { shape: vec![2, 3, 4], dtype: "f32".into() };
+        assert_eq!(t.elements(), 24);
+        let s = TensorSpec { shape: vec![], dtype: "f32".into() };
+        assert_eq!(s.elements(), 1);
+    }
+
+    #[test]
+    fn host_tensor_accessors() {
+        let f = HostTensor::F32(vec![1.0, 2.0]);
+        assert_eq!(f.elements(), 2);
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        let s = HostTensor::F32(vec![3.5]);
+        assert_eq!(s.scalar_f32().unwrap(), 3.5);
+        assert!(f.scalar_f32().is_err());
+    }
+
+    #[test]
+    fn open_missing_dir_is_artifact_error() {
+        match ArtifactStore::open("/nonexistent-path-xyz") {
+            Err(Error::Artifact(msg)) => assert!(msg.contains("make artifacts")),
+            Err(other) => panic!("unexpected error {other:?}"),
+            Ok(_) => panic!("open unexpectedly succeeded"),
+        }
+    }
+}

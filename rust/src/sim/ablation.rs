@@ -1,0 +1,164 @@
+//! Ablation studies over MemFine's design choices (DESIGN.md §4 calls
+//! these out; `cargo bench --bench ablations` prints them):
+//!
+//! * **Bin granularity** — MACT with fine bins [1..8] vs the paper's
+//!   [1,2,4,8] vs degenerate single bins: memory/TGS trade-off of the
+//!   threshold method ("introducing (8) and (9) would increase the
+//!   computational cost, we use a threshold method").
+//! * **Selective recomputation** — MemFine with the attention-recompute
+//!   saving disabled, isolating how much of the M3-over-M1 edge comes
+//!   from overlap vs recompute avoidance.
+//! * **Capacity-factor baseline** — GShard-style drops: what fraction
+//!   of routed copies a capacity factor must discard to match MemFine's
+//!   memory, i.e. the accuracy price MemFine avoids.
+
+use crate::config::{Method, ModelConfig, RunConfig};
+use crate::router::baselines::apply_capacity_factor;
+use crate::router::GatingSim;
+use crate::sim::{RunOutcome, Simulator};
+use crate::Result;
+
+/// One bin-granularity ablation row.
+#[derive(Clone, Debug)]
+pub struct BinAblationRow {
+    pub label: String,
+    pub bins: Vec<u64>,
+    pub peak_act_bytes: u64,
+    pub avg_tgs: f64,
+    pub oom_iterations: u64,
+    /// Distinct chunk values used (= executables that must be compiled).
+    pub distinct_chunks: usize,
+}
+
+/// Sweep MACT bin sets on the given run envelope.
+pub fn bin_granularity(
+    base: &RunConfig,
+    bin_sets: &[(&str, Vec<u64>)],
+) -> Result<Vec<BinAblationRow>> {
+    let mut rows = Vec::new();
+    for (label, bins) in bin_sets {
+        let mut run = base.clone();
+        run.method = Method::Mact(bins.clone());
+        let out = Simulator::new(run)?.run_all();
+        let mut used: Vec<u64> = out.chunks.records.iter().map(|r| r.chosen_c).collect();
+        used.sort_unstable();
+        used.dedup();
+        rows.push(BinAblationRow {
+            label: label.to_string(),
+            bins: bins.clone(),
+            peak_act_bytes: out.peak_act_bytes,
+            avg_tgs: out.avg_tgs,
+            oom_iterations: out.oom_iterations,
+            distinct_chunks: used.len(),
+        });
+    }
+    Ok(rows)
+}
+
+/// MACT with and without selective recomputation on the same trace,
+/// isolating the recompute-avoidance share of the M3-over-M1 edge.
+/// Returns (with_selective, without_selective) average TGS.
+pub fn selective_recompute_effect(base: &RunConfig) -> Result<(f64, f64)> {
+    let mut with = base.clone();
+    with.method = Method::Mact(vec![1, 2, 4, 8]);
+    let out_with = Simulator::new(with)?.run_all();
+
+    let mut without = base.clone();
+    without.method = Method::Mact(vec![1, 2, 4, 8]);
+    without.allow_selective_recompute = false;
+    let out_without = Simulator::new(without)?.run_all();
+    Ok((out_with.avg_tgs, out_without.avg_tgs))
+}
+
+/// Drop fraction a GShard capacity factor would need to cap memory at
+/// MemFine's chunked level on the hottest (iteration, layer).
+#[derive(Clone, Debug)]
+pub struct CapacityAblationRow {
+    pub capacity_factor: f64,
+    pub dropped_fraction: f64,
+    pub peak_expert_tokens: u64,
+}
+
+pub fn capacity_factor_drops(
+    model: &ModelConfig,
+    run: &RunConfig,
+    factors: &[f64],
+) -> Vec<CapacityAblationRow> {
+    let sim = GatingSim::new(model.clone(), run.parallel.clone(), run.seed);
+    // hottest layer at the chaos peak
+    let routing = sim.route(8, model.layers - 1);
+    factors
+        .iter()
+        .map(|&cf| {
+            let out = apply_capacity_factor(&routing.per_expert, cf);
+            let total: u64 = routing.per_expert.iter().sum();
+            CapacityAblationRow {
+                capacity_factor: cf,
+                dropped_fraction: out.dropped as f64 / total as f64,
+                peak_expert_tokens: out.per_expert.iter().copied().max().unwrap_or(0),
+            }
+        })
+        .collect()
+}
+
+/// Convenience: run one method end-to-end (used by the ablation bench).
+pub fn run_method(base: &RunConfig, method: Method) -> Result<RunOutcome> {
+    let mut run = base.clone();
+    run.method = method;
+    Ok(Simulator::new(run)?.run_all())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_i, paper_run};
+
+    fn base() -> RunConfig {
+        let mut r = paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        r.iterations = 12;
+        r
+    }
+
+    #[test]
+    fn finer_bins_do_not_increase_memory() {
+        let rows = bin_granularity(
+            &base(),
+            &[
+                ("fine", vec![1, 2, 3, 4, 5, 6, 7, 8]),
+                ("paper", vec![1, 2, 4, 8]),
+                ("single-8", vec![8]),
+            ],
+        )
+        .unwrap();
+        // finer bins fit tighter → memory(fine) ≤ memory(paper);
+        // single-8 over-chunks → lowest memory of all
+        assert!(rows[0].peak_act_bytes <= rows[1].peak_act_bytes);
+        assert!(rows[2].peak_act_bytes <= rows[0].peak_act_bytes);
+        // but single-8 costs throughput
+        assert!(rows[2].avg_tgs < rows[1].avg_tgs);
+        // and the paper's bin set needs no more executables than bins
+        assert!(rows[1].distinct_chunks <= 4);
+        // nothing OOMs
+        assert!(rows.iter().all(|r| r.oom_iterations == 0));
+    }
+
+    #[test]
+    fn selective_recompute_is_a_real_win() {
+        let (with, without) = selective_recompute_effect(&base()).unwrap();
+        assert!(
+            with > without,
+            "selective recompute should gain TGS: {with} vs {without}"
+        );
+    }
+
+    #[test]
+    fn capacity_baseline_must_drop_heavily_at_peak() {
+        let run = base();
+        let rows = capacity_factor_drops(&run.model, &run, &[1.0, 2.0, 4.0]);
+        // at the chaos peak, even cf=4 drops a meaningful share —
+        // the accuracy price the paper's drop-free design refuses
+        assert!(rows[0].dropped_fraction > rows[2].dropped_fraction);
+        assert!(rows[0].dropped_fraction > 0.3, "{rows:?}");
+        assert!(rows[2].dropped_fraction > 0.0, "{rows:?}");
+    }
+}

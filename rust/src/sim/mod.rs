@@ -1,0 +1,402 @@
+//! Whole-training-run simulator: the engine behind every paper table
+//! and figure.
+//!
+//! For each iteration it (1) draws the routing trace per MoE layer
+//! ([`crate::router::GatingSim`]), (2) applies the configured method's
+//! chunking decision ([`crate::chunk::Mact`] for Method 3), (3)
+//! evaluates the memory model per pipeline stage to detect OOM
+//! (Eq. 2/3), and (4) composes per-layer timing into an iteration time
+//! and TGS (Eq. 10). Outputs are the traces the benches print:
+//! Table 4's memory rows, Fig. 2's distribution slice, Fig. 4's TGS
+//! series and Fig. 5's chunk grid.
+
+use crate::chunk::Mact;
+use crate::config::{Method, RunConfig};
+use crate::memory::{ActivationModel, StaticModel};
+use crate::perf::PerfModel;
+use crate::router::GatingSim;
+pub mod ablation;
+pub mod repro;
+
+use crate::trace::{ChunkRecord, ChunkTrace, RoutingRecord, RoutingTrace};
+
+/// Outcome of one MoE layer in one iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerOutcome {
+    pub layer: u64,
+    /// Coldest rank's received copies.
+    pub min_recv: u64,
+    /// Mean received copies across the EP group.
+    pub mean_recv: f64,
+    /// Hottest rank's received copies (`s''`).
+    pub max_recv: u64,
+    /// Chunk count the method applied.
+    pub chunks: u64,
+    /// Peak activation bytes of the hottest rank for this layer.
+    pub act_bytes: u64,
+}
+
+/// Outcome of one iteration.
+#[derive(Clone, Debug)]
+pub struct IterationOutcome {
+    pub iteration: u64,
+    pub layers: Vec<LayerOutcome>,
+    /// Peak activation bytes across stages (hottest layer).
+    pub peak_act_bytes: u64,
+    /// Static + activation peak across stages.
+    pub peak_total_bytes: u64,
+    /// True when Eq. 3 is violated on some stage.
+    pub oom: bool,
+    pub iteration_s: f64,
+    pub tgs: f64,
+}
+
+/// Aggregate of a full simulated run.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub method: Method,
+    pub iterations: Vec<IterationOutcome>,
+    pub routing: RoutingTrace,
+    pub chunks: ChunkTrace,
+    /// Mean TGS over non-OOM iterations (0 if all OOM).
+    pub avg_tgs: f64,
+    pub oom_iterations: u64,
+    /// Worst-case activation bytes observed anywhere in the run.
+    pub peak_act_bytes: u64,
+    /// Static bytes of the heaviest stage.
+    pub static_bytes: u64,
+}
+
+impl RunOutcome {
+    pub fn trained(&self) -> bool {
+        self.oom_iterations == 0
+    }
+}
+
+/// The simulator.
+pub struct Simulator {
+    pub run: RunConfig,
+    gating: GatingSim,
+    act: ActivationModel,
+    sta: StaticModel,
+    perf: PerfModel,
+    mact: Option<Mact>,
+}
+
+impl Simulator {
+    pub fn new(run: RunConfig) -> crate::Result<Self> {
+        run.validate()?;
+        let gating = GatingSim::new(run.model.clone(), run.parallel.clone(), run.seed);
+        let act = ActivationModel::new(&run);
+        let sta = StaticModel::new(&run);
+        let perf = PerfModel::new(run.model.clone(), run.parallel.clone(), run.dtype_bytes);
+        let mact = match &run.method {
+            Method::Mact(bins) => Some(Mact::new(&run, bins.clone())),
+            _ => None,
+        };
+        Ok(Simulator { run, gating, act, sta, perf, mact })
+    }
+
+    /// Pipeline stage hosting `layer`.
+    fn stage_of(&self, layer: u64) -> u64 {
+        let per = self.run.parallel.layers_per_stage(self.run.model.layers);
+        (layer / per).min(self.run.parallel.pp - 1)
+    }
+
+    /// The method's chunk decision for (stage, s'').
+    pub fn chunks_for(&self, stage: u64, max_recv: u64) -> u64 {
+        match &self.run.method {
+            Method::FullRecompute => 1,
+            Method::FixedChunk(c) => *c,
+            Method::Mact(_) => {
+                self.mact.as_ref().expect("mact built").decide(stage, max_recv).chosen_c
+            }
+        }
+    }
+
+    /// Can MemFine skip attention recomputation on this stage
+    /// (*selective* recomputation)? Only if storing the dense part of
+    /// all the stage's layers for every in-flight micro-batch — plus
+    /// the chunked MoE peak — still fits the budget (Eq. 3). This is
+    /// the throughput edge of Methods 2/3 over full recomputation.
+    fn selective_fits(&self, stage: u64, moe_chunk_peak: u64, budget: u64) -> bool {
+        let m_g = self.run.parallel.m_g(stage);
+        let layers_here = self.run.parallel.layers_per_stage(self.run.model.layers);
+        let stored_dense = m_g * layers_here * self.act.dense_bytes();
+        self.sta.bytes_on_rank(stage) + stored_dense + moe_chunk_peak <= budget
+    }
+
+    /// Simulate one iteration.
+    pub fn iteration(&self, it: u64) -> IterationOutcome {
+        let model = &self.run.model;
+        let pp = self.run.parallel.pp as usize;
+        let budget = (self.run.alpha * self.run.gpu_mem_bytes as f64) as u64;
+        let method1 = matches!(self.run.method, Method::FullRecompute);
+
+        // Pass 1: routing + chunk decision per MoE layer.
+        struct MoeLayer {
+            layer: u64,
+            stage: usize,
+            min_recv: u64,
+            mean_recv: f64,
+            max_recv: u64,
+            chunks: u64,
+        }
+        let mut moe_layers = Vec::with_capacity(model.layers as usize);
+        for layer in model.dense_layers..model.layers {
+            let stage = self.stage_of(layer) as usize;
+            // one routing draw per (iteration, layer): the stats feed
+            // both the chunk decision here and the Fig. 2 trace in
+            // run_all (routing twice was the top sim hot-spot — §Perf).
+            let routing = self.gating.route(it, layer);
+            let s = routing.summary();
+            let max_recv = routing.max_received();
+            let chunks = self.chunks_for(stage as u64, max_recv);
+            moe_layers.push(MoeLayer {
+                layer,
+                stage,
+                min_recv: routing.min_received(),
+                mean_recv: s.mean(),
+                max_recv,
+                chunks,
+            });
+        }
+
+        // Per-stage chunked-MoE peaks decide selective recompute.
+        let mut moe_chunk_peak = vec![0u64; pp];
+        for l in &moe_layers {
+            let chunked = self
+                .act
+                .layer(l.max_recv.div_ceil(l.chunks))
+                .moe_part();
+            moe_chunk_peak[l.stage] = moe_chunk_peak[l.stage].max(chunked);
+        }
+        let selective: Vec<bool> = (0..pp)
+            .map(|s| {
+                !method1
+                    && self.run.allow_selective_recompute
+                    && self.selective_fits(s as u64, moe_chunk_peak[s], budget)
+            })
+            .collect();
+
+        // Pass 2: memory + time accumulation.
+        let mut layers = Vec::with_capacity(moe_layers.len());
+        let mut per_stage_time = vec![0.0f64; pp];
+        let mut per_stage_act_peak = vec![0u64; pp];
+        for layer in 0..model.dense_layers {
+            let stage = self.stage_of(layer) as usize;
+            per_stage_time[stage] += self.perf.dense_layer(!selective[stage]).total();
+            per_stage_act_peak[stage] =
+                per_stage_act_peak[stage].max(self.act.dense_bytes());
+        }
+        for l in &moe_layers {
+            let stage = l.stage;
+            let act_bytes = if method1 {
+                self.act.peak_bytes(stage as u64, l.max_recv, true)
+            } else if selective[stage] {
+                // stored dense part of the whole stage + this layer's
+                // chunked MoE transient
+                let m_g = self.run.parallel.m_g(stage as u64);
+                let layers_here =
+                    self.run.parallel.layers_per_stage(self.run.model.layers);
+                m_g * layers_here * self.act.dense_bytes()
+                    + self.act.layer(l.max_recv.div_ceil(l.chunks)).moe_part()
+            } else {
+                self.act
+                    .peak_bytes_chunked(stage as u64, l.max_recv, l.chunks, true)
+            };
+            per_stage_act_peak[stage] = per_stage_act_peak[stage].max(act_bytes);
+            per_stage_time[stage] += if method1 {
+                self.perf.moe_layer_method1(l.max_recv).total()
+            } else {
+                self.perf
+                    .moe_layer_memfine(l.max_recv, l.chunks, !selective[stage])
+                    .total()
+            };
+            layers.push(LayerOutcome {
+                layer: l.layer,
+                min_recv: l.min_recv,
+                mean_recv: l.mean_recv,
+                max_recv: l.max_recv,
+                chunks: l.chunks,
+                act_bytes,
+            });
+        }
+
+        let mut oom = false;
+        let mut peak_total = 0u64;
+        let mut peak_act = 0u64;
+        for stage in 0..self.run.parallel.pp {
+            let total = self.sta.bytes_on_rank(stage) + per_stage_act_peak[stage as usize];
+            peak_total = peak_total.max(total);
+            peak_act = peak_act.max(per_stage_act_peak[stage as usize]);
+            if total > budget {
+                oom = true;
+            }
+        }
+
+        let iteration_s = self
+            .perf
+            .iteration_time(&per_stage_time, self.run.parallel.micro_batches());
+        let tgs = self.perf.tgs(iteration_s);
+        IterationOutcome {
+            iteration: it,
+            layers,
+            peak_act_bytes: peak_act,
+            peak_total_bytes: peak_total,
+            oom,
+            iteration_s,
+            tgs,
+        }
+    }
+
+    /// Simulate the configured number of iterations, producing traces.
+    ///
+    /// Like the real system, an OOM iteration contributes no TGS sample
+    /// (the job would have crashed); the bench reports `trained = ×`
+    /// when any iteration OOMs — matching Table 4's "training" column.
+    pub fn run_all(&self) -> RunOutcome {
+        let mut iterations = Vec::new();
+        let mut routing = RoutingTrace::default();
+        let mut chunks = ChunkTrace::default();
+        let mut tgs_sum = 0.0;
+        let mut tgs_n = 0u64;
+        let mut oom_iterations = 0;
+        let mut peak_act = 0u64;
+
+        for it in 0..self.run.iterations {
+            let out = self.iteration(it);
+            for l in &out.layers {
+                chunks.push(ChunkRecord {
+                    iteration: it,
+                    layer: l.layer,
+                    chosen_c: l.chunks,
+                });
+            }
+            for l in &out.layers {
+                routing.push(RoutingRecord {
+                    iteration: it,
+                    layer: l.layer,
+                    min_recv: l.min_recv,
+                    mean_recv: l.mean_recv,
+                    max_recv: l.max_recv,
+                });
+            }
+            if out.oom {
+                oom_iterations += 1;
+            } else {
+                tgs_sum += out.tgs;
+                tgs_n += 1;
+            }
+            peak_act = peak_act.max(out.peak_act_bytes);
+            iterations.push(out);
+        }
+        RunOutcome {
+            method: self.run.method.clone(),
+            iterations,
+            routing,
+            chunks,
+            avg_tgs: if tgs_n > 0 { tgs_sum / tgs_n as f64 } else { 0.0 },
+            oom_iterations,
+            peak_act_bytes: peak_act,
+            static_bytes: self.sta.max_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_i, model_ii, paper_run, Method};
+
+    fn outcome(model: crate::config::ModelConfig, method: Method) -> RunOutcome {
+        let mut run = paper_run(model, method);
+        run.iterations = 20;
+        Simulator::new(run).unwrap().run_all()
+    }
+
+    #[test]
+    fn method1_model_i_ooms_table4() {
+        let o = outcome(model_i(), Method::FullRecompute);
+        assert!(!o.trained(), "Table 4: Method 1 on Model I must OOM");
+    }
+
+    #[test]
+    fn memfine_rescues_model_i_table4() {
+        let o2 = outcome(model_i(), Method::FixedChunk(8));
+        assert!(o2.trained(), "Method 2 must train");
+        let o3 = outcome(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        assert!(o3.trained(), "Method 3 must train");
+    }
+
+    #[test]
+    fn activation_ordering_m2_lt_m3_lt_m1() {
+        // Table 4: c=8 saves most activation; MACT sits between.
+        let m1 = outcome(model_i(), Method::FullRecompute).peak_act_bytes;
+        let m2 = outcome(model_i(), Method::FixedChunk(8)).peak_act_bytes;
+        let m3 = outcome(model_i(), Method::Mact(vec![1, 2, 4, 8])).peak_act_bytes;
+        assert!(m2 < m3, "m2 {m2} !< m3 {m3}");
+        assert!(m3 < m1, "m3 {m3} !< m1 {m1}");
+    }
+
+    #[test]
+    fn model_ii_method1_trains_table4() {
+        let o = outcome(model_ii(), Method::FullRecompute);
+        assert!(o.trained(), "Table 4: Method 1 on Model II trains");
+    }
+
+    #[test]
+    fn fig4_model_ii_ordering() {
+        // Model II average TGS: Method 3 > Method 1 > Method 2.
+        let m1 = outcome(model_ii(), Method::FullRecompute).avg_tgs;
+        let m2 = outcome(model_ii(), Method::FixedChunk(8)).avg_tgs;
+        let m3 = outcome(model_ii(), Method::Mact(vec![1, 2, 4, 8])).avg_tgs;
+        assert!(m3 > m1, "m3 {m3} !> m1 {m1}");
+        assert!(m1 > m2, "m1 {m1} !> m2 {m2}");
+    }
+
+    #[test]
+    fn fig4_model_i_m3_beats_m2() {
+        let m2 = outcome(model_i(), Method::FixedChunk(8)).avg_tgs;
+        let m3 = outcome(model_i(), Method::Mact(vec![1, 2, 4, 8])).avg_tgs;
+        assert!(m3 > m2, "m3 {m3} !> m2 {m2}");
+    }
+
+    #[test]
+    fn fig5_chunk_trend_bump() {
+        // Mean MACT chunk value rises into the chaos window then falls.
+        let o = outcome(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        let means = o.chunks.mean_per_iteration(20);
+        let early = means[0];
+        let peak = means[5..12].iter().cloned().fold(0.0, f64::max);
+        let late = means[19];
+        assert!(peak > early, "peak {peak} !> early {early}");
+        assert!(peak > late, "peak {peak} !> late {late}");
+    }
+
+    #[test]
+    fn fig5_deep_layers_get_larger_chunks() {
+        let o = outcome(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        let grid = o.chunks.grid(16, 20);
+        let shallow: u64 = (3..8).map(|l| grid[l][7]).sum();
+        let deep: u64 = (11..16).map(|l| grid[l][7]).sum();
+        assert!(deep >= shallow, "deep {deep} < shallow {shallow}");
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = outcome(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        let b = outcome(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        assert_eq!(a.peak_act_bytes, b.peak_act_bytes);
+        assert_eq!(a.avg_tgs, b.avg_tgs);
+        assert_eq!(a.chunks.records, b.chunks.records);
+    }
+
+    #[test]
+    fn routing_trace_covers_moe_layers() {
+        let o = outcome(model_i(), Method::FullRecompute);
+        // 13 MoE layers × 20 iterations
+        assert_eq!(o.routing.records.len(), 13 * 20);
+        assert!(o.routing.peak_recv() > 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Trace recording: routing distributions, MACT decisions and memory
+//! peaks per (iteration, layer), with CSV/JSON export and replay.
+//!
+//! Fig. 2 is one iteration's slice of a [`RoutingTrace`]; Fig. 5 is a
+//! [`ChunkTrace`] rendered layer × iteration. Benches write these next
+//! to their stdout tables so plots can be regenerated offline.
+
+use crate::json::{self, Value};
+use crate::metrics::CsvWriter;
+use crate::Result;
+
+/// Per-(iteration, layer) routing statistics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoutingRecord {
+    pub iteration: u64,
+    pub layer: u64,
+    pub min_recv: u64,
+    pub mean_recv: f64,
+    pub max_recv: u64,
+}
+
+/// Full routing trace of a run.
+#[derive(Clone, Debug, Default)]
+pub struct RoutingTrace {
+    pub records: Vec<RoutingRecord>,
+}
+
+impl RoutingTrace {
+    pub fn push(&mut self, r: RoutingRecord) {
+        self.records.push(r);
+    }
+
+    /// All records of one iteration (a Fig. 2 slice).
+    pub fn iteration(&self, it: u64) -> Vec<&RoutingRecord> {
+        self.records.iter().filter(|r| r.iteration == it).collect()
+    }
+
+    /// Peak received tokens over the whole trace (drives Table 4's
+    /// worst-case activation column).
+    pub fn peak_recv(&self) -> u64 {
+        self.records.iter().map(|r| r.max_recv).max().unwrap_or(0)
+    }
+
+    pub fn to_csv(&self) -> Result<String> {
+        let mut w = CsvWriter::new(
+            Vec::new(),
+            &["iteration", "layer", "min_recv", "mean_recv", "max_recv"],
+        )?;
+        for r in &self.records {
+            w.row(&[
+                r.iteration.to_string(),
+                r.layer.to_string(),
+                r.min_recv.to_string(),
+                format!("{:.1}", r.mean_recv),
+                r.max_recv.to_string(),
+            ])?;
+        }
+        Ok(String::from_utf8(w.into_inner()).expect("csv is utf8"))
+    }
+}
+
+/// Per-(iteration, layer) MACT decision (Fig. 5 cell).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkRecord {
+    pub iteration: u64,
+    pub layer: u64,
+    pub chosen_c: u64,
+}
+
+/// The Fig. 5 trace.
+#[derive(Clone, Debug, Default)]
+pub struct ChunkTrace {
+    pub records: Vec<ChunkRecord>,
+}
+
+impl ChunkTrace {
+    pub fn push(&mut self, r: ChunkRecord) {
+        self.records.push(r);
+    }
+
+    /// Render the layer × iteration grid as rows of chunk values
+    /// (layers ascending; one column per iteration).
+    pub fn grid(&self, layers: u64, iterations: u64) -> Vec<Vec<u64>> {
+        let mut g = vec![vec![0u64; iterations as usize]; layers as usize];
+        for r in &self.records {
+            if r.layer < layers && r.iteration < iterations {
+                g[r.layer as usize][r.iteration as usize] = r.chosen_c;
+            }
+        }
+        g
+    }
+
+    /// Mean chunk value per iteration — the "first increases then
+    /// decreases" trend the paper reads off Fig. 5.
+    pub fn mean_per_iteration(&self, iterations: u64) -> Vec<f64> {
+        (0..iterations)
+            .map(|it| {
+                let vals: Vec<f64> = self
+                    .records
+                    .iter()
+                    .filter(|r| r.iteration == it)
+                    .map(|r| r.chosen_c as f64)
+                    .collect();
+                if vals.is_empty() {
+                    0.0
+                } else {
+                    vals.iter().sum::<f64>() / vals.len() as f64
+                }
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    json::obj(vec![
+                        ("iteration", json::num(r.iteration as f64)),
+                        ("layer", json::num(r.layer as f64)),
+                        ("chunk", json::num(r.chosen_c as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Parse back from the JSON written by `to_json` (replay support).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut t = ChunkTrace::default();
+        for item in v.as_arr().unwrap_or(&[]) {
+            t.push(ChunkRecord {
+                iteration: item.req_u64("iteration")?,
+                layer: item.req_u64("layer")?,
+                chosen_c: item.req_u64("chunk")?,
+            });
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_trace_queries() {
+        let mut t = RoutingTrace::default();
+        t.push(RoutingRecord { iteration: 0, layer: 0, min_recv: 1, mean_recv: 2.0, max_recv: 3 });
+        t.push(RoutingRecord { iteration: 7, layer: 0, min_recv: 0, mean_recv: 9.0, max_recv: 90 });
+        t.push(RoutingRecord { iteration: 7, layer: 1, min_recv: 0, mean_recv: 9.0, max_recv: 50 });
+        assert_eq!(t.iteration(7).len(), 2);
+        assert_eq!(t.peak_recv(), 90);
+    }
+
+    #[test]
+    fn routing_csv_shape() {
+        let mut t = RoutingTrace::default();
+        t.push(RoutingRecord { iteration: 1, layer: 2, min_recv: 3, mean_recv: 4.5, max_recv: 6 });
+        let csv = t.to_csv().unwrap();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[1], "1,2,3,4.5,6");
+    }
+
+    #[test]
+    fn chunk_grid_layout() {
+        let mut t = ChunkTrace::default();
+        t.push(ChunkRecord { iteration: 0, layer: 0, chosen_c: 1 });
+        t.push(ChunkRecord { iteration: 1, layer: 1, chosen_c: 8 });
+        let g = t.grid(2, 2);
+        assert_eq!(g[0][0], 1);
+        assert_eq!(g[1][1], 8);
+        assert_eq!(g[0][1], 0);
+    }
+
+    #[test]
+    fn mean_per_iteration_trend() {
+        let mut t = ChunkTrace::default();
+        for l in 0..4 {
+            t.push(ChunkRecord { iteration: 0, layer: l, chosen_c: 1 });
+            t.push(ChunkRecord { iteration: 1, layer: l, chosen_c: 4 });
+        }
+        assert_eq!(t.mean_per_iteration(2), vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn chunk_trace_json_roundtrip() {
+        let mut t = ChunkTrace::default();
+        t.push(ChunkRecord { iteration: 3, layer: 9, chosen_c: 2 });
+        let j = t.to_json();
+        let back = ChunkTrace::from_json(&j).unwrap();
+        assert_eq!(back.records, t.records);
+    }
+}

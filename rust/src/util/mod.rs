@@ -1,0 +1,55 @@
+//! Small shared utilities: deterministic RNG, statistics, formatting.
+//!
+//! The whole simulator is deterministic given a seed — every stochastic
+//! component draws from [`rng::Rng`] (splitmix64-seeded xoshiro256**),
+//! so table/figure benches are exactly reproducible run to run.
+
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count using binary units (GiB shown as "GB" to match
+/// the paper's tables).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    const MB: f64 = 1024.0 * 1024.0;
+    let b = bytes as f64;
+    if b >= GB {
+        format!("{:.1} GB", b / GB)
+    } else if b >= MB {
+        format!("{:.1} MB", b / MB)
+    } else {
+        format!("{} B", bytes)
+    }
+}
+
+/// Integer ceiling division, the `⌈a/b⌉` of paper Eq. 9.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0 MB");
+        assert_eq!(fmt_bytes(64 * 1024 * 1024 * 1024), "64.0 GB");
+    }
+
+    #[test]
+    fn ceil_div_matches_eq9() {
+        assert_eq!(ceil_div(10, 5), 2);
+        assert_eq!(ceil_div(11, 5), 3);
+        assert_eq!(ceil_div(0, 5), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ceil_div_zero_denominator_panics() {
+        ceil_div(1, 0);
+    }
+}

@@ -1,0 +1,391 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline registry carries no `rand` crate, so MemFine ships its
+//! own: splitmix64 for seeding, xoshiro256** as the main generator
+//! (Blackman–Vigna 2018), plus the distribution samplers the routing
+//! simulator needs (uniform, normal, gamma/Dirichlet, zipf,
+//! multinomial). All paths are deterministic given the seed.
+
+/// xoshiro256** PRNG seeded via splitmix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed deterministically; any u64 (including 0) is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (e.g. per layer, per iteration)
+    /// without correlating with the parent.
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        let mut sm = self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Lemire multiply-shift with rejection
+    /// of the biased low band.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let t = n.wrapping_neg() % n; // 2^64 mod n
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            if (m as u64) >= t {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang; shape > 0.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0);
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha) sample of dimension `alpha.len()` — the expert
+    /// popularity vector of the routing simulator. Smaller alpha ⇒ more
+    /// concentrated (imbalanced) distributions.
+    pub fn dirichlet(&mut self, alpha: &[f64]) -> Vec<f64> {
+        let mut draws: Vec<f64> = alpha.iter().map(|&a| self.gamma(a)).collect();
+        let sum: f64 = draws.iter().sum();
+        if sum <= 0.0 {
+            // pathological underflow: fall back to uniform
+            let n = alpha.len() as f64;
+            return vec![1.0 / n; alpha.len()];
+        }
+        for d in &mut draws {
+            *d /= sum;
+        }
+        draws
+    }
+
+    /// Multinomial: distribute `n` trials over `probs` (must sum ≈ 1).
+    /// O(n) sequential sampling via inverse CDF per trial would be slow
+    /// for n≈10⁵; uses the conditional-binomial decomposition instead.
+    pub fn multinomial(&mut self, n: u64, probs: &[f64]) -> Vec<u64> {
+        let mut out = vec![0u64; probs.len()];
+        let mut remaining = n;
+        let mut rest: f64 = 1.0;
+        for (i, &p) in probs.iter().enumerate() {
+            if remaining == 0 {
+                break;
+            }
+            if i + 1 == probs.len() || rest <= 0.0 {
+                out[i] = remaining;
+                remaining = 0;
+                break;
+            }
+            let q = (p / rest).clamp(0.0, 1.0);
+            let k = self.binomial(remaining, q);
+            out[i] = k;
+            remaining -= k;
+            rest -= p;
+        }
+        if remaining > 0 {
+            let last = out.len() - 1;
+            out[last] += remaining;
+        }
+        out
+    }
+
+    /// Binomial(n, p) — BTPE would be overkill; the simulator needs
+    /// n up to ~10⁶ with often-tiny p (multinomial tail), so the slow
+    /// paths must stay O(min(n, n·p)):
+    ///   * large variance → normal approximation,
+    ///   * small n → exact Bernoulli inversion,
+    ///   * large n, small mean → Poisson approximation (Knuth,
+    ///     O(mean) iterations).
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if p <= 0.0 || n == 0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        if p > 0.5 {
+            return n - self.binomial(n, 1.0 - p);
+        }
+        let nf = n as f64;
+        let var = nf * p * (1.0 - p);
+        if var > 30.0 {
+            let mean = nf * p;
+            let sd = var.sqrt();
+            let x = (mean + sd * self.normal() + 0.5).floor();
+            return x.clamp(0.0, nf) as u64;
+        }
+        if n <= 64 {
+            let mut k = 0u64;
+            for _ in 0..n {
+                if self.f64() < p {
+                    k += 1;
+                }
+            }
+            return k;
+        }
+        // n large, mean ≤ ~30: Poisson(n·p) via Knuth, clamped to n.
+        let l = (-nf * p).exp();
+        let mut k = 0u64;
+        let mut prod = self.f64();
+        while prod > l && k < n {
+            k += 1;
+            prod *= self.f64();
+        }
+        k.min(n)
+    }
+
+    /// Zipf-like rank sampler over [0, n) with exponent `s` (synthetic
+    /// corpus generator). Uses rejection-inversion (Hörmann).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        // simple inverse-CDF on precomputed-free harmonic approximation
+        debug_assert!(n >= 1);
+        let u = self.f64();
+        if (s - 1.0).abs() < 1e-9 {
+            let hn = (n as f64).ln();
+            return ((hn * u).exp() - 1.0).clamp(0.0, (n - 1) as f64) as u64;
+        }
+        let a = 1.0 - s;
+        let hn = ((n as f64).powf(a) - 1.0) / a;
+        let x = (1.0 + hn * u * a).powf(1.0 / a) - 1.0;
+        (x.clamp(0.0, (n - 1) as f64)) as u64
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_bounded_and_covers() {
+        let mut r = Rng::new(9);
+        let mut seen = [false; 7];
+        for _ in 0..10_000 {
+            seen[r.below(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(13);
+        for &shape in &[0.3, 1.0, 4.5] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(1.0),
+                "shape {shape} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(17);
+        let p = r.dirichlet(&[0.5; 16]);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!(p.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_is_peaky() {
+        let mut r = Rng::new(19);
+        // With alpha = 0.05 the max component should usually dominate.
+        let mut dominated = 0;
+        for _ in 0..50 {
+            let p = r.dirichlet(&[0.05; 8]);
+            let max = p.iter().cloned().fold(0.0, f64::max);
+            if max > 0.5 {
+                dominated += 1;
+            }
+        }
+        assert!(dominated > 25, "only {dominated}/50 peaky");
+    }
+
+    #[test]
+    fn multinomial_conserves_total() {
+        let mut r = Rng::new(23);
+        let probs = [0.1, 0.2, 0.3, 0.4];
+        for n in [0u64, 1, 10, 1000, 98765] {
+            let counts = r.multinomial(n, &probs);
+            assert_eq!(counts.iter().sum::<u64>(), n);
+        }
+    }
+
+    #[test]
+    fn multinomial_tracks_probs() {
+        let mut r = Rng::new(29);
+        let probs = [0.7, 0.2, 0.1];
+        let counts = r.multinomial(100_000, &probs);
+        assert!((counts[0] as f64 / 1e5 - 0.7).abs() < 0.02);
+    }
+
+    #[test]
+    fn binomial_edges() {
+        let mut r = Rng::new(31);
+        assert_eq!(r.binomial(100, 0.0), 0);
+        assert_eq!(r.binomial(100, 1.0), 100);
+        let k = r.binomial(100, 0.5);
+        assert!(k <= 100);
+    }
+
+    #[test]
+    fn zipf_prefers_low_ranks() {
+        let mut r = Rng::new(37);
+        let mut counts = [0u64; 16];
+        for _ in 0..20_000 {
+            counts[r.zipf(16, 1.2) as usize] += 1;
+        }
+        assert!(counts[0] > counts[8], "{counts:?}");
+        assert!(counts[1] > counts[12]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(41);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut parent = Rng::new(5);
+        let mut a = parent.fork(1);
+        let mut b = parent.fork(2);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

@@ -1,0 +1,183 @@
+//! Summary statistics used by traces, benches and the imbalance
+//! analyses (Fig. 2 reports per-layer min/mean/max; the benches add
+//! percentiles).
+
+/// Online + batch summary of a sample.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    values: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { values: Vec::new() }
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = f64>>(it: I) -> Self {
+        Summary { values: it.into_iter().collect() }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        (self.values.iter().map(|v| (v - m).powi(2)).sum::<f64>()
+            / (self.values.len() - 1) as f64)
+            .sqrt()
+    }
+
+    /// Linear-interpolated percentile, q in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = (q / 100.0) * (sorted.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = pos - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Coefficient of variation — the imbalance measure used in the
+    /// routing analyses (0 = perfectly balanced).
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            return 0.0;
+        }
+        self.std() / m
+    }
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets; values
+/// outside clamp to the edge buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins] }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        let bins = self.counts.len();
+        let t = ((v - self.lo) / (self.hi - self.lo) * bins as f64).floor();
+        let idx = (t.max(0.0) as usize).min(bins - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from_iter([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = Summary::from_iter([0.0, 10.0]);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn p50_of_odd_sample_is_median() {
+        let s = Summary::from_iter([9.0, 1.0, 5.0]);
+        assert_eq!(s.p50(), 5.0);
+    }
+
+    #[test]
+    fn std_of_constant_is_zero() {
+        let s = Summary::from_iter([3.0, 3.0, 3.0]);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    fn cv_measures_imbalance() {
+        let balanced = Summary::from_iter([10.0, 10.0, 10.0, 10.0]);
+        let skewed = Summary::from_iter([37.0, 1.0, 1.0, 1.0]);
+        assert!(skewed.cv() > balanced.cv() + 1.0);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn histogram_bins_and_clamps() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.add(0.5);
+        h.add(9.99);
+        h.add(-5.0); // clamps into bin 0
+        h.add(50.0); // clamps into bin 9
+        assert_eq!(h.counts()[0], 2);
+        assert_eq!(h.counts()[9], 2);
+        assert_eq!(h.total(), 4);
+    }
+}

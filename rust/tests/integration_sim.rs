@@ -1,0 +1,258 @@
+//! Cross-module integration + property tests for the simulation stack:
+//! routing → dispatch → chunking → memory → perf → simulator, using the
+//! crate's own property-testing harness (no proptest offline).
+
+use memfine::chunk::{split_chunks, Mact, RecomputeSchedule};
+use memfine::config::{model_i, model_ii, paper_parallel, paper_run, Method};
+use memfine::dispatch;
+use memfine::memory::{ActivationModel, StaticModel};
+use memfine::prop::{assert_prop, Gen, PairGen, U64Range};
+use memfine::router::{per_rank_from_experts, GatingSim};
+use memfine::sim::Simulator;
+use memfine::util::rng::Rng;
+
+/// Generator for random top-k assignments over a small EP group.
+struct AssignGen {
+    ranks: usize,
+    tokens: usize,
+    experts: u32,
+    top_k: usize,
+}
+
+impl Gen for AssignGen {
+    type Value = Vec<Vec<Vec<u32>>>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (0..self.ranks)
+            .map(|_| {
+                (0..self.tokens)
+                    .map(|_| {
+                        let mut picks = Vec::with_capacity(self.top_k);
+                        while picks.len() < self.top_k {
+                            let e = rng.below(self.experts as u64) as u32;
+                            if !picks.contains(&e) {
+                                picks.push(e);
+                            }
+                        }
+                        picks
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+fn small_parallel(ep: u64) -> memfine::config::ParallelConfig {
+    let mut p = paper_parallel();
+    p.ep = ep;
+    p
+}
+
+#[test]
+fn prop_dispatch_conserves_and_places_uniquely() {
+    let gen = AssignGen { ranks: 4, tokens: 24, experts: 16, top_k: 2 };
+    assert_prop(11, 40, &gen, |assign| {
+        let plan = dispatch::plan(&small_parallel(4), 16, assign, 24 * 2 * 4)
+            .map_err(|e| e.to_string())?;
+        let copies = 4 * 24 * 2;
+        if plan.placements.len() != copies {
+            return Err(format!("placements {} != {copies}", plan.placements.len()));
+        }
+        if plan.overflow != 0 {
+            return Err(format!("drop-free capacity overflowed: {}", plan.overflow));
+        }
+        // unique slots
+        let mut seen = std::collections::HashSet::new();
+        for p in &plan.placements {
+            let key = (p.dst_rank, p.local_expert, p.slot.unwrap());
+            if !seen.insert(key) {
+                return Err(format!("duplicate slot {key:?}"));
+            }
+        }
+        // received == column sums of send matrix == expert ownership
+        let recv = plan.received_per_rank();
+        if recv.iter().sum::<u64>() != copies as u64 {
+            return Err("received copies not conserved".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_combine_roundtrip_identity_top1() {
+    let gen = AssignGen { ranks: 4, tokens: 16, experts: 8, top_k: 1 };
+    assert_prop(13, 30, &gen, |assign| {
+        let plan = dispatch::plan(&small_parallel(4), 8, assign, 16 * 4)
+            .map_err(|e| e.to_string())?;
+        let out = dispatch::combine_scalar(
+            &plan,
+            &[16, 16, 16, 16],
+            |p| (p.route.src_rank as usize * 1000 + p.route.token as usize) as f64,
+            |_| 1.0,
+        );
+        for (src, tokens) in out.iter().enumerate() {
+            for (tok, &v) in tokens.iter().enumerate() {
+                if v != (src * 1000 + tok) as f64 {
+                    return Err(format!("roundtrip broke at ({src},{tok}): {v}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunk_split_conserves_tokens() {
+    let gen = PairGen(U64Range(1, 100_000), U64Range(1, 64));
+    assert_prop(17, 300, &gen, |&(tokens, c)| {
+        let chunks = split_chunks(tokens, c);
+        let total: u64 = chunks.iter().map(|ch| ch.len).sum();
+        if total != tokens {
+            return Err(format!("sum {total} != {tokens}"));
+        }
+        if chunks.iter().any(|ch| ch.len == 0) {
+            return Err("empty chunk".into());
+        }
+        // contiguity
+        let mut expect = 0;
+        for ch in &chunks {
+            if ch.start != expect {
+                return Err(format!("gap at chunk {}", ch.index));
+            }
+            expect += ch.len;
+        }
+        // balanced: max−min ≤ 1
+        let max = chunks.iter().map(|c| c.len).max().unwrap();
+        let min = chunks.iter().map(|c| c.len).min().unwrap();
+        if max - min > 1 {
+            return Err(format!("imbalanced split {min}..{max}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_recompute_schedule_valid_and_single_chunk_peak() {
+    let gen = PairGen(U64Range(1, 50_000), U64Range(1, 16));
+    assert_prop(19, 200, &gen, |&(tokens, c)| {
+        let s = RecomputeSchedule::build(tokens, c);
+        if !s.validate() {
+            return Err("invalid schedule".into());
+        }
+        let peak = s.peak_live_cost(|len| len);
+        let max_chunk = s.chunks.iter().map(|ch| ch.len).max().unwrap_or(0);
+        if peak != max_chunk {
+            return Err(format!("peak {peak} != max chunk {max_chunk}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mact_decision_respects_budget_when_feasible() {
+    let run = paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+    let mact = Mact::new(&run, vec![1, 2, 4, 8]);
+    let gen = PairGen(U64Range(0, 3), U64Range(1, 1_048_576));
+    assert_prop(23, 400, &gen, |&(stage, s_recv)| {
+        let d = mact.decide(stage, s_recv);
+        if d.feasible {
+            let per_chunk = s_recv.div_ceil(d.chosen_c);
+            if per_chunk > d.s_prime_max {
+                return Err(format!(
+                    "feasible decision violates Eq.8: {per_chunk} > {}",
+                    d.s_prime_max
+                ));
+            }
+        }
+        // chosen bin must be a configured bin
+        if ![1, 2, 4, 8].contains(&d.chosen_c) {
+            return Err(format!("non-bin chunk {}", d.chosen_c));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memory_model_monotone_in_s_recv_and_chunks() {
+    let run = paper_run(model_i(), Method::FullRecompute);
+    let act = ActivationModel::new(&run);
+    let gen = PairGen(U64Range(0, 1_000_000), U64Range(1, 32));
+    assert_prop(29, 300, &gen, |&(s_recv, c)| {
+        let a = act.peak_bytes_chunked(1, s_recv, c, true);
+        let b = act.peak_bytes_chunked(1, s_recv + 10_000, c, true);
+        if b < a {
+            return Err("not monotone in s'".into());
+        }
+        let d = act.peak_bytes_chunked(1, s_recv, c + 1, true);
+        if d > a {
+            return Err(format!("more chunks increased memory: {d} > {a}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routing_conservation_any_seed() {
+    let gen = PairGen(U64Range(0, 1000), U64Range(3, 15));
+    assert_prop(31, 25, &gen, |&(seed, layer)| {
+        let sim = GatingSim::new(model_i(), paper_parallel(), seed);
+        let r = sim.route(seed % 25, layer);
+        if r.per_expert.iter().sum::<u64>() != sim.total_copies() {
+            return Err("per-expert not conserved".into());
+        }
+        if r.per_rank.iter().sum::<u64>() != sim.total_copies() {
+            return Err("per-rank not conserved".into());
+        }
+        if per_rank_from_experts(&r.per_expert, 32) != r.per_rank {
+            return Err("per-rank mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulator_end_to_end_table4_invariants() {
+    // The three Table-4 relations must hold at arbitrary seeds, not
+    // just the calibrated one.
+    for seed in [3u64, 7, 42] {
+        let mk = |model: memfine::config::ModelConfig, m: Method| {
+            let mut run = paper_run(model, m);
+            run.seed = seed;
+            run.iterations = 20;
+            Simulator::new(run).unwrap().run_all()
+        };
+        let m1 = mk(model_i(), Method::FullRecompute);
+        let m2 = mk(model_i(), Method::FixedChunk(8));
+        let m3 = mk(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        assert!(m2.trained(), "seed {seed}: m2 must train");
+        assert!(m3.trained(), "seed {seed}: m3 must train");
+        assert!(m2.peak_act_bytes < m3.peak_act_bytes);
+        assert!(m3.peak_act_bytes < m1.peak_act_bytes);
+        // Model II method 1 trains
+        let m1_ii = mk(model_ii(), Method::FullRecompute);
+        assert!(m1_ii.trained(), "seed {seed}: model II m1 must train");
+    }
+}
+
+#[test]
+fn simulator_static_matches_memory_model() {
+    let run = paper_run(model_i(), Method::FullRecompute);
+    let sta = StaticModel::new(&run);
+    let mut run2 = run.clone();
+    run2.iterations = 1;
+    let out = Simulator::new(run2).unwrap().run_all();
+    assert_eq!(out.static_bytes, sta.max_bytes());
+}
+
+#[test]
+fn mact_bins_cover_fixed_methods() {
+    // A MACT run restricted to a single bin must behave like the fixed
+    // method with that bin (same chunk decisions everywhere).
+    let mut run_fixed = paper_run(model_i(), Method::FixedChunk(8));
+    run_fixed.iterations = 5;
+    let mut run_mact = paper_run(model_i(), Method::Mact(vec![8]));
+    run_mact.iterations = 5;
+    let f = Simulator::new(run_fixed).unwrap().run_all();
+    let m = Simulator::new(run_mact).unwrap().run_all();
+    assert_eq!(f.chunks.records, m.chunks.records);
+    assert_eq!(f.peak_act_bytes, m.peak_act_bytes);
+}
