@@ -273,6 +273,90 @@ impl Method {
             ),
         }
     }
+
+    /// Parse the CLI/sweep shorthand: `1` (full recompute), `2` or
+    /// `2:c` (fixed chunk, default c=8), `3` or `3:b1.b2...` (MACT,
+    /// default bins 1,2,4,8 — bins dot-separated so method lists stay
+    /// comma-separated).
+    pub fn parse(spec: &str) -> Result<Method> {
+        let (head, arg) = match spec.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (spec, None),
+        };
+        match head.trim() {
+            "1" => {
+                if arg.is_some() {
+                    return Err(Error::config(format!(
+                        "method 1 takes no argument (got '{spec}'; did you mean 2:...?)"
+                    )));
+                }
+                Ok(Method::FullRecompute)
+            }
+            "2" => {
+                let c = match arg {
+                    None => 8,
+                    Some(a) => a.trim().parse().map_err(|_| {
+                        Error::config(format!("bad fixed-chunk spec '{spec}'"))
+                    })?,
+                };
+                Ok(Method::FixedChunk(c))
+            }
+            "3" => {
+                let bins = match arg {
+                    None => vec![1, 2, 4, 8],
+                    Some(a) => a
+                        .split('.')
+                        .map(|b| {
+                            b.trim().parse().map_err(|_| {
+                                Error::config(format!("bad MACT bins in '{spec}'"))
+                            })
+                        })
+                        .collect::<Result<Vec<u64>>>()?,
+                };
+                Ok(Method::Mact(bins))
+            }
+            other => Err(Error::config(format!(
+                "unknown method '{other}' (expected 1, 2[:c] or 3[:b.b...])"
+            ))),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            Method::FullRecompute => json::obj(vec![("kind", json::s("full_recompute"))]),
+            Method::FixedChunk(c) => json::obj(vec![
+                ("kind", json::s("fixed_chunk")),
+                ("chunk", json::num(*c as f64)),
+            ]),
+            Method::Mact(bins) => json::obj(vec![
+                ("kind", json::s("mact")),
+                (
+                    "bins",
+                    json::arr(bins.iter().map(|&b| json::num(b as f64)).collect()),
+                ),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        match v.req_str("kind")? {
+            "full_recompute" => Ok(Method::FullRecompute),
+            "fixed_chunk" => Ok(Method::FixedChunk(v.req_u64("chunk")?)),
+            "mact" => {
+                let bins = v
+                    .get("bins")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| Error::config("mact method missing bins"))?
+                    .iter()
+                    .map(|b| {
+                        b.as_u64().ok_or_else(|| Error::config("bad mact bin"))
+                    })
+                    .collect::<Result<Vec<u64>>>()?;
+                Ok(Method::Mact(bins))
+            }
+            other => Err(Error::config(format!("unknown method kind '{other}'"))),
+        }
+    }
 }
 
 /// Hardware + method envelope for a training run.
@@ -394,6 +478,177 @@ pub fn paper_run(model: ModelConfig, method: Method) -> RunConfig {
         seed: 7,
     }
 }
+
+/// Look up a Table-3 model preset by its CLI/sweep name.
+pub fn model_by_name(name: &str) -> Result<ModelConfig> {
+    match name.trim().to_ascii_lowercase().as_str() {
+        "i" | "1" => Ok(model_i()),
+        "ii" | "2" => Ok(model_ii()),
+        other => Err(Error::config(format!(
+            "unknown model '{other}' (expected i or ii)"
+        ))),
+    }
+}
+
+/// Grid specification for the scenario sweep engine
+/// ([`crate::sweep`]): the cross product of models × methods × seeds,
+/// each simulated for `iterations` iterations under the paper's
+/// hardware envelope. This is the config surface every table/figure
+/// sweep and future scaling/ablation study is expressed in.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepConfig {
+    /// Table-3 model preset names ("i", "ii").
+    pub models: Vec<String>,
+    /// MemFine methods to compare on identical routing traces.
+    pub methods: Vec<Method>,
+    /// RNG seeds; each (model, method) cell runs once per seed on the
+    /// routing trace that seed determines, so methods are compared
+    /// *paired* per seed exactly as the paper's tables are.
+    pub seeds: Vec<u64>,
+    /// Simulated training iterations per scenario.
+    pub iterations: u64,
+}
+
+impl SweepConfig {
+    /// Total scenarios in the grid.
+    pub fn scenario_count(&self) -> usize {
+        self.models.len() * self.methods.len() * self.seeds.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.models.is_empty() || self.methods.is_empty() || self.seeds.is_empty() {
+            return Err(Error::config(
+                "sweep grid needs at least one model, method and seed",
+            ));
+        }
+        if self.iterations == 0 {
+            return Err(Error::config("sweep iterations must be positive"));
+        }
+        if let Some(&s) = self.seeds.iter().find(|&&s| s > MAX_JSON_SEED) {
+            return Err(Error::config(format!(
+                "seed {s} exceeds 2^53 and would not round-trip the JSON artifact"
+            )));
+        }
+        // Duplicate axis entries would double-count scenario rows into
+        // one aggregation cell (cells are keyed by model × method
+        // name), so every axis must be duplicate-free. Models dedup on
+        // the *resolved* preset, catching aliases ("i" vs "1").
+        let mut seen_models: Vec<ModelConfig> = Vec::new();
+        for m in &self.models {
+            let resolved = model_by_name(m)?;
+            if seen_models.contains(&resolved) {
+                return Err(Error::config(format!("duplicate sweep model '{m}'")));
+            }
+            seen_models.push(resolved);
+        }
+        let mut seen_methods = std::collections::BTreeSet::new();
+        for method in &self.methods {
+            // reuse RunConfig's method validation by probing a run
+            let run = paper_run(model_i(), method.clone());
+            run.validate()?;
+            if !seen_methods.insert(method.name()) {
+                return Err(Error::config(format!(
+                    "duplicate sweep method '{}'",
+                    method.name()
+                )));
+            }
+        }
+        let mut seen_seeds = std::collections::BTreeSet::new();
+        for &s in &self.seeds {
+            if !seen_seeds.insert(s) {
+                return Err(Error::config(format!("duplicate sweep seed {s}")));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            (
+                "models",
+                json::arr(self.models.iter().map(|m| json::s(m.clone())).collect()),
+            ),
+            (
+                "methods",
+                json::arr(self.methods.iter().map(Method::to_json).collect()),
+            ),
+            (
+                "seeds",
+                json::arr(self.seeds.iter().map(|&s| json::num(s as f64)).collect()),
+            ),
+            ("iterations", json::num(self.iterations as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let models = v
+            .get("models")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::config("sweep missing models"))?
+            .iter()
+            .map(|m| {
+                m.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::config("bad model name"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let methods = v
+            .get("methods")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::config("sweep missing methods"))?
+            .iter()
+            .map(Method::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let seeds = v
+            .get("seeds")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| Error::config("sweep missing seeds"))?
+            .iter()
+            .map(|s| s.as_u64().ok_or_else(|| Error::config("bad seed")))
+            .collect::<Result<Vec<_>>>()?;
+        let cfg = SweepConfig {
+            models,
+            methods,
+            seeds,
+            iterations: v.req_u64("iterations")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The paper's default comparison grid: Models I/II × Methods
+    /// 1/2/3 × `n_seeds` derived seeds.
+    pub fn paper_grid(base_seed: u64, n_seeds: usize, iterations: u64) -> Self {
+        SweepConfig {
+            models: vec!["i".into(), "ii".into()],
+            methods: vec![
+                Method::FullRecompute,
+                Method::FixedChunk(8),
+                Method::Mact(vec![1, 2, 4, 8]),
+            ],
+            seeds: derive_seeds(base_seed, n_seeds),
+            iterations,
+        }
+    }
+}
+
+/// Derive `n` independent per-scenario seeds from a base seed
+/// (splitmix64 walk via the crate RNG). Scenario results depend only
+/// on these values — never on worker count or scheduling order — so a
+/// sweep is bit-reproducible from `(base_seed, n)`. Seeds are clamped
+/// to 53 bits so they survive the JSON artifact round-trip exactly
+/// (the in-tree JSON stores numbers as f64; see [`MAX_JSON_SEED`])
+/// while keeping birthday collisions negligible even for
+/// million-scenario grids (the duplicate-seed validation would
+/// otherwise reject large derived sets).
+pub fn derive_seeds(base_seed: u64, n: usize) -> Vec<u64> {
+    let mut rng = crate::util::rng::Rng::new(base_seed);
+    (0..n).map(|_| rng.next_u64() >> 11).collect()
+}
+
+/// Largest seed value that round-trips losslessly through the JSON
+/// artifact (f64 integer precision, 2^53).
+pub const MAX_JSON_SEED: u64 = 1 << 53;
 
 /// Config matching the AOT-exported mini model (python compile.model.E2E)
 /// used by the real-execution coordinator.
@@ -532,5 +787,105 @@ mod tests {
             m.expert_params_per_rank(8),
             8 * 3 * 7168 * 2048
         );
+    }
+
+    #[test]
+    fn method_parse_shorthand() {
+        assert_eq!(Method::parse("1").unwrap(), Method::FullRecompute);
+        assert_eq!(Method::parse("2").unwrap(), Method::FixedChunk(8));
+        assert_eq!(Method::parse("2:4").unwrap(), Method::FixedChunk(4));
+        assert_eq!(Method::parse("3").unwrap(), Method::Mact(vec![1, 2, 4, 8]));
+        assert_eq!(Method::parse("3:1.4").unwrap(), Method::Mact(vec![1, 4]));
+        assert!(Method::parse("9").is_err());
+        assert!(Method::parse("2:x").is_err());
+        // a likely typo for 2:8 must not silently run full recompute
+        assert!(Method::parse("1:8").is_err());
+    }
+
+    #[test]
+    fn method_json_roundtrip() {
+        for m in [
+            Method::FullRecompute,
+            Method::FixedChunk(4),
+            Method::Mact(vec![1, 2, 4, 8]),
+        ] {
+            let back = Method::from_json(&Method::to_json(&m)).unwrap();
+            assert_eq!(m, back);
+        }
+    }
+
+    #[test]
+    fn model_by_name_resolves_presets() {
+        assert_eq!(model_by_name("i").unwrap(), model_i());
+        assert_eq!(model_by_name("II").unwrap(), model_ii());
+        assert!(model_by_name("xxl").is_err());
+    }
+
+    #[test]
+    fn sweep_config_roundtrip_and_counts() {
+        let cfg = SweepConfig::paper_grid(7, 4, 10);
+        assert_eq!(cfg.scenario_count(), 2 * 3 * 4);
+        cfg.validate().unwrap();
+        let back =
+            SweepConfig::from_json(&crate::json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn sweep_config_rejects_empty_axes() {
+        let mut cfg = SweepConfig::paper_grid(7, 2, 10);
+        cfg.seeds.clear();
+        assert!(cfg.validate().is_err());
+        let mut cfg = SweepConfig::paper_grid(7, 2, 10);
+        cfg.iterations = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = SweepConfig::paper_grid(7, 2, 10);
+        cfg.models.push("bogus".into());
+        assert!(cfg.validate().is_err());
+        let mut cfg = SweepConfig::paper_grid(7, 2, 10);
+        cfg.methods.push(Method::Mact(vec![]));
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn derived_seeds_deterministic_and_distinct() {
+        let a = derive_seeds(7, 8);
+        let b = derive_seeds(7, 8);
+        assert_eq!(a, b);
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 8);
+        assert_ne!(derive_seeds(8, 8), a);
+        // every derived seed survives the JSON number representation
+        assert!(a.iter().all(|&s| s <= MAX_JSON_SEED));
+    }
+
+    #[test]
+    fn sweep_config_rejects_unrepresentable_seed() {
+        let mut cfg = SweepConfig::paper_grid(7, 2, 10);
+        cfg.seeds.push(u64::MAX);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn sweep_config_rejects_duplicate_axes() {
+        // duplicate method (same resolved name via different spellings)
+        let mut cfg = SweepConfig::paper_grid(7, 2, 10);
+        cfg.methods.push(Method::FixedChunk(8));
+        assert!(cfg.validate().is_err());
+        // duplicate model, case-insensitively
+        let mut cfg = SweepConfig::paper_grid(7, 2, 10);
+        cfg.models.push("I".into());
+        assert!(cfg.validate().is_err());
+        // duplicate model through an alias spelling ("1" resolves to "i")
+        let mut cfg = SweepConfig::paper_grid(7, 2, 10);
+        cfg.models.push("1".into());
+        assert!(cfg.validate().is_err());
+        // duplicate seed
+        let mut cfg = SweepConfig::paper_grid(7, 2, 10);
+        cfg.seeds.push(cfg.seeds[0]);
+        assert!(cfg.validate().is_err());
     }
 }

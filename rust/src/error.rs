@@ -1,24 +1,25 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — the offline registry carries
+//! no `thiserror`, so the derive is spelled out (same messages).
+
+use std::fmt;
 
 /// Unified error for every MemFine subsystem.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration rejected by validation.
-    #[error("config error: {0}")]
     Config(String),
 
     /// JSON parse/serialise failure (see [`crate::json`]).
-    #[error("json error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// CLI argument error.
-    #[error("cli error: {0}")]
     Cli(String),
 
     /// A simulated or real device ran out of memory. Carries the
     /// requesting device and the attempted allocation so OOM tests can
     /// assert on the exact failure site.
-    #[error("OOM on device {device}: requested {requested} B, used {used} B of {capacity} B")]
     Oom {
         device: usize,
         requested: u64,
@@ -27,20 +28,52 @@ pub enum Error {
     },
 
     /// Violation of a scheduling invariant (pipeline, dispatch, chunk).
-    #[error("schedule error: {0}")]
     Schedule(String),
 
     /// PJRT runtime failure (artifact load, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Underlying I/O failure.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json error at byte {offset}: {msg}")
+            }
+            Error::Cli(msg) => write!(f, "cli error: {msg}"),
+            Error::Oom { device, requested, used, capacity } => write!(
+                f,
+                "OOM on device {device}: requested {requested} B, \
+                 used {used} B of {capacity} B"
+            ),
+            Error::Schedule(msg) => write!(f, "schedule error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -77,5 +110,15 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn io_error_display_is_transparent_and_sourced() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert_eq!(e.to_string(), "gone");
+        assert!(e.source().is_some());
+        assert!(Error::config("x").source().is_none());
     }
 }

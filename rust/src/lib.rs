@@ -18,9 +18,11 @@
 //!   dispatch planning ([`dispatch`]), pipeline scheduling
 //!   ([`pipeline`]), a simulated cluster ([`cluster`]), collective
 //!   cost models ([`collective`]), a performance model ([`perf`]), a
-//!   whole-training-run simulator ([`sim`]), and a real-execution
-//!   coordinator ([`coordinator`]) that drives the AOT artifacts
-//!   through the PJRT runtime ([`runtime`]).
+//!   whole-training-run simulator ([`sim`]), a deterministic parallel
+//!   scenario-sweep engine ([`sweep`]) that fans method × config ×
+//!   seed grids over a worker pool, and a real-execution coordinator
+//!   ([`coordinator`]) that drives the AOT artifacts through the PJRT
+//!   runtime ([`runtime`], behind the `pjrt` feature).
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! JAX entry points once, and this crate is self-contained afterwards.
@@ -49,6 +51,7 @@ pub mod prop;
 pub mod router;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod trace;
 pub mod util;
 

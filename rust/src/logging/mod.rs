@@ -1,51 +1,51 @@
-//! Minimal `log::Log` backend (no `env_logger` offline).
+//! Minimal leveled stderr logger (the offline registry carries no
+//! `log`/`env_logger`, so the facade is in-tree).
 //!
-//! Level comes from `MEMFINE_LOG` (error|warn|info|debug|trace),
+//! Level comes from `MEMFINE_LOG` (off|error|warn|info|debug|trace),
 //! defaulting to `info`. Messages go to stderr with a monotonic
 //! timestamp so example/bench output on stdout stays machine-parsable.
 
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
-use log::{Level, LevelFilter, Metadata, Record};
-
-struct Logger {
-    start: Instant,
+/// Log severity, ordered so that `Error < Warn < … < Trace` and a
+/// message is emitted when `level <= max_level`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-static LOGGER: OnceLock<Logger> = OnceLock::new();
-
-impl log::Log for Logger {
-    fn enabled(&self, _metadata: &Metadata) -> bool {
-        true
-    }
-
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            let t = self.start.elapsed().as_secs_f64();
-            let lvl = match record.level() {
-                Level::Error => "ERROR",
-                Level::Warn => "WARN ",
-                Level::Info => "INFO ",
-                Level::Debug => "DEBUG",
-                Level::Trace => "TRACE",
-            };
-            eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Off => "OFF  ",
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
     }
-
-    fn flush(&self) {}
 }
 
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
+
 /// Parse a level name, case-insensitive; unknown names yield None.
-pub fn parse_level(s: &str) -> Option<LevelFilter> {
+pub fn parse_level(s: &str) -> Option<Level> {
     match s.to_ascii_lowercase().as_str() {
-        "off" => Some(LevelFilter::Off),
-        "error" => Some(LevelFilter::Error),
-        "warn" => Some(LevelFilter::Warn),
-        "info" => Some(LevelFilter::Info),
-        "debug" => Some(LevelFilter::Debug),
-        "trace" => Some(LevelFilter::Trace),
+        "off" => Some(Level::Off),
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
         _ => None,
     }
 }
@@ -55,10 +55,48 @@ pub fn init() {
     let level = std::env::var("MEMFINE_LOG")
         .ok()
         .and_then(|s| parse_level(&s))
-        .unwrap_or(LevelFilter::Info);
-    let logger = LOGGER.get_or_init(|| Logger { start: Instant::now() });
-    let _ = log::set_logger(logger);
-    log::set_max_level(level);
+        .unwrap_or(Level::Info);
+    START.get_or_init(Instant::now);
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current maximum level.
+pub fn max_level() -> Level {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Off,
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        4 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Whether a message at `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    level != Level::Off && level <= max_level()
+}
+
+/// Emit one message (used by the level helpers below).
+pub fn log(level: Level, target: &str, msg: impl std::fmt::Display) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {target}] {msg}", level.tag());
+}
+
+pub fn error(target: &str, msg: impl std::fmt::Display) {
+    log(Level::Error, target, msg);
+}
+pub fn warn(target: &str, msg: impl std::fmt::Display) {
+    log(Level::Warn, target, msg);
+}
+pub fn info(target: &str, msg: impl std::fmt::Display) {
+    log(Level::Info, target, msg);
+}
+pub fn debug(target: &str, msg: impl std::fmt::Display) {
+    log(Level::Debug, target, msg);
 }
 
 #[cfg(test)]
@@ -67,15 +105,28 @@ mod tests {
 
     #[test]
     fn parse_level_names() {
-        assert_eq!(parse_level("info"), Some(LevelFilter::Info));
-        assert_eq!(parse_level("TRACE"), Some(LevelFilter::Trace));
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("TRACE"), Some(Level::Trace));
         assert_eq!(parse_level("bogus"), None);
+    }
+
+    #[test]
+    fn level_ordering_gates_messages() {
+        assert!(Level::Error < Level::Trace);
+        init();
+        // default level is info unless MEMFINE_LOG overrides; debug and
+        // trace stay quiet at info.
+        if max_level() == Level::Info {
+            assert!(enabled(Level::Warn));
+            assert!(!enabled(Level::Debug));
+        }
+        assert!(!enabled(Level::Off));
     }
 
     #[test]
     fn init_is_idempotent() {
         init();
         init();
-        log::info!("logger smoke test");
+        info("logging::tests", "logger smoke test");
     }
 }

@@ -5,13 +5,17 @@
 //! ```text
 //! memfine plan    [--model i|ii]             memory model walkthrough (Eq. 1–3, 8)
 //! memfine simulate [--model i|ii] [--method 1|2|3] [--iters N]
+//! memfine sweep   [--models i,ii] [--methods 1,2,3] [--seeds N|a,b,...]
+//!                 [--workers N] [--out FILE]  parallel scenario grid
 //! memfine repro   table4|fig2|fig4|fig5      regenerate a paper artifact
 //! memfine train   [--steps N] [--artifacts DIR]  E2E mini-model training
 //! memfine coord   [--policy mact|fixed] [--budget-mb N]  real EP layer pass
 //! ```
 
 use memfine::cli::{usage, Args, OptSpec};
-use memfine::config::{model_i, model_ii, paper_run, Method, ModelConfig};
+use memfine::config::{
+    derive_seeds, model_i, model_ii, paper_run, Method, ModelConfig, SweepConfig,
+};
 use memfine::coordinator::ep::{ChunkPolicy, EpCoordinator};
 use memfine::coordinator::train::TrainDriver;
 use memfine::memory::{ActivationModel, StaticModel};
@@ -21,7 +25,8 @@ use memfine::util::fmt_bytes;
 
 const VALUE_OPTS: &[&str] = &[
     "model", "method", "iters", "seed", "steps", "artifacts", "policy",
-    "budget-mb", "bins", "chunk",
+    "budget-mb", "bins", "chunk", "models", "methods", "seeds", "workers",
+    "out",
 ];
 
 fn main() {
@@ -42,6 +47,7 @@ fn main() {
     let result = match cmd.as_str() {
         "plan" => cmd_plan(&parsed),
         "simulate" => cmd_simulate(&parsed),
+        "sweep" => cmd_sweep(&parsed),
         "repro" => cmd_repro(&parsed),
         "train" => cmd_train(&parsed),
         "coord" => cmd_coord(&parsed),
@@ -66,6 +72,7 @@ fn print_usage() {
             &[
                 ("plan", "memory model walkthrough (Eq. 1-3, Eq. 8)"),
                 ("simulate", "simulate a training run (methods 1/2/3)"),
+                ("sweep", "parallel scenario grid: models x methods x seeds"),
                 ("repro", "regenerate a paper artifact: table4|fig2|fig4|fig5"),
                 ("train", "end-to-end mini-model training via PJRT"),
                 ("coord", "real EP coordinator layer pass"),
@@ -77,6 +84,11 @@ fn print_usage() {
                 OptSpec { name: "iters", help: "iterations to simulate", takes_value: true, default: Some("25") },
                 OptSpec { name: "steps", help: "training steps (train)", takes_value: true, default: Some("50") },
                 OptSpec { name: "seed", help: "rng seed", takes_value: true, default: Some("7") },
+                OptSpec { name: "models", help: "sweep models, comma-separated (i,ii)", takes_value: true, default: Some("i,ii") },
+                OptSpec { name: "methods", help: "sweep methods: 1 | 2[:c] | 3[:b.b...]", takes_value: true, default: Some("1,2,3") },
+                OptSpec { name: "seeds", help: "sweep seeds: a count (derived from --seed) or a,b,... list (trailing comma forces list)", takes_value: true, default: Some("4") },
+                OptSpec { name: "workers", help: "sweep worker threads (0 = all cores)", takes_value: true, default: Some("0") },
+                OptSpec { name: "out", help: "sweep JSON output path (- = stdout only)", takes_value: true, default: Some("-") },
                 OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: Some("artifacts") },
                 OptSpec { name: "policy", help: "coord policy: mact or fixed", takes_value: true, default: Some("mact") },
                 OptSpec { name: "budget-mb", help: "coord per-rank memory budget", takes_value: true, default: Some("48") },
@@ -158,6 +170,72 @@ fn cmd_simulate(args: &Args) -> memfine::Result<()> {
             it.tgs,
             if it.oom { "  ** OOM **" } else { "" }
         );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> memfine::Result<()> {
+    let models: Vec<String> = args
+        .get_or("models", "i,ii")
+        .split(',')
+        .map(|m| m.trim().to_string())
+        .filter(|m| !m.is_empty())
+        .collect();
+    let methods = args
+        .get_or("methods", "1,2,3")
+        .split(',')
+        .map(Method::parse)
+        .collect::<memfine::Result<Vec<Method>>>()?;
+    // --seeds takes either a count (derived from --seed) or an
+    // explicit comma-separated list; a trailing comma forces list
+    // mode, so a single literal seed is expressible as `--seeds 42,`.
+    let seeds_spec = args.get_or("seeds", "4");
+    let seeds = if seeds_spec.contains(',') {
+        seeds_spec
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                p.parse().map_err(|_| {
+                    memfine::Error::Cli(format!("--seeds list has bad entry '{p}'"))
+                })
+            })
+            .collect::<memfine::Result<Vec<u64>>>()?
+    } else {
+        let n: usize = seeds_spec.trim().parse().map_err(|_| {
+            memfine::Error::Cli(format!("--seeds expects a count or list, got '{seeds_spec}'"))
+        })?;
+        derive_seeds(args.get_u64("seed", 7)?, n)
+    };
+    let cfg = SweepConfig {
+        models,
+        methods,
+        seeds,
+        iterations: args.get_u64("iters", 25)?,
+    };
+    let requested = args.get_u64("workers", 0)? as usize;
+    let workers = if requested == 0 {
+        memfine::sweep::default_workers(cfg.scenario_count())
+    } else {
+        requested
+    };
+    eprintln!(
+        "sweep: {} scenarios on {} workers",
+        cfg.scenario_count(),
+        workers
+    );
+    let report = memfine::sweep::run_sweep(&cfg, workers)?;
+    // Human-readable table goes to stderr so stdout carries only the
+    // JSON artifact — `memfine sweep | jq .` and `> sweep.json` both
+    // see a clean, parseable document.
+    eprint!("{}", report.render_table());
+    let json = report.to_json().to_string_pretty();
+    match args.get_or("out", "-").as_str() {
+        "-" => println!("{json}"),
+        path => {
+            std::fs::write(path, format!("{json}\n"))?;
+            eprintln!("report written to {path}");
+        }
     }
     Ok(())
 }

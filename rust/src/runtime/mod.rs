@@ -2,11 +2,21 @@
 //! the rust hot path. Python never runs here — `make artifacts` is the
 //! only compile-path step.
 //!
-//! Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `client.compile` → `execute`. The interchange format is HLO *text*
-//! because jax ≥ 0.5 emits 64-bit instruction ids that this XLA
+//! The execution backend wraps the `xla` crate (xla_extension 0.5.1,
+//! CPU plugin): `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `client.compile` → `execute`. The interchange format is HLO
+//! *text* because jax ≥ 0.5 emits 64-bit instruction ids that this XLA
 //! rejects in proto form (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate is not available in the offline registry, so the
+//! whole execution path is gated behind the `pjrt` cargo feature;
+//! enabling it requires adding an `xla` path dependency to
+//! `Cargo.toml` in an environment that has the XLA toolchain (see the
+//! feature's comment there). Without the feature, manifest loading
+//! and all metadata stay fully functional and
+//! [`ArtifactStore::execute`] returns `Error::Runtime` — callers
+//! (coordinator, train driver, tests) degrade gracefully exactly as
+//! they do when `artifacts/` is absent.
 //!
 //! [`ArtifactStore`] reads `artifacts/manifest.json` (via the crate's
 //! own JSON parser), exposes typed entry metadata, and memoises
@@ -16,6 +26,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
@@ -76,7 +87,9 @@ pub struct ArtifactStore {
     pub config: Value,
     /// The full manifest root (coordinator block, kernel_perf, ...).
     pub manifest: Value,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
@@ -146,6 +159,7 @@ impl ArtifactStore {
             }
             ParamLayout { names, shapes }
         };
+        #[cfg(feature = "pjrt")]
         let client = xla::PjRtClient::cpu()
             .map_err(|e| Error::runtime(format!("PJRT CPU client: {e:?}")))?;
         Ok(ArtifactStore {
@@ -155,11 +169,14 @@ impl ArtifactStore {
             param_layout,
             config: manifest.get("config").cloned().unwrap_or(Value::Null),
             manifest,
+            #[cfg(feature = "pjrt")]
             client,
+            #[cfg(feature = "pjrt")]
             compiled: Mutex::new(HashMap::new()),
         })
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }
@@ -182,6 +199,7 @@ impl ArtifactStore {
     }
 
     /// Compile (or fetch memoised) executable for `name`.
+    #[cfg(feature = "pjrt")]
     pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         {
             let cache = self.compiled.lock().unwrap();
@@ -214,6 +232,7 @@ impl ArtifactStore {
     /// Execute `name` on f32/i32 host buffers, validating shapes against
     /// the manifest. Returns the flattened f32 outputs (i32 outputs are
     /// converted losslessly for ids ≤ 2^24; the router indices fit).
+    #[cfg(feature = "pjrt")]
     pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let entry = self
             .entries
@@ -262,6 +281,21 @@ impl ArtifactStore {
             .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
             .collect()
     }
+
+    /// Stub when the crate is built without the `pjrt` feature: the
+    /// manifest metadata above stays available, but execution is
+    /// impossible — callers see the same `Error::Runtime` degradation
+    /// path they use when artifacts are missing.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute(&self, name: &str, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if !self.entries.contains_key(name) {
+            return Err(Error::artifact(format!("no artifact entry '{name}'")));
+        }
+        Err(Error::runtime(format!(
+            "cannot execute '{name}': built without the `pjrt` feature \
+             (no XLA backend in this environment)"
+        )))
+    }
 }
 
 /// A host-side tensor: f32 or i32 flat buffer + logical shape.
@@ -301,6 +335,7 @@ impl HostTensor {
         Ok(v[0])
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
         let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -314,6 +349,7 @@ impl HostTensor {
             .map_err(|e| Error::runtime(format!("reshape to {shape:?}: {e:?}")))
     }
 
+    #[cfg(feature = "pjrt")]
     fn from_literal(lit: xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
         match spec.dtype.as_str() {
             "i32" => Ok(HostTensor::I32(lit.to_vec::<i32>().map_err(|e| {

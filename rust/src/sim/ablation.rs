@@ -103,9 +103,7 @@ pub fn capacity_factor_drops(
 
 /// Convenience: run one method end-to-end (used by the ablation bench).
 pub fn run_method(base: &RunConfig, method: Method) -> Result<RunOutcome> {
-    let mut run = base.clone();
-    run.method = method;
-    Ok(Simulator::new(run)?.run_all())
+    super::run_scenario(base, method, base.seed)
 }
 
 #[cfg(test)]

@@ -73,6 +73,20 @@ impl RunOutcome {
     }
 }
 
+/// Run one scenario as a pure function of its inputs: clone the base
+/// envelope, substitute the method and seed, simulate. No shared
+/// mutable state — the [`Simulator`] holds only per-run models and
+/// every stochastic draw forks a fresh RNG from `(seed, iteration,
+/// layer)` — so calls are bit-reproducible and safe to execute from
+/// any thread in any order. This is the unit of work of the parallel
+/// sweep engine ([`crate::sweep`]).
+pub fn run_scenario(base: &RunConfig, method: Method, seed: u64) -> crate::Result<RunOutcome> {
+    let mut run = base.clone();
+    run.method = method;
+    run.seed = seed;
+    Ok(Simulator::new(run)?.run_all())
+}
+
 /// The simulator.
 pub struct Simulator {
     pub run: RunConfig,
@@ -390,6 +404,27 @@ mod tests {
         assert_eq!(a.peak_act_bytes, b.peak_act_bytes);
         assert_eq!(a.avg_tgs, b.avg_tgs);
         assert_eq!(a.chunks.records, b.chunks.records);
+    }
+
+    #[test]
+    fn run_scenario_pure_and_matches_simulator() {
+        let mut base = paper_run(model_i(), Method::FullRecompute);
+        base.iterations = 8;
+        let a = run_scenario(&base, Method::Mact(vec![1, 2, 4, 8]), 11).unwrap();
+        let b = run_scenario(&base, Method::Mact(vec![1, 2, 4, 8]), 11).unwrap();
+        assert_eq!(a.chunks.records, b.chunks.records);
+        assert_eq!(a.peak_act_bytes, b.peak_act_bytes);
+        assert_eq!(a.avg_tgs, b.avg_tgs);
+        // the base envelope is input, not state: untouched
+        assert_eq!(base.method, Method::FullRecompute);
+        assert_eq!(base.seed, 7);
+        // and equals the direct Simulator path
+        let mut direct = base.clone();
+        direct.method = Method::Mact(vec![1, 2, 4, 8]);
+        direct.seed = 11;
+        let c = Simulator::new(direct).unwrap().run_all();
+        assert_eq!(a.chunks.records, c.chunks.records);
+        assert_eq!(a.avg_tgs, c.avg_tgs);
     }
 
     #[test]

@@ -1,0 +1,88 @@
+//! Grid expansion: a [`SweepConfig`] unfolds into an ordered list of
+//! fully-resolved [`Scenario`]s — the unit of work the pool executes.
+//!
+//! Ordering is part of the determinism contract: scenarios enumerate
+//! models × methods × seeds in the exact order the config lists them,
+//! and the scenario `index` is the reduction key every downstream
+//! aggregation sorts by. Two sweeps with the same config produce the
+//! same scenario list byte for byte, regardless of worker count.
+
+use crate::config::{model_by_name, paper_run, Method, RunConfig, SweepConfig};
+use crate::error::Result;
+
+/// One cell-instance of the grid: a (model, method, seed) triple with
+/// its resolved run envelope.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Position in the grid enumeration — the deterministic reduction
+    /// key.
+    pub index: usize,
+    /// Model preset name ("i" / "ii").
+    pub model: String,
+    pub method: Method,
+    pub seed: u64,
+    /// Fully-resolved run config (method and seed already applied).
+    pub run: RunConfig,
+}
+
+/// Expand the grid in (model, method, seed) order.
+pub fn expand(cfg: &SweepConfig) -> Result<Vec<Scenario>> {
+    cfg.validate()?;
+    let mut scenarios = Vec::with_capacity(cfg.scenario_count());
+    for model_name in &cfg.models {
+        let model = model_by_name(model_name)?;
+        for method in &cfg.methods {
+            for &seed in &cfg.seeds {
+                let mut run = paper_run(model.clone(), method.clone());
+                run.iterations = cfg.iterations;
+                run.seed = seed;
+                scenarios.push(Scenario {
+                    index: scenarios.len(),
+                    model: model_name.clone(),
+                    method: method.clone(),
+                    seed,
+                    run,
+                });
+            }
+        }
+    }
+    Ok(scenarios)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_count_and_indices() {
+        let cfg = SweepConfig::paper_grid(7, 3, 5);
+        let scenarios = expand(&cfg).unwrap();
+        assert_eq!(scenarios.len(), 2 * 3 * 3);
+        for (i, s) in scenarios.iter().enumerate() {
+            assert_eq!(s.index, i);
+            assert_eq!(s.run.seed, s.seed);
+            assert_eq!(s.run.method, s.method);
+            assert_eq!(s.run.iterations, 5);
+        }
+    }
+
+    #[test]
+    fn expansion_order_is_model_method_seed() {
+        let cfg = SweepConfig::paper_grid(7, 2, 5);
+        let scenarios = expand(&cfg).unwrap();
+        // first half model i, second half model ii
+        assert!(scenarios[..6].iter().all(|s| s.model == "i"));
+        assert!(scenarios[6..].iter().all(|s| s.model == "ii"));
+        // seeds vary fastest
+        assert_eq!(scenarios[0].method, scenarios[1].method);
+        assert_ne!(scenarios[0].seed, scenarios[1].seed);
+        assert_ne!(scenarios[1].method, scenarios[2].method);
+    }
+
+    #[test]
+    fn expansion_rejects_invalid_grid() {
+        let mut cfg = SweepConfig::paper_grid(7, 2, 5);
+        cfg.models = vec!["bogus".into()];
+        assert!(expand(&cfg).is_err());
+    }
+}

@@ -1,0 +1,370 @@
+//! Sweep reduction: per-scenario rows and per-(model, method) cell
+//! aggregates, serialised as deterministic JSON.
+//!
+//! Everything here is computed from scenario results **sorted by grid
+//! index**, with floating-point accumulation in that fixed order, and
+//! serialised through the crate's sorted-key JSON writer — so the
+//! emitted bytes are identical for any worker count or scheduling
+//! order. The integration suite asserts this bit-for-bit.
+//!
+//! The aggregates are the paper's own headline quantities: average TGS
+//! (Eq. 10) over trained runs, OOM rates (Eq. 3 violations), peak
+//! activation bytes (Eq. 2), and the memory-model deltas of each
+//! method against Method 1 (Table 4's reduction percentages).
+
+use crate::bench::BenchReport;
+use crate::config::SweepConfig;
+use crate::json::{self, Value};
+use crate::sim::RunOutcome;
+use crate::sweep::grid::Scenario;
+use crate::util::fmt_bytes;
+
+/// Flat result of one scenario — everything the aggregation and the
+/// JSON artifact need, nothing the thread scheduler could perturb.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioResult {
+    pub index: usize,
+    pub model: String,
+    pub method: String,
+    pub seed: u64,
+    pub iterations: u64,
+    pub trained: bool,
+    pub oom_iterations: u64,
+    pub avg_tgs: f64,
+    pub peak_act_bytes: u64,
+    pub peak_total_bytes: u64,
+    pub static_bytes: u64,
+}
+
+impl ScenarioResult {
+    pub fn new(scenario: &Scenario, out: &RunOutcome) -> Self {
+        ScenarioResult {
+            index: scenario.index,
+            model: scenario.model.clone(),
+            method: scenario.method.name(),
+            seed: scenario.seed,
+            iterations: out.iterations.len() as u64,
+            trained: out.trained(),
+            oom_iterations: out.oom_iterations,
+            avg_tgs: out.avg_tgs,
+            peak_act_bytes: out.peak_act_bytes,
+            peak_total_bytes: out
+                .iterations
+                .iter()
+                .map(|i| i.peak_total_bytes)
+                .max()
+                .unwrap_or(0),
+            static_bytes: out.static_bytes,
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("index", json::num(self.index as f64)),
+            ("model", json::s(self.model.clone())),
+            ("method", json::s(self.method.clone())),
+            ("seed", json::num(self.seed as f64)),
+            ("iterations", json::num(self.iterations as f64)),
+            ("trained", Value::Bool(self.trained)),
+            ("oom_iterations", json::num(self.oom_iterations as f64)),
+            ("avg_tgs", json::num(self.avg_tgs)),
+            ("peak_act_bytes", json::num(self.peak_act_bytes as f64)),
+            ("peak_total_bytes", json::num(self.peak_total_bytes as f64)),
+            ("static_bytes", json::num(self.static_bytes as f64)),
+        ])
+    }
+}
+
+/// Aggregate of one (model, method) cell across its seeds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellStats {
+    pub model: String,
+    pub method: String,
+    pub runs: u64,
+    pub trained_runs: u64,
+    /// Fraction of runs with at least one OOM iteration.
+    pub oom_run_rate: f64,
+    /// Fraction of simulated iterations that violated Eq. 3.
+    pub oom_iteration_rate: f64,
+    /// Mean of per-run average TGS over trained runs (0 if none).
+    pub avg_tgs: f64,
+    /// Worst activation peak across the cell's runs (Eq. 2).
+    pub peak_act_bytes: u64,
+    /// Worst total (static + activation) peak across runs.
+    pub peak_total_bytes: u64,
+    pub static_bytes: u64,
+    /// Memory-model delta vs the same model's Method 1 cell:
+    /// activation reduction in percent (Table 4's headline), when a
+    /// Method 1 cell exists in the grid.
+    pub act_reduction_vs_m1_pct: Option<f64>,
+    /// TGS delta vs Method 1 in percent, when Method 1 trained.
+    pub tgs_vs_m1_pct: Option<f64>,
+}
+
+impl CellStats {
+    fn to_json(&self) -> Value {
+        let opt = |v: Option<f64>| v.map(json::num).unwrap_or(Value::Null);
+        json::obj(vec![
+            ("model", json::s(self.model.clone())),
+            ("method", json::s(self.method.clone())),
+            ("runs", json::num(self.runs as f64)),
+            ("trained_runs", json::num(self.trained_runs as f64)),
+            ("oom_run_rate", json::num(self.oom_run_rate)),
+            ("oom_iteration_rate", json::num(self.oom_iteration_rate)),
+            ("avg_tgs", json::num(self.avg_tgs)),
+            ("peak_act_bytes", json::num(self.peak_act_bytes as f64)),
+            ("peak_total_bytes", json::num(self.peak_total_bytes as f64)),
+            ("static_bytes", json::num(self.static_bytes as f64)),
+            ("act_reduction_vs_m1_pct", opt(self.act_reduction_vs_m1_pct)),
+            ("tgs_vs_m1_pct", opt(self.tgs_vs_m1_pct)),
+        ])
+    }
+}
+
+/// The aggregated outcome of a sweep. Note: the worker count is
+/// deliberately NOT part of the report — identical grids must emit
+/// identical bytes however they were scheduled.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub config: SweepConfig,
+    pub scenarios: Vec<ScenarioResult>,
+    pub cells: Vec<CellStats>,
+}
+
+impl SweepReport {
+    /// Reduce scenario results (any order) into the report. Results
+    /// are sorted by grid index first so every float accumulates in a
+    /// fixed order.
+    pub fn build(config: SweepConfig, mut results: Vec<ScenarioResult>) -> Self {
+        results.sort_by_key(|r| r.index);
+        // Cells follow the config's model × method enumeration order.
+        let mut cells = Vec::with_capacity(config.models.len() * config.methods.len());
+        for model in &config.models {
+            for method in &config.methods {
+                let name = method.name();
+                let cell: Vec<&ScenarioResult> = results
+                    .iter()
+                    .filter(|r| &r.model == model && r.method == name)
+                    .collect();
+                if cell.is_empty() {
+                    continue;
+                }
+                let runs = cell.len() as u64;
+                let trained: Vec<&&ScenarioResult> =
+                    cell.iter().filter(|r| r.trained).collect();
+                let total_iters: u64 = cell.iter().map(|r| r.iterations).sum();
+                let oom_iters: u64 = cell.iter().map(|r| r.oom_iterations).sum();
+                let avg_tgs = if trained.is_empty() {
+                    0.0
+                } else {
+                    trained.iter().map(|r| r.avg_tgs).sum::<f64>() / trained.len() as f64
+                };
+                cells.push(CellStats {
+                    model: model.clone(),
+                    method: name,
+                    runs,
+                    trained_runs: trained.len() as u64,
+                    oom_run_rate: (runs - trained.len() as u64) as f64 / runs as f64,
+                    oom_iteration_rate: if total_iters == 0 {
+                        0.0
+                    } else {
+                        oom_iters as f64 / total_iters as f64
+                    },
+                    avg_tgs,
+                    peak_act_bytes: cell.iter().map(|r| r.peak_act_bytes).max().unwrap_or(0),
+                    peak_total_bytes: cell
+                        .iter()
+                        .map(|r| r.peak_total_bytes)
+                        .max()
+                        .unwrap_or(0),
+                    static_bytes: cell.iter().map(|r| r.static_bytes).max().unwrap_or(0),
+                    act_reduction_vs_m1_pct: None,
+                    tgs_vs_m1_pct: None,
+                });
+            }
+        }
+        // Second pass: memory-model deltas vs each model's Method 1
+        // cell (Table 4's reduction column).
+        let m1_name = crate::config::Method::FullRecompute.name();
+        let baselines: Vec<(String, u64, f64, u64)> = cells
+            .iter()
+            .filter(|c| c.method == m1_name)
+            .map(|c| (c.model.clone(), c.peak_act_bytes, c.avg_tgs, c.trained_runs))
+            .collect();
+        for cell in &mut cells {
+            if cell.method == m1_name {
+                continue;
+            }
+            if let Some((_, m1_act, m1_tgs, m1_trained)) =
+                baselines.iter().find(|(m, ..)| *m == cell.model)
+            {
+                if *m1_act > 0 {
+                    cell.act_reduction_vs_m1_pct =
+                        Some(100.0 * (1.0 - cell.peak_act_bytes as f64 / *m1_act as f64));
+                }
+                // a TGS delta needs throughput data on BOTH sides: a
+                // cell that never trained has no measurement, not a
+                // −100 % slowdown.
+                if *m1_trained > 0 && *m1_tgs > 0.0 && cell.trained_runs > 0 {
+                    cell.tgs_vs_m1_pct = Some(100.0 * (cell.avg_tgs / m1_tgs - 1.0));
+                }
+            }
+        }
+        SweepReport { config, scenarios: results, cells }
+    }
+
+    /// Deterministic JSON artifact (sorted keys, fixed array order).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("config", self.config.to_json()),
+            (
+                "scenarios",
+                json::arr(self.scenarios.iter().map(ScenarioResult::to_json).collect()),
+            ),
+            (
+                "cells",
+                json::arr(self.cells.iter().map(CellStats::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Human-readable per-cell table for the CLI.
+    pub fn render_table(&self) -> String {
+        let mut report = BenchReport::new(
+            &format!(
+                "sweep — {} scenarios ({} models × {} methods × {} seeds, {} iters)",
+                self.scenarios.len(),
+                self.config.models.len(),
+                self.config.methods.len(),
+                self.config.seeds.len(),
+                self.config.iterations
+            ),
+            &[
+                "model", "method", "trained", "OOM iter %", "avg TGS", "peak act",
+                "Δact vs m1", "ΔTGS vs m1",
+            ],
+        );
+        for c in &self.cells {
+            let pct = |v: Option<f64>| {
+                v.map(|x| format!("{x:+.1} %")).unwrap_or_else(|| "-".into())
+            };
+            report.row(&[
+                c.model.clone(),
+                c.method.clone(),
+                format!("{}/{}", c.trained_runs, c.runs),
+                format!("{:.1}", 100.0 * c.oom_iteration_rate),
+                format!("{:.0}", c.avg_tgs),
+                fmt_bytes(c.peak_act_bytes),
+                pct(c.act_reduction_vs_m1_pct),
+                pct(c.tgs_vs_m1_pct),
+            ]);
+        }
+        report.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+
+    fn result(
+        index: usize,
+        model: &str,
+        method: &Method,
+        seed: u64,
+        trained: bool,
+        avg_tgs: f64,
+        peak_act: u64,
+    ) -> ScenarioResult {
+        ScenarioResult {
+            index,
+            model: model.into(),
+            method: method.name(),
+            seed,
+            iterations: 10,
+            trained,
+            oom_iterations: if trained { 0 } else { 4 },
+            avg_tgs,
+            peak_act_bytes: peak_act,
+            peak_total_bytes: peak_act + 1000,
+            static_bytes: 500,
+        }
+    }
+
+    fn two_cell_config() -> SweepConfig {
+        SweepConfig {
+            models: vec!["i".into()],
+            methods: vec![Method::FullRecompute, Method::FixedChunk(8)],
+            seeds: vec![1, 2],
+            iterations: 10,
+        }
+    }
+
+    #[test]
+    fn build_sorts_and_aggregates() {
+        let m1 = Method::FullRecompute;
+        let m2 = Method::FixedChunk(8);
+        // shuffled input order — build must sort by index
+        let results = vec![
+            result(3, "i", &m2, 2, true, 120.0, 400),
+            result(0, "i", &m1, 1, true, 100.0, 1000),
+            result(2, "i", &m2, 1, true, 110.0, 500),
+            result(1, "i", &m1, 2, false, 0.0, 1200),
+        ];
+        let report = SweepReport::build(two_cell_config(), results);
+        assert_eq!(
+            report.scenarios.iter().map(|r| r.index).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        assert_eq!(report.cells.len(), 2);
+        let c1 = &report.cells[0];
+        assert_eq!(c1.method, m1.name());
+        assert_eq!(c1.runs, 2);
+        assert_eq!(c1.trained_runs, 1);
+        assert_eq!(c1.oom_run_rate, 0.5);
+        assert_eq!(c1.oom_iteration_rate, 4.0 / 20.0);
+        assert_eq!(c1.avg_tgs, 100.0); // only the trained run counts
+        assert_eq!(c1.peak_act_bytes, 1200);
+        let c2 = &report.cells[1];
+        assert_eq!(c2.avg_tgs, 115.0);
+        assert_eq!(c2.peak_act_bytes, 500);
+        // deltas vs m1: 500 vs 1200 → 58.33 % reduction
+        let red = c2.act_reduction_vs_m1_pct.unwrap();
+        assert!((red - 100.0 * (1.0 - 500.0 / 1200.0)).abs() < 1e-9);
+        let tgs = c2.tgs_vs_m1_pct.unwrap();
+        assert!((tgs - 15.0).abs() < 1e-9);
+        assert!(c1.act_reduction_vs_m1_pct.is_none());
+    }
+
+    #[test]
+    fn json_is_input_order_independent() {
+        let m1 = Method::FullRecompute;
+        let m2 = Method::FixedChunk(8);
+        let a = vec![
+            result(0, "i", &m1, 1, true, 100.0, 1000),
+            result(1, "i", &m1, 2, true, 101.0, 1100),
+            result(2, "i", &m2, 1, true, 110.0, 500),
+            result(3, "i", &m2, 2, true, 120.0, 400),
+        ];
+        let mut b = a.clone();
+        b.reverse();
+        let ja = SweepReport::build(two_cell_config(), a).to_json().to_string_pretty();
+        let jb = SweepReport::build(two_cell_config(), b).to_json().to_string_pretty();
+        assert_eq!(ja, jb);
+        // and the artifact reparses
+        crate::json::parse(&ja).unwrap();
+    }
+
+    #[test]
+    fn table_renders_all_cells() {
+        let m1 = Method::FullRecompute;
+        let results = vec![result(0, "i", &m1, 1, true, 100.0, 1000)];
+        let mut cfg = two_cell_config();
+        cfg.methods = vec![m1];
+        cfg.seeds = vec![1];
+        let table = SweepReport::build(cfg, results).render_table();
+        assert!(table.contains("method1/full-recompute"));
+        assert!(table.contains("1/1"));
+    }
+}

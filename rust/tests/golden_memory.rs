@@ -1,0 +1,102 @@
+//! Golden regression pins for the theoretical memory model on the
+//! paper's Table 4 configuration (Model I/II, t=1 p=4 e=32, 64 GB,
+//! α=0.98, BF16, 16 B/param + 10 GB overhead).
+//!
+//! These exact byte values encode Eq. 1 (static), Eq. 2 (activation),
+//! Eq. 3 (budget/OOM) and Eq. 8 (token budget s'_max) as currently
+//! calibrated. A refactor that shifts any of them silently re-derives
+//! different Table 4 numbers — this suite turns that into a loud,
+//! reviewable diff. If a change is *intentional*, update the constants
+//! here together with the calibration notes in `config::paper_run`.
+
+use memfine::config::{model_i, model_ii, paper_run, Method};
+use memfine::memory::{fits, ActivationModel, StaticModel};
+
+const GB: u64 = 1024 * 1024 * 1024;
+
+fn budget(run: &memfine::config::RunConfig) -> u64 {
+    (run.alpha * run.gpu_mem_bytes as f64) as u64
+}
+
+#[test]
+fn golden_budget_eq3() {
+    let run = paper_run(model_i(), Method::FullRecompute);
+    assert_eq!(run.gpu_mem_bytes, 64 * GB);
+    assert_eq!(budget(&run), 67_345_087_201);
+}
+
+#[test]
+fn golden_static_model_eq1() {
+    let run = paper_run(model_i(), Method::FullRecompute);
+    assert_eq!(run.model.attention_params(), 174_063_616);
+    let sta = StaticModel::new(&run);
+    let params: Vec<u64> = (0..4).map(|r| sta.params_on_rank(r)).collect();
+    assert_eq!(
+        params,
+        vec![2_268_512_256, 2_112_937_984, 2_112_937_984, 2_141_896_704]
+    );
+    let bytes: Vec<u64> = (0..4).map(|r| sta.bytes_on_rank(r)).collect();
+    assert_eq!(
+        bytes,
+        vec![47_033_614_336, 44_544_425_984, 44_544_425_984, 45_007_765_504]
+    );
+    assert_eq!(sta.max_bytes(), 47_033_614_336);
+}
+
+#[test]
+fn golden_static_model_ii_eq1() {
+    let run = paper_run(model_ii(), Method::FullRecompute);
+    let sta = StaticModel::new(&run);
+    let bytes: Vec<u64> = (0..4).map(|r| sta.bytes_on_rank(r)).collect();
+    assert_eq!(
+        bytes,
+        vec![29_454_827_520, 28_316_205_056, 27_640_922_112, 28_104_261_632]
+    );
+}
+
+#[test]
+fn golden_activation_model_eq2() {
+    let run = paper_run(model_i(), Method::FullRecompute);
+    let act = ActivationModel::new(&run);
+    // Table 2 dense term (∝ s) and per-received-token MoE term (∝ s').
+    assert_eq!(act.dense_bytes(), 698_351_616);
+    assert_eq!(act.moe_bytes_per_token(), 36_864);
+    // Eq. 2 at a fixed s': dense + s'·per_token.
+    assert_eq!(act.layer_bytes(100_000), 4_384_751_616);
+    assert_eq!(
+        act.layer_bytes(100_000),
+        act.dense_bytes() + 100_000 * act.moe_bytes_per_token()
+    );
+    // Fig. 2 theoretical peak: e·s·b·t_k.
+    assert_eq!(act.s_prime_theoretical_peak(), 1_048_576);
+}
+
+#[test]
+fn golden_token_budget_eq8() {
+    let run = paper_run(model_i(), Method::FullRecompute);
+    let act = ActivationModel::new(&run);
+    let sta = StaticModel::new(&run);
+    let b = budget(&run);
+    let s_max: Vec<u64> = (0..4)
+        .map(|r| act.s_prime_max(r, sta.bytes_on_rank(r), b, true))
+        .collect();
+    assert_eq!(s_max, vec![532_039, 599_563, 599_563, 586_994]);
+}
+
+#[test]
+fn golden_m_g_multipliers() {
+    let run = paper_run(model_i(), Method::FullRecompute);
+    let m_g: Vec<u64> = (0..4).map(|r| run.parallel.m_g(r)).collect();
+    assert_eq!(m_g, vec![7, 5, 3, 1]);
+}
+
+#[test]
+fn golden_table4_feasibility_verdicts() {
+    // The Table 4 qualitative outcomes, as Eq. 3 verdicts at the
+    // theoretical worst case: Model I cannot host unchunked worst-case
+    // routing, chunking by 8 rescues it.
+    let run = paper_run(model_i(), Method::FullRecompute);
+    let worst = ActivationModel::new(&run).s_prime_theoretical_peak();
+    assert!(!fits(&run, worst, 1, true), "Model I worst case must OOM unchunked");
+    assert!(fits(&run, worst, 8, true), "c=8 must rescue Model I worst case");
+}

@@ -1,0 +1,89 @@
+//! End-to-end determinism contract of the sweep engine: a 3-method ×
+//! 2-model × 4-seed grid (24 scenarios) run with 1 worker and with 8
+//! workers must produce **bit-identical** aggregated JSON — thread
+//! count and scheduling order are not allowed to leak into results.
+
+use memfine::config::{derive_seeds, Method, SweepConfig};
+use memfine::sweep;
+
+fn grid_3x2x4() -> SweepConfig {
+    SweepConfig {
+        models: vec!["i".into(), "ii".into()],
+        methods: vec![
+            Method::FullRecompute,
+            Method::FixedChunk(8),
+            Method::Mact(vec![1, 2, 4, 8]),
+        ],
+        seeds: derive_seeds(7, 4),
+        iterations: 10,
+    }
+}
+
+#[test]
+fn sweep_json_bit_identical_across_worker_counts() {
+    let cfg = grid_3x2x4();
+    assert_eq!(cfg.scenario_count(), 24);
+
+    let serial = sweep::run_sweep(&cfg, 1).expect("serial sweep");
+    let parallel = sweep::run_sweep(&cfg, 8).expect("parallel sweep");
+
+    let json_1 = serial.to_json().to_string_pretty();
+    let json_8 = parallel.to_json().to_string_pretty();
+    assert_eq!(json_1, json_8, "worker count changed the sweep artifact");
+
+    // the same holds compactly serialised and structurally
+    assert_eq!(
+        serial.to_json().to_string_compact(),
+        parallel.to_json().to_string_compact()
+    );
+    assert_eq!(serial.scenarios, parallel.scenarios);
+    assert_eq!(serial.cells, parallel.cells);
+}
+
+#[test]
+fn sweep_artifact_reparses_and_covers_grid() {
+    let cfg = grid_3x2x4();
+    let report = sweep::run_sweep(&cfg, 8).expect("sweep");
+    assert_eq!(report.scenarios.len(), 24);
+    assert_eq!(report.cells.len(), 6); // 2 models × 3 methods
+
+    // round-trip through the JSON parser: the artifact is valid JSON
+    // and the config block reconstructs the input grid.
+    let text = report.to_json().to_string_pretty();
+    let parsed = memfine::json::parse(&text).expect("artifact parses");
+    let cfg_back =
+        SweepConfig::from_json(parsed.get("config").expect("config block")).unwrap();
+    assert_eq!(cfg_back, cfg);
+
+    // scenario indices are the contiguous grid enumeration
+    for (i, s) in report.scenarios.iter().enumerate() {
+        assert_eq!(s.index, i);
+        assert_eq!(s.iterations, 10);
+    }
+}
+
+#[test]
+fn sweep_reproduces_paper_cell_relations() {
+    // The aggregates must reproduce the Table 4 relations on every
+    // seed: chunked methods never OOM on Model I, and both chunked
+    // methods cut Method 1's activation peak (fixed c=8 the deepest).
+    let report = sweep::run_sweep(&grid_3x2x4(), 8).expect("sweep");
+    let cell = |model: &str, prefix: &str| {
+        report
+            .cells
+            .iter()
+            .find(|c| c.model == model && c.method.starts_with(prefix))
+            .unwrap_or_else(|| panic!("missing cell {model}/{prefix}"))
+    };
+    for model in ["i", "ii"] {
+        let m1 = cell(model, "method1");
+        let m2 = cell(model, "method2");
+        let m3 = cell(model, "method3");
+        assert_eq!(m2.trained_runs, m2.runs, "model {model}: method 2 must train");
+        assert_eq!(m3.trained_runs, m3.runs, "model {model}: method 3 must train");
+        assert!(m2.peak_act_bytes < m1.peak_act_bytes);
+        assert!(m3.peak_act_bytes < m1.peak_act_bytes);
+        assert!(m2.peak_act_bytes <= m3.peak_act_bytes);
+        assert!(m2.act_reduction_vs_m1_pct.unwrap() >= m3.act_reduction_vs_m1_pct.unwrap());
+    }
+}

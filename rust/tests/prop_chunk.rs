@@ -1,0 +1,103 @@
+//! Property tests for the FCDA chunk decomposition (paper §4.1),
+//! wired through the crate's own harness (`memfine::prop`, no
+//! `proptest` offline):
+//!
+//! * `split_chunks`: full coverage of the token range, contiguity, no
+//!   empty chunk, length spread ≤ 1;
+//! * `RecomputeSchedule::build`: every chunk is forwarded in order,
+//!   then the backward phase walks chunks in reverse with the exact
+//!   Recompute → Backward → Free triple per chunk (Eq. 6/7).
+
+use memfine::chunk::{split_chunks, RecomputeSchedule, Step};
+use memfine::prop::{assert_prop, PairGen, U64Range};
+
+#[test]
+fn prop_split_chunks_invariants() {
+    let gen = PairGen(U64Range(1, 1_048_576), U64Range(1, 128));
+    assert_prop(101, 500, &gen, |&(tokens, c)| {
+        let chunks = split_chunks(tokens, c);
+        let effective = c.min(tokens);
+        if chunks.len() as u64 != effective {
+            return Err(format!(
+                "expected {effective} chunks for n={tokens} c={c}, got {}",
+                chunks.len()
+            ));
+        }
+        // coverage + contiguity: chunk i starts where i-1 ended, the
+        // first at 0, and the lengths sum to the token count.
+        let mut cursor = 0u64;
+        for (i, ch) in chunks.iter().enumerate() {
+            if ch.index != i as u64 {
+                return Err(format!("index {} at position {i}", ch.index));
+            }
+            if ch.start != cursor {
+                return Err(format!("gap before chunk {i}: start {} != {cursor}", ch.start));
+            }
+            if ch.len == 0 {
+                return Err(format!("empty chunk {i} (n={tokens}, c={c})"));
+            }
+            cursor += ch.len;
+        }
+        if cursor != tokens {
+            return Err(format!("covered {cursor} of {tokens} tokens"));
+        }
+        // near-equal split: max − min ≤ 1
+        let max = chunks.iter().map(|ch| ch.len).max().unwrap();
+        let min = chunks.iter().map(|ch| ch.len).min().unwrap();
+        if max - min > 1 {
+            return Err(format!("len spread {min}..{max} > 1"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_recompute_schedule_exact_shape() {
+    let gen = PairGen(U64Range(1, 500_000), U64Range(1, 64));
+    assert_prop(103, 300, &gen, |&(tokens, c)| {
+        let s = RecomputeSchedule::build(tokens, c);
+        let n = s.chunks.len() as u64;
+        if s.steps.len() as u64 != 4 * n {
+            return Err(format!("{} steps for {n} chunks", s.steps.len()));
+        }
+        // phase 1: all forwards, ascending chunk order
+        for i in 0..n {
+            if s.steps[i as usize] != Step::Forward(i) {
+                return Err(format!("step {i} is {:?}, want Forward({i})", s.steps[i as usize]));
+            }
+        }
+        // phase 2: reverse chunk order, Recompute → Backward → Free
+        for (pos, i) in (0..n).rev().enumerate() {
+            let base = (n + 3 * pos as u64) as usize;
+            let triple = [&s.steps[base], &s.steps[base + 1], &s.steps[base + 2]];
+            if *triple[0] != Step::Recompute(i)
+                || *triple[1] != Step::Backward(i)
+                || *triple[2] != Step::Free(i)
+            {
+                return Err(format!("backward triple for chunk {i} malformed: {triple:?}"));
+            }
+        }
+        // and the schedule's own validator agrees
+        if !s.validate() {
+            return Err("validate() rejected a built schedule".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_schedule_peak_equals_largest_chunk() {
+    // The paper's memory claim in executable form: with recomputed
+    // activations costing `len` units, the peak live cost equals the
+    // largest chunk, never the sum (Eq. 6).
+    let gen = PairGen(U64Range(1, 200_000), U64Range(1, 32));
+    assert_prop(107, 300, &gen, |&(tokens, c)| {
+        let s = RecomputeSchedule::build(tokens, c);
+        let peak = s.peak_live_cost(|len| len);
+        let max_chunk = s.chunks.iter().map(|ch| ch.len).max().unwrap_or(0);
+        if peak != max_chunk {
+            return Err(format!("peak {peak} != largest chunk {max_chunk}"));
+        }
+        Ok(())
+    });
+}
