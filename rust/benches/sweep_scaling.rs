@@ -1,21 +1,85 @@
-//! `cargo bench --bench sweep_scaling` — wall-clock scaling of the
-//! parallel scenario-sweep engine vs the serial baseline, on the
-//! paper's 24-scenario comparison grid (2 models × 3 methods × 4
-//! seeds). Also re-asserts the determinism contract: every worker
-//! count must emit the serial run's exact JSON bytes.
+//! `cargo bench --bench sweep_scaling` — throughput of the sweep
+//! engine on the paper's 24-scenario comparison grid (2 models × 3
+//! methods × 4 seeds), comparing three execution modes:
+//!
+//! * **legacy** — the pre-trace-sharing path: every scenario draws its
+//!   own routing trace (`sweep::run_sweep_legacy`);
+//! * **shared** — one trace per (model, seed) cell, every method
+//!   evaluated against it (`sweep::run_sweep`); pinned bit-identical
+//!   to legacy;
+//! * **shared+fast** — trace sharing plus the binomial-splitting
+//!   multinomial (`--fast-router`; same distribution, different
+//!   sample).
+//!
+//! Also micro-benches the multinomial samplers on paper-scale draws
+//! and re-asserts the determinism contract (every worker count and
+//! the shared path must emit the serial legacy run's exact bytes).
+//!
+//! Writes `BENCH_sweep.json` (scenarios/sec per mode × worker count,
+//! speedups, sampler draws/sec) so the perf trajectory is tracked
+//! PR-over-PR.
 
 use std::time::Instant;
 
 use memfine::bench::{fmt_time, BenchReport};
 use memfine::config::SweepConfig;
-use memfine::sweep;
+use memfine::json::{self, Value};
+use memfine::sweep::{self, SweepRunOptions};
+use memfine::util::rng::Rng;
+
+const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn scenarios_per_sec(n: usize, wall: f64) -> f64 {
+    n as f64 / wall.max(1e-9)
+}
+
+/// Time one sweep invocation, returning (wall seconds, pretty JSON).
+fn timed_run(
+    cfg: &SweepConfig,
+    workers: usize,
+    fast_router: bool,
+    legacy: bool,
+) -> (f64, String) {
+    let t0 = Instant::now();
+    let report = if legacy {
+        sweep::run_sweep_legacy(cfg, workers).expect("legacy sweep")
+    } else {
+        let opts = SweepRunOptions { workers, fast_router, ..Default::default() };
+        sweep::run_sweep_with(cfg, &opts).expect("sweep").report
+    };
+    (t0.elapsed().as_secs_f64(), report.to_json().to_string_pretty())
+}
+
+fn multinomial_micro() -> (f64, f64) {
+    // paper-scale draw: 2^20 token copies over 256 experts with the
+    // deep-layer chaos-peak popularity shape
+    let probs = Rng::new(7).dirichlet_symmetric(0.02, 256);
+    let n = 1u64 << 20;
+    let reps = 400;
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    let mut rng = Rng::new(42);
+    for _ in 0..reps {
+        acc += rng.multinomial(n, &probs)[0];
+    }
+    let seq = reps as f64 / t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let mut rng = Rng::new(42);
+    for _ in 0..reps {
+        acc += rng.multinomial_split(n, &probs)[0];
+    }
+    let split = reps as f64 / t0.elapsed().as_secs_f64();
+    assert!(acc > 0, "keep the draws observable");
+    (seq, split)
+}
 
 fn main() {
     memfine::logging::init();
     let cfg = SweepConfig::paper_grid(7, 4, 10);
+    let n = cfg.scenario_count();
     println!(
         "grid: {} scenarios ({} iterations each), host parallelism {}",
-        cfg.scenario_count(),
+        n,
         cfg.iterations,
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
@@ -23,36 +87,111 @@ fn main() {
     // Warm-up (first run pays allocator/page-cache costs).
     sweep::run_sweep(&cfg, 1).expect("warmup sweep");
 
-    let t0 = Instant::now();
-    let serial = sweep::run_sweep(&cfg, 1).expect("serial sweep");
-    let serial_s = t0.elapsed().as_secs_f64();
-    let serial_json = serial.to_json().to_string_pretty();
+    let (legacy_serial_s, legacy_json) = timed_run(&cfg, 1, false, true);
 
     let mut report = BenchReport::new(
-        "sweep scaling — serial vs worker pool",
-        &["workers", "wall clock", "speedup", "bit-identical"],
+        "sweep scaling — legacy vs trace-shared vs trace-shared+fast-router",
+        &["mode", "workers", "wall clock", "scn/s", "vs legacy serial", "bit-identical"],
     );
-    report.row(&[
-        "1".into(),
-        fmt_time(serial_s),
-        "1.00x".into(),
-        "yes (baseline)".into(),
-    ]);
-    for workers in [2usize, 4, 8] {
-        let t0 = Instant::now();
-        let out = sweep::run_sweep(&cfg, workers).expect("parallel sweep");
-        let wall = t0.elapsed().as_secs_f64();
-        let identical = out.to_json().to_string_pretty() == serial_json;
-        assert!(identical, "workers={workers} diverged from serial output");
-        report.row(&[
+    let mut artifact_rows: Vec<(String, Value)> = Vec::new();
+    let mut record = |mode: &str, workers: usize, wall: f64, identical: Option<bool>| {
+        artifact_rows.push((
+            format!("{mode}_{workers}w_scenarios_per_sec"),
+            json::num(scenarios_per_sec(n, wall)),
+        ));
+        (
+            mode.to_string(),
             workers.to_string(),
             fmt_time(wall),
-            format!("{:.2}x", serial_s / wall),
-            "yes".into(),
-        ]);
+            format!("{:.1}", scenarios_per_sec(n, wall)),
+            format!("{:.2}x", legacy_serial_s / wall),
+            match identical {
+                None => "n/a (different sample)".to_string(),
+                Some(true) => "yes".to_string(),
+                Some(false) => "NO".to_string(),
+            },
+        )
+    };
+
+    let mut shared_serial_s = f64::NAN;
+    let mut shared_fast_serial_s = f64::NAN;
+    for &workers in &WORKER_COUNTS {
+        let (wall, jsn) = if workers == 1 {
+            (legacy_serial_s, legacy_json.clone())
+        } else {
+            timed_run(&cfg, workers, false, true)
+        };
+        let identical = jsn == legacy_json;
+        assert!(identical, "legacy workers={workers} diverged from serial bytes");
+        let row = record("legacy", workers, wall, Some(identical));
+        report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
+    }
+    for &workers in &WORKER_COUNTS {
+        let (wall, jsn) = timed_run(&cfg, workers, false, false);
+        if workers == 1 {
+            shared_serial_s = wall;
+        }
+        let identical = jsn == legacy_json;
+        assert!(identical, "trace sharing workers={workers} diverged from legacy bytes");
+        let row = record("shared", workers, wall, Some(identical));
+        report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
+    }
+    let mut fast_json: Option<String> = None;
+    for &workers in &WORKER_COUNTS {
+        let (wall, jsn) = timed_run(&cfg, workers, true, false);
+        if workers == 1 {
+            shared_fast_serial_s = wall;
+        }
+        // the fast router is its own deterministic sample: identical
+        // across worker counts, different from the default sample
+        match &fast_json {
+            None => fast_json = Some(jsn),
+            Some(first) => assert_eq!(
+                first, &jsn,
+                "fast-router workers={workers} diverged from its serial bytes"
+            ),
+        }
+        let row = record("shared_fast", workers, wall, None);
+        report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
     }
     report.print();
-    println!("\nreading: scenarios are independent pure functions, so the pool");
-    println!("scales with cores until the grid runs out of work; output bytes");
-    println!("never depend on the schedule.");
+
+    let (seq_dps, split_dps) = multinomial_micro();
+    let sharing_speedup = legacy_serial_s / shared_serial_s;
+    let total_speedup = legacy_serial_s / shared_fast_serial_s;
+    println!(
+        "\nmultinomial (2^20 copies, 256 experts, chaos-peak popularity): \
+         sequential {seq_dps:.0} draws/s, split {split_dps:.0} draws/s ({:.2}x)",
+        split_dps / seq_dps
+    );
+    println!(
+        "serial scenarios/sec: legacy {:.1} → trace-shared {:.1} ({sharing_speedup:.2}x) \
+         → +fast-router {:.1} ({total_speedup:.2}x)",
+        scenarios_per_sec(n, legacy_serial_s),
+        scenarios_per_sec(n, shared_serial_s),
+        scenarios_per_sec(n, shared_fast_serial_s),
+    );
+    println!("\nreading: cells share one routed-token stream across methods, so the");
+    println!("trace draw — the dominant per-scenario cost — is paid once per cell;");
+    println!("the splitting multinomial then cheapens that one draw. Output bytes");
+    println!("never depend on schedule, worker count, shard split or resume point.");
+
+    let mut fields = vec![
+        ("grid_scenarios", json::num(n as f64)),
+        ("grid_iterations", json::num(cfg.iterations as f64)),
+        ("legacy_serial_s", json::num(legacy_serial_s)),
+        ("shared_serial_s", json::num(shared_serial_s)),
+        ("shared_fast_serial_s", json::num(shared_fast_serial_s)),
+        ("speedup_trace_sharing", json::num(sharing_speedup)),
+        ("speedup_total", json::num(total_speedup)),
+        ("multinomial_seq_draws_per_sec", json::num(seq_dps)),
+        ("multinomial_split_draws_per_sec", json::num(split_dps)),
+        ("multinomial_split_speedup", json::num(split_dps / seq_dps)),
+        ("determinism_legacy_vs_shared", Value::Bool(true)),
+    ];
+    fields.extend(artifact_rows.iter().map(|(k, v)| (k.as_str(), v.clone())));
+    let doc = json::obj(fields);
+    std::fs::write("BENCH_sweep.json", format!("{}\n", doc.to_string_pretty()))
+        .expect("write BENCH_sweep.json");
+    println!("\nartifact written to BENCH_sweep.json");
 }

@@ -388,6 +388,62 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
+    /// Canonical JSON form of the full run envelope. This is what the
+    /// sweep checkpoint layer hashes to identify a scenario across
+    /// processes/hosts: every field that influences the simulation
+    /// output is present, keys serialise sorted, and numbers print in
+    /// the writer's shortest round-trip form — so two hosts expanding
+    /// the same grid derive the same scenario hashes.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("model", self.model.to_json()),
+            ("parallel", self.parallel.to_json()),
+            ("method", self.method.to_json()),
+            ("gpu_mem_bytes", json::num(self.gpu_mem_bytes as f64)),
+            ("alpha", json::num(self.alpha)),
+            ("dtype_bytes", json::num(self.dtype_bytes as f64)),
+            ("static_bytes_per_param", json::num(self.static_bytes_per_param)),
+            (
+                "static_overhead_bytes",
+                json::num(self.static_overhead_bytes as f64),
+            ),
+            (
+                "allow_selective_recompute",
+                Value::Bool(self.allow_selective_recompute),
+            ),
+            ("iterations", json::num(self.iterations as f64)),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let cfg = RunConfig {
+            model: ModelConfig::from_json(
+                v.get("model").ok_or_else(|| Error::config("run missing model"))?,
+            )?,
+            parallel: ParallelConfig::from_json(
+                v.get("parallel")
+                    .ok_or_else(|| Error::config("run missing parallel"))?,
+            )?,
+            method: Method::from_json(
+                v.get("method").ok_or_else(|| Error::config("run missing method"))?,
+            )?,
+            gpu_mem_bytes: v.req_u64("gpu_mem_bytes")?,
+            alpha: v.req_f64("alpha")?,
+            dtype_bytes: v.req_u64("dtype_bytes")?,
+            static_bytes_per_param: v.req_f64("static_bytes_per_param")?,
+            static_overhead_bytes: v.req_u64("static_overhead_bytes")?,
+            allow_selective_recompute: v
+                .get("allow_selective_recompute")
+                .and_then(Value::as_bool)
+                .ok_or_else(|| Error::config("run missing allow_selective_recompute"))?,
+            iterations: v.req_u64("iterations")?,
+            seed: v.req_u64("seed")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
     pub fn validate(&self) -> Result<()> {
         self.model.validate()?;
         self.parallel.validate(&self.model)?;
@@ -632,6 +688,54 @@ impl SweepConfig {
     }
 }
 
+/// One shard of a sweep grid split across processes/hosts: `index` of
+/// `count` (CLI `--shard i/n`). Ownership is round-robin —
+/// `index == item_index % count` — applied by the sweep engine to
+/// **trace cells** (the (model, seed) groups that share one routed-
+/// token stream), never to individual scenarios: splitting a cell
+/// would force every shard to re-draw the same routing trace. Cells
+/// are homogeneous (one scenario per method each), so round-robin
+/// over cells keeps shards balanced.
+///
+/// Sharding is an *execution* parameter, not part of the grid
+/// identity: it never enters [`SweepConfig`]'s JSON or the scenario
+/// hash, so checkpoints written by any shard split merge into the
+/// byte-identical unsharded artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: u64,
+    pub count: u64,
+}
+
+impl ShardSpec {
+    /// Parse the CLI form `i/n` (e.g. `0/4`), requiring `i < n`.
+    pub fn parse(spec: &str) -> Result<ShardSpec> {
+        let (i, n) = spec
+            .split_once('/')
+            .ok_or_else(|| Error::config(format!("shard spec '{spec}' is not i/n")))?;
+        let index: u64 = i
+            .trim()
+            .parse()
+            .map_err(|_| Error::config(format!("bad shard index in '{spec}'")))?;
+        let count: u64 = n
+            .trim()
+            .parse()
+            .map_err(|_| Error::config(format!("bad shard count in '{spec}'")))?;
+        if count == 0 || index >= count {
+            return Err(Error::config(format!(
+                "shard {index}/{count}: index must be < count ≥ 1"
+            )));
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Does this shard own the work item at `index` (the sweep engine
+    /// passes trace-cell indices)?
+    pub fn owns(&self, index: usize) -> bool {
+        index as u64 % self.count == self.index
+    }
+}
+
 /// Derive `n` independent per-scenario seeds from a base seed
 /// (splitmix64 walk via the crate RNG). Scenario results depend only
 /// on these values — never on worker count or scheduling order — so a
@@ -860,6 +964,36 @@ mod tests {
         assert_ne!(derive_seeds(8, 8), a);
         // every derived seed survives the JSON number representation
         assert!(a.iter().all(|&s| s <= MAX_JSON_SEED));
+    }
+
+    #[test]
+    fn run_config_json_roundtrip() {
+        let run = paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        let text = run.to_json().to_string_compact();
+        let back = RunConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(run, back);
+        // canonical form is stable call-to-call (hash input stability)
+        assert_eq!(text, run.to_json().to_string_compact());
+    }
+
+    #[test]
+    fn shard_spec_parse_and_ownership() {
+        let s = ShardSpec::parse("1/3").unwrap();
+        assert_eq!(s, ShardSpec { index: 1, count: 3 });
+        assert!(!s.owns(0));
+        assert!(s.owns(1));
+        assert!(s.owns(4));
+        assert!(ShardSpec::parse("3/3").is_err());
+        assert!(ShardSpec::parse("0/0").is_err());
+        assert!(ShardSpec::parse("02").is_err());
+        assert!(ShardSpec::parse("a/b").is_err());
+        // every scenario is owned by exactly one shard
+        for idx in 0..10usize {
+            let owners = (0..3)
+                .filter(|&i| ShardSpec { index: i, count: 3 }.owns(idx))
+                .count();
+            assert_eq!(owners, 1, "scenario {idx}");
+        }
     }
 
     #[test]

@@ -20,7 +20,10 @@
 //!   cost models ([`collective`]), a performance model ([`perf`]), a
 //!   whole-training-run simulator ([`sim`]), a deterministic parallel
 //!   scenario-sweep engine ([`sweep`]) that fans method × config ×
-//!   seed grids over a worker pool, and a real-execution coordinator
+//!   seed grids over a worker pool — drawing each (model, seed) cell's
+//!   routing trace once ([`trace`]::SharedRoutingTrace), reducing
+//!   results as a stream, and checkpointing by scenario content hash
+//!   for resumable/sharded grids — and a real-execution coordinator
 //!   ([`coordinator`]) that drives the AOT artifacts through the PJRT
 //!   runtime ([`runtime`], behind the `pjrt` feature).
 //!

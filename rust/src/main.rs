@@ -6,7 +6,9 @@
 //! memfine plan    [--model i|ii]             memory model walkthrough (Eq. 1–3, 8)
 //! memfine simulate [--model i|ii] [--method 1|2|3] [--iters N]
 //! memfine sweep   [--models i,ii] [--methods 1,2,3] [--seeds N|a,b,...]
-//!                 [--workers N] [--out FILE]  parallel scenario grid
+//!                 [--workers N] [--out FILE] [--checkpoint F[,F...]]
+//!                 [--resume] [--shard i/n] [--limit N] [--fast-router]
+//!                 parallel scenario grid, resumable/shardable
 //! memfine repro   table4|fig2|fig4|fig5      regenerate a paper artifact
 //! memfine train   [--steps N] [--artifacts DIR]  E2E mini-model training
 //! memfine coord   [--policy mact|fixed] [--budget-mb N]  real EP layer pass
@@ -26,7 +28,7 @@ use memfine::util::fmt_bytes;
 const VALUE_OPTS: &[&str] = &[
     "model", "method", "iters", "seed", "steps", "artifacts", "policy",
     "budget-mb", "bins", "chunk", "models", "methods", "seeds", "workers",
-    "out",
+    "out", "checkpoint", "shard", "limit",
 ];
 
 fn main() {
@@ -89,6 +91,11 @@ fn print_usage() {
                 OptSpec { name: "seeds", help: "sweep seeds: a count (derived from --seed) or a,b,... list (trailing comma forces list)", takes_value: true, default: Some("4") },
                 OptSpec { name: "workers", help: "sweep worker threads (0 = all cores)", takes_value: true, default: Some("0") },
                 OptSpec { name: "out", help: "sweep JSON output path (- = stdout only)", takes_value: true, default: Some("-") },
+                OptSpec { name: "checkpoint", help: "sweep checkpoint file(s), comma-separated; first is the write target", takes_value: true, default: None },
+                OptSpec { name: "resume", help: "skip scenarios already in the checkpoint file(s)", takes_value: false, default: None },
+                OptSpec { name: "shard", help: "run shard i of n (i/n) of the sweep grid", takes_value: true, default: None },
+                OptSpec { name: "limit", help: "execute at most N sweep scenarios this run", takes_value: true, default: None },
+                OptSpec { name: "fast-router", help: "binomial-splitting routing draw (faster; different sample)", takes_value: false, default: None },
                 OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: Some("artifacts") },
                 OptSpec { name: "policy", help: "coord policy: mact or fixed", takes_value: true, default: Some("mact") },
                 OptSpec { name: "budget-mb", help: "coord per-rank memory budget", takes_value: true, default: Some("48") },
@@ -213,18 +220,54 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         seeds,
         iterations: args.get_u64("iters", 25)?,
     };
-    let requested = args.get_u64("workers", 0)? as usize;
-    let workers = if requested == 0 {
-        memfine::sweep::default_workers(cfg.scenario_count())
-    } else {
-        requested
+    let checkpoint: Vec<std::path::PathBuf> = args
+        .get("checkpoint")
+        .map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(std::path::PathBuf::from)
+                .collect()
+        })
+        .unwrap_or_default();
+    let shard = args
+        .get("shard")
+        .map(memfine::config::ShardSpec::parse)
+        .transpose()?;
+    let limit = args.get("limit").map(|_| args.get_u64("limit", 0)).transpose()?;
+    let opts = memfine::sweep::SweepRunOptions {
+        workers: args.get_u64("workers", 0)? as usize,
+        checkpoint,
+        resume: args.has_flag("resume"),
+        shard,
+        limit: limit.map(|n| n as usize),
+        fast_router: args.has_flag("fast-router"),
     };
     eprintln!(
-        "sweep: {} scenarios on {} workers",
+        "sweep: {} scenarios{}{}",
         cfg.scenario_count(),
-        workers
+        match opts.shard {
+            Some(s) => format!(", shard {}/{}", s.index, s.count),
+            None => String::new(),
+        },
+        if opts.resume { ", resuming" } else { "" },
     );
-    let report = memfine::sweep::run_sweep(&cfg, workers)?;
+    let summary = memfine::sweep::run_sweep_with(&cfg, &opts)?;
+    eprintln!(
+        "sweep: {} executed, {} resumed, {} skipped (shard/limit){}",
+        summary.executed,
+        summary.resumed,
+        summary.skipped,
+        if summary.skipped_checkpoint_lines > 0 {
+            format!(
+                ", {} unreadable checkpoint line(s) ignored",
+                summary.skipped_checkpoint_lines
+            )
+        } else {
+            String::new()
+        },
+    );
+    let report = summary.report;
     // Human-readable table goes to stderr so stdout carries only the
     // JSON artifact — `memfine sweep | jq .` and `> sweep.json` both
     // see a clean, parseable document.

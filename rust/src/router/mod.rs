@@ -61,8 +61,23 @@ impl Default for GatingParams {
 pub struct GatingSim {
     pub model: ModelConfig,
     pub parallel: ParallelConfig,
-    pub params: GatingParams,
+    /// Private so it can only change through
+    /// [`GatingSim::with_params`], which rebuilds `layer_depth` —
+    /// direct mutation would silently leave the cache stale.
+    params: GatingParams,
     seed: u64,
+    /// Per-layer cache of the depth component of the imbalance
+    /// intensity (`1 + slope·(l/(L-1))²`): it depends only on the layer
+    /// and the gating params, so the trace generator computes it once
+    /// per job instead of once per (iteration, layer) draw.
+    layer_depth: Vec<f64>,
+    /// Opt-in binomial-splitting multinomial
+    /// ([`crate::util::rng::Rng::multinomial_split`]). Same
+    /// distribution, different stream consumption — OFF by default so
+    /// every default-path trace stays bit-identical across versions;
+    /// large sweeps opt in for throughput (`memfine sweep
+    /// --fast-router`).
+    fast_multinomial: bool,
 }
 
 /// Per-layer routing outcome for one iteration.
@@ -89,25 +104,59 @@ impl LayerRouting {
     }
 }
 
+/// Depth factors for every layer — exactly the expression the
+/// per-draw path historically evaluated, hoisted to construction time.
+fn depth_cache(model: &ModelConfig, params: &GatingParams) -> Vec<f64> {
+    (0..model.layers)
+        .map(|layer| {
+            let l_frac = if model.layers <= 1 {
+                0.0
+            } else {
+                layer as f64 / (model.layers - 1) as f64
+            };
+            1.0 + params.depth_slope * l_frac * l_frac
+        })
+        .collect()
+}
+
 impl GatingSim {
     pub fn new(model: ModelConfig, parallel: ParallelConfig, seed: u64) -> Self {
-        GatingSim { model, parallel, params: GatingParams::default(), seed }
+        let params = GatingParams::default();
+        let layer_depth = depth_cache(&model, &params);
+        GatingSim { model, parallel, params, seed, layer_depth, fast_multinomial: false }
     }
 
     pub fn with_params(mut self, params: GatingParams) -> Self {
+        self.layer_depth = depth_cache(&self.model, &params);
         self.params = params;
         self
+    }
+
+    /// Switch the token-assignment draw to the binomial-splitting
+    /// multinomial. Identical distribution and determinism guarantees,
+    /// different bit-stream: traces drawn with and without it are two
+    /// different (equally valid) samples, so the flag is part of the
+    /// scenario identity in checkpointed sweeps.
+    pub fn with_fast_multinomial(mut self, on: bool) -> Self {
+        self.fast_multinomial = on;
+        self
+    }
+
+    /// The job seed the trace streams derive from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The gating parameters in effect (set via
+    /// [`GatingSim::with_params`]).
+    pub fn params(&self) -> &GatingParams {
+        &self.params
     }
 
     /// Imbalance intensity ≥ 1 for (iteration, layer); α = base/intensity.
     fn intensity(&self, iteration: u64, layer: u64) -> f64 {
         let p = &self.params;
-        let l_frac = if self.model.layers <= 1 {
-            0.0
-        } else {
-            layer as f64 / (self.model.layers - 1) as f64
-        };
-        let depth = 1.0 + p.depth_slope * l_frac * l_frac;
+        let depth = self.layer_depth[layer as usize];
         let it = iteration as f64;
         let bump = ((it - p.chaos_peak_iter) / p.chaos_width).powi(2);
         let chaos = 1.0 + p.chaos_gain * (-0.5 * bump).exp();
@@ -132,7 +181,9 @@ impl GatingSim {
             .max(1e-3);
         let mut rng = Rng::new(self.seed)
             .fork(iteration.wrapping_mul(1_000_003).wrapping_add(layer));
-        rng.dirichlet(&vec![alpha; e_n])
+        // bit-identical to dirichlet(&vec![alpha; e_n]), minus the
+        // parameter-vector allocation on every draw
+        rng.dirichlet_symmetric(alpha, e_n)
     }
 
     /// Total token copies entering every MoE layer per micro-batch
@@ -150,7 +201,11 @@ impl GatingSim {
         let probs = self.expert_popularity(iteration, layer);
         let mut rng = Rng::new(self.seed ^ 0x5EED_0001)
             .fork(iteration.wrapping_mul(7_368_787).wrapping_add(layer));
-        let per_expert = rng.multinomial(self.total_copies(), &probs);
+        let per_expert = if self.fast_multinomial {
+            rng.multinomial_split(self.total_copies(), &probs)
+        } else {
+            rng.multinomial(self.total_copies(), &probs)
+        };
         let per_rank = per_rank_from_experts(&per_expert, self.parallel.ep);
         LayerRouting { per_expert, per_rank }
     }
@@ -282,5 +337,50 @@ mod tests {
     #[test]
     fn total_copies_matches_paper() {
         assert_eq!(sim().total_copies(), 32 * 4096 * 8);
+    }
+
+    #[test]
+    fn fast_multinomial_conserves_and_is_deterministic() {
+        let fast = sim().with_fast_multinomial(true);
+        for layer in [3, 10, 15] {
+            let r = fast.route(7, layer);
+            assert_eq!(r.per_expert.iter().sum::<u64>(), fast.total_copies());
+            assert_eq!(r.per_rank.iter().sum::<u64>(), fast.total_copies());
+        }
+        let a = fast.route(8, 12);
+        let b = sim().with_fast_multinomial(true).route(8, 12);
+        assert_eq!(a.per_expert, b.per_expert);
+    }
+
+    #[test]
+    fn fast_multinomial_same_popularity_same_imbalance_regime() {
+        // The fast sampler assigns tokens over the *same* popularity
+        // vector (popularity is drawn before the sampler runs), so the
+        // imbalance regime matches the default path even though the
+        // individual draw differs.
+        let (mut slow_cv, mut fast_cv) = (0.0, 0.0);
+        for seed in 0..10 {
+            let s = GatingSim::new(model_i(), paper_parallel(), seed);
+            let f = GatingSim::new(model_i(), paper_parallel(), seed)
+                .with_fast_multinomial(true);
+            slow_cv += s.route(7, 15).summary().cv();
+            fast_cv += f.route(7, 15).summary().cv();
+        }
+        let ratio = fast_cv / slow_cv;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "imbalance regimes diverged: slow {slow_cv:.2} fast {fast_cv:.2}"
+        );
+    }
+
+    #[test]
+    fn depth_cache_matches_direct_formula() {
+        let s = sim();
+        let p = GatingParams::default();
+        for layer in 0..16u64 {
+            let l_frac = layer as f64 / 15.0;
+            let want = 1.0 + p.depth_slope * l_frac * l_frac;
+            assert_eq!(s.layer_depth[layer as usize], want);
+        }
     }
 }

@@ -1,24 +1,34 @@
 //! Whole-training-run simulator: the engine behind every paper table
 //! and figure.
 //!
-//! For each iteration it (1) draws the routing trace per MoE layer
-//! ([`crate::router::GatingSim`]), (2) applies the configured method's
-//! chunking decision ([`crate::chunk::Mact`] for Method 3), (3)
-//! evaluates the memory model per pipeline stage to detect OOM
-//! (Eq. 2/3), and (4) composes per-layer timing into an iteration time
-//! and TGS (Eq. 10). Outputs are the traces the benches print:
-//! Table 4's memory rows, Fig. 2's distribution slice, Fig. 4's TGS
-//! series and Fig. 5's chunk grid.
+//! The run is split into two phases with a hard boundary between them:
+//!
+//! 1. **Trace generation** — the routed-token stream per (iteration,
+//!    MoE layer) is drawn by [`crate::router::GatingSim`] into a
+//!    [`SharedRoutingTrace`]. The stream depends only on (model,
+//!    gating, seed) — never on the method — so one draw serves every
+//!    method of a paired-comparison cell ([`run_scenario_on_trace`]).
+//! 2. **Method evaluation** — per iteration, (a) apply the configured
+//!    method's chunking decision ([`crate::chunk::Mact`] for
+//!    Method 3), (b) evaluate the memory model per pipeline stage to
+//!    detect OOM (Eq. 2/3), and (c) compose per-layer timing into an
+//!    iteration time and TGS (Eq. 10). Evaluation never touches the
+//!    RNG.
+//!
+//! Outputs are the traces the benches print: Table 4's memory rows,
+//! Fig. 2's distribution slice, Fig. 4's TGS series and Fig. 5's
+//! chunk grid.
 
 use crate::chunk::Mact;
 use crate::config::{Method, RunConfig};
+use crate::error::Error;
 use crate::memory::{ActivationModel, StaticModel};
 use crate::perf::PerfModel;
 use crate::router::GatingSim;
 pub mod ablation;
 pub mod repro;
 
-use crate::trace::{ChunkRecord, ChunkTrace, RoutingRecord, RoutingTrace};
+use crate::trace::{ChunkRecord, ChunkTrace, RoutingRecord, RoutingTrace, SharedRoutingTrace};
 
 /// Outcome of one MoE layer in one iteration.
 #[derive(Clone, Copy, Debug)]
@@ -74,17 +84,58 @@ impl RunOutcome {
 }
 
 /// Run one scenario as a pure function of its inputs: clone the base
-/// envelope, substitute the method and seed, simulate. No shared
-/// mutable state — the [`Simulator`] holds only per-run models and
-/// every stochastic draw forks a fresh RNG from `(seed, iteration,
-/// layer)` — so calls are bit-reproducible and safe to execute from
-/// any thread in any order. This is the unit of work of the parallel
-/// sweep engine ([`crate::sweep`]).
+/// envelope, substitute the method and seed, draw the trace, evaluate.
+/// No shared mutable state — the [`Simulator`] holds only per-run
+/// models and every stochastic draw forks a fresh RNG from `(seed,
+/// iteration, layer)` — so calls are bit-reproducible and safe to
+/// execute from any thread in any order. This is the reference
+/// (trace-per-scenario) execution path; the sweep engine shares one
+/// trace across a cell's methods via [`run_scenario_on_trace`] and is
+/// pinned bit-identical to this path.
 pub fn run_scenario(base: &RunConfig, method: Method, seed: u64) -> crate::Result<RunOutcome> {
     let mut run = base.clone();
     run.method = method;
     run.seed = seed;
     Ok(Simulator::new(run)?.run_all())
+}
+
+/// Evaluate one method against an already-drawn routing trace: the
+/// trace-shared half of [`run_scenario`]. The scenario's seed is the
+/// trace's seed (a trace *is* a seed's routed-token stream). For a
+/// trace drawn with the default sampler, the outcome is bit-identical
+/// to `run_scenario(base, method, trace.seed)` — the
+/// paired-comparison invariant the sweep engine's determinism
+/// contract rests on. A trace drawn with
+/// [`crate::router::GatingSim::with_fast_multinomial`] is a
+/// *different* (equally valid) sample of the same distribution, so
+/// its outcomes are deterministic but not byte-equal to the
+/// default-sampler path.
+pub fn run_scenario_on_trace(
+    base: &RunConfig,
+    method: Method,
+    trace: &SharedRoutingTrace,
+) -> crate::Result<RunOutcome> {
+    let mut run = base.clone();
+    run.method = method;
+    run.seed = trace.seed;
+    let sim = Simulator::new(run)?;
+    // The records encode (model, parallel)-specific per-rank statistics
+    // — any geometry difference (EP width, expert count, sequence/batch
+    // shape, layer counts) silently corrupts chunk decisions and OOM
+    // verdicts, so the whole identity must match, not just layer
+    // counts.
+    if trace.model != sim.run.model || trace.parallel != sim.run.parallel {
+        return Err(Error::config(
+            "trace was drawn for a different (model, parallel) configuration than the run",
+        ));
+    }
+    if trace.iterations < sim.run.iterations {
+        return Err(Error::config(format!(
+            "trace covers {} iterations, run needs {}",
+            trace.iterations, sim.run.iterations
+        )));
+    }
+    Ok(sim.run_on_trace(trace))
 }
 
 /// The simulator.
@@ -140,14 +191,42 @@ impl Simulator {
         self.sta.bytes_on_rank(stage) + stored_dense + moe_chunk_peak <= budget
     }
 
-    /// Simulate one iteration.
+    /// Simulate one iteration, drawing its routing directly (the
+    /// standalone path; [`Simulator::run_on_trace`] evaluates against
+    /// a pre-drawn trace instead, with bit-identical results).
     pub fn iteration(&self, it: u64) -> IterationOutcome {
+        let model = &self.run.model;
+        let stats: Vec<RoutingRecord> = (model.dense_layers..model.layers)
+            .map(|layer| {
+                let routing = self.gating.route(it, layer);
+                let s = routing.summary();
+                RoutingRecord {
+                    iteration: it,
+                    layer,
+                    min_recv: routing.min_received(),
+                    mean_recv: s.mean(),
+                    max_recv: routing.max_received(),
+                }
+            })
+            .collect();
+        self.iteration_stats(it, &stats)
+    }
+
+    /// Evaluate one iteration of the configured method against the
+    /// given per-MoE-layer routing statistics (ascending layer order).
+    /// Pure method evaluation: no RNG is touched here, which is what
+    /// lets a cell's methods share one drawn trace.
+    fn iteration_stats(&self, it: u64, moe_stats: &[RoutingRecord]) -> IterationOutcome {
         let model = &self.run.model;
         let pp = self.run.parallel.pp as usize;
         let budget = (self.run.alpha * self.run.gpu_mem_bytes as f64) as u64;
         let method1 = matches!(self.run.method, Method::FullRecompute);
+        debug_assert_eq!(
+            moe_stats.len(),
+            (model.layers - model.dense_layers) as usize
+        );
 
-        // Pass 1: routing + chunk decision per MoE layer.
+        // Pass 1: chunk decision per MoE layer from the routing stats.
         struct MoeLayer {
             layer: u64,
             stage: usize,
@@ -157,20 +236,17 @@ impl Simulator {
             chunks: u64,
         }
         let mut moe_layers = Vec::with_capacity(model.layers as usize);
-        for layer in model.dense_layers..model.layers {
+        for rec in moe_stats {
+            debug_assert_eq!(rec.iteration, it);
+            let layer = rec.layer;
             let stage = self.stage_of(layer) as usize;
-            // one routing draw per (iteration, layer): the stats feed
-            // both the chunk decision here and the Fig. 2 trace in
-            // run_all (routing twice was the top sim hot-spot — §Perf).
-            let routing = self.gating.route(it, layer);
-            let s = routing.summary();
-            let max_recv = routing.max_received();
+            let max_recv = rec.max_recv;
             let chunks = self.chunks_for(stage as u64, max_recv);
             moe_layers.push(MoeLayer {
                 layer,
                 stage,
-                min_recv: routing.min_received(),
-                mean_recv: s.mean(),
+                min_recv: rec.min_recv,
+                mean_recv: rec.mean_recv,
                 max_recv,
                 chunks,
             });
@@ -264,12 +340,37 @@ impl Simulator {
         }
     }
 
+    /// Draw this run's full routing trace (phase 1 of the run). The
+    /// trace depends only on (model, gating, seed) — callers holding
+    /// several methods of one cell draw it once and evaluate each via
+    /// [`Simulator::run_on_trace`] / [`run_scenario_on_trace`].
+    pub fn draw_trace(&self) -> SharedRoutingTrace {
+        SharedRoutingTrace::generate(&self.gating, self.run.iterations)
+    }
+
     /// Simulate the configured number of iterations, producing traces.
     ///
     /// Like the real system, an OOM iteration contributes no TGS sample
     /// (the job would have crashed); the bench reports `trained = ×`
     /// when any iteration OOMs — matching Table 4's "training" column.
     pub fn run_all(&self) -> RunOutcome {
+        self.run_on_trace(&self.draw_trace())
+    }
+
+    /// Evaluate the configured method against a pre-drawn routing
+    /// trace (phase 2 of the run). Bit-identical to
+    /// [`Simulator::run_all`] when
+    /// the trace was drawn from this run's seed: evaluation consumes
+    /// only the per-(iteration, layer) statistics, which
+    /// [`SharedRoutingTrace::generate`] draws through the very same
+    /// stateless `route()` streams.
+    ///
+    /// Panics (debug) if the trace shape does not match the run; use
+    /// [`run_scenario_on_trace`] for a validated entry point.
+    pub fn run_on_trace(&self, trace: &SharedRoutingTrace) -> RunOutcome {
+        debug_assert_eq!(trace.model, self.run.model);
+        debug_assert_eq!(trace.parallel, self.run.parallel);
+        debug_assert!(trace.iterations >= self.run.iterations);
         let mut iterations = Vec::new();
         let mut routing = RoutingTrace::default();
         let mut chunks = ChunkTrace::default();
@@ -279,7 +380,7 @@ impl Simulator {
         let mut peak_act = 0u64;
 
         for it in 0..self.run.iterations {
-            let out = self.iteration(it);
+            let out = self.iteration_stats(it, trace.iteration(it));
             for l in &out.layers {
                 chunks.push(ChunkRecord {
                     iteration: it,
@@ -425,6 +526,57 @@ mod tests {
         let c = Simulator::new(direct).unwrap().run_all();
         assert_eq!(a.chunks.records, c.chunks.records);
         assert_eq!(a.avg_tgs, c.avg_tgs);
+    }
+
+    #[test]
+    fn trace_sharing_bit_identical_to_per_scenario_runs() {
+        // The paired-comparison invariant: every method evaluated
+        // against one shared trace must equal its own full
+        // run_scenario (which re-draws the same trace from the seed).
+        let mut base = paper_run(model_i(), Method::FullRecompute);
+        base.iterations = 8;
+        let seed = 11u64;
+        let mut probe = base.clone();
+        probe.seed = seed;
+        let trace = Simulator::new(probe).unwrap().draw_trace();
+        for method in [
+            Method::FullRecompute,
+            Method::FixedChunk(8),
+            Method::Mact(vec![1, 2, 4, 8]),
+        ] {
+            let shared = run_scenario_on_trace(&base, method.clone(), &trace).unwrap();
+            let direct = run_scenario(&base, method.clone(), seed).unwrap();
+            assert_eq!(shared.chunks.records, direct.chunks.records);
+            assert_eq!(shared.routing.records, direct.routing.records);
+            assert_eq!(shared.peak_act_bytes, direct.peak_act_bytes);
+            assert_eq!(shared.oom_iterations, direct.oom_iterations);
+            assert_eq!(shared.avg_tgs, direct.avg_tgs);
+        }
+    }
+
+    #[test]
+    fn run_on_trace_rejects_mismatched_trace() {
+        let mut base = paper_run(model_i(), Method::FullRecompute);
+        base.iterations = 8;
+        let mut probe = base.clone();
+        probe.seed = 11;
+        // trace too short for the run
+        let mut short = probe.clone();
+        short.iterations = 4;
+        let trace = Simulator::new(short).unwrap().draw_trace();
+        assert!(run_scenario_on_trace(&base, Method::FullRecompute, &trace).is_err());
+        // trace drawn for a different model shape
+        let mut other = paper_run(model_ii(), Method::FullRecompute);
+        other.iterations = 8;
+        other.seed = 11;
+        let trace_ii = Simulator::new(other).unwrap().draw_trace();
+        assert!(run_scenario_on_trace(&base, Method::FullRecompute, &trace_ii).is_err());
+        // trace drawn under a different EP width (same layer counts —
+        // the per-rank statistics still belong to the wrong topology)
+        let mut narrow = probe.clone();
+        narrow.parallel.ep = 16;
+        let trace_ep = Simulator::new(narrow).unwrap().draw_trace();
+        assert!(run_scenario_on_trace(&base, Method::FullRecompute, &trace_ep).is_err());
     }
 
     #[test]

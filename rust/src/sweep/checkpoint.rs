@@ -1,0 +1,374 @@
+//! Resumable sweeps: a JSON-lines checkpoint of completed scenarios,
+//! keyed by content hash, mergeable across shards and hosts.
+//!
+//! Every scenario is identified by [`scenario_hash`] — FNV-1a 64 over
+//! the canonical compact JSON of its fully-resolved
+//! [`RunConfig`](crate::config::RunConfig) plus the router-sampler tag.
+//! The hash therefore captures *what will be simulated* (model,
+//! parallelism, method, seed, iterations, memory envelope, sampler)
+//! and deliberately excludes *how it is executed* (worker count,
+//! shard split, grid position): two hosts running different shards of
+//! the same grid, or re-runs of a reordered/extended grid, agree on
+//! every hash.
+//!
+//! The file format is one line per completed scenario:
+//!
+//! ```text
+//! {"hash":"94fd0a31c7e02b44","result":{...ScenarioResult row...}}
+//! ```
+//!
+//! appended and flushed as each scenario finishes, so a killed sweep
+//! loses at most the in-flight cells. Loading tolerates a torn final
+//! line (the kill-mid-write case) by skipping lines that fail to
+//! parse and reporting the count; merging is file concatenation or
+//! passing several `--checkpoint` paths — duplicate hashes collapse
+//! (results are deterministic, so duplicates are identical).
+//!
+//! On resume the stored row's `index` is re-derived from the *current*
+//! grid (hashes are position-independent), which keeps the final
+//! artifact byte-identical to an uninterrupted run of that grid — the
+//! kill-and-resume integration test pins this.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+use crate::sweep::report::ScenarioResult;
+use crate::util::fnv1a_64;
+
+/// Content hash of one scenario: FNV-1a 64 (16 hex chars) over the
+/// canonical run JSON plus the router-sampler tag. `fast_router`
+/// changes the drawn trace (same distribution, different bits), so it
+/// is part of the identity — a checkpoint written with one sampler
+/// never silently satisfies a sweep run with the other.
+pub fn scenario_hash(run: &RunConfig, fast_router: bool) -> String {
+    let doc = json::obj(vec![
+        ("router", json::s(if fast_router { "split" } else { "seq" }.to_string())),
+        ("run", run.to_json()),
+    ]);
+    format!("{:016x}", fnv1a_64(doc.to_string_compact().as_bytes()))
+}
+
+/// Completed scenarios loaded from checkpoint files, keyed by hash.
+#[derive(Debug, Default)]
+pub struct CheckpointSet {
+    map: BTreeMap<String, ScenarioResult>,
+    /// Lines that failed to parse (torn tail of a killed run, stray
+    /// garbage) — skipped, surfaced so the CLI can report them.
+    pub skipped_lines: usize,
+    /// Files that existed and were read.
+    pub loaded_files: usize,
+}
+
+impl CheckpointSet {
+    pub fn empty() -> Self {
+        CheckpointSet::default()
+    }
+
+    /// Load and merge checkpoint files. Missing files are fine (a
+    /// shard that never started); unreadable lines are skipped and
+    /// counted. Later files win on duplicate hashes — by the
+    /// determinism contract duplicates carry identical results, so
+    /// the choice is immaterial.
+    pub fn load(paths: &[PathBuf]) -> Result<Self> {
+        let mut set = CheckpointSet::empty();
+        for path in paths {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => {
+                    return Err(Error::Io(std::io::Error::new(
+                        e.kind(),
+                        format!("checkpoint {}: {e}", path.display()),
+                    )))
+                }
+            };
+            set.loaded_files += 1;
+            for line in text.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match Self::parse_line(line) {
+                    Ok((hash, result)) => {
+                        set.map.insert(hash, result);
+                    }
+                    Err(_) => set.skipped_lines += 1,
+                }
+            }
+        }
+        Ok(set)
+    }
+
+    fn parse_line(line: &str) -> Result<(String, ScenarioResult)> {
+        let v = json::parse(line)?;
+        let hash = v.req_str("hash")?.to_string();
+        let result = ScenarioResult::from_json(
+            v.get("result")
+                .ok_or_else(|| Error::config("checkpoint line missing result"))?,
+        )?;
+        Ok((hash, result))
+    }
+
+    pub fn get(&self, hash: &str) -> Option<&ScenarioResult> {
+        self.map.get(hash)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Appends one line per completed scenario, flushed immediately so a
+/// kill loses at most in-flight work. `disabled()` is the no-op used
+/// when no `--checkpoint` path is configured.
+#[derive(Debug)]
+pub struct CheckpointWriter {
+    out: Option<std::fs::File>,
+}
+
+impl CheckpointWriter {
+    pub fn disabled() -> Self {
+        CheckpointWriter { out: None }
+    }
+
+    /// Start a fresh checkpoint (truncates an existing file — the
+    /// non-`--resume` path).
+    pub fn create(path: &Path) -> Result<Self> {
+        let f = std::fs::File::create(path).map_err(|e| {
+            Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("create checkpoint {}: {e}", path.display()),
+            ))
+        })?;
+        Ok(CheckpointWriter { out: Some(f) })
+    }
+
+    /// Append to an existing checkpoint (the `--resume` path; the file
+    /// may not exist yet). If a previous run died mid-write the file
+    /// ends in a torn fragment without a newline — terminate it first
+    /// so the next record starts on its own line (the fragment stays
+    /// unparseable and is skipped on load; its scenario simply re-runs).
+    pub fn append(path: &Path) -> Result<Self> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = std::fs::File::options()
+            .read(true)
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| {
+                Error::Io(std::io::Error::new(
+                    e.kind(),
+                    format!("append checkpoint {}: {e}", path.display()),
+                ))
+            })?;
+        if f.metadata().map_err(Error::Io)?.len() > 0 {
+            f.seek(SeekFrom::End(-1)).map_err(Error::Io)?;
+            let mut last = [0u8; 1];
+            f.read_exact(&mut last).map_err(Error::Io)?;
+            if last[0] != b'\n' {
+                // append mode: the write lands at EOF regardless of
+                // the read cursor
+                f.write_all(b"\n").map_err(Error::Io)?;
+            }
+        }
+        Ok(CheckpointWriter { out: Some(f) })
+    }
+
+    /// Record one completed scenario. One compact-JSON line, written
+    /// and flushed atomically enough for the torn-line loader: a kill
+    /// mid-write corrupts at most the final line.
+    pub fn record(&mut self, hash: &str, result: &ScenarioResult) -> Result<()> {
+        let Some(f) = self.out.as_mut() else {
+            return Ok(());
+        };
+        let line = json::obj(vec![
+            ("hash", json::s(hash.to_string())),
+            ("result", result.to_json()),
+        ])
+        .to_string_compact();
+        f.write_all(line.as_bytes())
+            .and_then(|_| f.write_all(b"\n"))
+            .and_then(|_| f.flush())
+            .map_err(Error::Io)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{model_i, paper_run, Method};
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("memfine-ckpt-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    fn sample_result(index: usize, seed: u64) -> ScenarioResult {
+        ScenarioResult {
+            index,
+            model: "i".into(),
+            method: Method::FixedChunk(8).name(),
+            seed,
+            iterations: 10,
+            trained: true,
+            oom_iterations: 0,
+            avg_tgs: 1234.5678901234,
+            peak_act_bytes: 9_876_543_210,
+            peak_total_bytes: 19_876_543_210,
+            static_bytes: 5_000_000_000,
+        }
+    }
+
+    #[test]
+    fn hash_is_stable_and_content_sensitive() {
+        let run = paper_run(model_i(), Method::FullRecompute);
+        let h = scenario_hash(&run, false);
+        assert_eq!(h.len(), 16);
+        assert_eq!(h, scenario_hash(&run, false));
+        // every identity-bearing field perturbs the hash
+        let mut seed = run.clone();
+        seed.seed += 1;
+        assert_ne!(h, scenario_hash(&seed, false));
+        let mut iters = run.clone();
+        iters.iterations += 1;
+        assert_ne!(h, scenario_hash(&iters, false));
+        let mut method = run.clone();
+        method.method = Method::FixedChunk(8);
+        assert_ne!(h, scenario_hash(&method, false));
+        let mut mem = run.clone();
+        mem.gpu_mem_bytes /= 2;
+        assert_ne!(h, scenario_hash(&mem, false));
+        // the sampler tag is part of the identity
+        assert_ne!(h, scenario_hash(&run, true));
+    }
+
+    #[test]
+    fn writer_then_loader_roundtrip() {
+        let path = tmp_path("roundtrip");
+        let run = paper_run(model_i(), Method::FixedChunk(8));
+        let hash = scenario_hash(&run, false);
+        let result = sample_result(3, 7);
+        {
+            let mut w = CheckpointWriter::create(&path).unwrap();
+            w.record(&hash, &result).unwrap();
+        }
+        let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.skipped_lines, 0);
+        let back = set.get(&hash).unwrap();
+        assert_eq!(back, &result);
+        assert_eq!(back.avg_tgs.to_bits(), result.avg_tgs.to_bits());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loader_skips_torn_final_line() {
+        let path = tmp_path("torn");
+        let run = paper_run(model_i(), Method::FixedChunk(8));
+        let hash = scenario_hash(&run, false);
+        {
+            let mut w = CheckpointWriter::create(&path).unwrap();
+            w.record(&hash, &sample_result(0, 7)).unwrap();
+        }
+        // simulate a kill mid-write: half a second line, no newline
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::options().append(true).open(&path).unwrap();
+            f.write_all(b"{\"hash\":\"deadbeef\",\"resu").unwrap();
+        }
+        let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.skipped_lines, 1);
+        assert!(set.get(&hash).is_some());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loader_merges_files_and_missing_files_are_fine() {
+        let a = tmp_path("merge-a");
+        let b = tmp_path("merge-b");
+        let run1 = paper_run(model_i(), Method::FullRecompute);
+        let run2 = paper_run(model_i(), Method::FixedChunk(8));
+        let (h1, h2) = (scenario_hash(&run1, false), scenario_hash(&run2, false));
+        {
+            let mut w = CheckpointWriter::create(&a).unwrap();
+            w.record(&h1, &sample_result(0, 7)).unwrap();
+        }
+        {
+            let mut w = CheckpointWriter::create(&b).unwrap();
+            w.record(&h2, &sample_result(1, 7)).unwrap();
+            // duplicate of h1: collapses
+            w.record(&h1, &sample_result(0, 7)).unwrap();
+        }
+        let missing = tmp_path("never-written");
+        let set =
+            CheckpointSet::load(&[a.clone(), b.clone(), missing]).unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.loaded_files, 2);
+        assert!(set.get(&h1).is_some() && set.get(&h2).is_some());
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn append_terminates_torn_tail_before_writing() {
+        let path = tmp_path("torn-append");
+        let run1 = paper_run(model_i(), Method::FullRecompute);
+        let run2 = paper_run(model_i(), Method::FixedChunk(8));
+        let (h1, h2) = (scenario_hash(&run1, false), scenario_hash(&run2, false));
+        {
+            let mut w = CheckpointWriter::create(&path).unwrap();
+            w.record(&h1, &sample_result(0, 7)).unwrap();
+        }
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::options().append(true).open(&path).unwrap();
+            f.write_all(b"{\"hash\":\"torn").unwrap();
+        }
+        {
+            let mut w = CheckpointWriter::append(&path).unwrap();
+            w.record(&h2, &sample_result(1, 7)).unwrap();
+        }
+        let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
+        // both complete records load; only the torn fragment is lost
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.skipped_lines, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn create_truncates_append_preserves() {
+        let path = tmp_path("trunc");
+        let run = paper_run(model_i(), Method::FullRecompute);
+        let hash = scenario_hash(&run, false);
+        {
+            let mut w = CheckpointWriter::create(&path).unwrap();
+            w.record(&hash, &sample_result(0, 7)).unwrap();
+        }
+        {
+            let mut w = CheckpointWriter::append(&path).unwrap();
+            let run2 = paper_run(model_i(), Method::FixedChunk(8));
+            w.record(&scenario_hash(&run2, false), &sample_result(1, 7)).unwrap();
+        }
+        assert_eq!(CheckpointSet::load(std::slice::from_ref(&path)).unwrap().len(), 2);
+        {
+            let _w = CheckpointWriter::create(&path).unwrap();
+        }
+        assert!(CheckpointSet::load(std::slice::from_ref(&path)).unwrap().is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn disabled_writer_is_a_noop() {
+        let mut w = CheckpointWriter::disabled();
+        w.record("abc", &sample_result(0, 1)).unwrap();
+    }
+}

@@ -49,6 +49,48 @@ pub fn expand(cfg: &SweepConfig) -> Result<Vec<Scenario>> {
     Ok(scenarios)
 }
 
+/// The scenarios of one (model, seed) *trace cell*: they differ only
+/// in method, so they share a single routed-token stream
+/// ([`crate::trace::SharedRoutingTrace`]) — this is the execution
+/// granularity of the trace-sharing sweep engine. Scenario `index`
+/// values are the global grid enumeration (methods stride by the seed
+/// count), so any per-scenario reduction is unchanged by the regroup.
+#[derive(Clone, Debug)]
+pub struct TraceCell {
+    /// Model preset name.
+    pub model: String,
+    /// Routing seed shared by the cell's scenarios.
+    pub seed: u64,
+    /// One scenario per method, in the config's method order.
+    pub scenarios: Vec<Scenario>,
+}
+
+/// Expand the grid grouped into (model, seed) trace cells. The cells
+/// enumerate model-major, seed-minor; each cell's scenarios keep their
+/// global grid indices from [`expand`].
+pub fn expand_cells(cfg: &SweepConfig) -> Result<Vec<TraceCell>> {
+    let scenarios = expand(cfg)?;
+    let n_seeds = cfg.seeds.len();
+    let n_methods = cfg.methods.len();
+    let mut cells: Vec<TraceCell> = Vec::with_capacity(cfg.models.len() * n_seeds);
+    for (mi, model_name) in cfg.models.iter().enumerate() {
+        for (si, &seed) in cfg.seeds.iter().enumerate() {
+            let cell_scenarios: Vec<Scenario> = (0..n_methods)
+                .map(|me| scenarios[(mi * n_methods + me) * n_seeds + si].clone())
+                .collect();
+            debug_assert!(cell_scenarios
+                .iter()
+                .all(|s| s.seed == seed && &s.model == model_name));
+            cells.push(TraceCell {
+                model: model_name.clone(),
+                seed,
+                scenarios: cell_scenarios,
+            });
+        }
+    }
+    Ok(cells)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,6 +119,32 @@ mod tests {
         assert_eq!(scenarios[0].method, scenarios[1].method);
         assert_ne!(scenarios[0].seed, scenarios[1].seed);
         assert_ne!(scenarios[1].method, scenarios[2].method);
+    }
+
+    #[test]
+    fn cells_group_by_model_and_seed_preserving_indices() {
+        let cfg = SweepConfig::paper_grid(7, 3, 5);
+        let flat = expand(&cfg).unwrap();
+        let cells = expand_cells(&cfg).unwrap();
+        // 2 models × 3 seeds cells, 3 methods each
+        assert_eq!(cells.len(), 6);
+        let mut seen = vec![false; flat.len()];
+        for cell in &cells {
+            assert_eq!(cell.scenarios.len(), 3);
+            for sc in &cell.scenarios {
+                assert_eq!(sc.model, cell.model);
+                assert_eq!(sc.seed, cell.seed);
+                // the cell's scenario is the flat grid's scenario
+                assert_eq!(sc.method, flat[sc.index].method);
+                assert_eq!(sc.run, flat[sc.index].run);
+                assert!(!seen[sc.index], "index {} duplicated", sc.index);
+                seen[sc.index] = true;
+            }
+            // methods within a cell follow the config's method order
+            assert_eq!(cell.scenarios[0].method, cfg.methods[0]);
+            assert_eq!(cell.scenarios[2].method, cfg.methods[2]);
+        }
+        assert!(seen.iter().all(|&s| s), "cells cover the whole grid");
     }
 
     #[test]

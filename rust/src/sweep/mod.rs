@@ -2,38 +2,62 @@
 //! table/figure grid in the reproduction.
 //!
 //! A sweep is the cross product `models × methods × seeds` from a
-//! [`SweepConfig`], expanded into ordered [`grid::Scenario`]s, fanned
-//! out over a std-thread worker pool ([`pool`], ppl-style: shared
-//! injector + index-tagged result channel), executed through the pure
-//! [`crate::sim::run_scenario`] path, and reduced into a
-//! [`report::SweepReport`] (per-cell avg TGS, OOM rates, activation
-//! peaks, memory-model deltas) with deterministic JSON output.
+//! [`SweepConfig`], expanded into ordered [`grid::Scenario`]s and
+//! grouped into [`grid::TraceCell`]s — the (model, seed) cells whose
+//! scenarios differ only in method. Each cell draws its routed-token
+//! stream **once** ([`crate::trace::SharedRoutingTrace`]) and
+//! evaluates every method against it
+//! ([`crate::sim::run_scenario_on_trace`]): the paper's
+//! paired-comparison structure, exploited for throughput. Workers
+//! stream flat [`report::ScenarioResult`]s back as scenarios finish;
+//! the [`report::SweepReducer`] folds them incrementally in grid-index
+//! order (memory stays O(cells) of aggregate state plus the flat rows
+//! the artifact carries — the heavyweight `RunOutcome`s die in the
+//! workers), and the optional [`checkpoint`] layer appends each result
+//! to a JSON-lines file keyed by scenario content hash, enabling
+//! `--resume`, `--shard i/n` splits, and cross-host merges.
 //!
 //! **Determinism contract:** the report — including its serialised
-//! bytes — depends only on the `SweepConfig`. Worker count and thread
-//! scheduling cannot perturb it, because
+//! bytes — depends only on the `SweepConfig` (and the opt-in
+//! `fast_router` sampler choice). Worker count, thread scheduling,
+//! shard splits, kill/resume points, and checkpoint merge order cannot
+//! perturb it, because
 //!
 //! 1. every scenario derives its RNG streams purely from its own
 //!    config/seed (no shared mutable state, nothing drawn from a
-//!    global generator at execution time);
-//! 2. results are keyed by grid index and re-sorted before reduction,
-//!    so floats accumulate in one fixed order;
-//! 3. JSON objects serialise with sorted keys.
+//!    global generator at execution time), and trace sharing only
+//!    changes *when* a stream is drawn, never *what* is drawn —
+//!    `run_scenario_on_trace` is pinned bit-identical to
+//!    `run_scenario`;
+//! 2. results are keyed by grid index and folded in ascending index
+//!    order whatever their arrival order, so floats accumulate in one
+//!    fixed order (see [`report::SweepReducer`]);
+//! 3. scenario identity under resume is a content hash of the
+//!    resolved run config ([`checkpoint::scenario_hash`]) — grid
+//!    position and execution parameters never enter it;
+//! 4. JSON objects serialise with sorted keys, and every number in a
+//!    checkpoint round-trips bit-exactly.
 //!
-//! `tests/integration_sweep.rs` pins this: a 24-scenario grid run with
-//! 1 worker and 8 workers must emit bit-identical JSON.
+//! `tests/integration_sweep.rs` pins all of it: a 24-scenario grid run
+//! with 1 worker, 8 workers, as two merged shards, and as a killed-
+//! then-resumed sweep must emit bit-identical JSON.
 
+pub mod checkpoint;
 pub mod grid;
 pub mod pool;
 pub mod report;
 
-pub use grid::{expand, Scenario};
-pub use pool::parallel_map_indexed;
-pub use report::{CellStats, ScenarioResult, SweepReport};
+pub use grid::{expand, expand_cells, Scenario, TraceCell};
+pub use pool::{parallel_for_each_indexed, parallel_map_indexed};
+pub use report::{CellStats, ScenarioResult, SweepReducer, SweepReport};
 
-use crate::config::SweepConfig;
-use crate::error::Result;
+use std::path::PathBuf;
+
+use crate::config::{ShardSpec, SweepConfig};
+use crate::error::{Error, Result};
+use crate::router::GatingSim;
 use crate::sim;
+use crate::trace::SharedRoutingTrace;
 
 /// Default worker count: the machine's parallelism, capped so a small
 /// grid doesn't spawn idle threads.
@@ -44,14 +68,224 @@ pub fn default_workers(scenarios: usize) -> usize {
     hw.min(scenarios.max(1))
 }
 
-/// Run the full sweep on `workers` threads and reduce the results.
+/// Execution parameters of one sweep invocation. Deliberately **not**
+/// part of [`SweepConfig`]: the config is the grid's identity (it is
+/// serialised into the artifact and hashed into checkpoints), while
+/// everything here only decides *how* that grid gets executed — the
+/// artifact bytes must come out identical for any choice of these
+/// (`fast_router` excepted: it selects a different, equally valid
+/// sample of the same routing distribution and is therefore part of
+/// the scenario hash).
+#[derive(Clone, Debug, Default)]
+pub struct SweepRunOptions {
+    /// Worker threads (0 = all cores, capped to the grid).
+    pub workers: usize,
+    /// Checkpoint files: the first is the append/write target, all are
+    /// read on `resume` (pass several to merge shard files).
+    pub checkpoint: Vec<PathBuf>,
+    /// Skip scenarios whose content hash already appears in the
+    /// checkpoint files, folding their stored results instead.
+    pub resume: bool,
+    /// Run only the trace cells this shard owns (round-robin by cell
+    /// index, so no shard ever re-draws another shard's traces).
+    pub shard: Option<ShardSpec>,
+    /// Execute at most this many scenarios this invocation (budgeted
+    /// runs; also how the tests simulate a killed sweep). Resumed
+    /// results don't count against it.
+    pub limit: Option<usize>,
+    /// Draw routing traces with the binomial-splitting multinomial
+    /// ([`crate::util::rng::Rng::multinomial_split`]) — same
+    /// distribution, materially faster on peaky expert popularity,
+    /// different bit-stream (so it participates in the scenario hash).
+    pub fast_router: bool,
+}
+
+/// What a sweep invocation did, plus the report it produced.
+#[derive(Debug)]
+pub struct SweepRunSummary {
+    pub report: SweepReport,
+    /// Scenarios in the full grid.
+    pub total: usize,
+    /// Scenarios satisfied from checkpoint files.
+    pub resumed: usize,
+    /// Scenarios executed by this invocation.
+    pub executed: usize,
+    /// Scenarios excluded by the shard split / `limit` (still missing
+    /// from this invocation's report).
+    pub skipped: usize,
+    /// Unparseable checkpoint lines that were ignored (torn tail of a
+    /// killed run).
+    pub skipped_checkpoint_lines: usize,
+}
+
+/// One worker job: the still-to-run scenarios of a trace cell, with
+/// their precomputed content hashes.
+struct CellWork {
+    todo: Vec<(String, grid::Scenario)>,
+}
+
+fn run_cell(work: CellWork, fast_router: bool) -> Result<Vec<(String, ScenarioResult)>> {
+    let first = &work.todo[0].1;
+    // One trace per (model, seed) cell; every method below evaluates
+    // against it. GatingSim only reads (model, parallel, seed), all of
+    // which are method-independent within the cell.
+    let gating = GatingSim::new(
+        first.run.model.clone(),
+        first.run.parallel.clone(),
+        first.run.seed,
+    )
+    .with_fast_multinomial(fast_router);
+    let trace = SharedRoutingTrace::generate(&gating, first.run.iterations);
+    work.todo
+        .into_iter()
+        .map(|(hash, sc)| {
+            debug_assert!(sc.run.method == sc.method && sc.run.seed == sc.seed);
+            let out = sim::run_scenario_on_trace(&sc.run, sc.method.clone(), &trace)?;
+            Ok((hash, ScenarioResult::new(&sc, &out)))
+        })
+        .collect()
+}
+
+/// Run a sweep under the given execution options: resume from
+/// checkpoints, apply the shard filter and scenario budget, execute
+/// the remaining trace cells on the worker pool, stream results
+/// through the reducer (checkpointing each as it lands), and finish
+/// the report. See the module docs for the determinism contract.
+pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<SweepRunSummary> {
+    let cells = grid::expand_cells(cfg)?;
+    let total = cfg.scenario_count();
+
+    if opts.resume && opts.checkpoint.is_empty() {
+        return Err(Error::config("resume requires at least one checkpoint path"));
+    }
+    let done = if opts.resume {
+        checkpoint::CheckpointSet::load(&opts.checkpoint)?
+    } else {
+        checkpoint::CheckpointSet::empty()
+    };
+    let mut writer = match opts.checkpoint.first() {
+        None => checkpoint::CheckpointWriter::disabled(),
+        Some(p) if opts.resume => checkpoint::CheckpointWriter::append(p)?,
+        Some(p) => checkpoint::CheckpointWriter::create(p)?,
+    };
+
+    let mut reducer = SweepReducer::new(cfg.clone())?;
+    let mut resumed = 0usize;
+    let mut skipped = 0usize;
+    let mut budget = opts.limit.unwrap_or(usize::MAX);
+    let mut work: Vec<CellWork> = Vec::new();
+    // Hashing serialises the full run envelope per scenario — only
+    // worth it when a checkpoint will be read or written.
+    let hashing = !opts.checkpoint.is_empty();
+    for (cell_index, cell) in cells.into_iter().enumerate() {
+        // Shard ownership is per trace *cell*, never per scenario: a
+        // split cell would force every shard to re-draw the same
+        // routing trace — the exact cost trace sharing removes. Cells
+        // are homogeneous (each holds one scenario per method), so
+        // round-robin over cells balances shards as well as scenario
+        // striding did.
+        let owned = match opts.shard {
+            Some(s) => s.owns(cell_index),
+            None => true,
+        };
+        let mut todo = Vec::new();
+        for sc in cell.scenarios {
+            // Resume must hash every scenario (other shards' rows fold
+            // in regardless of ownership); a write-only checkpoint run
+            // needs hashes only for the scenarios it will execute.
+            let hash = if opts.resume || (hashing && owned) {
+                checkpoint::scenario_hash(&sc.run, opts.fast_router)
+            } else {
+                String::new()
+            };
+            if let Some(prev) = done.get(&hash) {
+                // hashes are grid-position-independent; re-key the
+                // stored row into this grid's enumeration and re-label
+                // it with this grid's spellings (a checkpoint written
+                // from an aliased grid — model "1" vs "i" — hashes
+                // identically but must not leak its labels into the
+                // artifact)
+                let mut row = prev.clone();
+                row.index = sc.index;
+                row.model = sc.model.clone();
+                row.method = sc.method.name();
+                row.seed = sc.seed;
+                reducer.push(row);
+                resumed += 1;
+            } else if owned && budget > 0 {
+                budget -= 1;
+                todo.push((hash, sc));
+            } else {
+                skipped += 1;
+            }
+        }
+        if !todo.is_empty() {
+            work.push(CellWork { todo });
+        }
+    }
+    let executed: usize = work.iter().map(|w| w.todo.len()).sum();
+    let workers = if opts.workers == 0 {
+        default_workers(work.len().max(1))
+    } else {
+        opts.workers
+    };
+
+    // Stream: each finished cell delivers its rows on this thread —
+    // checkpoint line out first (kill-safety), then fold.
+    let mut first_err: Option<Error> = None;
+    let fast_router = opts.fast_router;
+    pool::parallel_for_each_indexed(
+        work,
+        workers,
+        |_, w| run_cell(w, fast_router),
+        |_, res| match res {
+            Ok(rows) => {
+                for (hash, row) in rows {
+                    if let Err(e) = writer.record(&hash, &row) {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                    reducer.push(row);
+                }
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        },
+    );
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    Ok(SweepRunSummary {
+        report: reducer.finish(),
+        total,
+        resumed,
+        executed,
+        skipped,
+        skipped_checkpoint_lines: done.skipped_lines,
+    })
+}
+
+/// Run the full sweep on `workers` threads and reduce the results —
+/// the plain path (no checkpointing/sharding) used by the CLI default,
+/// examples and tests.
 pub fn run_sweep(cfg: &SweepConfig, workers: usize) -> Result<SweepReport> {
+    let opts = SweepRunOptions { workers, ..SweepRunOptions::default() };
+    Ok(run_sweep_with(cfg, &opts)?.report)
+}
+
+/// The pre-trace-sharing execution path: every scenario draws its own
+/// routing trace through the pure [`sim::run_scenario`]. Kept as the
+/// A/B reference — `benches/sweep_scaling.rs` measures trace sharing
+/// against it, and the unit tests pin both paths to identical bytes
+/// (which is the trace-sharing correctness argument in one line).
+pub fn run_sweep_legacy(cfg: &SweepConfig, workers: usize) -> Result<SweepReport> {
     let scenarios = grid::expand(cfg)?;
     let outcomes = pool::parallel_map_indexed(scenarios, workers, |_, sc| {
-        // Scenario carries (method, seed) both as report labels and
-        // pre-applied in `run`; the explicit arguments below are the
-        // authoritative pair (run_scenario re-applies them), and this
-        // assert keeps the label copies from ever drifting.
         debug_assert!(sc.run.method == sc.method && sc.run.seed == sc.seed);
         let out = sim::run_scenario(&sc.run, sc.method.clone(), sc.seed);
         (sc, out)
@@ -103,6 +337,77 @@ mod tests {
             a.to_json().to_string_pretty(),
             b.to_json().to_string_pretty()
         );
+    }
+
+    #[test]
+    fn trace_sharing_matches_legacy_bytes() {
+        // THE trace-sharing invariant at engine level: the shared-trace
+        // engine and the per-scenario legacy path emit identical bytes.
+        let shared = run_sweep(&tiny_grid(), 2).unwrap();
+        let legacy = run_sweep_legacy(&tiny_grid(), 2).unwrap();
+        assert_eq!(
+            shared.to_json().to_string_pretty(),
+            legacy.to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn fast_router_is_deterministic_but_a_different_sample() {
+        let opts = |w| SweepRunOptions { workers: w, fast_router: true, ..Default::default() };
+        let a = run_sweep_with(&tiny_grid(), &opts(1)).unwrap();
+        let b = run_sweep_with(&tiny_grid(), &opts(4)).unwrap();
+        assert_eq!(
+            a.report.to_json().to_string_pretty(),
+            b.report.to_json().to_string_pretty()
+        );
+        let default = run_sweep(&tiny_grid(), 2).unwrap();
+        // same grid shape, different drawn sample
+        assert_eq!(a.report.scenarios.len(), default.scenarios.len());
+        assert!(a
+            .report
+            .scenarios
+            .iter()
+            .zip(&default.scenarios)
+            .any(|(f, s)| f.peak_act_bytes != s.peak_act_bytes));
+    }
+
+    #[test]
+    fn shard_runs_partition_the_grid() {
+        let cfg = tiny_grid();
+        let shard = |i| SweepRunOptions {
+            workers: 2,
+            shard: Some(crate::config::ShardSpec { index: i, count: 2 }),
+            ..Default::default()
+        };
+        let s0 = run_sweep_with(&cfg, &shard(0)).unwrap();
+        let s1 = run_sweep_with(&cfg, &shard(1)).unwrap();
+        assert_eq!(s0.executed + s1.executed, cfg.scenario_count());
+        assert_eq!(s0.skipped, s1.executed);
+        let mut indices: Vec<usize> = s0
+            .report
+            .scenarios
+            .iter()
+            .chain(&s1.report.scenarios)
+            .map(|r| r.index)
+            .collect();
+        indices.sort_unstable();
+        assert_eq!(indices, (0..cfg.scenario_count()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn limit_caps_executed_scenarios() {
+        let cfg = tiny_grid();
+        let opts = SweepRunOptions { workers: 1, limit: Some(3), ..Default::default() };
+        let s = run_sweep_with(&cfg, &opts).unwrap();
+        assert_eq!(s.executed, 3);
+        assert_eq!(s.skipped, 1);
+        assert_eq!(s.report.scenarios.len(), 3);
+    }
+
+    #[test]
+    fn resume_without_checkpoint_errors() {
+        let opts = SweepRunOptions { resume: true, ..Default::default() };
+        assert!(run_sweep_with(&tiny_grid(), &opts).is_err());
     }
 
     #[test]

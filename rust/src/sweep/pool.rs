@@ -6,32 +6,46 @@
 //!
 //! Scheduling order is nondeterministic by design (whichever worker is
 //! free takes the next job), but the *output* is not: every job
-//! carries its index, the caller reassembles results by index, and
-//! jobs are pure functions of their input — so the returned `Vec` is
-//! bit-identical for any worker count. The sweep engine's determinism
-//! guarantee rests on exactly this property.
+//! carries its index, jobs are pure functions of their input, and the
+//! consumer keys everything by that index — so any index-keyed
+//! reduction is bit-identical for any worker count. The sweep engine's
+//! determinism guarantee rests on exactly this property.
+//!
+//! Two entry points: [`parallel_for_each_indexed`] streams each result
+//! to a caller-side consumer as it lands (the million-scenario path —
+//! nothing is retained in the pool), and [`parallel_map_indexed`]
+//! collects into an input-ordered `Vec` on top of it.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::Mutex;
 
-/// Map `f` over `items` on `workers` threads, preserving input order
-/// in the output. `f` receives `(index, item)`. With `workers <= 1`
-/// the map runs inline on the caller's thread (no spawn overhead) —
-/// the parallel and serial paths produce identical results.
-pub fn parallel_map_indexed<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+/// Run `f` over `items` on `workers` threads, streaming every result
+/// to `consume` on the **caller's thread** as it arrives. `f` receives
+/// `(index, item)`; `consume` receives `(index, result)` in completion
+/// order, which is nondeterministic for `workers > 1` — consumers must
+/// key on the index (the sweep reducer folds by grid index for exactly
+/// this reason). With `workers <= 1` the loop runs inline in input
+/// order with no threads spawned; serial and parallel deliver the same
+/// (index, result) multiset.
+pub fn parallel_for_each_indexed<T, R, F, C>(items: Vec<T>, workers: usize, f: F, mut consume: C)
 where
     T: Send,
     R: Send,
     F: Fn(usize, T) -> R + Sync,
+    C: FnMut(usize, R),
 {
     let n = items.len();
     if n == 0 {
-        return Vec::new();
+        return;
     }
     let workers = workers.max(1).min(n);
     if workers == 1 {
-        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        for (i, t) in items.into_iter().enumerate() {
+            let r = f(i, t);
+            consume(i, r);
+        }
+        return;
     }
 
     // Global injector: workers steal the next job when idle, so a slow
@@ -60,15 +74,31 @@ where
             });
         }
         drop(tx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
         for (i, r) in rx {
-            debug_assert!(out[i].is_none(), "job {i} delivered twice");
-            out[i] = Some(r);
+            consume(i, r);
         }
-        out.into_iter()
-            .map(|r| r.expect("every job delivers exactly one result"))
-            .collect()
     })
+}
+
+/// Map `f` over `items` on `workers` threads, preserving input order
+/// in the output. Collect-all convenience over
+/// [`parallel_for_each_indexed`]; prefer the streaming form when
+/// results are large or the grid is (the sweep engine does).
+pub fn parallel_map_indexed<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    parallel_for_each_indexed(items, workers, f, |i, r| {
+        debug_assert!(out[i].is_none(), "job {i} delivered twice");
+        out[i] = Some(r);
+    });
+    out.into_iter()
+        .map(|r| r.expect("every job delivers exactly one result"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -106,6 +136,28 @@ mod tests {
     fn single_item_more_workers_than_jobs() {
         let out = parallel_map_indexed(vec![41u64], 16, |_, x| x + 1);
         assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn streaming_delivers_every_result_exactly_once() {
+        for workers in [1usize, 4, 16] {
+            let items: Vec<u64> = (0..50).collect();
+            let mut seen = vec![0u32; 50];
+            let mut sum = 0u64;
+            parallel_for_each_indexed(items, workers, |_, x| x * 3, |i, r| {
+                seen[i] += 1;
+                sum += r;
+            });
+            assert!(seen.iter().all(|&c| c == 1), "workers={workers}: {seen:?}");
+            assert_eq!(sum, (0..50u64).map(|x| x * 3).sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn streaming_serial_is_input_order() {
+        let mut order = Vec::new();
+        parallel_for_each_indexed((0..10u64).collect(), 1, |_, x| x, |i, _| order.push(i));
+        assert_eq!(order, (0..10).collect::<Vec<usize>>());
     }
 
     #[test]

@@ -1,16 +1,29 @@
 //! Sweep reduction: per-scenario rows and per-(model, method) cell
 //! aggregates, serialised as deterministic JSON.
 //!
-//! Everything here is computed from scenario results **sorted by grid
-//! index**, with floating-point accumulation in that fixed order, and
-//! serialised through the crate's sorted-key JSON writer — so the
-//! emitted bytes are identical for any worker count or scheduling
-//! order. The integration suite asserts this bit-for-bit.
+//! The reducer is **streaming**: workers hand over flat
+//! [`ScenarioResult`]s (≈100 bytes each) the moment a scenario
+//! finishes, and [`SweepReducer`] folds them into per-cell
+//! accumulators incrementally — the heavyweight
+//! [`RunOutcome`](crate::sim::RunOutcome)s (every iteration × layer
+//! trace) die inside the worker, so sweep memory is O(cells) of
+//! aggregate state plus the flat rows the artifact itself carries,
+//! never O(scenarios × iterations × layers).
+//!
+//! **Ordering guarantee:** every float accumulates in ascending grid
+//! index order, regardless of arrival order. The reducer folds the
+//! contiguous frontier as results stream in and folds any remaining
+//! (sparse, e.g. sharded) rows index-ascending at `finish()` — both
+//! paths visit rows in the same total order, so the emitted bytes are
+//! identical for any worker count, shard split, or resume point. The
+//! integration suite asserts this bit-for-bit.
 //!
 //! The aggregates are the paper's own headline quantities: average TGS
 //! (Eq. 10) over trained runs, OOM rates (Eq. 3 violations), peak
 //! activation bytes (Eq. 2), and the memory-model deltas of each
-//! method against Method 1 (Table 4's reduction percentages).
+//! method against Method 1 (Table 4's reduction percentages) — the
+//! deltas are computed from the folded cell aggregates alone, so no
+//! per-scenario state is retained for them either.
 
 use crate::bench::BenchReport;
 use crate::config::SweepConfig;
@@ -58,7 +71,10 @@ impl ScenarioResult {
         }
     }
 
-    fn to_json(&self) -> Value {
+    /// Serialise one row — also the checkpoint line payload, so the
+    /// fields must round-trip exactly (integers stay ≤ 2⁵³; floats go
+    /// through the writer's shortest-round-trip formatting).
+    pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("index", json::num(self.index as f64)),
             ("model", json::s(self.model.clone())),
@@ -72,6 +88,26 @@ impl ScenarioResult {
             ("peak_total_bytes", json::num(self.peak_total_bytes as f64)),
             ("static_bytes", json::num(self.static_bytes as f64)),
         ])
+    }
+
+    /// Parse a row back (checkpoint resume path).
+    pub fn from_json(v: &Value) -> crate::Result<Self> {
+        Ok(ScenarioResult {
+            index: v.req_u64("index")? as usize,
+            model: v.req_str("model")?.to_string(),
+            method: v.req_str("method")?.to_string(),
+            seed: v.req_u64("seed")?,
+            iterations: v.req_u64("iterations")?,
+            trained: v
+                .get("trained")
+                .and_then(Value::as_bool)
+                .ok_or_else(|| crate::Error::config("row missing 'trained'"))?,
+            oom_iterations: v.req_u64("oom_iterations")?,
+            avg_tgs: v.req_f64("avg_tgs")?,
+            peak_act_bytes: v.req_u64("peak_act_bytes")?,
+            peak_total_bytes: v.req_u64("peak_total_bytes")?,
+            static_bytes: v.req_u64("static_bytes")?,
+        })
     }
 }
 
@@ -131,56 +167,146 @@ pub struct SweepReport {
     pub cells: Vec<CellStats>,
 }
 
-impl SweepReport {
-    /// Reduce scenario results (any order) into the report. Results
-    /// are sorted by grid index first so every float accumulates in a
-    /// fixed order.
-    pub fn build(config: SweepConfig, mut results: Vec<ScenarioResult>) -> Self {
-        results.sort_by_key(|r| r.index);
-        // Cells follow the config's model × method enumeration order.
-        let mut cells = Vec::with_capacity(config.models.len() * config.methods.len());
-        for model in &config.models {
-            for method in &config.methods {
-                let name = method.name();
-                let cell: Vec<&ScenarioResult> = results
-                    .iter()
-                    .filter(|r| &r.model == model && r.method == name)
-                    .collect();
-                if cell.is_empty() {
+/// Running aggregate of one (model, method) cell — everything
+/// [`CellStats`] derives from, foldable one [`ScenarioResult`] at a
+/// time. Order sensitivity lives entirely in `tgs_sum` (float
+/// accumulation), which is why the reducer pins the fold order.
+#[derive(Clone, Debug, Default)]
+struct CellAccumulator {
+    runs: u64,
+    trained_runs: u64,
+    /// Sum of per-run avg TGS over trained runs, folded in ascending
+    /// grid index order.
+    tgs_sum: f64,
+    total_iters: u64,
+    oom_iters: u64,
+    peak_act_bytes: u64,
+    peak_total_bytes: u64,
+    static_bytes: u64,
+}
+
+impl CellAccumulator {
+    fn fold(&mut self, r: &ScenarioResult) {
+        self.runs += 1;
+        if r.trained {
+            self.trained_runs += 1;
+            self.tgs_sum += r.avg_tgs;
+        }
+        self.total_iters += r.iterations;
+        self.oom_iters += r.oom_iterations;
+        self.peak_act_bytes = self.peak_act_bytes.max(r.peak_act_bytes);
+        self.peak_total_bytes = self.peak_total_bytes.max(r.peak_total_bytes);
+        self.static_bytes = self.static_bytes.max(r.static_bytes);
+    }
+
+    fn stats(&self, model: &str, method: &str) -> CellStats {
+        CellStats {
+            model: model.to_string(),
+            method: method.to_string(),
+            runs: self.runs,
+            trained_runs: self.trained_runs,
+            oom_run_rate: (self.runs - self.trained_runs) as f64 / self.runs as f64,
+            oom_iteration_rate: if self.total_iters == 0 {
+                0.0
+            } else {
+                self.oom_iters as f64 / self.total_iters as f64
+            },
+            avg_tgs: if self.trained_runs == 0 {
+                0.0
+            } else {
+                self.tgs_sum / self.trained_runs as f64
+            },
+            peak_act_bytes: self.peak_act_bytes,
+            peak_total_bytes: self.peak_total_bytes,
+            static_bytes: self.static_bytes,
+            act_reduction_vs_m1_pct: None,
+            tgs_vs_m1_pct: None,
+        }
+    }
+}
+
+/// Streaming sweep reduction: results arrive in any order (worker
+/// completion, checkpoint replay, shard merge), get buffered by grid
+/// index, and fold into [`CellAccumulator`]s strictly
+/// **index-ascending** — the contiguous frontier folds as results
+/// stream in; anything left sparse (sharded or `--limit`ed runs) folds
+/// index-ascending at [`SweepReducer::finish`]. Since both paths visit
+/// rows in the same total order, the finished report depends only on
+/// the *set* of results, never on arrival order — the reducer-level
+/// statement of the sweep determinism contract.
+pub struct SweepReducer {
+    config: SweepConfig,
+    n_seeds: usize,
+    rows: Vec<Option<ScenarioResult>>,
+    folded: Vec<bool>,
+    frontier: usize,
+    cells: Vec<CellAccumulator>,
+}
+
+impl SweepReducer {
+    pub fn new(config: SweepConfig) -> crate::Result<Self> {
+        config.validate()?;
+        let n = config.scenario_count();
+        let n_cells = config.models.len() * config.methods.len();
+        Ok(SweepReducer {
+            n_seeds: config.seeds.len(),
+            rows: (0..n).map(|_| None).collect(),
+            folded: vec![false; n],
+            frontier: 0,
+            cells: vec![CellAccumulator::default(); n_cells],
+            config,
+        })
+    }
+
+    /// Number of results received so far.
+    pub fn received(&self) -> usize {
+        self.rows.iter().flatten().count()
+    }
+
+    /// Hand one result to the reducer. Panics on an out-of-grid index
+    /// or a duplicate — both are caller bugs (the checkpoint layer
+    /// dedups by scenario hash before results reach here).
+    pub fn push(&mut self, r: ScenarioResult) {
+        let idx = r.index;
+        assert!(idx < self.rows.len(), "scenario index {idx} outside the grid");
+        assert!(self.rows[idx].is_none(), "scenario index {idx} delivered twice");
+        self.rows[idx] = Some(r);
+        while self.frontier < self.rows.len() && self.rows[self.frontier].is_some() {
+            self.fold_row(self.frontier);
+            self.frontier += 1;
+        }
+    }
+
+    fn fold_row(&mut self, idx: usize) {
+        debug_assert!(!self.folded[idx]);
+        let row = self.rows[idx].as_ref().expect("row present");
+        // grid order is (model, method, seed): index / seeds = cell id
+        // in (model-major, method-minor) enumeration
+        let cell = idx / self.n_seeds;
+        self.cells[cell].fold(row);
+        self.folded[idx] = true;
+    }
+
+    /// Finish the reduction. Folds any still-unfolded rows in
+    /// ascending index order (sparse grids: shards, limited runs),
+    /// derives the per-cell stats in the config's model × method
+    /// enumeration order (skipping cells with no runs), and computes
+    /// the Table-4 deltas vs each model's Method 1 cell from the
+    /// folded aggregates alone.
+    pub fn finish(mut self) -> SweepReport {
+        for idx in 0..self.rows.len() {
+            if self.rows[idx].is_some() && !self.folded[idx] {
+                self.fold_row(idx);
+            }
+        }
+        let mut cells = Vec::with_capacity(self.cells.len());
+        for (mi, model) in self.config.models.iter().enumerate() {
+            for (me, method) in self.config.methods.iter().enumerate() {
+                let acc = &self.cells[mi * self.config.methods.len() + me];
+                if acc.runs == 0 {
                     continue;
                 }
-                let runs = cell.len() as u64;
-                let trained: Vec<&&ScenarioResult> =
-                    cell.iter().filter(|r| r.trained).collect();
-                let total_iters: u64 = cell.iter().map(|r| r.iterations).sum();
-                let oom_iters: u64 = cell.iter().map(|r| r.oom_iterations).sum();
-                let avg_tgs = if trained.is_empty() {
-                    0.0
-                } else {
-                    trained.iter().map(|r| r.avg_tgs).sum::<f64>() / trained.len() as f64
-                };
-                cells.push(CellStats {
-                    model: model.clone(),
-                    method: name,
-                    runs,
-                    trained_runs: trained.len() as u64,
-                    oom_run_rate: (runs - trained.len() as u64) as f64 / runs as f64,
-                    oom_iteration_rate: if total_iters == 0 {
-                        0.0
-                    } else {
-                        oom_iters as f64 / total_iters as f64
-                    },
-                    avg_tgs,
-                    peak_act_bytes: cell.iter().map(|r| r.peak_act_bytes).max().unwrap_or(0),
-                    peak_total_bytes: cell
-                        .iter()
-                        .map(|r| r.peak_total_bytes)
-                        .max()
-                        .unwrap_or(0),
-                    static_bytes: cell.iter().map(|r| r.static_bytes).max().unwrap_or(0),
-                    act_reduction_vs_m1_pct: None,
-                    tgs_vs_m1_pct: None,
-                });
+                cells.push(acc.stats(model, &method.name()));
             }
         }
         // Second pass: memory-model deltas vs each model's Method 1
@@ -210,7 +336,25 @@ impl SweepReport {
                 }
             }
         }
-        SweepReport { config, scenarios: results, cells }
+        SweepReport {
+            config: self.config,
+            scenarios: self.rows.into_iter().flatten().collect(),
+            cells,
+        }
+    }
+}
+
+impl SweepReport {
+    /// Reduce scenario results (any order) into the report via
+    /// [`SweepReducer`] — retained as the collect-then-reduce
+    /// convenience; the sweep engine streams into the reducer
+    /// directly.
+    pub fn build(config: SweepConfig, results: Vec<ScenarioResult>) -> Self {
+        let mut reducer = SweepReducer::new(config).expect("valid sweep config");
+        for r in results {
+            reducer.push(r);
+        }
+        reducer.finish()
     }
 
     /// Deterministic JSON artifact (sorted keys, fixed array order).
@@ -354,6 +498,72 @@ mod tests {
         assert_eq!(ja, jb);
         // and the artifact reparses
         crate::json::parse(&ja).unwrap();
+    }
+
+    #[test]
+    fn reducer_arrival_order_does_not_change_bytes() {
+        let m1 = Method::FullRecompute;
+        let m2 = Method::FixedChunk(8);
+        let rows = vec![
+            result(0, "i", &m1, 1, true, 100.0, 1000),
+            result(1, "i", &m1, 2, false, 0.0, 1200),
+            result(2, "i", &m2, 1, true, 110.25, 500),
+            result(3, "i", &m2, 2, true, 120.75, 400),
+        ];
+        // streamed in-order vs streamed reversed vs build()
+        let mut fwd = SweepReducer::new(two_cell_config()).unwrap();
+        for r in rows.clone() {
+            fwd.push(r);
+        }
+        let mut rev = SweepReducer::new(two_cell_config()).unwrap();
+        for r in rows.iter().rev().cloned() {
+            rev.push(r);
+        }
+        let a = fwd.finish().to_json().to_string_pretty();
+        let b = rev.finish().to_json().to_string_pretty();
+        let c = SweepReport::build(two_cell_config(), rows)
+            .to_json()
+            .to_string_pretty();
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn reducer_partial_grid_folds_sparse_rows() {
+        // A shard that only ran (m2, seed 2): one row, index 3.
+        let m2 = Method::FixedChunk(8);
+        let mut red = SweepReducer::new(two_cell_config()).unwrap();
+        red.push(result(3, "i", &m2, 2, true, 120.0, 400));
+        assert_eq!(red.received(), 1);
+        let report = red.finish();
+        assert_eq!(report.scenarios.len(), 1);
+        assert_eq!(report.cells.len(), 1); // empty m1 cell skipped
+        assert_eq!(report.cells[0].runs, 1);
+        // no m1 baseline present → no delta
+        assert!(report.cells[0].act_reduction_vs_m1_pct.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "delivered twice")]
+    fn reducer_rejects_duplicate_index() {
+        let m1 = Method::FullRecompute;
+        let mut red = SweepReducer::new(two_cell_config()).unwrap();
+        red.push(result(0, "i", &m1, 1, true, 100.0, 1000));
+        red.push(result(0, "i", &m1, 1, true, 100.0, 1000));
+    }
+
+    #[test]
+    fn scenario_result_json_roundtrip_exact() {
+        let m2 = Method::FixedChunk(8);
+        let mut r = result(5, "ii", &m2, 9, true, 0.1 + 0.2, 123_456_789_012);
+        r.avg_tgs = 12345.678901234567;
+        let v = r.to_json();
+        let text = v.to_string_compact();
+        let back = ScenarioResult::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+        // float round-trips to the exact same bits — the resume path's
+        // byte-identity depends on it
+        assert_eq!(back.avg_tgs.to_bits(), r.avg_tgs.to_bits());
     }
 
     #[test]

@@ -4,9 +4,16 @@
 //! Fig. 2 is one iteration's slice of a [`RoutingTrace`]; Fig. 5 is a
 //! [`ChunkTrace`] rendered layer × iteration. Benches write these next
 //! to their stdout tables so plots can be regenerated offline.
+//!
+//! [`SharedRoutingTrace`] is the execution-side counterpart: the
+//! routed-token stream of one (model, gating, seed) cell, drawn *once*
+//! and evaluated by every method — the paper's paired-comparison
+//! structure (Methods 1/2/3 on identical token streams) made
+//! first-class, and the sweep engine's main throughput lever.
 
 use crate::json::{self, Value};
 use crate::metrics::CsvWriter;
+use crate::router::GatingSim;
 use crate::Result;
 
 /// Per-(iteration, layer) routing statistics.
@@ -56,6 +63,88 @@ impl RoutingTrace {
             ])?;
         }
         Ok(String::from_utf8(w.into_inner()).expect("csv is utf8"))
+    }
+}
+
+/// The routed-token stream of one (model, gating, seed) cell, drawn
+/// once per cell and shared by every method evaluated against it.
+///
+/// MemFine's comparison is *paired by construction*: Methods 1/2/3
+/// differ only in how they chunk/recompute, never in where tokens
+/// land, so the routing statistics per (iteration, MoE layer) are
+/// method-independent. Historically each `run_scenario` re-drew the
+/// full multinomial trace; generating it once here removes the
+/// dominant per-scenario cost from all but the first method of a cell.
+///
+/// Determinism: [`GatingSim::route`] forks a fresh RNG stream from
+/// `(seed, iteration, layer)` for every draw, so the records here are
+/// bit-identical to what per-method drawing produced — trace sharing
+/// changes *when* the stream is drawn, never *what* is drawn. The
+/// records are stored iteration-major, MoE-layer-minor, matching the
+/// order the simulator historically drew them in.
+#[derive(Clone, Debug)]
+pub struct SharedRoutingTrace {
+    /// The routing seed the trace was drawn from (becomes the
+    /// scenario seed of every method evaluated against it).
+    pub seed: u64,
+    /// Iterations covered (methods may simulate fewer, never more).
+    pub iterations: u64,
+    /// The model the trace was drawn for. Part of the trace's
+    /// identity: the records are meaningless against any other model.
+    pub model: crate::config::ModelConfig,
+    /// The parallelism layout the per-rank statistics were computed
+    /// under (EP width shapes `min_recv`/`max_recv`) — identity too.
+    pub parallel: crate::config::ParallelConfig,
+    /// One record per (iteration, MoE layer), iteration-major.
+    pub records: Vec<RoutingRecord>,
+}
+
+impl SharedRoutingTrace {
+    /// Draw the full trace for `iterations` iterations of the job
+    /// `gating` describes. The per-(iteration, layer) statistics are
+    /// exactly what [`GatingSim::route`] + `summary()` produce.
+    pub fn generate(gating: &GatingSim, iterations: u64) -> Self {
+        let layers = gating.model.layers;
+        let dense_layers = gating.model.dense_layers;
+        let moe = (layers - dense_layers) as usize;
+        let mut records = Vec::with_capacity(moe * iterations as usize);
+        for iteration in 0..iterations {
+            for layer in dense_layers..layers {
+                let r = gating.route(iteration, layer);
+                let s = r.summary();
+                records.push(RoutingRecord {
+                    iteration,
+                    layer,
+                    min_recv: r.min_received(),
+                    mean_recv: s.mean(),
+                    max_recv: r.max_received(),
+                });
+            }
+        }
+        SharedRoutingTrace {
+            seed: gating.seed(),
+            iterations,
+            model: gating.model.clone(),
+            parallel: gating.parallel.clone(),
+            records,
+        }
+    }
+
+    /// MoE layers per iteration (the stride of `records`).
+    pub fn moe_layers(&self) -> usize {
+        (self.model.layers - self.model.dense_layers) as usize
+    }
+
+    /// The records of one iteration, ordered by ascending MoE layer.
+    pub fn iteration(&self, it: u64) -> &[RoutingRecord] {
+        let stride = self.moe_layers();
+        let start = it as usize * stride;
+        &self.records[start..start + stride]
+    }
+
+    /// Peak received tokens anywhere in the trace.
+    pub fn peak_recv(&self) -> u64 {
+        self.records.iter().map(|r| r.max_recv).max().unwrap_or(0)
     }
 }
 
@@ -182,6 +271,32 @@ mod tests {
             t.push(ChunkRecord { iteration: 1, layer: l, chosen_c: 4 });
         }
         assert_eq!(t.mean_per_iteration(2), vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn shared_trace_matches_direct_route_stats() {
+        use crate::config::{model_i, paper_parallel};
+        let gating = crate::router::GatingSim::new(model_i(), paper_parallel(), 7);
+        let trace = SharedRoutingTrace::generate(&gating, 3);
+        // 13 MoE layers × 3 iterations, iteration-major
+        assert_eq!(trace.moe_layers(), 13);
+        assert_eq!(trace.records.len(), 39);
+        assert_eq!(trace.seed, 7);
+        for it in 0..3u64 {
+            let slice = trace.iteration(it);
+            assert_eq!(slice.len(), 13);
+            for (off, rec) in slice.iter().enumerate() {
+                assert_eq!(rec.iteration, it);
+                assert_eq!(rec.layer, 3 + off as u64);
+                // bit-identical to drawing the same (iteration, layer)
+                // directly: route() forks its streams statelessly
+                let direct = gating.route(it, rec.layer);
+                assert_eq!(rec.max_recv, direct.max_received());
+                assert_eq!(rec.min_recv, direct.min_received());
+                assert_eq!(rec.mean_recv, direct.summary().mean());
+            }
+        }
+        assert!(trace.peak_recv() > 0);
     }
 
     #[test]

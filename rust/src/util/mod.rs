@@ -28,6 +28,22 @@ pub fn ceil_div(a: u64, b: u64) -> u64 {
     a.div_ceil(b)
 }
 
+/// FNV-1a 64-bit hash — the checkpoint layer's content hash over
+/// canonical scenario JSON. Not cryptographic; chosen because it is
+/// tiny, dependency-free, and stable across platforms/versions (the
+/// std `Hasher` is explicitly not stable), which is what a resumable
+/// artifact format needs.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -51,5 +67,20 @@ mod tests {
     #[should_panic]
     fn ceil_div_zero_denominator_panics() {
         ceil_div(1, 0);
+    }
+
+    #[test]
+    fn fnv1a_64_known_vectors() {
+        // Published FNV-1a test vectors: the empty string hashes to the
+        // offset basis; "a" and "foobar" are from the reference table.
+        assert_eq!(fnv1a_64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv1a_64_sensitivity() {
+        assert_ne!(fnv1a_64(b"scenario-1"), fnv1a_64(b"scenario-2"));
+        assert_ne!(fnv1a_64(b"ab"), fnv1a_64(b"ba"));
     }
 }

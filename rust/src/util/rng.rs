@@ -132,12 +132,25 @@ impl Rng {
     /// popularity vector of the routing simulator. Smaller alpha ⇒ more
     /// concentrated (imbalanced) distributions.
     pub fn dirichlet(&mut self, alpha: &[f64]) -> Vec<f64> {
-        let mut draws: Vec<f64> = alpha.iter().map(|&a| self.gamma(a)).collect();
+        let draws: Vec<f64> = alpha.iter().map(|&a| self.gamma(a)).collect();
+        Self::normalize_simplex(draws)
+    }
+
+    /// Symmetric `Dirichlet(alpha·1)` of dimension `n`: bit-identical to
+    /// `dirichlet(&vec![alpha; n])` (same gamma draw sequence) without
+    /// materialising the concentration vector — the routing hot path
+    /// calls this once per (iteration, layer).
+    pub fn dirichlet_symmetric(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let draws: Vec<f64> = (0..n).map(|_| self.gamma(alpha)).collect();
+        Self::normalize_simplex(draws)
+    }
+
+    fn normalize_simplex(mut draws: Vec<f64>) -> Vec<f64> {
         let sum: f64 = draws.iter().sum();
         if sum <= 0.0 {
             // pathological underflow: fall back to uniform
-            let n = alpha.len() as f64;
-            return vec![1.0 / n; alpha.len()];
+            let n = draws.len() as f64;
+            return vec![1.0 / n; draws.len()];
         }
         for d in &mut draws {
             *d /= sum;
@@ -148,6 +161,14 @@ impl Rng {
     /// Multinomial: distribute `n` trials over `probs` (must sum ≈ 1).
     /// O(n) sequential sampling via inverse CDF per trial would be slow
     /// for n≈10⁵; uses the conditional-binomial decomposition instead.
+    ///
+    /// This is the reference ("slow") path: one conditional binomial
+    /// per category, left to right. [`Rng::multinomial_split`] is the
+    /// same decomposition over a balanced split tree — cheaper on the
+    /// peaky distributions the router produces — but consumes the
+    /// stream in a different order, so the two samplers are equal in
+    /// distribution, not bit-equal. Callers that have pinned byte-level
+    /// outputs (the routing trace) stay on this path by default.
     pub fn multinomial(&mut self, n: u64, probs: &[f64]) -> Vec<u64> {
         let mut out = vec![0u64; probs.len()];
         let mut remaining = n;
@@ -172,6 +193,66 @@ impl Rng {
             out[last] += remaining;
         }
         out
+    }
+
+    /// Multinomial via recursive binomial splitting: draw the total of
+    /// the left half as one binomial, recurse into both halves. Exact
+    /// (same conditional-binomial decomposition as [`Rng::multinomial`],
+    /// applied to a balanced split tree instead of a left-to-right
+    /// chain), and much cheaper when the distribution is peaky: any
+    /// subtree whose drawn total is zero fills its whole range without
+    /// touching the generator, so the cost scales with the number of
+    /// *populated* categories rather than with `probs.len()`. This is
+    /// the router fast path for paper-scale draws (n ≈ 10⁶ copies over
+    /// 256 experts with strongly non-uniform popularity).
+    ///
+    /// `split_range` with a degenerate "first element vs rest" split is
+    /// the sequential algorithm itself — the unit tests pin that mode
+    /// bit-identical to `multinomial` on paper-scale inputs, which is
+    /// what makes the balanced mode trustworthy as the same sampler.
+    pub fn multinomial_split(&mut self, n: u64, probs: &[f64]) -> Vec<u64> {
+        let mut out = vec![0u64; probs.len()];
+        if probs.is_empty() {
+            debug_assert_eq!(n, 0, "multinomial_split: trials with no categories");
+            return out;
+        }
+        self.split_range(&mut out, probs, 0..probs.len(), (n, 1.0), true);
+        out
+    }
+
+    /// Conditional-binomial recursion over `probs[range]` holding the
+    /// `(trials, rest)` state, where `rest` is the probability mass not
+    /// yet assigned to the left of the range (the sequential
+    /// algorithm's running `rest`). `balanced` picks the split point:
+    /// midpoint (fast path) or `lo + 1` (degenerate mode, bit-identical
+    /// to `multinomial`).
+    fn split_range(
+        &mut self,
+        out: &mut [u64],
+        probs: &[f64],
+        range: std::ops::Range<usize>,
+        state: (u64, f64),
+        balanced: bool,
+    ) {
+        let (lo, hi) = (range.start, range.end);
+        let (t, rest) = state;
+        debug_assert!(lo < hi);
+        if t == 0 {
+            return;
+        }
+        if hi - lo == 1 || rest <= 0.0 {
+            // single category — or no mass left to condition on, in
+            // which case the sequential path also dumps the remainder
+            // on the current category.
+            out[lo] = t;
+            return;
+        }
+        let mid = if balanced { lo + (hi - lo) / 2 } else { lo + 1 };
+        let p_left: f64 = probs[lo..mid].iter().sum();
+        let q = (p_left / rest).clamp(0.0, 1.0);
+        let k = self.binomial(t, q);
+        self.split_range(out, probs, lo..mid, (k, p_left), balanced);
+        self.split_range(out, probs, mid..hi, (t - k, rest - p_left), balanced);
     }
 
     /// Binomial(n, p) — BTPE would be overkill; the simulator needs
@@ -329,6 +410,89 @@ mod tests {
             }
         }
         assert!(dominated > 25, "only {dominated}/50 peaky");
+    }
+
+    /// Run the splitting recursion in degenerate "first element vs
+    /// rest" mode — structurally the sequential algorithm.
+    fn multinomial_split_first(rng: &mut Rng, n: u64, probs: &[f64]) -> Vec<u64> {
+        let mut out = vec![0u64; probs.len()];
+        rng.split_range(&mut out, probs, 0..probs.len(), (n, 1.0), false);
+        out
+    }
+
+    /// Paper-scale inputs: 256 experts, ~2²⁰ token copies, popularity
+    /// from a Dirichlet of the given concentration.
+    fn paper_scale_probs(seed: u64, alpha: f64) -> Vec<f64> {
+        Rng::new(seed).dirichlet_symmetric(alpha, 256)
+    }
+
+    #[test]
+    fn split_recursion_bit_identical_to_slow_path_paper_scale() {
+        // The binomial-splitting sampler is the same conditional-
+        // binomial decomposition as the sequential slow path; in
+        // degenerate split-first mode the two must agree *bit for bit*
+        // from the same generator state. Pin it on paper-scale inputs,
+        // both peaky (deep-layer chaos) and near-uniform (calm/dense).
+        for (seed, alpha) in [(7u64, 0.02f64), (8, 0.02), (9, 0.55), (10, 50.0)] {
+            let probs = paper_scale_probs(seed, alpha);
+            let n = 1u64 << 20;
+            let slow = Rng::new(seed ^ 0xABCD).multinomial(n, &probs);
+            let fast = multinomial_split_first(&mut Rng::new(seed ^ 0xABCD), n, &probs);
+            assert_eq!(slow, fast, "seed {seed} alpha {alpha}");
+            assert_eq!(slow.iter().sum::<u64>(), n);
+        }
+    }
+
+    #[test]
+    fn multinomial_split_conserves_and_tracks_paper_scale() {
+        let n = 1u64 << 20;
+        for (seed, alpha) in [(1u64, 0.02f64), (2, 0.55), (3, 50.0)] {
+            let probs = paper_scale_probs(seed, alpha);
+            let counts = Rng::new(seed).multinomial_split(n, &probs);
+            assert_eq!(counts.iter().sum::<u64>(), n, "alpha {alpha}");
+            // every populated category tracks its probability to within
+            // a loose sampling band
+            for (i, (&c, &p)) in counts.iter().zip(&probs).enumerate() {
+                let expect = n as f64 * p;
+                let slack = 6.0 * (expect.max(1.0)).sqrt() + 8.0;
+                assert!(
+                    (c as f64 - expect).abs() < slack,
+                    "seed {seed} cat {i}: count {c} vs expect {expect:.1}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multinomial_split_deterministic_and_seed_sensitive() {
+        let probs = paper_scale_probs(5, 0.1);
+        let a = Rng::new(42).multinomial_split(1 << 20, &probs);
+        let b = Rng::new(42).multinomial_split(1 << 20, &probs);
+        assert_eq!(a, b);
+        let c = Rng::new(43).multinomial_split(1 << 20, &probs);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn multinomial_split_edges() {
+        let mut r = Rng::new(11);
+        assert_eq!(r.multinomial_split(0, &[0.5, 0.5]), vec![0, 0]);
+        assert_eq!(r.multinomial_split(100, &[1.0]), vec![100]);
+        // zero-probability category between two live halves stays empty
+        let counts = r.multinomial_split(10_000, &[0.5, 0.0, 0.5]);
+        assert_eq!(counts[1], 0);
+        assert_eq!(counts.iter().sum::<u64>(), 10_000);
+        let empty: Vec<u64> = r.multinomial_split(0, &[]);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn dirichlet_symmetric_bit_identical_to_general() {
+        let general = Rng::new(17).dirichlet(&[0.3; 16]);
+        let symmetric = Rng::new(17).dirichlet_symmetric(0.3, 16);
+        assert_eq!(general, symmetric);
+        let s: f64 = symmetric.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! CLI-level smoke of the resumable/shardable sweep: drives the real
+//! `memfine` binary end to end, checking the flag wiring
+//! (`--checkpoint/--resume/--shard/--limit`), the artifact files, and
+//! that a 2-shard checkpointed split merged by a resume run emits the
+//! byte-identical artifact of a direct run — the same contract the
+//! in-process tests pin, proven through the shipped interface.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("memfine-it-cli-{}-{name}", std::process::id()));
+    p
+}
+
+/// Run `memfine sweep` with the common tiny grid plus `extra` args;
+/// panics with stderr attached if the process fails.
+fn sweep(extra: &[&str]) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_memfine"));
+    cmd.args([
+        "sweep", "--models", "i", "--methods", "1,3", "--seeds", "2",
+        "--iters", "5", "--workers", "2",
+    ]);
+    cmd.args(extra);
+    let out = cmd.output().expect("spawn memfine");
+    assert!(
+        out.status.success(),
+        "memfine sweep {extra:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn cli_two_shard_merge_matches_direct_run() {
+    let direct = tmp("direct.json");
+    let shard_out = tmp("shard-partial.json");
+    let merged = tmp("merged.json");
+    let ck0 = tmp("shard0.jsonl");
+    let ck1 = tmp("shard1.jsonl");
+
+    sweep(&["--out", direct.to_str().unwrap()]);
+    sweep(&[
+        "--shard", "0/2",
+        "--checkpoint", ck0.to_str().unwrap(),
+        "--out", shard_out.to_str().unwrap(),
+    ]);
+    sweep(&[
+        "--shard", "1/2",
+        "--checkpoint", ck1.to_str().unwrap(),
+        "--out", shard_out.to_str().unwrap(),
+    ]);
+    let both = format!("{},{}", ck0.to_str().unwrap(), ck1.to_str().unwrap());
+    sweep(&[
+        "--resume",
+        "--checkpoint", &both,
+        "--out", merged.to_str().unwrap(),
+    ]);
+
+    let direct_bytes = std::fs::read(&direct).expect("direct artifact");
+    let merged_bytes = std::fs::read(&merged).expect("merged artifact");
+    assert_eq!(
+        direct_bytes, merged_bytes,
+        "CLI 2-shard merge diverged from the direct artifact"
+    );
+    // shard checkpoints partition the 4-scenario grid
+    let lines = |p: &PathBuf| {
+        std::fs::read_to_string(p)
+            .unwrap_or_default()
+            .lines()
+            .count()
+    };
+    assert_eq!(lines(&ck0) + lines(&ck1), 4);
+
+    for p in [&direct, &shard_out, &merged, &ck0, &ck1] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn cli_limit_then_resume_completes_the_grid() {
+    let ck = tmp("limit.jsonl");
+    let out_a = tmp("limit-a.json");
+    let out_b = tmp("limit-b.json");
+    let direct = tmp("limit-direct.json");
+
+    sweep(&["--out", direct.to_str().unwrap()]);
+    sweep(&[
+        "--limit", "2",
+        "--checkpoint", ck.to_str().unwrap(),
+        "--out", out_a.to_str().unwrap(),
+    ]);
+    assert_eq!(
+        std::fs::read_to_string(&ck).expect("checkpoint").lines().count(),
+        2
+    );
+    sweep(&[
+        "--resume",
+        "--checkpoint", ck.to_str().unwrap(),
+        "--out", out_b.to_str().unwrap(),
+    ]);
+    assert_eq!(
+        std::fs::read(&direct).expect("direct"),
+        std::fs::read(&out_b).expect("resumed"),
+        "limit-then-resume diverged from the direct artifact"
+    );
+
+    for p in [&ck, &out_a, &out_b, &direct] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn cli_rejects_bad_shard_and_bare_resume() {
+    for args in [&["--shard", "2/2"][..], &["--resume"][..]] {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_memfine"));
+        cmd.args(["sweep", "--models", "i", "--methods", "1", "--seeds", "1", "--iters", "2"]);
+        cmd.args(args);
+        let out = cmd.output().expect("spawn memfine");
+        assert!(
+            !out.status.success(),
+            "memfine sweep {args:?} unexpectedly succeeded"
+        );
+    }
+}

@@ -1,10 +1,14 @@
 //! End-to-end determinism contract of the sweep engine: a 3-method ×
-//! 2-model × 4-seed grid (24 scenarios) run with 1 worker and with 8
-//! workers must produce **bit-identical** aggregated JSON — thread
-//! count and scheduling order are not allowed to leak into results.
+//! 2-model × 4-seed grid (24 scenarios) run with 1 worker, with 8
+//! workers, as two checkpointed shards merged by a resume run, and as
+//! a killed-then-resumed sweep must all produce **bit-identical**
+//! aggregated JSON — thread count, scheduling order, shard splits and
+//! resume points are not allowed to leak into results.
 
-use memfine::config::{derive_seeds, Method, SweepConfig};
-use memfine::sweep;
+use std::path::PathBuf;
+
+use memfine::config::{derive_seeds, Method, ShardSpec, SweepConfig};
+use memfine::sweep::{self, SweepRunOptions};
 
 fn grid_3x2x4() -> SweepConfig {
     SweepConfig {
@@ -17,6 +21,14 @@ fn grid_3x2x4() -> SweepConfig {
         seeds: derive_seeds(7, 4),
         iterations: 10,
     }
+}
+
+/// Unique scratch path in the OS temp dir (tests run in one process,
+/// so pid + name is enough).
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("memfine-it-sweep-{}-{name}", std::process::id()));
+    p
 }
 
 #[test]
@@ -38,6 +50,106 @@ fn sweep_json_bit_identical_across_worker_counts() {
     );
     assert_eq!(serial.scenarios, parallel.scenarios);
     assert_eq!(serial.cells, parallel.cells);
+}
+
+#[test]
+fn sweep_json_bit_identical_across_shard_merge() {
+    let cfg = grid_3x2x4();
+    let direct = sweep::run_sweep(&cfg, 8).expect("direct sweep");
+    let direct_json = direct.to_json().to_string_pretty();
+
+    // two shard runs, each checkpointing its half of the grid
+    let shard0 = tmp("shard0.jsonl");
+    let shard1 = tmp("shard1.jsonl");
+    for (index, path) in [(0u64, &shard0), (1u64, &shard1)] {
+        let opts = SweepRunOptions {
+            workers: 4,
+            checkpoint: vec![path.clone()],
+            shard: Some(ShardSpec { index, count: 2 }),
+            ..Default::default()
+        };
+        let summary = sweep::run_sweep_with(&cfg, &opts).expect("shard sweep");
+        assert_eq!(summary.executed, 12, "shard {index} owns half the grid");
+        assert_eq!(summary.skipped, 12);
+        // the shard's own artifact is the partial grid it ran
+        assert_eq!(summary.report.scenarios.len(), 12);
+    }
+
+    // merge: a resume run reading both shard files finds every
+    // scenario done and emits the full artifact — byte-identical to
+    // the direct run
+    let merge = SweepRunOptions {
+        workers: 4,
+        checkpoint: vec![shard0.clone(), shard1.clone()],
+        resume: true,
+        ..Default::default()
+    };
+    let merged = sweep::run_sweep_with(&cfg, &merge).expect("merge sweep");
+    assert_eq!(merged.resumed, 24);
+    assert_eq!(merged.executed, 0);
+    assert_eq!(
+        merged.report.to_json().to_string_pretty(),
+        direct_json,
+        "2-shard merge changed the artifact"
+    );
+    std::fs::remove_file(&shard0).ok();
+    std::fs::remove_file(&shard1).ok();
+}
+
+#[test]
+fn killed_sweep_resumes_to_identical_bytes() {
+    let cfg = grid_3x2x4();
+    let direct_json = sweep::run_sweep(&cfg, 1)
+        .expect("direct sweep")
+        .to_json()
+        .to_string_pretty();
+
+    // run the first 7 scenarios with checkpointing, as if the sweep
+    // was killed mid-grid
+    let ck = tmp("kill.jsonl");
+    let first = SweepRunOptions {
+        workers: 2,
+        checkpoint: vec![ck.clone()],
+        limit: Some(7),
+        ..Default::default()
+    };
+    let killed = sweep::run_sweep_with(&cfg, &first).expect("limited sweep");
+    assert_eq!(killed.executed, 7);
+
+    // make the kill realistic: tear the final checkpoint line in half,
+    // as if the process died mid-write
+    let text = std::fs::read_to_string(&ck).expect("checkpoint readable");
+    let mut lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 7);
+    let last = lines.pop().expect("has lines");
+    let torn = format!("{}\n{}", lines.join("\n"), &last[..last.len() / 2]);
+    std::fs::write(&ck, torn).expect("tear checkpoint");
+
+    // resume: 6 intact lines fold from the checkpoint, the torn line's
+    // scenario re-runs with the other 17
+    let resume = SweepRunOptions {
+        workers: 8,
+        checkpoint: vec![ck.clone()],
+        resume: true,
+        ..Default::default()
+    };
+    let resumed = sweep::run_sweep_with(&cfg, &resume).expect("resumed sweep");
+    assert_eq!(resumed.resumed, 6);
+    assert_eq!(resumed.executed, 18);
+    assert_eq!(resumed.skipped_checkpoint_lines, 1);
+    assert_eq!(
+        resumed.report.to_json().to_string_pretty(),
+        direct_json,
+        "kill-and-resume changed the artifact"
+    );
+
+    // the resumed run completed the checkpoint: a third run has
+    // nothing left to execute
+    let third = sweep::run_sweep_with(&cfg, &resume).expect("third sweep");
+    assert_eq!(third.resumed, 24);
+    assert_eq!(third.executed, 0);
+    assert_eq!(third.report.to_json().to_string_pretty(), direct_json);
+    std::fs::remove_file(&ck).ok();
 }
 
 #[test]
