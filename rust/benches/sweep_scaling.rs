@@ -114,6 +114,7 @@ fn main() {
     };
 
     let mut shared_serial_s = f64::NAN;
+    let mut shared_2w_s = f64::NAN;
     let mut shared_fast_serial_s = f64::NAN;
     for &workers in &WORKER_COUNTS {
         let (wall, jsn) = if workers == 1 {
@@ -130,6 +131,9 @@ fn main() {
         let (wall, jsn) = timed_run(&cfg, workers, false, false);
         if workers == 1 {
             shared_serial_s = wall;
+        }
+        if workers == 2 {
+            shared_2w_s = wall;
         }
         let identical = jsn == legacy_json;
         assert!(identical, "trace sharing workers={workers} diverged from legacy bytes");
@@ -154,6 +158,37 @@ fn main() {
         let row = record("shared_fast", workers, wall, None);
         report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
     }
+    // Orchestrated: the same grid as a supervised 2-process fleet of
+    // real `memfine sweep` children (2 workers each) through the full
+    // launch → supervise → merge → audit → compact path. Measures the
+    // process-orchestration overhead against the in-process 2-worker
+    // run; bytes must still match exactly.
+    let orchestrated_2p_s = {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("memfine-bench-launch-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut lcfg = memfine::config::LaunchConfig::new(cfg.clone());
+        lcfg.procs = 2;
+        lcfg.workers_per_proc = 2;
+        lcfg.poll_ms = 20;
+        let mut opts = memfine::orchestrator::LaunchOptions::new(dir.clone());
+        opts.binary = Some(std::path::PathBuf::from(env!("CARGO_BIN_EXE_memfine")));
+        opts.quiet = true;
+        let t0 = Instant::now();
+        let launched = memfine::orchestrator::launch(&lcfg, &opts).expect("orchestrated launch");
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            launched.merge.report.to_json().to_string_pretty(),
+            legacy_json,
+            "orchestrated launch diverged from the in-process bytes"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+        wall
+    };
+    {
+        let row = record("orchestrated", 2, orchestrated_2p_s, Some(true));
+        report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
+    }
     report.print();
 
     let (seq_dps, split_dps) = multinomial_micro();
@@ -171,6 +206,13 @@ fn main() {
         scenarios_per_sec(n, shared_serial_s),
         scenarios_per_sec(n, shared_fast_serial_s),
     );
+    println!(
+        "orchestrated 2-proc launch: {} vs in-process 2-worker {} \
+         ({:.2}x overhead; spawn + supervise + merge + audit + compact)",
+        fmt_time(orchestrated_2p_s),
+        fmt_time(shared_2w_s),
+        orchestrated_2p_s / shared_2w_s,
+    );
     println!("\nreading: cells share one routed-token stream across methods, so the");
     println!("trace draw — the dominant per-scenario cost — is paid once per cell;");
     println!("the splitting multinomial then cheapens that one draw. Output bytes");
@@ -187,7 +229,14 @@ fn main() {
         ("multinomial_seq_draws_per_sec", json::num(seq_dps)),
         ("multinomial_split_draws_per_sec", json::num(split_dps)),
         ("multinomial_split_speedup", json::num(split_dps / seq_dps)),
+        ("orchestrated_2procs_s", json::num(orchestrated_2p_s)),
+        ("inprocess_2workers_s", json::num(shared_2w_s)),
+        (
+            "orchestrated_overhead_vs_inprocess",
+            json::num(orchestrated_2p_s / shared_2w_s),
+        ),
         ("determinism_legacy_vs_shared", Value::Bool(true)),
+        ("determinism_orchestrated_vs_inprocess", Value::Bool(true)),
     ];
     fields.extend(artifact_rows.iter().map(|(k, v)| (k.as_str(), v.clone())));
     let doc = json::obj(fields);

@@ -754,6 +754,118 @@ pub fn derive_seeds(base_seed: u64, n: usize) -> Vec<u64> {
 /// artifact (f64 integer precision, 2^53).
 pub const MAX_JSON_SEED: u64 = 1 << 53;
 
+/// Spec of an orchestrated multi-process sweep launch
+/// ([`crate::orchestrator`]): the grid itself plus the supervision
+/// parameters of the shard fleet that executes it. Like
+/// [`SweepConfig`], a `LaunchConfig` round-trips through JSON so a
+/// campaign can be captured in a single file (`memfine launch
+/// --config launch.json`); unlike `SweepConfig` it is **not** part of
+/// any scenario identity — the merged artifact depends only on
+/// `sweep` (and `fast_router`), never on how many processes ran it or
+/// how often they were healed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LaunchConfig {
+    /// The grid to execute — the only identity-bearing field.
+    pub sweep: SweepConfig,
+    /// Shard processes to spawn (0 = auto: available cores divided by
+    /// `workers_per_proc`, capped to the grid's trace-cell count).
+    pub procs: u64,
+    /// Worker threads each shard process runs (`memfine sweep
+    /// --workers`); procs × workers_per_proc ≈ one machine's cores.
+    pub workers_per_proc: u64,
+    /// A shard whose checkpoint file has not grown for this long is
+    /// considered stalled, killed, and relaunched with `--resume`.
+    pub stall_timeout_ms: u64,
+    /// Supervisor poll interval for child exits and heartbeats.
+    pub poll_ms: u64,
+    /// Relaunches allowed per shard (beyond the initial spawn) before
+    /// the supervisor gives up on it.
+    pub max_retries: u64,
+    /// Run shards with `--fast-router` (part of the scenario hash).
+    pub fast_router: bool,
+}
+
+impl LaunchConfig {
+    /// Defaults tuned for one multi-core host: auto process count,
+    /// single-threaded shards, 30 s stall timeout, 100 ms poll, two
+    /// relaunches per shard.
+    pub fn new(sweep: SweepConfig) -> Self {
+        LaunchConfig {
+            sweep,
+            procs: 0,
+            workers_per_proc: 1,
+            stall_timeout_ms: 30_000,
+            poll_ms: 100,
+            max_retries: 2,
+            fast_router: false,
+        }
+    }
+
+    /// Effective shard-process count: the explicit `procs`, or
+    /// cores / `workers_per_proc` when auto — either way capped to
+    /// `cells` (a shard with no trace cells would idle forever).
+    pub fn resolve_procs(&self, cells: usize) -> usize {
+        let auto = || {
+            let cores = std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1) as u64;
+            (cores / self.workers_per_proc.max(1)).max(1)
+        };
+        let want = if self.procs == 0 { auto() } else { self.procs };
+        (want as usize).min(cells.max(1))
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.sweep.validate()?;
+        if self.workers_per_proc == 0 {
+            return Err(Error::config("workers_per_proc must be positive"));
+        }
+        if self.stall_timeout_ms == 0 || self.poll_ms == 0 {
+            return Err(Error::config(
+                "stall_timeout_ms and poll_ms must be positive",
+            ));
+        }
+        if self.stall_timeout_ms < self.poll_ms {
+            return Err(Error::config(format!(
+                "stall timeout {} ms below poll interval {} ms",
+                self.stall_timeout_ms, self.poll_ms
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("sweep", self.sweep.to_json()),
+            ("procs", json::num(self.procs as f64)),
+            ("workers_per_proc", json::num(self.workers_per_proc as f64)),
+            ("stall_timeout_ms", json::num(self.stall_timeout_ms as f64)),
+            ("poll_ms", json::num(self.poll_ms as f64)),
+            ("max_retries", json::num(self.max_retries as f64)),
+            ("fast_router", Value::Bool(self.fast_router)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let cfg = LaunchConfig {
+            sweep: SweepConfig::from_json(
+                v.get("sweep").ok_or_else(|| Error::config("launch missing sweep"))?,
+            )?,
+            procs: v.req_u64("procs")?,
+            workers_per_proc: v.req_u64("workers_per_proc")?,
+            stall_timeout_ms: v.req_u64("stall_timeout_ms")?,
+            poll_ms: v.req_u64("poll_ms")?,
+            max_retries: v.req_u64("max_retries")?,
+            fast_router: v
+                .get("fast_router")
+                .and_then(Value::as_bool)
+                .ok_or_else(|| Error::config("launch missing fast_router"))?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 /// Config matching the AOT-exported mini model (python compile.model.E2E)
 /// used by the real-execution coordinator.
 pub fn tiny() -> ModelConfig {
@@ -1000,6 +1112,58 @@ mod tests {
     fn sweep_config_rejects_unrepresentable_seed() {
         let mut cfg = SweepConfig::paper_grid(7, 2, 10);
         cfg.seeds.push(u64::MAX);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn launch_config_roundtrip_and_defaults() {
+        let mut cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 4, 10));
+        cfg.procs = 3;
+        cfg.stall_timeout_ms = 5_000;
+        cfg.fast_router = true;
+        cfg.validate().unwrap();
+        let back = LaunchConfig::from_json(
+            &crate::json::parse(&cfg.to_json().to_string_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg, back);
+        // defaults are sane and validate
+        let d = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
+        d.validate().unwrap();
+        assert_eq!(d.procs, 0);
+        assert!(d.max_retries >= 1);
+    }
+
+    #[test]
+    fn launch_config_resolves_procs_capped_to_cells() {
+        let mut cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 4, 10));
+        cfg.procs = 64;
+        // the paper grid has 2 models × 4 seeds = 8 trace cells
+        assert_eq!(cfg.resolve_procs(8), 8);
+        cfg.procs = 2;
+        assert_eq!(cfg.resolve_procs(8), 2);
+        cfg.procs = 0;
+        let auto = cfg.resolve_procs(8);
+        assert!((1..=8).contains(&auto));
+        // auto divides the cores among each shard's workers
+        cfg.workers_per_proc = u64::MAX;
+        assert_eq!(cfg.resolve_procs(8), 1);
+    }
+
+    #[test]
+    fn launch_config_rejects_bad_supervision_params() {
+        let mut cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
+        cfg.workers_per_proc = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
+        cfg.poll_ms = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
+        cfg.stall_timeout_ms = cfg.poll_ms - 1;
+        assert!(cfg.validate().is_err());
+        // an invalid grid fails launch validation too
+        let mut cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
+        cfg.sweep.models.clear();
         assert!(cfg.validate().is_err());
     }
 

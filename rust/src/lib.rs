@@ -23,7 +23,9 @@
 //!   seed grids over a worker pool — drawing each (model, seed) cell's
 //!   routing trace once ([`trace`]::SharedRoutingTrace), reducing
 //!   results as a stream, and checkpointing by scenario content hash
-//!   for resumable/sharded grids — and a real-execution coordinator
+//!   for resumable/sharded grids — a shard [`orchestrator`] that
+//!   launches, supervises, heals and auto-merges multi-process sweep
+//!   fleets (`memfine launch`), and a real-execution coordinator
 //!   ([`coordinator`]) that drives the AOT artifacts through the PJRT
 //!   runtime ([`runtime`], behind the `pjrt` feature).
 //!
@@ -48,6 +50,7 @@ pub mod json;
 pub mod logging;
 pub mod memory;
 pub mod metrics;
+pub mod orchestrator;
 pub mod perf;
 pub mod pipeline;
 pub mod prop;

@@ -8,7 +8,15 @@
 //! memfine sweep   [--models i,ii] [--methods 1,2,3] [--seeds N|a,b,...]
 //!                 [--workers N] [--out FILE] [--checkpoint F[,F...]]
 //!                 [--resume] [--shard i/n] [--limit N] [--fast-router]
+//!                 [--config FILE]
 //!                 parallel scenario grid, resumable/shardable
+//! memfine launch  [grid flags | --config FILE] [--procs N] [--dir DIR]
+//!                 [--stall-timeout-ms N] [--poll-ms N] [--retries N]
+//!                 [--chaos-kill] [--out FILE]
+//!                 orchestrated multi-process sweep: spawn, supervise,
+//!                 heal, auto-merge
+//! memfine checkpoint compact FILE... [--out FILE]
+//! memfine checkpoint audit FILE... --config FILE [--fast-router]
 //! memfine repro   table4|fig2|fig4|fig5      regenerate a paper artifact
 //! memfine train   [--steps N] [--artifacts DIR]  E2E mini-model training
 //! memfine coord   [--policy mact|fixed] [--budget-mb N]  real EP layer pass
@@ -16,11 +24,13 @@
 
 use memfine::cli::{usage, Args, OptSpec};
 use memfine::config::{
-    derive_seeds, model_i, model_ii, paper_run, Method, ModelConfig, SweepConfig,
+    derive_seeds, model_i, model_ii, paper_run, LaunchConfig, Method, ModelConfig,
+    SweepConfig,
 };
 use memfine::coordinator::ep::{ChunkPolicy, EpCoordinator};
 use memfine::coordinator::train::TrainDriver;
 use memfine::memory::{ActivationModel, StaticModel};
+use memfine::orchestrator::LaunchOptions;
 use memfine::runtime::ArtifactStore;
 use memfine::sim::Simulator;
 use memfine::util::fmt_bytes;
@@ -28,7 +38,8 @@ use memfine::util::fmt_bytes;
 const VALUE_OPTS: &[&str] = &[
     "model", "method", "iters", "seed", "steps", "artifacts", "policy",
     "budget-mb", "bins", "chunk", "models", "methods", "seeds", "workers",
-    "out", "checkpoint", "shard", "limit",
+    "out", "checkpoint", "shard", "limit", "config", "procs", "dir",
+    "stall-timeout-ms", "poll-ms", "retries",
 ];
 
 fn main() {
@@ -50,6 +61,8 @@ fn main() {
         "plan" => cmd_plan(&parsed),
         "simulate" => cmd_simulate(&parsed),
         "sweep" => cmd_sweep(&parsed),
+        "launch" => cmd_launch(&parsed),
+        "checkpoint" => cmd_checkpoint(&parsed),
         "repro" => cmd_repro(&parsed),
         "train" => cmd_train(&parsed),
         "coord" => cmd_coord(&parsed),
@@ -75,6 +88,8 @@ fn print_usage() {
                 ("plan", "memory model walkthrough (Eq. 1-3, Eq. 8)"),
                 ("simulate", "simulate a training run (methods 1/2/3)"),
                 ("sweep", "parallel scenario grid: models x methods x seeds"),
+                ("launch", "orchestrated multi-process sweep: spawn, supervise, heal, merge"),
+                ("checkpoint", "checkpoint tools: compact FILE... | audit FILE... --config F"),
                 ("repro", "regenerate a paper artifact: table4|fig2|fig4|fig5"),
                 ("train", "end-to-end mini-model training via PJRT"),
                 ("coord", "real EP coordinator layer pass"),
@@ -89,13 +104,20 @@ fn print_usage() {
                 OptSpec { name: "models", help: "sweep models, comma-separated (i,ii)", takes_value: true, default: Some("i,ii") },
                 OptSpec { name: "methods", help: "sweep methods: 1 | 2[:c] | 3[:b.b...]", takes_value: true, default: Some("1,2,3") },
                 OptSpec { name: "seeds", help: "sweep seeds: a count (derived from --seed) or a,b,... list (trailing comma forces list)", takes_value: true, default: Some("4") },
-                OptSpec { name: "workers", help: "sweep worker threads (0 = all cores)", takes_value: true, default: Some("0") },
+                OptSpec { name: "workers", help: "sweep worker threads (0 = all cores); launch: threads per shard (>= 1)", takes_value: true, default: Some("0") },
                 OptSpec { name: "out", help: "sweep JSON output path (- = stdout only)", takes_value: true, default: Some("-") },
                 OptSpec { name: "checkpoint", help: "sweep checkpoint file(s), comma-separated; first is the write target", takes_value: true, default: None },
                 OptSpec { name: "resume", help: "skip scenarios already in the checkpoint file(s)", takes_value: false, default: None },
                 OptSpec { name: "shard", help: "run shard i of n (i/n) of the sweep grid", takes_value: true, default: None },
                 OptSpec { name: "limit", help: "execute at most N sweep scenarios this run", takes_value: true, default: None },
                 OptSpec { name: "fast-router", help: "binomial-splitting routing draw (faster; different sample)", takes_value: false, default: None },
+                OptSpec { name: "config", help: "JSON grid/launch spec file (sweep/launch/checkpoint audit)", takes_value: true, default: None },
+                OptSpec { name: "procs", help: "launch: shard processes (0 = cores / workers)", takes_value: true, default: Some("0") },
+                OptSpec { name: "dir", help: "launch working dir (checkpoints, logs, merged.jsonl)", takes_value: true, default: Some("launch-run") },
+                OptSpec { name: "stall-timeout-ms", help: "launch: kill a shard whose checkpoint stalls this long", takes_value: true, default: Some("30000") },
+                OptSpec { name: "poll-ms", help: "launch: supervisor poll interval", takes_value: true, default: Some("100") },
+                OptSpec { name: "retries", help: "launch: relaunches allowed per shard", takes_value: true, default: Some("2") },
+                OptSpec { name: "chaos-kill", help: "launch: kill one progressing child once (recovery drill)", takes_value: false, default: None },
                 OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: Some("artifacts") },
                 OptSpec { name: "policy", help: "coord policy: mact or fixed", takes_value: true, default: Some("mact") },
                 OptSpec { name: "budget-mb", help: "coord per-rank memory budget", takes_value: true, default: Some("48") },
@@ -181,7 +203,9 @@ fn cmd_simulate(args: &Args) -> memfine::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &Args) -> memfine::Result<()> {
+/// Build the sweep grid from the CLI flags (`--models/--methods/
+/// --seeds/--iters`).
+fn sweep_config_from_flags(args: &Args) -> memfine::Result<SweepConfig> {
     let models: Vec<String> = args
         .get_or("models", "i,ii")
         .split(',')
@@ -214,11 +238,55 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         })?;
         derive_seeds(args.get_u64("seed", 7)?, n)
     };
-    let cfg = SweepConfig {
+    Ok(SweepConfig {
         models,
         methods,
         seeds,
         iterations: args.get_u64("iters", 25)?,
+    })
+}
+
+/// Read and parse a `--config` JSON file.
+fn parse_config_file(path: &str) -> memfine::Result<memfine::json::Value> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        memfine::Error::Io(std::io::Error::new(e.kind(), format!("--config {path}: {e}")))
+    })?;
+    memfine::json::parse(&text)
+}
+
+/// Extract a sweep grid from a parsed config document: a bare
+/// `SweepConfig`, a `LaunchConfig` (its `sweep` block), or a sweep
+/// report artifact (its `config` block) are all accepted — so a
+/// checkpoint can be audited, resumed, or relaunched straight from
+/// any artifact the tooling writes.
+fn sweep_config_from_doc(doc: &memfine::json::Value) -> memfine::Result<SweepConfig> {
+    let grid = doc.get("sweep").or_else(|| doc.get("config")).unwrap_or(doc);
+    SweepConfig::from_json(grid)
+}
+
+/// Extract (grid, sampler) from a parsed config doc: a `LaunchConfig`
+/// carries its own fast-router choice — which is part of every
+/// scenario hash, so resuming or auditing a fast-router campaign from
+/// its launch.json must not silently fall back to the sequential
+/// sampler. Other doc shapes default to sequential (override with
+/// `--fast-router`).
+fn grid_and_sampler_from_doc(
+    doc: &memfine::json::Value,
+) -> memfine::Result<(SweepConfig, bool)> {
+    if doc.get("sweep").is_some() {
+        let launch = LaunchConfig::from_json(doc)?;
+        Ok((launch.sweep, launch.fast_router))
+    } else {
+        Ok((sweep_config_from_doc(doc)?, false))
+    }
+}
+
+fn cmd_sweep(args: &Args) -> memfine::Result<()> {
+    // --config wins over grid flags; a LaunchConfig file also carries
+    // its sampler choice
+    let (cfg, cfg_fast_router) = match args.get("config") {
+        Some(path) => grid_and_sampler_from_doc(&parse_config_file(path)?)?,
+        None => (sweep_config_from_flags(args)?, false),
     };
     let checkpoint: Vec<std::path::PathBuf> = args
         .get("checkpoint")
@@ -241,7 +309,7 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         resume: args.has_flag("resume"),
         shard,
         limit: limit.map(|n| n as usize),
-        fast_router: args.has_flag("fast-router"),
+        fast_router: cfg_fast_router || args.has_flag("fast-router"),
     };
     eprintln!(
         "sweep: {} scenarios{}{}",
@@ -281,6 +349,189 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         }
     }
     Ok(())
+}
+
+fn cmd_launch(args: &Args) -> memfine::Result<()> {
+    // Full LaunchConfig files round-trip (`--config launch.json`);
+    // explicit CLI flags override whatever the file carries.
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let doc = parse_config_file(path)?;
+            if doc.get("sweep").is_some() {
+                LaunchConfig::from_json(&doc)?
+            } else {
+                LaunchConfig::new(sweep_config_from_doc(&doc)?)
+            }
+        }
+        None => LaunchConfig::new(sweep_config_from_flags(args)?),
+    };
+    if args.get("procs").is_some() {
+        cfg.procs = args.get_u64("procs", 0)?;
+    }
+    if args.get("workers").is_some() {
+        // unlike sweep, launch has no 0 = auto: workers here is the
+        // per-shard thread count, so 0 is rejected by validate()
+        cfg.workers_per_proc = args.get_u64("workers", 1)?;
+    }
+    if args.get("stall-timeout-ms").is_some() {
+        cfg.stall_timeout_ms = args.get_u64("stall-timeout-ms", 30_000)?;
+    }
+    if args.get("poll-ms").is_some() {
+        cfg.poll_ms = args.get_u64("poll-ms", 100)?;
+    }
+    if args.get("retries").is_some() {
+        cfg.max_retries = args.get_u64("retries", 2)?;
+    }
+    if args.has_flag("fast-router") {
+        cfg.fast_router = true;
+    }
+
+    let opts = LaunchOptions {
+        dir: std::path::PathBuf::from(args.get_or("dir", "launch-run")),
+        binary: None,
+        chaos_kill_one: args.has_flag("chaos-kill"),
+        quiet: false,
+    };
+    let launched = memfine::orchestrator::launch(&cfg, &opts)?;
+
+    // Per-shard summary table to stderr (stdout carries the artifact,
+    // exactly like `memfine sweep`).
+    let mut table = memfine::bench::BenchReport::new(
+        &format!(
+            "launch — {} scenarios over {} shard proc(s), {} worker(s) each",
+            launched.plan.total_scenarios,
+            launched.plan.procs,
+            cfg.workers_per_proc
+        ),
+        &["shard", "cells", "scenarios", "spawns", "stalls", "crashes", "chaos", "outcome"],
+    );
+    for (o, p) in launched.outcomes.iter().zip(&launched.plan.shards) {
+        table.row(&[
+            o.shard.to_string(),
+            p.cells.to_string(),
+            p.scenarios.to_string(),
+            o.spawns.to_string(),
+            o.stalls.to_string(),
+            o.crashes.to_string(),
+            o.chaos_kills.to_string(),
+            if o.completed { "completed".into() } else { "gave up (healed in merge)".into() },
+        ]);
+    }
+    eprint!("{}", table.render());
+    let merge = &launched.merge;
+    eprintln!(
+        "launch: {} resumed from shards, {} healed by catch-up; coverage {}/{}; \
+         compacted checkpoint: {} ({} records, {} duplicates, {} torn lines dropped)",
+        merge.resumed,
+        merge.healed,
+        merge.audit.present,
+        merge.audit.planned,
+        merge.compacted.display(),
+        merge.compact_stats.records_out,
+        merge.compact_stats.duplicate_records,
+        merge.compact_stats.dropped_lines,
+    );
+    eprint!("{}", merge.report.render_table());
+    let json = merge.report.to_json().to_string_pretty();
+    match args.get_or("out", "-").as_str() {
+        "-" => println!("{json}"),
+        path => {
+            std::fs::write(path, format!("{json}\n"))?;
+            eprintln!("report written to {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_checkpoint(args: &Args) -> memfine::Result<()> {
+    use memfine::sweep::checkpoint;
+    let sub = args.positional.first().map(String::as_str).unwrap_or("");
+    let files: Vec<std::path::PathBuf> = args
+        .positional
+        .iter()
+        .skip(1)
+        .map(std::path::PathBuf::from)
+        .collect();
+    match sub {
+        "compact" => {
+            if files.is_empty() {
+                return Err(memfine::Error::Cli(
+                    "checkpoint compact needs at least one file".into(),
+                ));
+            }
+            let out = match args.get("out") {
+                Some("-") => {
+                    return Err(memfine::Error::Cli(
+                        "checkpoint compact cannot write to stdout; pass --out FILE".into(),
+                    ))
+                }
+                Some(p) => std::path::PathBuf::from(p),
+                None if files.len() == 1 => files[0].clone(),
+                None => {
+                    return Err(memfine::Error::Cli(
+                        "checkpoint compact of several files needs --out".into(),
+                    ))
+                }
+            };
+            let stats = checkpoint::compact(&files, &out)?;
+            eprintln!(
+                "compacted {} file(s): {} line(s) -> {} record(s) \
+                 ({} duplicate(s) collapsed, {} torn/garbage line(s) dropped) -> {}",
+                stats.files_in,
+                stats.lines_in,
+                stats.records_out,
+                stats.duplicate_records,
+                stats.dropped_lines,
+                out.display(),
+            );
+            Ok(())
+        }
+        "audit" => {
+            if files.is_empty() {
+                return Err(memfine::Error::Cli(
+                    "checkpoint audit needs at least one file".into(),
+                ));
+            }
+            let cfg_path = args.get("config").ok_or_else(|| {
+                memfine::Error::Cli("checkpoint audit needs --config <grid.json>".into())
+            })?;
+            let (cfg, cfg_fast_router) =
+                grid_and_sampler_from_doc(&parse_config_file(cfg_path)?)?;
+            let set = checkpoint::CheckpointSet::load(&files)?;
+            let audit = checkpoint::audit_coverage(
+                &cfg,
+                cfg_fast_router || args.has_flag("fast-router"),
+                &set,
+            )?;
+            eprintln!(
+                "audit: {}/{} planned scenario(s) present, {} missing, \
+                 {} foreign record(s), {} unreadable line(s)",
+                audit.present,
+                audit.planned,
+                audit.missing.len(),
+                audit.extra,
+                set.skipped_lines,
+            );
+            for (index, hash) in audit.missing.iter().take(10) {
+                eprintln!("  missing: grid index {index}, hash {hash}");
+            }
+            if audit.missing.len() > 10 {
+                eprintln!("  ... and {} more", audit.missing.len() - 10);
+            }
+            if audit.complete() {
+                Ok(())
+            } else {
+                Err(memfine::Error::config(format!(
+                    "checkpoint set does not cover the grid: {} of {} scenario(s) missing",
+                    audit.missing.len(),
+                    audit.planned
+                )))
+            }
+        }
+        other => Err(memfine::Error::Cli(format!(
+            "unknown checkpoint subcommand '{other}' (compact|audit)"
+        ))),
+    }
 }
 
 fn cmd_repro(args: &Args) -> memfine::Result<()> {

@@ -1,0 +1,132 @@
+//! Shard liveness from checkpoint growth: a shard process proves it is
+//! making progress by appending completed-scenario lines to its
+//! checkpoint file, so the supervisor never needs an IPC channel — the
+//! kill-safe artifact the sweep engine already writes doubles as the
+//! heartbeat. A shard whose checkpoint has not changed for longer than
+//! the stall timeout is presumed wedged (deadlocked child, hung I/O,
+//! livelocked host) and is killed and relaunched with `--resume`.
+//!
+//! The monitor is pure over injected clocks (`Instant` values are
+//! passed in, never sampled), so stall logic is unit-testable without
+//! sleeping.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Current checkpoint size in bytes, `None` while the file does not
+/// exist yet (child still starting up).
+pub fn probe_len(path: &Path) -> Option<u64> {
+    std::fs::metadata(path).ok().map(|m| m.len())
+}
+
+/// Progress tracker for one shard's checkpoint file.
+#[derive(Clone, Debug)]
+pub struct HeartbeatMonitor {
+    last_len: Option<u64>,
+    last_progress: Instant,
+}
+
+impl HeartbeatMonitor {
+    pub fn new(now: Instant) -> Self {
+        HeartbeatMonitor { last_len: None, last_progress: now }
+    }
+
+    /// Feed one observation of the checkpoint size. Any change —
+    /// growth, appearance, even truncation — counts as progress and
+    /// rewinds the stall clock; returns whether this observation was
+    /// progress.
+    pub fn observe(&mut self, len: Option<u64>, now: Instant) -> bool {
+        if len != self.last_len {
+            self.last_len = len;
+            self.last_progress = now;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Restart the stall clock (a fresh child was just spawned) while
+    /// keeping the last seen size, so the respawned child's untouched
+    /// checkpoint does not read as instant progress.
+    pub fn reset(&mut self, now: Instant) {
+        self.last_progress = now;
+    }
+
+    /// Time since the last observed progress (or since `new`/`reset`).
+    pub fn idle(&self, now: Instant) -> Duration {
+        now.saturating_duration_since(self.last_progress)
+    }
+
+    /// Whether the shard has gone longer than `timeout` without
+    /// progress.
+    pub fn stalled(&self, timeout: Duration, now: Instant) -> bool {
+        self.idle(now) >= timeout
+    }
+
+    /// Last observed checkpoint size (`None` = never seen the file).
+    pub fn last_len(&self) -> Option<u64> {
+        self.last_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn growth_rewinds_the_stall_clock() {
+        let t0 = Instant::now();
+        let mut m = HeartbeatMonitor::new(t0);
+        let timeout = 100 * MS;
+        // file appears: progress
+        assert!(m.observe(Some(0), t0 + 10 * MS));
+        // grows: progress
+        assert!(m.observe(Some(64), t0 + 50 * MS));
+        assert_eq!(m.last_len(), Some(64));
+        // unchanged: no progress, but not yet stalled
+        assert!(!m.observe(Some(64), t0 + 100 * MS));
+        assert!(!m.stalled(timeout, t0 + 149 * MS));
+        // 100 ms past the last change: stalled
+        assert!(m.stalled(timeout, t0 + 150 * MS));
+        assert_eq!(m.idle(t0 + 150 * MS), 100 * MS);
+        // growth after the stall read rewinds the clock again
+        assert!(m.observe(Some(128), t0 + 151 * MS));
+        assert!(!m.stalled(timeout, t0 + 250 * MS));
+    }
+
+    #[test]
+    fn missing_file_stalls_from_construction() {
+        let t0 = Instant::now();
+        let mut m = HeartbeatMonitor::new(t0);
+        assert_eq!(m.last_len(), None);
+        // never-appearing checkpoint: no observation is progress
+        assert!(!m.observe(None, t0 + 30 * MS));
+        assert!(m.stalled(50 * MS, t0 + 60 * MS));
+    }
+
+    #[test]
+    fn reset_rewinds_clock_but_keeps_size() {
+        let t0 = Instant::now();
+        let mut m = HeartbeatMonitor::new(t0);
+        assert!(m.observe(Some(32), t0 + 10 * MS));
+        m.reset(t0 + 200 * MS);
+        assert_eq!(m.last_len(), Some(32));
+        assert!(!m.stalled(100 * MS, t0 + 250 * MS));
+        // the unchanged file is still not progress after a reset
+        assert!(!m.observe(Some(32), t0 + 260 * MS));
+        assert!(m.stalled(100 * MS, t0 + 300 * MS));
+    }
+
+    #[test]
+    fn probe_len_reads_real_files() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("memfine-health-{}", std::process::id()));
+        std::fs::remove_file(&p).ok();
+        assert_eq!(probe_len(&p), None);
+        std::fs::write(&p, b"12345").unwrap();
+        assert_eq!(probe_len(&p), Some(5));
+        std::fs::remove_file(&p).ok();
+    }
+}

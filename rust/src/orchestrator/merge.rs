@@ -1,0 +1,116 @@
+//! Merge, verify, and compact a launch's shard checkpoints into the
+//! final artifact.
+//!
+//! The heavy lifting is the sweep engine's own resume path: one
+//! in-process `run_sweep_with` over every shard checkpoint folds all
+//! completed rows into the grid-ordered reducer **and executes any
+//! scenario the fleet failed to deliver** (a shard that exhausted its
+//! retry budget, rows lost to a torn tail) — the "final catch-up
+//! shard" in one call. The result is then audited against the full
+//! planned hash set (belt and braces: the catch-up should have left
+//! no gap), and the shard files are compacted into a single canonical
+//! `merged.jsonl` — deduplicated, torn tails dropped, hash-ordered —
+//! so long campaigns keep a bounded, restart-friendly checkpoint.
+//!
+//! By the sweep determinism contract, the merged report is
+//! byte-identical to a single-process `memfine sweep` of the same
+//! grid, however many shards ran, crashed, or were healed.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::LaunchConfig;
+use crate::error::{Error, Result};
+use crate::orchestrator::plan::LaunchPlan;
+use crate::sweep::checkpoint::{
+    audit_planned, write_compacted, CheckpointSet, CompactStats, CoverageAudit,
+};
+use crate::sweep::{self, SweepReport, SweepRunOptions};
+
+/// What the merge step produced.
+#[derive(Debug)]
+pub struct MergeOutcome {
+    /// The final report — byte-identical to an unsharded run.
+    pub report: SweepReport,
+    /// Scenarios folded straight from shard checkpoints.
+    pub resumed: usize,
+    /// Scenarios the catch-up pass had to execute in-process (0 on a
+    /// clean launch).
+    pub healed: usize,
+    /// Post-merge coverage audit (always complete on success).
+    pub audit: CoverageAudit,
+    /// Path of the canonical compacted checkpoint.
+    pub compacted: PathBuf,
+    pub compact_stats: CompactStats,
+}
+
+/// Merge the fleet's checkpoints, heal any coverage gap in-process,
+/// audit the result against the plan, and compact the merged
+/// checkpoint into `dir/merged.jsonl`. `prior_state` lists
+/// same-campaign checkpoint files beyond the current shard plan
+/// (earlier topologies' shard files, a previous run's merged.jsonl) —
+/// they fold in like any shard file. After a complete audit and a
+/// successful compaction every absorbed source file is removed:
+/// `merged.jsonl` alone carries the campaign forward, so long
+/// campaigns don't accumulate per-topology shard files.
+pub fn merge_and_finish(
+    cfg: &LaunchConfig,
+    plan: &LaunchPlan,
+    dir: &Path,
+    prior_state: &[PathBuf],
+) -> Result<MergeOutcome> {
+    let mut paths: Vec<PathBuf> =
+        plan.shards.iter().map(|s| s.checkpoint.clone()).collect();
+    for src in prior_state {
+        if !paths.contains(src) {
+            paths.push(src.clone());
+        }
+    }
+
+    // Catch-up + merge in one resume run: fold every checkpointed row,
+    // execute whatever is missing (appended to the first shard file,
+    // like any resumed sweep).
+    let opts = SweepRunOptions {
+        workers: 0,
+        checkpoint: paths.clone(),
+        resume: true,
+        shard: None,
+        limit: None,
+        fast_router: cfg.fast_router,
+    };
+    let summary = sweep::run_sweep_with(&cfg.sweep, &opts)?;
+
+    // One reload serves both the audit (against the hashes the plan
+    // derived up front — no grid re-expansion) and the compaction
+    // (written from the loaded set — no third read of the shard
+    // files). Shards that never spawned left no file; load tolerates
+    // that, and their scenarios were healed into the first file.
+    let set = CheckpointSet::load(&paths)?;
+    let audit = audit_planned(&plan.planned, &set);
+    if !audit.complete() {
+        return Err(Error::schedule(format!(
+            "merged checkpoints still miss {} of {} planned scenarios after catch-up",
+            audit.missing.len(),
+            audit.planned
+        )));
+    }
+
+    let compacted = dir.join("merged.jsonl");
+    let compact_stats = write_compacted(&set, &compacted)?;
+    // every absorbed record now lives in merged.jsonl (the audit above
+    // proved coverage); drop the source files so the campaign dir
+    // stays bounded however many topologies ran it
+    for p in &paths {
+        if *p != compacted {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    Ok(MergeOutcome {
+        report: summary.report,
+        resumed: summary.resumed,
+        healed: summary.executed,
+        audit,
+        compacted,
+        compact_stats,
+    })
+}

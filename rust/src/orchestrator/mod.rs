@@ -1,0 +1,305 @@
+//! Shard orchestrator: one command turns a sweep grid into a
+//! supervised fleet of `memfine sweep --shard i/n` child processes
+//! and a single merged, verified, compacted golden artifact.
+//!
+//! PR 2 made sharded execution *possible* (`--shard i/n`,
+//! content-hash checkpoints, byte-identical merge) but left the
+//! operator to spawn each shard, babysit crashes, and merge by hand.
+//! This module is the scheduler layer that owns placement and
+//! recovery instead (the MicroMoE/MoEBlaze lesson: the scale win
+//! lives in the supervisor, not the worker):
+//!
+//! * [`plan`] — split the grid round-robin over trace cells into
+//!   `--procs N` shard plans (reusing
+//!   [`ShardSpec`](crate::config::ShardSpec) semantics, so no shard
+//!   re-draws another's routing traces) and derive the full planned
+//!   scenario-hash set — the launch's coverage contract.
+//! * [`supervise`] — spawn one child per shard via `std::process`,
+//!   infer liveness from checkpoint-file growth ([`health`]), kill
+//!   and relaunch crashed or stalled children with `--resume` under a
+//!   bounded retry budget, and summarise each shard's fate.
+//! * [`merge`] — fold every shard checkpoint through the sweep
+//!   engine's resume path (which doubles as the final catch-up shard
+//!   for any gap), audit coverage against the plan, and compact the
+//!   merged checkpoint (dedupe by hash, drop torn tails, rewrite
+//!   canonically) so long campaigns stay bounded.
+//!
+//! The determinism contract extends end to end: however many
+//! processes run the grid, however often they crash, stall, or get
+//! chaos-killed, the published artifact is byte-identical to a
+//! single-process `memfine sweep` of the same `SweepConfig` —
+//! `tests/integration_launch.rs` pins exactly that, kills included.
+
+pub mod health;
+pub mod merge;
+pub mod plan;
+pub mod supervise;
+
+pub use health::{probe_len, HeartbeatMonitor};
+pub use merge::{merge_and_finish, MergeOutcome};
+pub use plan::{plan_shards, LaunchPlan, ShardPlan};
+pub use supervise::{
+    supervise, ShardEvent, ShardEventKind, ShardOutcome, SuperviseOptions,
+};
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use crate::config::LaunchConfig;
+use crate::error::{Error, Result};
+
+/// Execution parameters of one launch invocation — everything that
+/// decides *where and how* the fleet runs but can never reach the
+/// artifact bytes (the [`LaunchConfig`] <-> `LaunchOptions` split
+/// mirrors `SweepConfig` <-> `SweepRunOptions`).
+#[derive(Clone, Debug)]
+pub struct LaunchOptions {
+    /// Working directory for the launch: shard checkpoints and logs,
+    /// the captured `sweep.json`/`launch.json` specs, and the final
+    /// `merged.jsonl` live here. Created if missing.
+    pub dir: PathBuf,
+    /// The `memfine` binary to spawn shards with; defaults to the
+    /// current executable (correct for `memfine launch`; tests and
+    /// benches pass `CARGO_BIN_EXE_memfine`).
+    pub binary: Option<PathBuf>,
+    /// Run the chaos drill: kill the first progressing child once and
+    /// let supervision heal it (see
+    /// [`SuperviseOptions::chaos_kill_one`]).
+    pub chaos_kill_one: bool,
+    /// Suppress the per-event log lines (library/bench use).
+    pub quiet: bool,
+}
+
+impl LaunchOptions {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        LaunchOptions {
+            dir: dir.into(),
+            binary: None,
+            chaos_kill_one: false,
+            quiet: false,
+        }
+    }
+}
+
+/// Everything a finished launch produced, for the CLI to summarise
+/// and tests to dissect.
+#[derive(Debug)]
+pub struct LaunchReport {
+    pub plan: LaunchPlan,
+    pub outcomes: Vec<ShardOutcome>,
+    /// Every supervision event, in emission order.
+    pub events: Vec<ShardEvent>,
+    pub merge: MergeOutcome,
+}
+
+fn describe(ev: &ShardEvent) -> String {
+    let s = ev.shard;
+    match &ev.kind {
+        ShardEventKind::Spawned { pid, attempt } => {
+            format!("shard {s}: spawned pid {pid} (attempt {attempt})")
+        }
+        ShardEventKind::Progress { checkpoint_bytes } => {
+            format!("shard {s}: checkpoint at {checkpoint_bytes} B")
+        }
+        ShardEventKind::ChaosKilled { pid } => {
+            format!("shard {s}: CHAOS killed pid {pid}")
+        }
+        ShardEventKind::Stalled { idle_ms } => {
+            format!("shard {s}: stalled {idle_ms} ms, killing")
+        }
+        ShardEventKind::Crashed { exit_code } => match exit_code {
+            Some(c) => format!("shard {s}: exited with code {c}"),
+            None => format!("shard {s}: killed by signal"),
+        },
+        ShardEventKind::Completed => format!("shard {s}: completed"),
+        ShardEventKind::GaveUp { reason } => {
+            format!("shard {s}: giving up ({reason})")
+        }
+    }
+}
+
+/// Run a full orchestrated launch: plan the fleet, capture the specs
+/// into the launch dir, spawn and supervise the shard processes, then
+/// merge / heal / audit / compact into the final report. A shard that
+/// exhausts its retry budget does not fail the launch as long as the
+/// in-process catch-up can execute its scenarios — supervision is an
+/// optimisation, the artifact contract is absolute.
+pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> {
+    cfg.validate()?;
+    std::fs::create_dir_all(&opts.dir)?;
+    let plan = plan::plan_shards(cfg, &opts.dir)?;
+
+    // A launch dir is one campaign. Re-entering it with the same grid
+    // (and sampler) is a legitimate resume — children pick up their
+    // shard checkpoints; re-entering with a *different* campaign is
+    // refused: children would fold nothing from the stale files, but
+    // the compacted merged.jsonl would accrete the old campaign's
+    // records and grow without bound.
+    // Checkpoint lists travel to children as comma-separated
+    // `--checkpoint` values, so the dir path itself must be
+    // comma-free — refuse loudly instead of spawning shards that
+    // split their own paths apart.
+    if opts.dir.display().to_string().contains(',') {
+        return Err(Error::config(format!(
+            "launch dir {} contains ',' — checkpoint lists are \
+             comma-separated, pick another --dir",
+            opts.dir.display()
+        )));
+    }
+    let launch_json = opts.dir.join("launch.json");
+    let dir_has_jsonl = || -> Result<bool> {
+        Ok(std::fs::read_dir(&opts.dir)?.filter_map(|e| e.ok()).any(|e| {
+            e.path().extension().and_then(|x| x.to_str()) == Some("jsonl")
+        }))
+    };
+    match std::fs::read_to_string(&launch_json) {
+        Ok(prev_text) => {
+            let same_campaign = crate::json::parse(&prev_text)
+                .ok()
+                .and_then(|v| LaunchConfig::from_json(&v).ok())
+                .is_some_and(|prev| {
+                    prev.sweep == cfg.sweep && prev.fast_router == cfg.fast_router
+                });
+            if !same_campaign {
+                return Err(Error::config(format!(
+                    "launch dir {} already holds a different campaign \
+                     (launch.json does not match this grid); use a fresh \
+                     --dir or remove the old one",
+                    opts.dir.display()
+                )));
+            }
+        }
+        // No campaign record: only a dir without prior checkpoint
+        // state may start one — stray .jsonl files of unknown
+        // provenance would otherwise be absorbed into merged.jsonl.
+        Err(_) => {
+            if dir_has_jsonl()? {
+                return Err(Error::config(format!(
+                    "launch dir {} holds .jsonl checkpoints but no \
+                     launch.json to prove they belong to this campaign; \
+                     use a fresh --dir or remove them",
+                    opts.dir.display()
+                )));
+            }
+        }
+    }
+
+    // Capture the campaign next to its artifacts: children load the
+    // grid from sweep.json (no lossy CLI round-trip), and launch.json
+    // documents the whole launch for audits and re-runs.
+    let sweep_json = opts.dir.join("sweep.json");
+    std::fs::write(
+        &sweep_json,
+        format!("{}\n", cfg.sweep.to_json().to_string_pretty()),
+    )?;
+    std::fs::write(
+        &launch_json,
+        format!("{}\n", cfg.to_json().to_string_pretty()),
+    )?;
+
+    let binary = match &opts.binary {
+        Some(b) => b.clone(),
+        None => std::env::current_exe().map_err(Error::Io)?,
+    };
+
+    // Every .jsonl already in the campaign dir is prior same-campaign
+    // state (the guard above enforces one campaign per dir): earlier
+    // shard files, or the merged.jsonl of a finished run. Children
+    // read them all on resume, so an interrupted campaign relaunched
+    // with a different process count (new shard file names) still
+    // reuses every completed scenario instead of re-executing it.
+    let mut prior_state: Vec<PathBuf> = std::fs::read_dir(&opts.dir)?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("jsonl"))
+        .collect();
+    prior_state.sort();
+
+    let workers = cfg.workers_per_proc;
+    let fast_router = cfg.fast_router;
+    let prior = &prior_state;
+    let spawner = |shard: &ShardPlan, _attempt: u32| -> Result<std::process::Child> {
+        let log = std::fs::File::options()
+            .create(true)
+            .append(true)
+            .open(&shard.log)
+            .map_err(Error::Io)?;
+        // own checkpoint first (the write target), prior state after
+        // (read-only resume sources)
+        let mut checkpoints = shard.checkpoint.display().to_string();
+        for src in prior.iter().filter(|p| **p != shard.checkpoint) {
+            checkpoints.push(',');
+            checkpoints.push_str(&src.display().to_string());
+        }
+        let mut cmd = Command::new(&binary);
+        cmd.arg("sweep")
+            .arg("--config")
+            .arg(&sweep_json)
+            .arg("--shard")
+            .arg(format!("{}/{}", shard.spec.index, shard.spec.count))
+            .arg("--checkpoint")
+            .arg(checkpoints)
+            // always resume: relaunches continue from the checkpoint,
+            // first launches find nothing and start clean
+            .arg("--resume")
+            .arg("--workers")
+            .arg(workers.to_string())
+            .arg("--out")
+            .arg("-")
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::from(log));
+        if fast_router {
+            cmd.arg("--fast-router");
+        }
+        cmd.spawn().map_err(|e| {
+            Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("spawn shard {}: {e}", shard.index),
+            ))
+        })
+    };
+
+    let sup_opts = SuperviseOptions {
+        stall_timeout: Duration::from_millis(cfg.stall_timeout_ms),
+        poll_interval: Duration::from_millis(cfg.poll_ms),
+        max_retries: cfg.max_retries.min(u32::MAX as u64) as u32,
+        chaos_kill_one: opts.chaos_kill_one,
+    };
+    let quiet = opts.quiet;
+    let mut events: Vec<ShardEvent> = Vec::new();
+    let outcomes = supervise::supervise(&plan.shards, spawner, &sup_opts, |ev| {
+        if !quiet {
+            crate::logging::info("orchestrator", describe(ev));
+        }
+        events.push(ev.clone());
+    })?;
+    if opts.chaos_kill_one
+        && outcomes.iter().all(|o| o.chaos_kills == 0)
+        && !quiet
+    {
+        crate::logging::warn(
+            "orchestrator",
+            "chaos drill never fired: the fleet completed before a strike \
+             window opened (grid too small/fast for --chaos-kill)",
+        );
+    }
+
+    let merge = merge::merge_and_finish(cfg, &plan, &opts.dir, &prior_state)?;
+    if !quiet {
+        crate::logging::info(
+            "orchestrator",
+            format!(
+                "merged {} resumed + {} healed scenarios; coverage {}/{}; \
+                 compacted {} record(s) -> {}",
+                merge.resumed,
+                merge.healed,
+                merge.audit.present,
+                merge.audit.planned,
+                merge.compact_stats.records_out,
+                merge.compacted.display()
+            ),
+        );
+    }
+    Ok(LaunchReport { plan, outcomes, events, merge })
+}

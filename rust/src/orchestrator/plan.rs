@@ -1,0 +1,181 @@
+//! Launch planning: turn a [`LaunchConfig`] into the shard fleet that
+//! will execute it — one [`ShardPlan`] per child process, plus the
+//! full set of planned scenario hashes the merge step audits against.
+//!
+//! Shard ownership reuses [`ShardSpec`]'s round-robin-over-trace-cells
+//! semantics exactly as the sweep engine applies them, so the planner
+//! can predict — without running anything — which cells and scenarios
+//! each child will execute, and no shard ever re-draws another shard's
+//! routing traces. The planned hash set is the launch's coverage
+//! contract: the merged checkpoints must contain every one of these
+//! hashes before a report is published.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{LaunchConfig, ShardSpec};
+use crate::error::Result;
+use crate::sweep::checkpoint::scenario_hash;
+use crate::sweep::grid;
+
+/// One shard process of a launch: its grid split, its checkpoint file
+/// (heartbeat + resume target), its stderr log, and the work it owns.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Shard index (0-based) — also the supervisor's shard id.
+    pub index: usize,
+    /// Total shards in the fleet.
+    pub count: usize,
+    /// The `--shard i/n` split handed to the child.
+    pub spec: ShardSpec,
+    /// The child's checkpoint file: its `--checkpoint` target, the
+    /// supervisor's heartbeat source, and a merge input.
+    pub checkpoint: PathBuf,
+    /// Child stderr log (progress lines, errors on crash).
+    pub log: PathBuf,
+    /// Trace cells this shard owns.
+    pub cells: usize,
+    /// Scenarios this shard owns.
+    pub scenarios: usize,
+}
+
+/// The planned fleet plus the coverage contract.
+#[derive(Clone, Debug)]
+pub struct LaunchPlan {
+    /// Effective process count after auto-resolution and cell capping.
+    pub procs: usize,
+    /// One plan per shard process.
+    pub shards: Vec<ShardPlan>,
+    /// Every planned scenario as (grid index, content hash), index-
+    /// ascending — what the merged checkpoints must cover.
+    pub planned: Vec<(usize, String)>,
+    /// Trace cells in the grid.
+    pub total_cells: usize,
+    /// Scenarios in the grid.
+    pub total_scenarios: usize,
+}
+
+/// Plan the shard fleet for `cfg`, rooting checkpoint/log files in
+/// `dir`. Pure planning — nothing is created on disk.
+pub fn plan_shards(cfg: &LaunchConfig, dir: &Path) -> Result<LaunchPlan> {
+    cfg.validate()?;
+    let cells = grid::expand_cells(&cfg.sweep)?;
+    let procs = cfg.resolve_procs(cells.len());
+
+    // The coverage contract: hash every scenario of the grid exactly
+    // as the children will (scenario hashes are position- and
+    // execution-independent, so planner and children always agree).
+    let scenarios = grid::expand(&cfg.sweep)?;
+    let planned: Vec<(usize, String)> = scenarios
+        .iter()
+        .map(|sc| (sc.index, scenario_hash(&sc.run, cfg.fast_router)))
+        .collect();
+
+    let shards = (0..procs)
+        .map(|i| {
+            let spec = ShardSpec { index: i as u64, count: procs as u64 };
+            let owned: Vec<&grid::TraceCell> = cells
+                .iter()
+                .enumerate()
+                .filter(|(ci, _)| spec.owns(*ci))
+                .map(|(_, c)| c)
+                .collect();
+            ShardPlan {
+                index: i,
+                count: procs,
+                spec,
+                checkpoint: dir.join(format!("shard-{i}-of-{procs}.jsonl")),
+                log: dir.join(format!("shard-{i}-of-{procs}.log")),
+                cells: owned.len(),
+                scenarios: owned.iter().map(|c| c.scenarios.len()).sum(),
+            }
+        })
+        .collect();
+
+    Ok(LaunchPlan {
+        procs,
+        shards,
+        planned,
+        total_cells: cells.len(),
+        total_scenarios: scenarios.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SweepConfig;
+
+    fn launch_cfg(procs: u64) -> LaunchConfig {
+        let mut cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 4, 10));
+        cfg.procs = procs;
+        cfg
+    }
+
+    #[test]
+    fn shards_partition_cells_and_scenarios() {
+        // 2 models × 4 seeds = 8 cells, 24 scenarios, over 3 shards
+        let plan = plan_shards(&launch_cfg(3), Path::new("launchdir")).unwrap();
+        assert_eq!(plan.procs, 3);
+        assert_eq!(plan.shards.len(), 3);
+        assert_eq!(plan.total_cells, 8);
+        assert_eq!(plan.total_scenarios, 24);
+        assert_eq!(plan.shards.iter().map(|s| s.cells).sum::<usize>(), 8);
+        assert_eq!(plan.shards.iter().map(|s| s.scenarios).sum::<usize>(), 24);
+        // round-robin over 8 cells: shard 0 owns 3, shards 1-2 own 2+3
+        assert!(plan.shards.iter().all(|s| s.cells >= 2));
+        for (i, s) in plan.shards.iter().enumerate() {
+            assert_eq!(s.index, i);
+            assert_eq!(s.count, 3);
+            assert_eq!(s.spec, ShardSpec { index: i as u64, count: 3 });
+        }
+        // distinct per-shard files, rooted in the launch dir
+        let mut files: Vec<&PathBuf> =
+            plan.shards.iter().map(|s| &s.checkpoint).collect();
+        files.dedup();
+        assert_eq!(files.len(), 3);
+        assert!(plan.shards[0].checkpoint.starts_with("launchdir"));
+    }
+
+    #[test]
+    fn planned_hashes_enumerate_the_grid() {
+        let plan = plan_shards(&launch_cfg(2), Path::new("d")).unwrap();
+        assert_eq!(plan.planned.len(), 24);
+        for (i, (index, hash)) in plan.planned.iter().enumerate() {
+            assert_eq!(*index, i);
+            assert_eq!(hash.len(), 16);
+        }
+        // hashes are distinct (distinct scenarios)
+        let mut hashes: Vec<&String> =
+            plan.planned.iter().map(|(_, h)| h).collect();
+        hashes.sort();
+        hashes.dedup();
+        assert_eq!(hashes.len(), 24);
+        // the sampler choice perturbs every planned hash
+        let mut fast = launch_cfg(2);
+        fast.fast_router = true;
+        let fast_plan = plan_shards(&fast, Path::new("d")).unwrap();
+        assert!(plan
+            .planned
+            .iter()
+            .zip(&fast_plan.planned)
+            .all(|((_, a), (_, b))| a != b));
+    }
+
+    #[test]
+    fn procs_cap_to_cells_and_auto_resolves() {
+        // 8 cells: asking for 64 procs yields 8 single-cell shards
+        let plan = plan_shards(&launch_cfg(64), Path::new("d")).unwrap();
+        assert_eq!(plan.procs, 8);
+        assert!(plan.shards.iter().all(|s| s.cells == 1));
+        // auto (procs = 0) resolves to something in [1, cells]
+        let plan = plan_shards(&launch_cfg(0), Path::new("d")).unwrap();
+        assert!((1..=8).contains(&plan.procs));
+    }
+
+    #[test]
+    fn plan_rejects_invalid_config() {
+        let mut cfg = launch_cfg(2);
+        cfg.sweep.models.clear();
+        assert!(plan_shards(&cfg, Path::new("d")).is_err());
+    }
+}

@@ -1,0 +1,539 @@
+//! Shard-fleet supervision: spawn one child process per [`ShardPlan`],
+//! watch liveness through checkpoint-growth heartbeats
+//! ([`crate::orchestrator::health`]), kill and relaunch crashed or
+//! stalled shards with `--resume` (bounded by a per-shard retry
+//! budget), and summarise each shard's fate.
+//!
+//! The supervisor is generic over the *spawner* — any
+//! `FnMut(&ShardPlan, attempt) -> Result<Child>` — so tests can
+//! inject wedged or crashing fakes without touching the real `memfine
+//! sweep` command line, and every decision it makes is surfaced as a
+//! [`ShardEvent`] through the caller's callback.
+//!
+//! Correctness never depends on supervision: children checkpoint every
+//! completed scenario, relaunches resume from those checkpoints, and
+//! the merge step audits coverage and re-runs any gap in-process — so
+//! a kill at any point (including the injected chaos kill) costs only
+//! the in-flight work, never the artifact's bytes.
+
+use std::process::Child;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::orchestrator::health::{probe_len, HeartbeatMonitor};
+use crate::orchestrator::plan::ShardPlan;
+
+/// Supervision knobs (see [`crate::config::LaunchConfig`] for the
+/// serialisable source of these values).
+#[derive(Clone, Debug)]
+pub struct SuperviseOptions {
+    /// Kill a shard whose checkpoint has not changed for this long.
+    /// The heartbeat ticks once per completed trace cell, so this
+    /// must exceed the slowest cell's runtime; as a guard against a
+    /// deterministic kill-retry livelock when it doesn't, the
+    /// effective timeout doubles on each relaunch of a shard.
+    pub stall_timeout: Duration,
+    /// How often to poll child exits and heartbeats.
+    pub poll_interval: Duration,
+    /// Relaunches allowed per shard beyond its initial spawn.
+    pub max_retries: u32,
+    /// Chaos injection: once, kill the first shard observed with
+    /// checkpoint progress — falling back to any running shard after
+    /// a few polls, so the drill always fires while the fleet is
+    /// alive (the crash-recovery drill the launch smoke tests and CI
+    /// run). The injected kill does not consume the shard's retry
+    /// budget.
+    pub chaos_kill_one: bool,
+}
+
+/// What happened to a shard, as told to the event callback.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardEventKind {
+    /// A child process started (attempt 1 = initial spawn).
+    Spawned { pid: u32, attempt: u32 },
+    /// The shard's checkpoint changed size.
+    Progress { checkpoint_bytes: u64 },
+    /// The chaos drill killed this shard's child.
+    ChaosKilled { pid: u32 },
+    /// No checkpoint change for longer than the stall timeout; the
+    /// child was killed and is eligible for relaunch.
+    Stalled { idle_ms: u64 },
+    /// The child exited unsuccessfully.
+    Crashed { exit_code: Option<i32> },
+    /// The child exited successfully.
+    Completed,
+    /// The supervisor stopped trying (retry budget exhausted, or a
+    /// relaunch failed to spawn — the reason says which). The merge
+    /// catch-up will re-run this shard's missing scenarios
+    /// in-process.
+    GaveUp { reason: String },
+}
+
+/// One supervision event, tagged by shard index.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEvent {
+    pub shard: usize,
+    pub kind: ShardEventKind,
+}
+
+/// Per-shard summary of a supervision run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardOutcome {
+    pub shard: usize,
+    /// Child processes launched (1 = clean first run).
+    pub spawns: u32,
+    /// Stall kills.
+    pub stalls: u32,
+    /// Unsuccessful exits (not counting stall/chaos kills).
+    pub crashes: u32,
+    /// Injected chaos kills.
+    pub chaos_kills: u32,
+    /// Whether some attempt exited successfully.
+    pub completed: bool,
+    /// Exit code of the last observed exit (`None` after a kill).
+    pub last_exit_code: Option<i32>,
+}
+
+struct ShardState {
+    child: Option<Child>,
+    monitor: HeartbeatMonitor,
+    retries_used: u32,
+    outcome: ShardOutcome,
+}
+
+fn kill_and_reap(mut child: Child) {
+    // kill on an already-exited child errors; either way wait() reaps
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+fn spawn_into<S, E>(
+    shard: usize,
+    plan: &ShardPlan,
+    st: &mut ShardState,
+    spawn: &mut S,
+    on_event: &mut E,
+) -> Result<()>
+where
+    S: FnMut(&ShardPlan, u32) -> Result<Child>,
+    E: FnMut(&ShardEvent),
+{
+    let attempt = st.outcome.spawns + 1;
+    let child = spawn(plan, attempt)?;
+    st.outcome.spawns = attempt;
+    st.monitor.reset(Instant::now());
+    on_event(&ShardEvent {
+        shard,
+        kind: ShardEventKind::Spawned { pid: child.id(), attempt },
+    });
+    st.child = Some(child);
+    Ok(())
+}
+
+/// Run the fleet to completion: spawn every shard, poll exits and
+/// heartbeats, heal crashes/stalls within the retry budget, and return
+/// one [`ShardOutcome`] per shard. A shard that exhausts its budget is
+/// reported (`completed: false`) rather than failing the call — the
+/// merge layer decides whether the launch can still be healed. Only a
+/// *first* spawn failure is fatal (a broken binary/config would fail
+/// every shard identically); on that path all already-spawned children
+/// are killed before returning.
+pub fn supervise<S, E>(
+    shards: &[ShardPlan],
+    mut spawn: S,
+    opts: &SuperviseOptions,
+    mut on_event: E,
+) -> Result<Vec<ShardOutcome>>
+where
+    S: FnMut(&ShardPlan, u32) -> Result<Child>,
+    E: FnMut(&ShardEvent),
+{
+    let now = Instant::now();
+    let mut states: Vec<ShardState> = (0..shards.len())
+        .map(|i| ShardState {
+            child: None,
+            monitor: HeartbeatMonitor::new(now),
+            retries_used: 0,
+            outcome: ShardOutcome {
+                shard: i,
+                spawns: 0,
+                stalls: 0,
+                crashes: 0,
+                chaos_kills: 0,
+                completed: false,
+                last_exit_code: None,
+            },
+        })
+        .collect();
+
+    for i in 0..states.len() {
+        if let Err(e) =
+            spawn_into(i, &shards[i], &mut states[i], &mut spawn, &mut on_event)
+        {
+            for st in states.iter_mut() {
+                if let Some(child) = st.child.take() {
+                    kill_and_reap(child);
+                }
+            }
+            return Err(e);
+        }
+    }
+
+    let mut chaos_pending = opts.chaos_kill_one;
+    let mut polls: u64 = 0;
+    loop {
+        polls += 1;
+        for i in 0..states.len() {
+            let st = &mut states[i];
+            let Some(child) = st.child.as_mut() else { continue };
+            let mut respawn = false;
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    st.child = None;
+                    st.outcome.last_exit_code = status.code();
+                    if status.success() {
+                        st.outcome.completed = true;
+                        on_event(&ShardEvent {
+                            shard: i,
+                            kind: ShardEventKind::Completed,
+                        });
+                    } else {
+                        st.outcome.crashes += 1;
+                        on_event(&ShardEvent {
+                            shard: i,
+                            kind: ShardEventKind::Crashed { exit_code: status.code() },
+                        });
+                        respawn = true;
+                    }
+                }
+                Ok(None) => {
+                    let now = Instant::now();
+                    let len = probe_len(&shards[i].checkpoint);
+                    // escalate per relaunch: a cell that is slower
+                    // than the configured timeout (rather than a
+                    // wedged child) eventually gets room to finish
+                    // instead of being killed identically forever
+                    let timeout = opts.stall_timeout
+                        * (1u32 << (st.outcome.spawns.saturating_sub(1)).min(6));
+                    if st.monitor.observe(len, now) {
+                        on_event(&ShardEvent {
+                            shard: i,
+                            kind: ShardEventKind::Progress {
+                                checkpoint_bytes: len.unwrap_or(0),
+                            },
+                        });
+                    } else if st.monitor.stalled(timeout, now) {
+                        let idle_ms = st.monitor.idle(now).as_millis() as u64;
+                        on_event(&ShardEvent {
+                            shard: i,
+                            kind: ShardEventKind::Stalled { idle_ms },
+                        });
+                        if let Some(child) = st.child.take() {
+                            kill_and_reap(child);
+                        }
+                        st.outcome.stalls += 1;
+                        st.outcome.last_exit_code = None;
+                        respawn = true;
+                    }
+                }
+                Err(_) => {
+                    // the OS lost track of the child; reclaim and
+                    // treat it as a crash
+                    if let Some(child) = st.child.take() {
+                        kill_and_reap(child);
+                    }
+                    st.outcome.crashes += 1;
+                    st.outcome.last_exit_code = None;
+                    on_event(&ShardEvent {
+                        shard: i,
+                        kind: ShardEventKind::Crashed { exit_code: None },
+                    });
+                    respawn = true;
+                }
+            }
+            if respawn {
+                let st = &mut states[i];
+                if st.retries_used < opts.max_retries {
+                    st.retries_used += 1;
+                    if let Err(e) =
+                        spawn_into(i, &shards[i], st, &mut spawn, &mut on_event)
+                    {
+                        on_event(&ShardEvent {
+                            shard: i,
+                            kind: ShardEventKind::GaveUp {
+                                reason: format!("relaunch failed to spawn: {e}"),
+                            },
+                        });
+                    }
+                } else {
+                    on_event(&ShardEvent {
+                        shard: i,
+                        kind: ShardEventKind::GaveUp {
+                            reason: format!(
+                                "retry budget exhausted ({} relaunches)",
+                                opts.max_retries
+                            ),
+                        },
+                    });
+                }
+            }
+        }
+
+        // Chaos drill: kill one child, exactly once — preferably the
+        // first still-running shard with demonstrable checkpoint
+        // progress (a true mid-flight kill); if no child has shown
+        // progress after a few polls, any running child will do, so
+        // the drill cannot silently no-op on fast grids. Relaunch is
+        // unconditional — an injected fault must not consume the
+        // shard's own retry budget.
+        if chaos_pending {
+            let running_with_progress = (0..states.len()).find(|&i| {
+                states[i].child.is_some()
+                    && states[i].monitor.last_len().unwrap_or(0) > 0
+            });
+            let target = running_with_progress.or_else(|| {
+                if polls >= 3 {
+                    (0..states.len()).find(|&i| states[i].child.is_some())
+                } else {
+                    None
+                }
+            });
+            if let Some(i) = target {
+                let st = &mut states[i];
+                // a candidate that exited between polls is no strike:
+                // leave the drill pending and let the normal exit path
+                // reap it next iteration
+                let still_running = matches!(
+                    st.child.as_mut().expect("target is running").try_wait(),
+                    Ok(None)
+                );
+                if still_running {
+                    let child = st.child.take().expect("target is running");
+                    let pid = child.id();
+                    kill_and_reap(child);
+                    st.outcome.chaos_kills += 1;
+                    st.outcome.last_exit_code = None;
+                    on_event(&ShardEvent {
+                        shard: i,
+                        kind: ShardEventKind::ChaosKilled { pid },
+                    });
+                    if let Err(e) =
+                        spawn_into(i, &shards[i], st, &mut spawn, &mut on_event)
+                    {
+                        on_event(&ShardEvent {
+                            shard: i,
+                            kind: ShardEventKind::GaveUp {
+                                reason: format!("relaunch failed to spawn: {e}"),
+                            },
+                        });
+                    }
+                    chaos_pending = false;
+                }
+            }
+        }
+
+        if states.iter().all(|s| s.child.is_none()) {
+            break;
+        }
+        std::thread::sleep(opts.poll_interval);
+    }
+
+    Ok(states.into_iter().map(|s| s.outcome).collect())
+}
+
+#[cfg(test)]
+#[cfg(unix)]
+mod tests {
+    use super::*;
+    use crate::config::ShardSpec;
+    use std::path::PathBuf;
+    use std::process::{Command, Stdio};
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("memfine-supervise-{}-{name}", std::process::id()));
+        p
+    }
+
+    fn one_shard(name: &str) -> Vec<ShardPlan> {
+        vec![ShardPlan {
+            index: 0,
+            count: 1,
+            spec: ShardSpec { index: 0, count: 1 },
+            checkpoint: tmp(&format!("{name}.jsonl")),
+            log: tmp(&format!("{name}.log")),
+            cells: 1,
+            scenarios: 1,
+        }]
+    }
+
+    fn sh(script: String) -> Result<Child> {
+        Command::new("sh")
+            .arg("-c")
+            .arg(script)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(crate::Error::Io)
+    }
+
+    fn fast_opts() -> SuperviseOptions {
+        SuperviseOptions {
+            stall_timeout: Duration::from_millis(400),
+            poll_interval: Duration::from_millis(20),
+            max_retries: 2,
+            chaos_kill_one: false,
+        }
+    }
+
+    #[test]
+    fn clean_child_completes_first_spawn() {
+        let shards = one_shard("clean");
+        let mut events = Vec::new();
+        let outcomes = supervise(
+            &shards,
+            |plan, _| sh(format!("printf line >> {}", plan.checkpoint.display())),
+            &fast_opts(),
+            |ev| events.push(ev.clone()),
+        )
+        .unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].completed);
+        assert_eq!(outcomes[0].spawns, 1);
+        assert_eq!(outcomes[0].crashes + outcomes[0].stalls, 0);
+        assert_eq!(outcomes[0].last_exit_code, Some(0));
+        assert!(events
+            .iter()
+            .any(|e| e.kind == ShardEventKind::Completed));
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+    }
+
+    #[test]
+    fn crash_is_retried_until_budget_exhausts() {
+        let shards = one_shard("crashy");
+        let mut events = Vec::new();
+        let outcomes = supervise(
+            &shards,
+            |_, _| sh("exit 3".into()),
+            &fast_opts(),
+            |ev| events.push(ev.clone()),
+        )
+        .unwrap();
+        // initial spawn + max_retries relaunches, then give up
+        assert!(!outcomes[0].completed);
+        assert_eq!(outcomes[0].spawns, 3);
+        assert_eq!(outcomes[0].crashes, 3);
+        assert_eq!(outcomes[0].last_exit_code, Some(3));
+        assert!(events
+            .iter()
+            .any(|e| matches!(&e.kind, ShardEventKind::GaveUp { reason }
+                if reason.contains("retry budget exhausted"))));
+    }
+
+    #[test]
+    fn crash_then_success_heals_within_budget() {
+        let shards = one_shard("flaky");
+        let outcomes = supervise(
+            &shards,
+            |plan, attempt| {
+                if attempt == 1 {
+                    sh("exit 1".into())
+                } else {
+                    sh(format!("printf line >> {}", plan.checkpoint.display()))
+                }
+            },
+            &fast_opts(),
+            |_| {},
+        )
+        .unwrap();
+        assert!(outcomes[0].completed);
+        assert_eq!(outcomes[0].spawns, 2);
+        assert_eq!(outcomes[0].crashes, 1);
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+    }
+
+    #[test]
+    fn stalled_child_is_killed_and_relaunched() {
+        let shards = one_shard("wedged");
+        let mut events = Vec::new();
+        let outcomes = supervise(
+            &shards,
+            |plan, attempt| {
+                if attempt == 1 {
+                    // wedge without ever touching the checkpoint
+                    sh("sleep 30".into())
+                } else {
+                    sh(format!("printf line >> {}", plan.checkpoint.display()))
+                }
+            },
+            &fast_opts(),
+            |ev| events.push(ev.clone()),
+        )
+        .unwrap();
+        assert!(outcomes[0].completed);
+        assert_eq!(outcomes[0].stalls, 1);
+        assert_eq!(outcomes[0].spawns, 2);
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, ShardEventKind::Stalled { .. })));
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+    }
+
+    #[test]
+    fn chaos_kills_a_progressing_child_once_and_heals() {
+        let shards = one_shard("chaos");
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+        let opts = SuperviseOptions { chaos_kill_one: true, ..fast_opts() };
+        let mut events = Vec::new();
+        let outcomes = supervise(
+            &shards,
+            |plan, _| {
+                // write progress immediately, then linger long enough
+                // for the supervisor to observe it and strike
+                sh(format!(
+                    "printf line >> {}; sleep 2",
+                    plan.checkpoint.display()
+                ))
+            },
+            &SuperviseOptions { stall_timeout: Duration::from_secs(30), ..opts },
+            |ev| events.push(ev.clone()),
+        )
+        .unwrap();
+        assert_eq!(outcomes[0].chaos_kills, 1);
+        assert_eq!(outcomes[0].spawns, 2);
+        // the relaunch ran the same script to completion
+        assert!(outcomes[0].completed);
+        assert!(events
+            .iter()
+            .any(|e| matches!(e.kind, ShardEventKind::ChaosKilled { .. })));
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+    }
+
+    #[test]
+    fn first_spawn_failure_is_fatal_and_reaps_the_fleet() {
+        let mut shards = one_shard("fatal-0");
+        shards.push(ShardPlan {
+            index: 1,
+            count: 2,
+            spec: ShardSpec { index: 1, count: 2 },
+            checkpoint: tmp("fatal-1.jsonl"),
+            log: tmp("fatal-1.log"),
+            cells: 1,
+            scenarios: 1,
+        });
+        let err = supervise(
+            &shards,
+            |plan, _| {
+                if plan.index == 0 {
+                    sh("sleep 30".into())
+                } else {
+                    Err(crate::Error::config("no such binary"))
+                }
+            },
+            &fast_opts(),
+            |_| {},
+        );
+        assert!(err.is_err());
+    }
+}

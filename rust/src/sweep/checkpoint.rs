@@ -61,6 +61,11 @@ pub struct CheckpointSet {
     pub skipped_lines: usize,
     /// Files that existed and were read.
     pub loaded_files: usize,
+    /// Non-blank lines seen across all files.
+    pub total_lines: usize,
+    /// Parseable records that duplicated an already-loaded hash
+    /// (identical by the determinism contract; later files win).
+    pub duplicate_records: usize,
 }
 
 impl CheckpointSet {
@@ -91,9 +96,12 @@ impl CheckpointSet {
                 if line.trim().is_empty() {
                     continue;
                 }
+                set.total_lines += 1;
                 match Self::parse_line(line) {
                     Ok((hash, result)) => {
-                        set.map.insert(hash, result);
+                        if set.map.insert(hash, result).is_some() {
+                            set.duplicate_records += 1;
+                        }
                     }
                     Err(_) => set.skipped_lines += 1,
                 }
@@ -116,12 +124,154 @@ impl CheckpointSet {
         self.map.get(hash)
     }
 
+    pub fn contains(&self, hash: &str) -> bool {
+        self.map.contains_key(hash)
+    }
+
+    /// Records in canonical (ascending hash) order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &ScenarioResult)> {
+        self.map.iter().map(|(h, r)| (h.as_str(), r))
+    }
+
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+}
+
+/// What [`compact`] read and wrote.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CompactStats {
+    /// Input files read (all must exist — compaction of a missing
+    /// checkpoint is an operator error, unlike resume's tolerance).
+    pub files_in: usize,
+    /// Non-blank input lines seen.
+    pub lines_in: usize,
+    /// Unparseable lines dropped (torn tails, stray garbage).
+    pub dropped_lines: usize,
+    /// Parseable records dropped as duplicates of an earlier hash
+    /// (identical by the determinism contract).
+    pub duplicate_records: usize,
+    /// Records in the compacted output.
+    pub records_out: usize,
+}
+
+/// Rewrite one or more checkpoint files as a single canonical file:
+/// duplicate hashes collapse, torn/garbage lines are dropped, and
+/// records are emitted in ascending hash order — so compacting the
+/// same logical content always yields the same bytes, and re-running
+/// compact on its own output is a fixpoint. The output is written to
+/// `<output>.tmp` and renamed into place, so a kill mid-compaction
+/// never corrupts an existing checkpoint (in-place compaction,
+/// `output` ∈ `inputs`, is safe for the same reason: inputs are fully
+/// read before the write starts).
+pub fn compact(inputs: &[PathBuf], output: &Path) -> Result<CompactStats> {
+    for path in inputs {
+        if !path.exists() {
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!("compact checkpoint {}: no such file", path.display()),
+            )));
+        }
+    }
+    let set = CheckpointSet::load(inputs)?;
+    write_compacted(&set, output)
+}
+
+/// Write an already-loaded checkpoint set as a canonical compacted
+/// file (the tail of [`compact`], split out so callers that hold a
+/// [`CheckpointSet`] — the orchestrator's merge step audits one —
+/// can compact without re-reading every shard file from disk).
+pub fn write_compacted(set: &CheckpointSet, output: &Path) -> Result<CompactStats> {
+    let mut tmp_name = output.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    {
+        let mut w = CheckpointWriter::create(&tmp)?;
+        for (hash, result) in set.iter() {
+            w.record(hash, result)?;
+        }
+    }
+    std::fs::rename(&tmp, output).map_err(|e| {
+        Error::Io(std::io::Error::new(
+            e.kind(),
+            format!("rename {} -> {}: {e}", tmp.display(), output.display()),
+        ))
+    })?;
+    Ok(CompactStats {
+        files_in: set.loaded_files,
+        lines_in: set.total_lines,
+        dropped_lines: set.skipped_lines,
+        duplicate_records: set.duplicate_records,
+        records_out: set.len(),
+    })
+}
+
+/// Result of checking a checkpoint set against the grid it claims to
+/// cover (see [`audit_coverage`]).
+#[derive(Clone, Debug)]
+pub struct CoverageAudit {
+    /// Scenarios the grid plans.
+    pub planned: usize,
+    /// Planned scenarios present in the checkpoint set.
+    pub present: usize,
+    /// Planned scenarios absent from the set: (grid index, hash),
+    /// index-ascending.
+    pub missing: Vec<(usize, String)>,
+    /// Records in the set that belong to no planned scenario (another
+    /// grid's rows, or rows written under the other router sampler).
+    pub extra: usize,
+}
+
+impl CoverageAudit {
+    /// Every planned scenario is present.
+    pub fn complete(&self) -> bool {
+        self.missing.is_empty()
+    }
+}
+
+/// Audit a checkpoint set against a sweep grid: expand the grid,
+/// derive every scenario's content hash under the given router
+/// sampler, and report which planned scenarios are present, missing,
+/// or foreign to the grid. This is how the orchestrator proves the
+/// merged artifact covers every planned scenario before it publishes
+/// a report (and how `memfine checkpoint audit` exposes the same
+/// check standalone).
+pub fn audit_coverage(
+    cfg: &crate::config::SweepConfig,
+    fast_router: bool,
+    set: &CheckpointSet,
+) -> Result<CoverageAudit> {
+    let scenarios = crate::sweep::grid::expand(cfg)?;
+    let planned: Vec<(usize, String)> = scenarios
+        .iter()
+        .map(|sc| (sc.index, scenario_hash(&sc.run, fast_router)))
+        .collect();
+    Ok(audit_planned(&planned, set))
+}
+
+/// [`audit_coverage`] against an already-derived planned hash set —
+/// the orchestrator plans every scenario hash once up front
+/// ([`crate::orchestrator::plan::LaunchPlan::planned`]) and audits
+/// against it without re-expanding and re-hashing the grid.
+pub fn audit_planned(planned: &[(usize, String)], set: &CheckpointSet) -> CoverageAudit {
+    let mut present = 0usize;
+    let mut missing = Vec::new();
+    for (index, hash) in planned {
+        if set.contains(hash) {
+            present += 1;
+        } else {
+            missing.push((*index, hash.clone()));
+        }
+    }
+    CoverageAudit {
+        planned: planned.len(),
+        present,
+        missing,
+        extra: set.len().saturating_sub(present),
     }
 }
 
@@ -370,5 +520,115 @@ mod tests {
     fn disabled_writer_is_a_noop() {
         let mut w = CheckpointWriter::disabled();
         w.record("abc", &sample_result(0, 1)).unwrap();
+    }
+
+    #[test]
+    fn compact_dedupes_drops_torn_tail_and_canonicalises() {
+        let a = tmp_path("compact-a");
+        let b = tmp_path("compact-b");
+        let out = tmp_path("compact-out");
+        let run1 = paper_run(model_i(), Method::FullRecompute);
+        let run2 = paper_run(model_i(), Method::FixedChunk(8));
+        let (h1, h2) = (scenario_hash(&run1, false), scenario_hash(&run2, false));
+        {
+            let mut w = CheckpointWriter::create(&a).unwrap();
+            w.record(&h2, &sample_result(1, 7)).unwrap();
+            w.record(&h1, &sample_result(0, 7)).unwrap();
+            // duplicate of h1 within the same file
+            w.record(&h1, &sample_result(0, 7)).unwrap();
+        }
+        {
+            let mut w = CheckpointWriter::create(&b).unwrap();
+            // cross-file duplicate of h2, then a torn tail
+            w.record(&h2, &sample_result(1, 7)).unwrap();
+        }
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::options().append(true).open(&b).unwrap();
+            f.write_all(b"{\"hash\":\"dead").unwrap();
+        }
+        let stats = compact(&[a.clone(), b.clone()], &out).unwrap();
+        assert_eq!(stats.files_in, 2);
+        assert_eq!(stats.lines_in, 5);
+        assert_eq!(stats.dropped_lines, 1);
+        assert_eq!(stats.duplicate_records, 2);
+        assert_eq!(stats.records_out, 2);
+        // the compacted file loads clean
+        let set = CheckpointSet::load(std::slice::from_ref(&out)).unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.skipped_lines, 0);
+        // records come out hash-ascending
+        let hashes: Vec<String> = set.iter().map(|(h, _)| h.to_string()).collect();
+        let mut sorted = hashes.clone();
+        sorted.sort();
+        assert_eq!(hashes, sorted);
+        // compaction is a fixpoint: recompacting its own output
+        // (in-place) changes nothing
+        let bytes = std::fs::read(&out).unwrap();
+        let again = compact(&[out.clone()], &out).unwrap();
+        assert_eq!(again.records_out, 2);
+        assert_eq!(again.duplicate_records, 0);
+        assert_eq!(again.dropped_lines, 0);
+        assert_eq!(std::fs::read(&out).unwrap(), bytes);
+        for p in [&a, &b, &out] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn compact_missing_input_is_an_error() {
+        let missing = tmp_path("compact-missing");
+        let out = tmp_path("compact-missing-out");
+        assert!(compact(&[missing], &out).is_err());
+    }
+
+    #[test]
+    fn audit_coverage_reports_present_missing_and_extra() {
+        use crate::config::SweepConfig;
+        let cfg = SweepConfig {
+            models: vec!["i".into()],
+            methods: vec![Method::FullRecompute, Method::FixedChunk(8)],
+            seeds: vec![7],
+            iterations: 10,
+        };
+        let scenarios = crate::sweep::grid::expand(&cfg).unwrap();
+        assert_eq!(scenarios.len(), 2);
+        let h0 = scenario_hash(&scenarios[0].run, false);
+
+        let path = tmp_path("audit");
+        {
+            let mut w = CheckpointWriter::create(&path).unwrap();
+            w.record(&h0, &sample_result(0, 7)).unwrap();
+            // a foreign record (other grid / other sampler)
+            w.record("ffffffffffffffff", &sample_result(9, 9)).unwrap();
+        }
+        let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
+        let audit = audit_coverage(&cfg, false, &set).unwrap();
+        assert_eq!(audit.planned, 2);
+        assert_eq!(audit.present, 1);
+        assert_eq!(audit.extra, 1);
+        assert!(!audit.complete());
+        assert_eq!(audit.missing.len(), 1);
+        assert_eq!(audit.missing[0].0, scenarios[1].index);
+        assert_eq!(audit.missing[0].1, scenario_hash(&scenarios[1].run, false));
+
+        // the same rows under the other sampler cover nothing: the
+        // sampler tag is part of the identity
+        let fast = audit_coverage(&cfg, true, &set).unwrap();
+        assert_eq!(fast.present, 0);
+        assert_eq!(fast.missing.len(), 2);
+        assert_eq!(fast.extra, 2);
+
+        // complete set audits clean
+        {
+            let mut w = CheckpointWriter::append(&path).unwrap();
+            w.record(&scenario_hash(&scenarios[1].run, false), &sample_result(1, 7))
+                .unwrap();
+        }
+        let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
+        let audit = audit_coverage(&cfg, false, &set).unwrap();
+        assert!(audit.complete());
+        assert_eq!(audit.present, 2);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -111,6 +111,179 @@ fn cli_limit_then_resume_completes_the_grid() {
 }
 
 #[test]
+fn cli_resumed_capped_slices_complete_the_grid() {
+    // `--resume --limit N` must advance by newly-executed scenarios
+    // per slice: 4-scenario grid, limit 3 → slice 1 runs 3, slice 2
+    // resumes 3 and runs the last 1, emitting the direct artifact.
+    let ck = tmp("cap.jsonl");
+    let direct = tmp("cap-direct.json");
+    let out_a = tmp("cap-a.json");
+    let out_b = tmp("cap-b.json");
+
+    sweep(&["--out", direct.to_str().unwrap()]);
+    sweep(&[
+        "--limit", "3",
+        "--checkpoint", ck.to_str().unwrap(),
+        "--out", out_a.to_str().unwrap(),
+    ]);
+    let lines = std::fs::read_to_string(&ck).expect("checkpoint").lines().count();
+    assert_eq!(lines, 3);
+    sweep(&[
+        "--resume",
+        "--limit", "3",
+        "--checkpoint", ck.to_str().unwrap(),
+        "--out", out_b.to_str().unwrap(),
+    ]);
+    let lines = std::fs::read_to_string(&ck).expect("checkpoint").lines().count();
+    assert_eq!(lines, 4, "the resumed capped slice must run the remaining scenario");
+    assert_eq!(
+        std::fs::read(&direct).expect("direct"),
+        std::fs::read(&out_b).expect("resumed capped"),
+        "capped slices diverged from the direct artifact"
+    );
+
+    for p in [&ck, &direct, &out_a, &out_b] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+/// Grid spec file matching the `sweep()` helper's flags, for
+/// `--config`-driven subcommands.
+fn write_grid_config(path: &PathBuf) {
+    let cfg = memfine::config::SweepConfig {
+        models: vec!["i".into()],
+        methods: vec![
+            memfine::config::Method::parse("1").unwrap(),
+            memfine::config::Method::parse("3").unwrap(),
+        ],
+        seeds: memfine::config::derive_seeds(7, 2),
+        iterations: 5,
+    };
+    std::fs::write(path, format!("{}\n", cfg.to_json().to_string_pretty()))
+        .expect("write grid config");
+}
+
+#[test]
+fn cli_checkpoint_compact_and_audit() {
+    let ck = tmp("tools.jsonl");
+    let cfg_json = tmp("tools-grid.json");
+    let compacted = tmp("tools-compacted.jsonl");
+    write_grid_config(&cfg_json);
+
+    sweep(&["--checkpoint", ck.to_str().unwrap()]);
+
+    // dirty the checkpoint: duplicate the first record, tear a tail
+    let text = std::fs::read_to_string(&ck).expect("checkpoint");
+    let first_line = text.lines().next().expect("has lines").to_string();
+    let dirty = format!("{text}{first_line}\n{{\"hash\":\"torn");
+    std::fs::write(&ck, dirty).expect("dirty checkpoint");
+
+    // compact drops the duplicate and the torn tail
+    let out = Command::new(env!("CARGO_BIN_EXE_memfine"))
+        .args([
+            "checkpoint", "compact", ck.to_str().unwrap(),
+            "--out", compacted.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn memfine");
+    assert!(
+        out.status.success(),
+        "checkpoint compact failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let lines = std::fs::read_to_string(&compacted).expect("compacted").lines().count();
+    assert_eq!(lines, 4, "4 scenarios survive compaction");
+
+    // audit passes on the compacted file against the grid spec
+    let out = Command::new(env!("CARGO_BIN_EXE_memfine"))
+        .args([
+            "checkpoint", "audit", compacted.to_str().unwrap(),
+            "--config", cfg_json.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn memfine");
+    assert!(
+        out.status.success(),
+        "checkpoint audit failed on a complete set:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // drop a record: the audit must fail with a missing scenario
+    let text = std::fs::read_to_string(&compacted).expect("compacted");
+    let truncated: Vec<&str> = text.lines().skip(1).collect();
+    std::fs::write(&compacted, format!("{}\n", truncated.join("\n"))).unwrap();
+    let out = Command::new(env!("CARGO_BIN_EXE_memfine"))
+        .args([
+            "checkpoint", "audit", compacted.to_str().unwrap(),
+            "--config", cfg_json.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn memfine");
+    assert!(
+        !out.status.success(),
+        "checkpoint audit unexpectedly passed on an incomplete set"
+    );
+    assert!(String::from_utf8_lossy(&out.stderr).contains("missing"));
+
+    for p in [&ck, &cfg_json, &compacted] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn cli_launch_matches_direct_sweep_artifact() {
+    let direct = tmp("launch-direct.json");
+    let launch_out = tmp("launch-out.json");
+    let dir = tmp("launch-dir");
+    std::fs::remove_dir_all(&dir).ok();
+
+    sweep(&["--out", direct.to_str().unwrap()]);
+    let out = Command::new(env!("CARGO_BIN_EXE_memfine"))
+        .args([
+            "launch",
+            "--models", "i", "--methods", "1,3", "--seeds", "2", "--iters", "5",
+            "--procs", "2", "--workers", "1", "--poll-ms", "20",
+            "--dir", dir.to_str().unwrap(),
+            "--out", launch_out.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn memfine");
+    assert!(
+        out.status.success(),
+        "memfine launch failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(
+        std::fs::read(&direct).expect("direct artifact"),
+        std::fs::read(&launch_out).expect("launch artifact"),
+        "CLI launch diverged from the direct sweep artifact"
+    );
+    // the launch dir carries the merged checkpoint and captured specs
+    assert!(dir.join("merged.jsonl").exists());
+    assert!(dir.join("sweep.json").exists());
+    assert!(dir.join("launch.json").exists());
+
+    // the merged checkpoint audits clean against the captured spec
+    let out = Command::new(env!("CARGO_BIN_EXE_memfine"))
+        .args([
+            "checkpoint", "audit",
+            dir.join("merged.jsonl").to_str().unwrap(),
+            "--config", dir.join("sweep.json").to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn memfine");
+    assert!(
+        out.status.success(),
+        "merged checkpoint failed its audit:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    std::fs::remove_file(&direct).ok();
+    std::fs::remove_file(&launch_out).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn cli_rejects_bad_shard_and_bare_resume() {
     for args in [&["--shard", "2/2"][..], &["--resume"][..]] {
         let mut cmd = Command::new(env!("CARGO_BIN_EXE_memfine"));

@@ -1,0 +1,337 @@
+//! End-to-end contract of the shard orchestrator: `launch` must turn
+//! a grid into a supervised multi-process fleet whose merged artifact
+//! is **byte-identical** to a single-process `memfine sweep` of the
+//! same grid — including when a child is killed mid-flight (the chaos
+//! drill) or wedges without heartbeating (a stalled shard that the
+//! supervisor kills and relaunches).
+//!
+//! Children are the real `memfine` binary (`CARGO_BIN_EXE_memfine`),
+//! so these tests also cover the `sweep --config/--shard/--resume`
+//! plumbing the orchestrator drives.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use memfine::config::{derive_seeds, LaunchConfig, Method, SweepConfig};
+use memfine::orchestrator::{self, LaunchOptions, ShardEventKind, SuperviseOptions};
+use memfine::sweep;
+
+/// The 24-scenario determinism grid every sweep integration test pins.
+fn grid_3x2x4() -> SweepConfig {
+    SweepConfig {
+        models: vec!["i".into(), "ii".into()],
+        methods: vec![
+            Method::FullRecompute,
+            Method::FixedChunk(8),
+            Method::Mact(vec![1, 2, 4, 8]),
+        ],
+        seeds: derive_seeds(7, 4),
+        iterations: 10,
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("memfine-it-launch-{}-{name}", std::process::id()));
+    std::fs::remove_dir_all(&p).ok();
+    p
+}
+
+fn bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_memfine"))
+}
+
+fn quiet_opts(dir: &PathBuf) -> LaunchOptions {
+    LaunchOptions {
+        dir: dir.clone(),
+        binary: Some(bin()),
+        chaos_kill_one: false,
+        quiet: true,
+    }
+}
+
+#[test]
+fn launch_two_procs_matches_single_process_artifact() {
+    let mut cfg = LaunchConfig::new(grid_3x2x4());
+    cfg.procs = 2;
+    cfg.workers_per_proc = 2;
+    cfg.poll_ms = 20;
+    let dir = tmp_dir("two-procs");
+    let launched = orchestrator::launch(&cfg, &quiet_opts(&dir)).expect("launch");
+
+    // a clean launch: every shard completes on its first spawn and the
+    // catch-up pass has nothing to heal
+    assert_eq!(launched.plan.procs, 2);
+    assert!(launched.outcomes.iter().all(|o| o.completed));
+    assert!(launched.outcomes.iter().all(|o| o.spawns == 1));
+    assert_eq!(launched.merge.healed, 0);
+    assert_eq!(launched.merge.resumed, 24);
+    assert!(launched.merge.audit.complete());
+
+    // THE acceptance bytes: merged report == single-process sweep
+    let direct = sweep::run_sweep(&grid_3x2x4(), 1).expect("direct sweep");
+    assert_eq!(
+        launched.merge.report.to_json().to_string_pretty(),
+        direct.to_json().to_string_pretty(),
+        "orchestrated artifact diverged from the single-process run"
+    );
+
+    // the compacted merged checkpoint covers the whole grid and the
+    // campaign specs were captured next to it
+    assert_eq!(launched.merge.compact_stats.records_out, 24);
+    assert!(launched.merge.compacted.exists());
+    assert!(dir.join("sweep.json").exists());
+    assert!(dir.join("launch.json").exists());
+    let captured = memfine::json::parse(
+        &std::fs::read_to_string(dir.join("launch.json")).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(LaunchConfig::from_json(&captured).unwrap(), cfg);
+
+    // after a successful launch the shard files are absorbed into
+    // merged.jsonl — the campaign dir stays bounded
+    assert!(!launched.plan.shards[0].checkpoint.exists());
+
+    // same campaign, different topology: a relaunch with 3 procs folds
+    // everything back out of merged.jsonl — nothing re-executes
+    let mut resumed_cfg = cfg.clone();
+    resumed_cfg.procs = 3;
+    let relaunched =
+        orchestrator::launch(&resumed_cfg, &quiet_opts(&dir)).expect("relaunch");
+    assert_eq!(relaunched.merge.resumed, 24);
+    assert_eq!(relaunched.merge.healed, 0);
+    assert_eq!(
+        relaunched.merge.report.to_json().to_string_pretty(),
+        direct.to_json().to_string_pretty(),
+        "topology-changed resume diverged from the single-process run"
+    );
+
+    // a launch dir is one campaign: re-entering it with a different
+    // grid is refused (stale shard checkpoints would pollute the
+    // compacted merged.jsonl), while the same grid may resume
+    let mut other = cfg.clone();
+    other.sweep.iterations += 1;
+    assert!(
+        orchestrator::launch(&other, &quiet_opts(&dir)).is_err(),
+        "a different campaign must not reuse the launch dir"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn chaos_killed_child_is_healed_to_identical_bytes() {
+    let mut cfg = LaunchConfig::new(grid_3x2x4());
+    cfg.procs = 3;
+    cfg.poll_ms = 10;
+    let dir = tmp_dir("chaos");
+    let mut opts = quiet_opts(&dir);
+    opts.chaos_kill_one = true;
+    let launched = orchestrator::launch(&cfg, &opts).expect("launch");
+
+    // exactly one child was chaos-killed mid-flight and relaunched
+    let chaos_kills: u32 = launched.outcomes.iter().map(|o| o.chaos_kills).sum();
+    assert_eq!(chaos_kills, 1, "chaos drill must kill exactly one child");
+    let victim = launched
+        .outcomes
+        .iter()
+        .find(|o| o.chaos_kills == 1)
+        .expect("victim outcome");
+    assert!(victim.spawns >= 2, "victim must have been relaunched");
+    assert!(launched.outcomes.iter().all(|o| o.completed));
+    assert!(launched
+        .events
+        .iter()
+        .any(|e| matches!(e.kind, ShardEventKind::ChaosKilled { .. })));
+
+    // and the artifact still comes out byte-identical
+    let direct = sweep::run_sweep(&grid_3x2x4(), 1).expect("direct sweep");
+    assert_eq!(
+        launched.merge.report.to_json().to_string_pretty(),
+        direct.to_json().to_string_pretty(),
+        "chaos-healed artifact diverged from the single-process run"
+    );
+    assert!(launched.merge.audit.complete());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A 3-shard run where one shard's first child wedges without ever
+/// touching its checkpoint: the supervisor must flag the stalled
+/// heartbeat, kill the child, relaunch the shard for real, and the
+/// merged artifact must still match the single-process bytes.
+///
+/// Uses a small 6-scenario grid and a stall timeout far above its
+/// per-cell latency, so only the injected sleeper ever stalls: the
+/// heartbeat ticks once per completed trace cell, which is exactly
+/// why `LaunchConfig::stall_timeout_ms` must stay comfortably above
+/// the slowest cell.
+#[test]
+#[cfg(unix)]
+fn stalled_shard_is_killed_relaunched_and_merges_identically() {
+    let tiny = SweepConfig {
+        models: vec!["i".into()],
+        methods: vec![Method::FullRecompute, Method::Mact(vec![1, 2, 4, 8])],
+        seeds: derive_seeds(7, 3),
+        iterations: 3,
+    };
+    let mut cfg = LaunchConfig::new(tiny.clone());
+    cfg.procs = 3;
+    cfg.poll_ms = 20;
+    // far above the tiny grid's per-cell latency (only the injected
+    // sleeper may stall), far below the sleeper's 30 s nap
+    cfg.stall_timeout_ms = 10_000;
+    let dir = tmp_dir("stall");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan = orchestrator::plan_shards(&cfg, &dir).expect("plan");
+    assert_eq!(plan.shards.len(), 3);
+
+    // children load the grid exactly as launch() provides it
+    let sweep_json = dir.join("sweep.json");
+    std::fs::write(
+        &sweep_json,
+        format!("{}\n", cfg.sweep.to_json().to_string_pretty()),
+    )
+    .unwrap();
+
+    let sup = SuperviseOptions {
+        stall_timeout: Duration::from_millis(cfg.stall_timeout_ms),
+        poll_interval: Duration::from_millis(cfg.poll_ms),
+        max_retries: 2,
+        chaos_kill_one: false,
+    };
+    let mut events = Vec::new();
+    let outcomes = orchestrator::supervise(
+        &plan.shards,
+        |shard, attempt| {
+            use std::process::{Command, Stdio};
+            if shard.index == 1 && attempt == 1 {
+                // simulate a wedged child: alive, but the checkpoint
+                // heartbeat never moves
+                return Command::new("sleep")
+                    .arg("30")
+                    .stdin(Stdio::null())
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::null())
+                    .spawn()
+                    .map_err(memfine::Error::Io);
+            }
+            Command::new(bin())
+                .arg("sweep")
+                .arg("--config")
+                .arg(&sweep_json)
+                .arg("--shard")
+                .arg(format!("{}/{}", shard.spec.index, shard.spec.count))
+                .arg("--checkpoint")
+                .arg(&shard.checkpoint)
+                .arg("--resume")
+                .arg("--workers")
+                .arg("1")
+                .arg("--out")
+                .arg("-")
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .map_err(memfine::Error::Io)
+        },
+        &sup,
+        |ev| events.push(ev.clone()),
+    )
+    .expect("supervise");
+
+    assert!(outcomes.iter().all(|o| o.completed));
+    assert!(outcomes[1].stalls >= 1, "shard 1 must have been stall-killed");
+    assert!(outcomes[1].spawns >= 2, "shard 1 must have been relaunched");
+    assert!(events
+        .iter()
+        .any(|e| e.shard == 1 && matches!(e.kind, ShardEventKind::Stalled { .. })));
+
+    let merge = orchestrator::merge_and_finish(&cfg, &plan, &dir, &[]).expect("merge");
+    assert_eq!(merge.healed, 0, "all scenarios came from the healed fleet");
+    assert!(merge.audit.complete());
+    let direct = sweep::run_sweep(&tiny, 1).expect("direct sweep");
+    assert_eq!(
+        merge.report.to_json().to_string_pretty(),
+        direct.to_json().to_string_pretty(),
+        "stall-healed artifact diverged from the single-process run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A shard that permanently fails (its retry budget exhausts) must not
+/// poison the launch: the merge catch-up executes its scenarios
+/// in-process and the artifact still matches.
+#[test]
+#[cfg(unix)]
+fn shard_that_gives_up_is_healed_by_the_merge_catchup() {
+    let mut cfg = LaunchConfig::new(grid_3x2x4());
+    cfg.procs = 3;
+    cfg.poll_ms = 10;
+    let dir = tmp_dir("giveup");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan = orchestrator::plan_shards(&cfg, &dir).expect("plan");
+    let sweep_json = dir.join("sweep.json");
+    std::fs::write(
+        &sweep_json,
+        format!("{}\n", cfg.sweep.to_json().to_string_pretty()),
+    )
+    .unwrap();
+
+    let sup = SuperviseOptions {
+        stall_timeout: Duration::from_secs(30),
+        poll_interval: Duration::from_millis(10),
+        max_retries: 1,
+        chaos_kill_one: false,
+    };
+    let outcomes = orchestrator::supervise(
+        &plan.shards,
+        |shard, _attempt| {
+            use std::process::{Command, Stdio};
+            if shard.index == 2 {
+                // this shard crashes on every attempt
+                return Command::new("false")
+                    .stdin(Stdio::null())
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::null())
+                    .spawn()
+                    .map_err(memfine::Error::Io);
+            }
+            Command::new(bin())
+                .arg("sweep")
+                .arg("--config")
+                .arg(&sweep_json)
+                .arg("--shard")
+                .arg(format!("{}/{}", shard.spec.index, shard.spec.count))
+                .arg("--checkpoint")
+                .arg(&shard.checkpoint)
+                .arg("--resume")
+                .arg("--workers")
+                .arg("1")
+                .arg("--out")
+                .arg("-")
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .map_err(memfine::Error::Io)
+        },
+        &sup,
+        |_| {},
+    )
+    .expect("supervise");
+
+    assert!(!outcomes[2].completed);
+    assert_eq!(outcomes[2].spawns, 2); // initial + 1 retry
+    assert!(outcomes[0].completed && outcomes[1].completed);
+
+    // merge heals the abandoned shard's scenarios in-process
+    let merge = orchestrator::merge_and_finish(&cfg, &plan, &dir, &[]).expect("merge");
+    assert_eq!(merge.healed, plan.shards[2].scenarios);
+    assert!(merge.audit.complete());
+    let direct = sweep::run_sweep(&grid_3x2x4(), 1).expect("direct sweep");
+    assert_eq!(
+        merge.report.to_json().to_string_pretty(),
+        direct.to_json().to_string_pretty(),
+        "gave-up-shard artifact diverged from the single-process run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

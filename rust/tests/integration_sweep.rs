@@ -153,6 +153,67 @@ fn killed_sweep_resumes_to_identical_bytes() {
 }
 
 #[test]
+fn resumed_capped_slices_always_make_limit_progress() {
+    // `--limit` budgets *newly executed* scenarios only: resumed rows
+    // folded from the checkpoint never count against it, so a capped
+    // campaign (`--resume --limit N` in a loop) always advances by
+    // min(N, remaining) per slice and terminates. This pins the
+    // documented SweepRunOptions::limit contract against regressions.
+    let cfg = grid_3x2x4();
+    let direct_json = sweep::run_sweep(&cfg, 2)
+        .expect("direct sweep")
+        .to_json()
+        .to_string_pretty();
+    let ck = tmp("capped.jsonl");
+
+    // first slice creates the checkpoint
+    let first = SweepRunOptions {
+        workers: 2,
+        checkpoint: vec![ck.clone()],
+        limit: Some(9),
+        ..Default::default()
+    };
+    let s = sweep::run_sweep_with(&cfg, &first).expect("first slice");
+    assert_eq!(s.executed, 9);
+    assert_eq!(s.skipped, 15);
+
+    // every later slice resumes and must execute exactly
+    // min(limit, remaining) — never less because of resumed rows
+    let mut done = 9;
+    while done < 24 {
+        let slice = SweepRunOptions {
+            workers: 2,
+            checkpoint: vec![ck.clone()],
+            resume: true,
+            limit: Some(9),
+            ..Default::default()
+        };
+        let s = sweep::run_sweep_with(&cfg, &slice).expect("capped slice");
+        assert_eq!(s.resumed, done, "slice must fold all prior work");
+        assert_eq!(s.executed, 9.min(24 - done), "capped slice must make full progress");
+        done += s.executed;
+    }
+    assert_eq!(done, 24);
+
+    // the finished checkpoint folds to the direct artifact
+    let merge = SweepRunOptions {
+        workers: 4,
+        checkpoint: vec![ck.clone()],
+        resume: true,
+        ..Default::default()
+    };
+    let merged = sweep::run_sweep_with(&cfg, &merge).expect("final fold");
+    assert_eq!(merged.executed, 0);
+    assert_eq!(merged.resumed, 24);
+    assert_eq!(
+        merged.report.to_json().to_string_pretty(),
+        direct_json,
+        "capped campaign changed the artifact"
+    );
+    std::fs::remove_file(&ck).ok();
+}
+
+#[test]
 fn sweep_artifact_reparses_and_covers_grid() {
     let cfg = grid_3x2x4();
     let report = sweep::run_sweep(&cfg, 8).expect("sweep");
