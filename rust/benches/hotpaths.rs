@@ -2,10 +2,12 @@
 //! hot paths (EXPERIMENTS.md §Perf tracks these before/after):
 //!
 //!   * router sampling (multinomial over 256 experts)
+//!   * gamma draws: per-draw vs batched (the Dirichlet inner loop)
 //!   * dispatch planning (token-level all-to-all plan)
-//!   * MACT decision
+//!   * MACT decision (stage path and hoisted-budget path)
 //!   * FCDA schedule construction
-//!   * memory-model evaluation
+//!   * memory-model evaluation + the memoised MemFine timing kernel
+//!   * fused cell evaluation vs per-method trace evaluation (Model I)
 //!   * JSON parse of a manifest-sized document
 //!   * PJRT execute round-trip overhead (when artifacts are present)
 
@@ -14,7 +16,9 @@ use memfine::chunk::{Mact, RecomputeSchedule};
 use memfine::config::{model_i, paper_parallel, paper_run, Method};
 use memfine::dispatch;
 use memfine::memory::ActivationModel;
+use memfine::perf::PerfModel;
 use memfine::router::GatingSim;
+use memfine::sim::{evaluate_cell, run_scenario_on_trace, Simulator};
 use memfine::util::rng::Rng;
 
 fn main() {
@@ -36,6 +40,25 @@ fn main() {
     let sim = GatingSim::new(model_i(), paper_parallel(), 7);
     add(time_fn("router.route (256 experts, 1M copies)", 3, 30, || {
         sim.route(7, 15).max_received()
+    }));
+
+    // Gamma sampling: per-draw vs batched (the chaos-regime shape the
+    // Dirichlet popularity draw uses, 256 draws = one popularity
+    // vector). Bit-identical samplers; the batch hoists the
+    // Marsaglia–Tsang constants and the boost exponent.
+    let mut rng = Rng::new(11);
+    add(time_fn("rng.gamma x256 (shape 0.02)", 30, 2_000, || {
+        let mut acc = 0.0;
+        for _ in 0..256 {
+            acc += rng.gamma(0.02);
+        }
+        acc
+    }));
+    let mut rng = Rng::new(11);
+    let mut gamma_buf = vec![0.0f64; 256];
+    add(time_fn("rng.gamma_batch(256, shape 0.02)", 30, 2_000, || {
+        rng.gamma_batch(0.02, &mut gamma_buf);
+        gamma_buf[0]
     }));
 
     // Dispatch planning at coordinator scale: 4 ranks × 512 tokens × top-2.
@@ -65,11 +88,16 @@ fn main() {
         dispatch::plan(&parallel, 32, &assignments, 4096).unwrap().placed()
     }));
 
-    // MACT decision.
+    // MACT decision: the per-stage entry point (re-derives the Eq. 8
+    // budget) vs the hoisted-budget core the fused evaluator calls.
     let run = paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8]));
     let mact = Mact::new(&run, vec![1, 2, 4, 8]);
     add(time_fn("mact.decide", 1000, 10_000, || {
         mact.decide(1, 250_000).chosen_c
+    }));
+    let s_max = mact.s_prime_max(1);
+    add(time_fn("mact.decide_given (hoisted Eq.8)", 1000, 10_000, || {
+        mact.decide_given(s_max, 250_000).chosen_c
     }));
 
     // FCDA schedule.
@@ -81,6 +109,38 @@ fn main() {
     let act = ActivationModel::new(&run);
     add(time_fn("memory.peak_bytes_chunked", 1000, 50_000, || {
         act.peak_bytes_chunked(1, 250_000, 4, true)
+    }));
+
+    // The MemFine timing kernel the fused evaluator memoises — one
+    // cache miss costs this much, one hit costs a map probe.
+    let perf = PerfModel::new(run.model.clone(), run.parallel.clone(), run.dtype_bytes);
+    add(time_fn("perf.moe_layer_memfine(250k, c=4)", 1000, 10_000, || {
+        perf.moe_layer_memfine(250_000, 4, true).total()
+    }));
+
+    // Fused cell evaluation vs per-method trace evaluation on a
+    // Model-I cell (3 methods, 10 iterations) — the sweep engine's
+    // method-evaluation stage in both shapes, same trace.
+    let methods = vec![
+        Method::FullRecompute,
+        Method::FixedChunk(8),
+        Method::Mact(vec![1, 2, 4, 8]),
+    ];
+    let mut cell_base = paper_run(model_i(), Method::FullRecompute);
+    cell_base.iterations = 10;
+    let trace = Simulator::new(cell_base.clone()).unwrap().draw_trace();
+    add(time_fn("sim.evaluate_cell (Model I, 3 methods)", 5, 200, || {
+        evaluate_cell(&cell_base, &methods, &trace).unwrap().len()
+    }));
+    add(time_fn("3x run_scenario_on_trace (same cell)", 5, 200, || {
+        methods
+            .iter()
+            .map(|m| {
+                run_scenario_on_trace(&cell_base, m.clone(), &trace)
+                    .unwrap()
+                    .oom_iterations
+            })
+            .sum::<u64>()
     }));
 
     // JSON parse (manifest-sized doc).

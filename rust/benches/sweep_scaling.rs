@@ -1,30 +1,37 @@
 //! `cargo bench --bench sweep_scaling` — throughput of the sweep
 //! engine on the paper's 24-scenario comparison grid (2 models × 3
-//! methods × 4 seeds), comparing three execution modes:
+//! methods × 4 seeds), comparing four execution modes:
 //!
 //! * **legacy** — the pre-trace-sharing path: every scenario draws its
 //!   own routing trace (`sweep::run_sweep_legacy`);
-//! * **shared** — one trace per (model, seed) cell, every method
-//!   evaluated against it (`sweep::run_sweep`); pinned bit-identical
-//!   to legacy;
-//! * **shared+fast** — trace sharing plus the binomial-splitting
-//!   multinomial (`--fast-router`; same distribution, different
-//!   sample).
+//! * **unfused** — one trace per (model, seed) cell, one full
+//!   evaluation pass per method (`--unfused`, the pre-fusion
+//!   trace-shared engine); pinned bit-identical to legacy;
+//! * **fused** — one trace per cell AND one trace walk evaluating all
+//!   methods simultaneously (`sim::evaluate_cell`, the default);
+//!   pinned bit-identical to both;
+//! * **fused+fast** — fusion plus the binomial-splitting multinomial
+//!   (`--fast-router`; same distribution, different sample).
 //!
 //! Also micro-benches the multinomial samplers on paper-scale draws
-//! and re-asserts the determinism contract (every worker count and
-//! the shared path must emit the serial legacy run's exact bytes).
+//! and the method-evaluation stage in isolation (fused vs unfused on
+//! pre-drawn traces — the stage fusion actually accelerates, measured
+//! without the trace-generation cost both modes share), and re-asserts
+//! the determinism contract (every worker count and every mode must
+//! emit the serial legacy run's exact bytes).
 //!
 //! Writes `BENCH_sweep.json` (scenarios/sec per mode × worker count,
-//! speedups, sampler draws/sec) so the perf trajectory is tracked
-//! PR-over-PR.
+//! end-to-end and eval-stage speedups, sampler draws/sec) so the perf
+//! trajectory is tracked PR-over-PR.
 
 use std::time::Instant;
 
 use memfine::bench::{fmt_time, BenchReport};
 use memfine::config::SweepConfig;
 use memfine::json::{self, Value};
+use memfine::sim;
 use memfine::sweep::{self, SweepRunOptions};
+use memfine::trace::SharedRoutingTrace;
 use memfine::util::rng::Rng;
 
 const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
@@ -33,21 +40,86 @@ fn scenarios_per_sec(n: usize, wall: f64) -> f64 {
     n as f64 / wall.max(1e-9)
 }
 
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Legacy,
+    Unfused,
+    Fused,
+    FusedFast,
+}
+
 /// Time one sweep invocation, returning (wall seconds, pretty JSON).
-fn timed_run(
-    cfg: &SweepConfig,
-    workers: usize,
-    fast_router: bool,
-    legacy: bool,
-) -> (f64, String) {
+fn timed_run(cfg: &SweepConfig, workers: usize, mode: Mode) -> (f64, String) {
     let t0 = Instant::now();
-    let report = if legacy {
-        sweep::run_sweep_legacy(cfg, workers).expect("legacy sweep")
-    } else {
-        let opts = SweepRunOptions { workers, fast_router, ..Default::default() };
-        sweep::run_sweep_with(cfg, &opts).expect("sweep").report
+    let report = match mode {
+        Mode::Legacy => sweep::run_sweep_legacy(cfg, workers).expect("legacy sweep"),
+        Mode::Unfused => {
+            let opts = SweepRunOptions { workers, unfused: true, ..Default::default() };
+            sweep::run_sweep_with(cfg, &opts).expect("unfused sweep").report
+        }
+        Mode::Fused => {
+            let opts = SweepRunOptions { workers, ..Default::default() };
+            sweep::run_sweep_with(cfg, &opts).expect("fused sweep").report
+        }
+        Mode::FusedFast => {
+            let opts =
+                SweepRunOptions { workers, fast_router: true, ..Default::default() };
+            sweep::run_sweep_with(cfg, &opts).expect("fused fast sweep").report
+        }
     };
     (t0.elapsed().as_secs_f64(), report.to_json().to_string_pretty())
+}
+
+/// The method-evaluation stage in isolation: evaluate one cell's
+/// methods against an already-drawn trace, fused vs per-method.
+/// Returns (unfused scn/s, fused scn/s) — the stage the fusion
+/// accelerates, with the trace-generation cost both modes share
+/// factored out.
+fn eval_stage_micro(cfg: &SweepConfig) -> (f64, f64) {
+    let cells = sweep::expand_cells(cfg).expect("cells");
+    let traces: Vec<SharedRoutingTrace> = cells
+        .iter()
+        .map(|cell| {
+            let run = &cell.scenarios[0].run;
+            let gating = memfine::router::GatingSim::new(
+                run.model.clone(),
+                run.parallel.clone(),
+                run.seed,
+            );
+            SharedRoutingTrace::generate(&gating, run.iterations)
+        })
+        .collect();
+    let reps = 20;
+    let n = (cfg.scenario_count() * reps) as f64;
+
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..reps {
+        for (cell, trace) in cells.iter().zip(&traces) {
+            for sc in &cell.scenarios {
+                acc += sim::run_scenario_on_trace(&sc.run, sc.method.clone(), trace)
+                    .expect("unfused eval")
+                    .oom_iterations;
+            }
+        }
+    }
+    let unfused = n / t0.elapsed().as_secs_f64().max(1e-9);
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for (cell, trace) in cells.iter().zip(&traces) {
+            let methods: Vec<_> =
+                cell.scenarios.iter().map(|sc| sc.method.clone()).collect();
+            for out in sim::evaluate_cell(&cell.scenarios[0].run, &methods, trace)
+                .expect("fused eval")
+            {
+                acc += out.summary.oom_iterations;
+            }
+        }
+    }
+    let fused = n / t0.elapsed().as_secs_f64().max(1e-9);
+    assert!(acc > 0, "keep the evaluations observable");
+    (unfused, fused)
 }
 
 fn multinomial_micro() -> (f64, f64) {
@@ -87,10 +159,10 @@ fn main() {
     // Warm-up (first run pays allocator/page-cache costs).
     sweep::run_sweep(&cfg, 1).expect("warmup sweep");
 
-    let (legacy_serial_s, legacy_json) = timed_run(&cfg, 1, false, true);
+    let (legacy_serial_s, legacy_json) = timed_run(&cfg, 1, Mode::Legacy);
 
     let mut report = BenchReport::new(
-        "sweep scaling — legacy vs trace-shared vs trace-shared+fast-router",
+        "sweep scaling — legacy vs trace-shared (unfused) vs fused vs fused+fast-router",
         &["mode", "workers", "wall clock", "scn/s", "vs legacy serial", "bit-identical"],
     );
     let mut artifact_rows: Vec<(String, Value)> = Vec::new();
@@ -113,14 +185,15 @@ fn main() {
         )
     };
 
-    let mut shared_serial_s = f64::NAN;
-    let mut shared_2w_s = f64::NAN;
-    let mut shared_fast_serial_s = f64::NAN;
+    let mut unfused_serial_s = f64::NAN;
+    let mut fused_serial_s = f64::NAN;
+    let mut fused_2w_s = f64::NAN;
+    let mut fused_fast_serial_s = f64::NAN;
     for &workers in &WORKER_COUNTS {
         let (wall, jsn) = if workers == 1 {
             (legacy_serial_s, legacy_json.clone())
         } else {
-            timed_run(&cfg, workers, false, true)
+            timed_run(&cfg, workers, Mode::Legacy)
         };
         let identical = jsn == legacy_json;
         assert!(identical, "legacy workers={workers} diverged from serial bytes");
@@ -128,23 +201,33 @@ fn main() {
         report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
     }
     for &workers in &WORKER_COUNTS {
-        let (wall, jsn) = timed_run(&cfg, workers, false, false);
+        let (wall, jsn) = timed_run(&cfg, workers, Mode::Unfused);
         if workers == 1 {
-            shared_serial_s = wall;
-        }
-        if workers == 2 {
-            shared_2w_s = wall;
+            unfused_serial_s = wall;
         }
         let identical = jsn == legacy_json;
         assert!(identical, "trace sharing workers={workers} diverged from legacy bytes");
-        let row = record("shared", workers, wall, Some(identical));
+        let row = record("unfused", workers, wall, Some(identical));
+        report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
+    }
+    for &workers in &WORKER_COUNTS {
+        let (wall, jsn) = timed_run(&cfg, workers, Mode::Fused);
+        if workers == 1 {
+            fused_serial_s = wall;
+        }
+        if workers == 2 {
+            fused_2w_s = wall;
+        }
+        let identical = jsn == legacy_json;
+        assert!(identical, "fused workers={workers} diverged from legacy bytes");
+        let row = record("fused", workers, wall, Some(identical));
         report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
     }
     let mut fast_json: Option<String> = None;
     for &workers in &WORKER_COUNTS {
-        let (wall, jsn) = timed_run(&cfg, workers, true, false);
+        let (wall, jsn) = timed_run(&cfg, workers, Mode::FusedFast);
         if workers == 1 {
-            shared_fast_serial_s = wall;
+            fused_fast_serial_s = wall;
         }
         // the fast router is its own deterministic sample: identical
         // across worker counts, different from the default sample
@@ -155,7 +238,7 @@ fn main() {
                 "fast-router workers={workers} diverged from its serial bytes"
             ),
         }
-        let row = record("shared_fast", workers, wall, None);
+        let row = record("fused_fast", workers, wall, None);
         report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
     }
     // Orchestrated: the same grid as a supervised 2-process fleet of
@@ -192,8 +275,11 @@ fn main() {
     report.print();
 
     let (seq_dps, split_dps) = multinomial_micro();
-    let sharing_speedup = legacy_serial_s / shared_serial_s;
-    let total_speedup = legacy_serial_s / shared_fast_serial_s;
+    let (eval_unfused_sps, eval_fused_sps) = eval_stage_micro(&cfg);
+    let sharing_speedup = legacy_serial_s / unfused_serial_s;
+    let fusion_speedup = unfused_serial_s / fused_serial_s;
+    let eval_fusion_speedup = eval_fused_sps / eval_unfused_sps;
+    let total_speedup = legacy_serial_s / fused_fast_serial_s;
     println!(
         "\nmultinomial (2^20 copies, 256 experts, chaos-peak popularity): \
          sequential {seq_dps:.0} draws/s, split {split_dps:.0} draws/s ({:.2}x)",
@@ -201,41 +287,54 @@ fn main() {
     );
     println!(
         "serial scenarios/sec: legacy {:.1} → trace-shared {:.1} ({sharing_speedup:.2}x) \
-         → +fast-router {:.1} ({total_speedup:.2}x)",
+         → fused {:.1} ({fusion_speedup:.2}x on top) → +fast-router {:.1} \
+         ({total_speedup:.2}x total)",
         scenarios_per_sec(n, legacy_serial_s),
-        scenarios_per_sec(n, shared_serial_s),
-        scenarios_per_sec(n, shared_fast_serial_s),
+        scenarios_per_sec(n, unfused_serial_s),
+        scenarios_per_sec(n, fused_serial_s),
+        scenarios_per_sec(n, fused_fast_serial_s),
+    );
+    println!(
+        "method-evaluation stage (pre-drawn traces, 3 methods/cell): \
+         unfused {eval_unfused_sps:.0} scn/s → fused {eval_fused_sps:.0} scn/s \
+         ({eval_fusion_speedup:.2}x)",
     );
     println!(
         "orchestrated 2-proc launch: {} vs in-process 2-worker {} \
          ({:.2}x overhead; spawn + supervise + merge + audit + compact)",
         fmt_time(orchestrated_2p_s),
-        fmt_time(shared_2w_s),
-        orchestrated_2p_s / shared_2w_s,
+        fmt_time(fused_2w_s),
+        orchestrated_2p_s / fused_2w_s,
     );
-    println!("\nreading: cells share one routed-token stream across methods, so the");
-    println!("trace draw — the dominant per-scenario cost — is paid once per cell;");
-    println!("the splitting multinomial then cheapens that one draw. Output bytes");
+    println!("\nreading: cells share one routed-token stream across methods AND walk it");
+    println!("once for all methods (memoised kernels, RunSummary aggregates); the");
+    println!("splitting multinomial then cheapens the one remaining draw. Output bytes");
     println!("never depend on schedule, worker count, shard split or resume point.");
 
     let mut fields = vec![
         ("grid_scenarios", json::num(n as f64)),
         ("grid_iterations", json::num(cfg.iterations as f64)),
         ("legacy_serial_s", json::num(legacy_serial_s)),
-        ("shared_serial_s", json::num(shared_serial_s)),
-        ("shared_fast_serial_s", json::num(shared_fast_serial_s)),
+        ("unfused_serial_s", json::num(unfused_serial_s)),
+        ("fused_serial_s", json::num(fused_serial_s)),
+        ("fused_fast_serial_s", json::num(fused_fast_serial_s)),
         ("speedup_trace_sharing", json::num(sharing_speedup)),
+        ("speedup_fused_vs_unfused", json::num(fusion_speedup)),
         ("speedup_total", json::num(total_speedup)),
+        ("eval_stage_unfused_scn_per_sec", json::num(eval_unfused_sps)),
+        ("eval_stage_fused_scn_per_sec", json::num(eval_fused_sps)),
+        ("eval_stage_fused_speedup", json::num(eval_fusion_speedup)),
         ("multinomial_seq_draws_per_sec", json::num(seq_dps)),
         ("multinomial_split_draws_per_sec", json::num(split_dps)),
         ("multinomial_split_speedup", json::num(split_dps / seq_dps)),
         ("orchestrated_2procs_s", json::num(orchestrated_2p_s)),
-        ("inprocess_2workers_s", json::num(shared_2w_s)),
+        ("inprocess_2workers_s", json::num(fused_2w_s)),
         (
             "orchestrated_overhead_vs_inprocess",
-            json::num(orchestrated_2p_s / shared_2w_s),
+            json::num(orchestrated_2p_s / fused_2w_s),
         ),
         ("determinism_legacy_vs_shared", Value::Bool(true)),
+        ("determinism_fused_vs_unfused", Value::Bool(true)),
         ("determinism_orchestrated_vs_inprocess", Value::Bool(true)),
     ];
     fields.extend(artifact_rows.iter().map(|(k, v)| (k.as_str(), v.clone())));

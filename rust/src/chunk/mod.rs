@@ -204,7 +204,16 @@ impl Mact {
     /// The MACT decision for one (stage, s'') query: Eq. 9 + threshold
     /// binning ("select the larger bin that is closest to c").
     pub fn decide(&self, pp_rank: u64, s_received: u64) -> MactDecision {
-        let s_max = self.s_prime_max(pp_rank);
+        self.decide_given(self.s_prime_max(pp_rank), s_received)
+    }
+
+    /// The decision core, taking an already-evaluated Eq. 8 budget.
+    /// `s_prime_max(stage)` is constant over a run, so hot callers (the
+    /// fused cell evaluator) hoist it per stage and call this directly;
+    /// [`Mact::decide`] delegates here, keeping the two paths one
+    /// implementation.
+    pub fn decide_given(&self, s_prime_max: u64, s_received: u64) -> MactDecision {
+        let s_max = s_prime_max;
         let ideal = if s_max == 0 {
             u64::MAX // nothing fits: force the largest bin, flag infeasible
         } else {
@@ -345,6 +354,23 @@ mod tests {
             let d = m.decide(1, s_max * mult);
             assert!(d.chosen_c >= last, "not monotone at mult {mult}");
             last = d.chosen_c;
+        }
+    }
+
+    #[test]
+    fn decide_given_matches_decide() {
+        // The hoisted-budget core and the per-stage entry point are one
+        // implementation: identical decisions for every (stage, s'').
+        let m = mact();
+        for stage in 0..4u64 {
+            let s_max = m.s_prime_max(stage);
+            for s_recv in [0u64, 1, 10_000, 250_000, 32 * 4096 * 8] {
+                assert_eq!(
+                    m.decide(stage, s_recv),
+                    m.decide_given(s_max, s_recv),
+                    "stage {stage} s'' {s_recv}"
+                );
+            }
         }
     }
 

@@ -8,7 +8,7 @@
 //! memfine sweep   [--models i,ii] [--methods 1,2,3] [--seeds N|a,b,...]
 //!                 [--workers N] [--out FILE] [--checkpoint F[,F...]]
 //!                 [--resume] [--shard i/n] [--limit N] [--fast-router]
-//!                 [--config FILE]
+//!                 [--unfused] [--config FILE]
 //!                 parallel scenario grid, resumable/shardable
 //! memfine launch  [grid flags | --config FILE] [--procs N] [--dir DIR]
 //!                 [--stall-timeout-ms N] [--poll-ms N] [--retries N]
@@ -111,6 +111,7 @@ fn print_usage() {
                 OptSpec { name: "shard", help: "run shard i of n (i/n) of the sweep grid", takes_value: true, default: None },
                 OptSpec { name: "limit", help: "execute at most N sweep scenarios this run", takes_value: true, default: None },
                 OptSpec { name: "fast-router", help: "binomial-splitting routing draw (faster; different sample)", takes_value: false, default: None },
+                OptSpec { name: "unfused", help: "evaluate each method as its own pass over the shared trace (pre-fusion A/B path; identical artifacts)", takes_value: false, default: None },
                 OptSpec { name: "config", help: "JSON grid/launch spec file (sweep/launch/checkpoint audit)", takes_value: true, default: None },
                 OptSpec { name: "procs", help: "launch: shard processes (0 = cores / workers)", takes_value: true, default: Some("0") },
                 OptSpec { name: "dir", help: "launch working dir (checkpoints, logs, merged.jsonl)", takes_value: true, default: Some("launch-run") },
@@ -310,6 +311,7 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         shard,
         limit: limit.map(|n| n as usize),
         fast_router: cfg_fast_router || args.has_flag("fast-router"),
+        unfused: args.has_flag("unfused"),
     };
     eprintln!(
         "sweep: {} scenarios{}{}",

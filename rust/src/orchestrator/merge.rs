@@ -76,6 +76,7 @@ pub fn merge_and_finish(
         shard: None,
         limit: None,
         fast_router: cfg.fast_router,
+        unfused: false,
     };
     let summary = sweep::run_sweep_with(&cfg.sweep, &opts)?;
 

@@ -80,6 +80,34 @@ pub struct GatingSim {
     fast_multinomial: bool,
 }
 
+/// Reusable draw buffers for the trace-generation hot loop: the
+/// probability vector, per-expert counts and per-rank counts of one
+/// routing draw. [`GatingSim::route`] allocates all three per call;
+/// [`GatingSim::route_stats`] fills these instead, so a cell's whole
+/// trace reuses one set of buffers across every (iteration, layer).
+#[derive(Clone, Debug)]
+pub struct RouteScratch {
+    probs: Vec<f64>,
+    per_expert: Vec<u64>,
+    per_rank: Vec<u64>,
+}
+
+impl RouteScratch {
+    /// Buffers shaped for the given job (n_experts / ep).
+    pub fn new(model: &ModelConfig, parallel: &ParallelConfig) -> Self {
+        RouteScratch {
+            probs: vec![0.0; model.n_experts as usize],
+            per_expert: vec![0; model.n_experts as usize],
+            per_rank: vec![0; parallel.ep as usize],
+        }
+    }
+
+    /// Per-rank received counts of the most recent draw.
+    pub fn per_rank(&self) -> &[u64] {
+        &self.per_rank
+    }
+}
+
 /// Per-layer routing outcome for one iteration.
 #[derive(Clone, Debug)]
 pub struct LayerRouting {
@@ -172,18 +200,12 @@ impl GatingSim {
     /// Expert popularity vector for (iteration, layer): Dirichlet draw
     /// with depth/iteration-dependent concentration. Dense layers
     /// (`layer < dense_layers`) return a uniform vector (no routing).
+    /// Delegates to [`GatingSim::expert_popularity_into`], so the
+    /// allocating and buffer-reusing paths are one implementation.
     pub fn expert_popularity(&self, iteration: u64, layer: u64) -> Vec<f64> {
-        let e_n = self.model.n_experts as usize;
-        if layer < self.model.dense_layers {
-            return vec![1.0 / e_n as f64; e_n];
-        }
-        let alpha = (self.params.base_alpha / self.intensity(iteration, layer))
-            .max(1e-3);
-        let mut rng = Rng::new(self.seed)
-            .fork(iteration.wrapping_mul(1_000_003).wrapping_add(layer));
-        // bit-identical to dirichlet(&vec![alpha; e_n]), minus the
-        // parameter-vector allocation on every draw
-        rng.dirichlet_symmetric(alpha, e_n)
+        let mut out = vec![0.0; self.model.n_experts as usize];
+        self.expert_popularity_into(iteration, layer, &mut out);
+        out
     }
 
     /// Total token copies entering every MoE layer per micro-batch
@@ -193,6 +215,23 @@ impl GatingSim {
             * self.model.seq
             * self.parallel.micro_batch
             * self.model.top_k
+    }
+
+    /// Buffer-filling form of [`GatingSim::expert_popularity`] (which
+    /// delegates here): same forked stream, same batched-gamma
+    /// Dirichlet, no allocation. `out.len()` must be `n_experts`.
+    pub fn expert_popularity_into(&self, iteration: u64, layer: u64, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.model.n_experts as usize);
+        if layer < self.model.dense_layers {
+            let e_n = out.len() as f64;
+            out.fill(1.0 / e_n);
+            return;
+        }
+        let alpha = (self.params.base_alpha / self.intensity(iteration, layer))
+            .max(1e-3);
+        let mut rng = Rng::new(self.seed)
+            .fork(iteration.wrapping_mul(1_000_003).wrapping_add(layer));
+        rng.dirichlet_symmetric_into(alpha, out);
     }
 
     /// Route one (iteration, layer): returns per-expert and per-rank
@@ -208,6 +247,46 @@ impl GatingSim {
         };
         let per_rank = per_rank_from_experts(&per_expert, self.parallel.ep);
         LayerRouting { per_expert, per_rank }
+    }
+
+    /// The trace generator's form of [`GatingSim::route`]: the same
+    /// draw through caller-owned scratch buffers, reduced straight to
+    /// the per-(iteration, layer) statistics `(min_recv, mean_recv,
+    /// max_recv)` the [`crate::trace::SharedRoutingTrace`] records.
+    /// Bit-identical to `route()` + `min_received()/summary().mean()/
+    /// max_received()` — only the allocations differ, which the
+    /// trace-level tests pin.
+    pub fn route_stats(
+        &self,
+        iteration: u64,
+        layer: u64,
+        scratch: &mut RouteScratch,
+    ) -> (u64, f64, u64) {
+        self.expert_popularity_into(iteration, layer, &mut scratch.probs);
+        let mut rng = Rng::new(self.seed ^ 0x5EED_0001)
+            .fork(iteration.wrapping_mul(7_368_787).wrapping_add(layer));
+        if self.fast_multinomial {
+            rng.multinomial_split_into(
+                self.total_copies(),
+                &scratch.probs,
+                &mut scratch.per_expert,
+            );
+        } else {
+            rng.multinomial_into(self.total_copies(), &scratch.probs, &mut scratch.per_expert);
+        }
+        per_rank_from_experts_into(&scratch.per_expert, &mut scratch.per_rank);
+        // same reductions as min_received / Summary::mean / max_received,
+        // in the same per-rank order (mean sums f64 left to right)
+        debug_assert!(!scratch.per_rank.is_empty());
+        let mut min = u64::MAX;
+        let mut max = 0u64;
+        let mut sum = 0.0f64;
+        for &c in &scratch.per_rank {
+            min = min.min(c);
+            max = max.max(c);
+            sum += c as f64;
+        }
+        (min, sum / scratch.per_rank.len() as f64, max)
     }
 
     /// Fig. 2 data: per-layer (min, mean, max) received tokens at one
@@ -227,13 +306,21 @@ impl GatingSim {
 /// rank k hosts experts [k·E/ep, (k+1)·E/ep)). Matches Megatron's
 /// contiguous expert placement.
 pub fn per_rank_from_experts(per_expert: &[u64], ep: u64) -> Vec<u64> {
+    let mut out = vec![0u64; ep as usize];
+    per_rank_from_experts_into(per_expert, &mut out);
+    out
+}
+
+/// Buffer-filling form of [`per_rank_from_experts`] (which delegates
+/// here): `out.len()` is the EP width.
+pub fn per_rank_from_experts_into(per_expert: &[u64], out: &mut [u64]) {
+    let ep = out.len() as u64;
     let e_n = per_expert.len() as u64;
     assert!(ep > 0 && e_n % ep == 0, "experts {e_n} not divisible by ep {ep}");
     let per = (e_n / ep) as usize;
-    per_expert
-        .chunks(per)
-        .map(|c| c.iter().sum())
-        .collect()
+    for (slot, chunk) in out.iter_mut().zip(per_expert.chunks(per)) {
+        *slot = chunk.iter().sum();
+    }
 }
 
 #[cfg(test)]
@@ -371,6 +458,39 @@ mod tests {
             (0.5..2.0).contains(&ratio),
             "imbalance regimes diverged: slow {slow_cv:.2} fast {fast_cv:.2}"
         );
+    }
+
+    #[test]
+    fn route_stats_bit_identical_to_route_under_both_samplers() {
+        // The buffered trace-generation path must reproduce route()'s
+        // statistics exactly — min/max as u64, mean to the bit — and a
+        // dirty reused scratch must not leak between draws.
+        for fast in [false, true] {
+            let s = sim().with_fast_multinomial(fast);
+            let mut scratch = RouteScratch::new(&s.model, &s.parallel);
+            for (it, layer) in [(0u64, 3u64), (7, 10), (7, 15), (24, 8)] {
+                let r = s.route(it, layer);
+                let (min, mean, max) = s.route_stats(it, layer, &mut scratch);
+                assert_eq!(min, r.min_received(), "fast={fast} it={it} l={layer}");
+                assert_eq!(max, r.max_received(), "fast={fast} it={it} l={layer}");
+                assert_eq!(
+                    mean.to_bits(),
+                    r.summary().mean().to_bits(),
+                    "fast={fast} it={it} l={layer}"
+                );
+                assert_eq!(scratch.per_rank(), r.per_rank.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn expert_popularity_into_matches_allocating_path() {
+        let s = sim();
+        let mut buf = vec![9.9; s.model.n_experts as usize];
+        for (it, layer) in [(0u64, 0u64), (7, 3), (7, 15)] {
+            s.expert_popularity_into(it, layer, &mut buf);
+            assert_eq!(buf, s.expert_popularity(it, layer), "it={it} l={layer}");
+        }
     }
 
     #[test]

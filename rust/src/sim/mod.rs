@@ -18,6 +18,14 @@
 //! Outputs are the traces the benches print: Table 4's memory rows,
 //! Fig. 2's distribution slice, Fig. 4's TGS series and Fig. 5's
 //! chunk grid.
+//!
+//! For sweep grids there is a third, fused entry point:
+//! [`evaluate_cell`] walks a cell's trace **once** and evaluates every
+//! method of the cell simultaneously, memoising the method-dependent
+//! kernels and emitting only [`RunSummary`] aggregates — pinned
+//! bit-identical to per-method [`run_scenario_on_trace`] calls.
+
+use std::collections::HashMap;
 
 use crate::chunk::Mact;
 use crate::config::{Method, RunConfig};
@@ -138,6 +146,403 @@ pub fn run_scenario_on_trace(
     Ok(sim.run_on_trace(trace))
 }
 
+/// Lightweight aggregate of one simulated run: the fields the sweep
+/// artifact consumes ([`crate::sweep::report::ScenarioResult`] is built
+/// 1:1 from them) plus the one-f64-per-iteration Fig. 5 chunk-mean
+/// series — none of the per-iteration × per-layer traces a full
+/// [`RunOutcome`] materialises. The fused sweep path returns these so
+/// a million-scenario grid never allocates `Vec<LayerOutcome>` +
+/// `RoutingTrace` + `ChunkTrace` per scenario.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSummary {
+    /// Iterations simulated.
+    pub iterations: u64,
+    /// Iterations that violated Eq. 3 on some stage.
+    pub oom_iterations: u64,
+    /// Mean TGS over non-OOM iterations (0 if all OOM), folded in
+    /// ascending iteration order — bit-identical to
+    /// [`RunOutcome::avg_tgs`].
+    pub avg_tgs: f64,
+    /// Worst-case activation bytes observed anywhere in the run.
+    pub peak_act_bytes: u64,
+    /// Worst static + activation peak across iterations.
+    pub peak_total_bytes: u64,
+    /// Static bytes of the heaviest stage.
+    pub static_bytes: u64,
+    /// Mean chunk value per iteration (the Fig. 5 trend series) —
+    /// bit-identical to `ChunkTrace::mean_per_iteration` on the full
+    /// outcome, at one f64 per iteration instead of one record per
+    /// (iteration, layer).
+    pub chunk_mean_per_iteration: Vec<f64>,
+}
+
+impl RunSummary {
+    pub fn trained(&self) -> bool {
+        self.oom_iterations == 0
+    }
+
+    /// Collapse a full [`RunOutcome`] to its summary — the bridge the
+    /// fused-vs-reference equivalence tests compare across.
+    pub fn of(out: &RunOutcome) -> Self {
+        RunSummary {
+            iterations: out.iterations.len() as u64,
+            oom_iterations: out.oom_iterations,
+            avg_tgs: out.avg_tgs,
+            peak_act_bytes: out.peak_act_bytes,
+            peak_total_bytes: out
+                .iterations
+                .iter()
+                .map(|i| i.peak_total_bytes)
+                .max()
+                .unwrap_or(0),
+            static_bytes: out.static_bytes,
+            chunk_mean_per_iteration: out
+                .chunks
+                .mean_per_iteration(out.iterations.len() as u64),
+        }
+    }
+}
+
+/// One method's result from a fused cell evaluation
+/// ([`evaluate_cell`]), in the caller's method order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellMethodOutcome {
+    pub method: Method,
+    pub summary: RunSummary,
+}
+
+/// Memoised method-evaluation kernels for one `(max_recv, chunks)`
+/// query. Everything here is stage-independent: the chunked memory
+/// peaks are evaluated at `m_g = 1` (full recompute of the dense part,
+/// exactly what `iteration_stats` passes), and the MemFine layer
+/// timing depends only on the received tokens, the chunk count and the
+/// selective-recompute flag — so one entry serves every stage, every
+/// iteration, and every method of the cell that lands on the same
+/// chunk decision (a fixed-chunk method and MACT picking the same bin
+/// share entries).
+#[derive(Clone, Copy, Debug)]
+struct MemfineKernel {
+    /// `act.layer(max_recv ⌈/⌉ chunks).moe_part()` — the chunked MoE
+    /// transient (drives both the selective-recompute test and the
+    /// selective-path peak).
+    chunked_moe: u64,
+    /// `act.peak_bytes_chunked(_, max_recv, chunks, true)`.
+    act_chunked: u64,
+    /// `perf.moe_layer_memfine(max_recv, chunks, true).total()`.
+    time_rc: f64,
+    /// `perf.moe_layer_memfine(max_recv, chunks, false).total()`.
+    time_selective: f64,
+}
+
+/// Memoised Method-1 kernels for one `max_recv` (chunking never
+/// applies; `m_g = 1` under full recompute, so stage-independent too).
+#[derive(Clone, Copy, Debug)]
+struct Method1Kernel {
+    /// `act.peak_bytes(_, max_recv, true)`.
+    act: u64,
+    /// `perf.moe_layer_method1(max_recv).total()`.
+    time: f64,
+}
+
+/// One MoE layer's resolved evaluation inputs for the current
+/// (iteration, method) — pass-1 scratch consumed by pass 2.
+#[derive(Clone, Copy)]
+struct LayerEval {
+    stage: usize,
+    chunks: u64,
+    chunked_moe: u64,
+    act_plain: u64,
+    time_plain: f64,
+    time_selective: f64,
+}
+
+/// Per-method state of a fused cell evaluation: the method's chunking
+/// policy plus its running aggregates.
+struct MethodState {
+    method: Method,
+    method1: bool,
+    fixed_c: Option<u64>,
+    mact: Option<Mact>,
+    /// Eq. 8 budget per pipeline stage (MACT only) — constant over the
+    /// run, hoisted out of the per-layer decision.
+    s_max: Vec<u64>,
+    tgs_sum: f64,
+    tgs_n: u64,
+    oom_iterations: u64,
+    peak_act: u64,
+    peak_total: u64,
+    chunk_means: Vec<f64>,
+}
+
+fn memfine_kernel(
+    memo: &mut HashMap<(u64, u64), MemfineKernel>,
+    act: &ActivationModel,
+    perf: &PerfModel,
+    max_recv: u64,
+    chunks: u64,
+) -> MemfineKernel {
+    *memo.entry((max_recv, chunks)).or_insert_with(|| MemfineKernel {
+        chunked_moe: act.layer(max_recv.div_ceil(chunks)).moe_part(),
+        act_chunked: act.peak_bytes_chunked(0, max_recv, chunks, true),
+        time_rc: perf.moe_layer_memfine(max_recv, chunks, true).total(),
+        time_selective: perf.moe_layer_memfine(max_recv, chunks, false).total(),
+    })
+}
+
+fn method1_kernel(
+    memo: &mut HashMap<u64, Method1Kernel>,
+    act: &ActivationModel,
+    perf: &PerfModel,
+    max_recv: u64,
+) -> Method1Kernel {
+    *memo.entry(max_recv).or_insert_with(|| Method1Kernel {
+        act: act.peak_bytes(0, max_recv, true),
+        time: perf.moe_layer_method1(max_recv).total(),
+    })
+}
+
+/// Evaluate **every** method of a paired-comparison cell against one
+/// shared routing trace in a single trace walk — the fused form of
+/// calling [`run_scenario_on_trace`] once per method, pinned
+/// bit-identical to it (and transitively to [`run_scenario`]) by the
+/// unit, property and sweep integration tests.
+///
+/// Why one pass wins:
+///
+/// * the method-independent work per (iteration, layer) — stage
+///   lookup, the trace-record walk, the per-stage geometry
+///   (`m_g · layers · dense_bytes`, static bytes, dense-layer timing)
+///   — is hoisted once per cell instead of recomputed per method;
+/// * the method-dependent kernels (`chunks_for`,
+///   `peak_bytes_chunked`, `PerfModel::moe_layer_*`) are memoised in
+///   per-cell caches keyed on `(max_recv, chunks)` (Method 1:
+///   `max_recv`), since routing statistics repeat across iterations
+///   once the router stabilises and methods frequently land on the
+///   same chunk decision — every repeat costs a map probe instead of
+///   re-deriving the memory and timing models;
+/// * per-stage scratch buffers are reused across all (iteration,
+///   method) evaluations, and only [`RunSummary`] aggregates are
+///   produced — no per-iteration `Vec<LayerOutcome>`, `RoutingTrace`
+///   or `ChunkTrace` is materialised.
+///
+/// The scenario seed is the trace's seed, exactly as in
+/// [`run_scenario_on_trace`]; outcomes come back in the caller's
+/// method order. Evaluation never touches the RNG.
+pub fn evaluate_cell(
+    base: &RunConfig,
+    methods: &[Method],
+    trace: &SharedRoutingTrace,
+) -> crate::Result<Vec<CellMethodOutcome>> {
+    let mut run = base.clone();
+    run.seed = trace.seed;
+    // Same trace-identity contract as run_scenario_on_trace: the
+    // records encode (model, parallel)-specific per-rank statistics.
+    if trace.model != run.model || trace.parallel != run.parallel {
+        return Err(Error::config(
+            "trace was drawn for a different (model, parallel) configuration than the run",
+        ));
+    }
+    if trace.iterations < run.iterations {
+        return Err(Error::config(format!(
+            "trace covers {} iterations, run needs {}",
+            trace.iterations, run.iterations
+        )));
+    }
+
+    // Shared (method-independent) models, built once per cell.
+    let mut probe = run.clone();
+    probe.method = methods.first().cloned().unwrap_or(Method::FullRecompute);
+    probe.validate()?;
+    let act = ActivationModel::new(&probe);
+    let sta = StaticModel::new(&probe);
+    let perf = PerfModel::new(run.model.clone(), run.parallel.clone(), run.dtype_bytes);
+
+    // Per-method policy + accumulators (validating each resolved run).
+    let mut states = methods
+        .iter()
+        .map(|m| {
+            let mut r = run.clone();
+            r.method = m.clone();
+            r.validate()?;
+            let (method1, fixed_c, mact) = match m {
+                Method::FullRecompute => (true, None, None),
+                Method::FixedChunk(c) => (false, Some(*c), None),
+                Method::Mact(bins) => (false, None, Some(Mact::new(&r, bins.clone()))),
+            };
+            let s_max = match &mact {
+                Some(ma) => (0..run.parallel.pp).map(|s| ma.s_prime_max(s)).collect(),
+                None => Vec::new(),
+            };
+            Ok(MethodState {
+                method: m.clone(),
+                method1,
+                fixed_c,
+                mact,
+                s_max,
+                tgs_sum: 0.0,
+                tgs_n: 0,
+                oom_iterations: 0,
+                peak_act: 0,
+                peak_total: 0,
+                chunk_means: Vec::with_capacity(run.iterations as usize),
+            })
+        })
+        .collect::<crate::Result<Vec<MethodState>>>()?;
+
+    // Hoisted per-cell geometry — exactly the terms iteration_stats
+    // derives per iteration, computed once here (all pure integer /
+    // float expressions, so the hoists are bit-neutral).
+    let pp = run.parallel.pp as usize;
+    let budget = (run.alpha * run.gpu_mem_bytes as f64) as u64;
+    let layers_per_stage = run.parallel.layers_per_stage(run.model.layers);
+    let stage_of =
+        |layer: u64| ((layer / layers_per_stage).min(run.parallel.pp - 1)) as usize;
+    let dense_stage: Vec<usize> = (0..run.model.dense_layers).map(stage_of).collect();
+    let moe_stage: Vec<usize> =
+        (run.model.dense_layers..run.model.layers).map(stage_of).collect();
+    let n_moe = moe_stage.len();
+    let sta_bytes: Vec<u64> = (0..run.parallel.pp).map(|s| sta.bytes_on_rank(s)).collect();
+    let dense_bytes = act.dense_bytes();
+    let stored_dense: Vec<u64> = (0..run.parallel.pp)
+        .map(|s| run.parallel.m_g(s) * layers_per_stage * dense_bytes)
+        .collect();
+    let dense_time_rc = perf.dense_layer(true).total();
+    let dense_time_norc = perf.dense_layer(false).total();
+    let micro_batches = run.parallel.micro_batches();
+    let static_bytes = sta.max_bytes();
+    let allow_selective = run.allow_selective_recompute;
+
+    // Per-cell memo caches and per-iteration scratch, reused across
+    // every (iteration, method) evaluation.
+    let mut memfine_memo: HashMap<(u64, u64), MemfineKernel> = HashMap::new();
+    let mut method1_memo: HashMap<u64, Method1Kernel> = HashMap::new();
+    let mut layer_evals: Vec<LayerEval> = Vec::with_capacity(n_moe);
+    let mut moe_chunk_peak = vec![0u64; pp];
+    let mut selective = vec![false; pp];
+    let mut per_stage_time = vec![0.0f64; pp];
+    let mut per_stage_act_peak = vec![0u64; pp];
+
+    for it in 0..run.iterations {
+        let recs = trace.iteration(it);
+        debug_assert_eq!(recs.len(), n_moe);
+        for state in &mut states {
+            // Pass 1: chunk decisions + chunked-MoE peaks per stage
+            // (kernels from the memo; ascending layer order).
+            layer_evals.clear();
+            moe_chunk_peak.fill(0);
+            for (j, rec) in recs.iter().enumerate() {
+                debug_assert_eq!(rec.iteration, it);
+                let stage = moe_stage[j];
+                let r = rec.max_recv;
+                if state.method1 {
+                    let k = method1_kernel(&mut method1_memo, &act, &perf, r);
+                    layer_evals.push(LayerEval {
+                        stage,
+                        chunks: 1,
+                        chunked_moe: 0,
+                        act_plain: k.act,
+                        time_plain: k.time,
+                        time_selective: 0.0,
+                    });
+                } else {
+                    let chunks = match (state.fixed_c, &state.mact) {
+                        (Some(c), _) => c,
+                        (None, Some(mact)) => {
+                            mact.decide_given(state.s_max[stage], r).chosen_c
+                        }
+                        (None, None) => unreachable!("method is chunked"),
+                    };
+                    let k = memfine_kernel(&mut memfine_memo, &act, &perf, r, chunks);
+                    moe_chunk_peak[stage] = moe_chunk_peak[stage].max(k.chunked_moe);
+                    layer_evals.push(LayerEval {
+                        stage,
+                        chunks,
+                        chunked_moe: k.chunked_moe,
+                        act_plain: k.act_chunked,
+                        time_plain: k.time_rc,
+                        time_selective: k.time_selective,
+                    });
+                }
+            }
+
+            // Selective-recompute verdict per stage (Eq. 3 with the
+            // stored dense part) — same sum as Simulator::selective_fits.
+            for s in 0..pp {
+                selective[s] = !state.method1
+                    && allow_selective
+                    && sta_bytes[s] + stored_dense[s] + moe_chunk_peak[s] <= budget;
+            }
+
+            // Pass 2: memory + time accumulation, in iteration_stats's
+            // exact order (dense layers ascending, then MoE layers
+            // ascending — float sums are order-sensitive).
+            per_stage_time.fill(0.0);
+            per_stage_act_peak.fill(0);
+            for &s in &dense_stage {
+                per_stage_time[s] +=
+                    if selective[s] { dense_time_norc } else { dense_time_rc };
+                per_stage_act_peak[s] = per_stage_act_peak[s].max(dense_bytes);
+            }
+            let mut chunk_sum = 0.0f64;
+            for le in &layer_evals {
+                let s = le.stage;
+                let sel = !state.method1 && selective[s];
+                let act_bytes = if sel {
+                    stored_dense[s] + le.chunked_moe
+                } else {
+                    le.act_plain
+                };
+                per_stage_act_peak[s] = per_stage_act_peak[s].max(act_bytes);
+                per_stage_time[s] += if sel { le.time_selective } else { le.time_plain };
+                chunk_sum += le.chunks as f64;
+            }
+
+            let mut oom = false;
+            let mut it_peak_total = 0u64;
+            let mut it_peak_act = 0u64;
+            for s in 0..pp {
+                let total = sta_bytes[s] + per_stage_act_peak[s];
+                it_peak_total = it_peak_total.max(total);
+                it_peak_act = it_peak_act.max(per_stage_act_peak[s]);
+                if total > budget {
+                    oom = true;
+                }
+            }
+            let iteration_s = perf.iteration_time(&per_stage_time, micro_batches);
+            let tgs = perf.tgs(iteration_s);
+            if oom {
+                state.oom_iterations += 1;
+            } else {
+                state.tgs_sum += tgs;
+                state.tgs_n += 1;
+            }
+            state.peak_act = state.peak_act.max(it_peak_act);
+            state.peak_total = state.peak_total.max(it_peak_total);
+            state.chunk_means.push(if n_moe == 0 {
+                0.0
+            } else {
+                chunk_sum / n_moe as f64
+            });
+        }
+    }
+
+    Ok(states
+        .into_iter()
+        .map(|s| CellMethodOutcome {
+            method: s.method,
+            summary: RunSummary {
+                iterations: run.iterations,
+                oom_iterations: s.oom_iterations,
+                avg_tgs: if s.tgs_n > 0 { s.tgs_sum / s.tgs_n as f64 } else { 0.0 },
+                peak_act_bytes: s.peak_act,
+                peak_total_bytes: s.peak_total,
+                static_bytes,
+                chunk_mean_per_iteration: s.chunk_means,
+            },
+        })
+        .collect())
+}
+
 /// The simulator.
 pub struct Simulator {
     pub run: RunConfig,
@@ -181,13 +586,18 @@ impl Simulator {
 
     /// Can MemFine skip attention recomputation on this stage
     /// (*selective* recomputation)? Only if storing the dense part of
-    /// all the stage's layers for every in-flight micro-batch — plus
-    /// the chunked MoE peak — still fits the budget (Eq. 3). This is
-    /// the throughput edge of Methods 2/3 over full recomputation.
-    fn selective_fits(&self, stage: u64, moe_chunk_peak: u64, budget: u64) -> bool {
-        let m_g = self.run.parallel.m_g(stage);
-        let layers_here = self.run.parallel.layers_per_stage(self.run.model.layers);
-        let stored_dense = m_g * layers_here * self.act.dense_bytes();
+    /// all the stage's layers for every in-flight micro-batch
+    /// (`stored_dense = m_g · layers_per_stage · dense_bytes`,
+    /// loop-invariant and precomputed by the caller) — plus the chunked
+    /// MoE peak — still fits the budget (Eq. 3). This is the throughput
+    /// edge of Methods 2/3 over full recomputation.
+    fn selective_fits(
+        &self,
+        stage: u64,
+        stored_dense: u64,
+        moe_chunk_peak: u64,
+        budget: u64,
+    ) -> bool {
         self.sta.bytes_on_rank(stage) + stored_dense + moe_chunk_peak <= budget
     }
 
@@ -226,6 +636,16 @@ impl Simulator {
             (model.layers - model.dense_layers) as usize
         );
 
+        // Loop-invariant geometry, hoisted out of the per-layer work
+        // below: layers-per-stage does not depend on the stage, and the
+        // selective-recompute dense term `m_g · layers · dense_bytes`
+        // only varies by stage.
+        let layers_per_stage = self.run.parallel.layers_per_stage(model.layers);
+        let dense_bytes = self.act.dense_bytes();
+        let stored_dense: Vec<u64> = (0..self.run.parallel.pp)
+            .map(|s| self.run.parallel.m_g(s) * layers_per_stage * dense_bytes)
+            .collect();
+
         // Pass 1: chunk decision per MoE layer from the routing stats.
         struct MoeLayer {
             layer: u64,
@@ -235,7 +655,9 @@ impl Simulator {
             max_recv: u64,
             chunks: u64,
         }
-        let mut moe_layers = Vec::with_capacity(model.layers as usize);
+        // Only the MoE layers land here — `model.layers` would
+        // over-allocate by the dense-layer count.
+        let mut moe_layers = Vec::with_capacity(moe_stats.len());
         for rec in moe_stats {
             debug_assert_eq!(rec.iteration, it);
             let layer = rec.layer;
@@ -265,7 +687,7 @@ impl Simulator {
             .map(|s| {
                 !method1
                     && self.run.allow_selective_recompute
-                    && self.selective_fits(s as u64, moe_chunk_peak[s], budget)
+                    && self.selective_fits(s as u64, stored_dense[s], moe_chunk_peak[s], budget)
             })
             .collect();
 
@@ -276,8 +698,7 @@ impl Simulator {
         for layer in 0..model.dense_layers {
             let stage = self.stage_of(layer) as usize;
             per_stage_time[stage] += self.perf.dense_layer(!selective[stage]).total();
-            per_stage_act_peak[stage] =
-                per_stage_act_peak[stage].max(self.act.dense_bytes());
+            per_stage_act_peak[stage] = per_stage_act_peak[stage].max(dense_bytes);
         }
         for l in &moe_layers {
             let stage = l.stage;
@@ -286,10 +707,7 @@ impl Simulator {
             } else if selective[stage] {
                 // stored dense part of the whole stage + this layer's
                 // chunked MoE transient
-                let m_g = self.run.parallel.m_g(stage as u64);
-                let layers_here =
-                    self.run.parallel.layers_per_stage(self.run.model.layers);
-                m_g * layers_here * self.act.dense_bytes()
+                stored_dense[stage]
                     + self.act.layer(l.max_recv.div_ceil(l.chunks)).moe_part()
             } else {
                 self.act
@@ -552,6 +970,104 @@ mod tests {
             assert_eq!(shared.oom_iterations, direct.oom_iterations);
             assert_eq!(shared.avg_tgs, direct.avg_tgs);
         }
+    }
+
+    #[test]
+    fn evaluate_cell_bit_identical_to_per_method_trace_runs() {
+        // THE fused-path invariant: one trace walk evaluating all
+        // methods must reproduce every field of the per-method
+        // run_scenario_on_trace summaries to the bit — OOM-heavy
+        // Method 1 on Model I included.
+        let methods = vec![
+            Method::FullRecompute,
+            Method::FixedChunk(8),
+            Method::Mact(vec![1, 2, 4, 8]),
+        ];
+        for model in [model_i(), model_ii()] {
+            let mut base = paper_run(model, Method::FullRecompute);
+            base.iterations = 8;
+            let mut probe = base.clone();
+            probe.seed = 11;
+            let trace = Simulator::new(probe).unwrap().draw_trace();
+            let fused = evaluate_cell(&base, &methods, &trace).unwrap();
+            assert_eq!(fused.len(), methods.len());
+            for (outcome, method) in fused.iter().zip(&methods) {
+                assert_eq!(&outcome.method, method);
+                let reference = RunSummary::of(
+                    &run_scenario_on_trace(&base, method.clone(), &trace).unwrap(),
+                );
+                assert_eq!(
+                    outcome.summary.avg_tgs.to_bits(),
+                    reference.avg_tgs.to_bits(),
+                    "{method:?} avg_tgs"
+                );
+                for (a, b) in outcome
+                    .summary
+                    .chunk_mean_per_iteration
+                    .iter()
+                    .zip(&reference.chunk_mean_per_iteration)
+                {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{method:?} chunk mean");
+                }
+                assert_eq!(outcome.summary, reference, "{method:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_cell_without_selective_recompute_matches_reference() {
+        // The Table-4 accounting configuration (selective recompute
+        // disabled) drives the non-selective branches everywhere.
+        let mut base = paper_run(model_i(), Method::FullRecompute);
+        base.iterations = 6;
+        base.allow_selective_recompute = false;
+        let methods = vec![Method::FixedChunk(4), Method::Mact(vec![1, 2, 4, 8])];
+        let mut probe = base.clone();
+        probe.seed = 5;
+        let trace = Simulator::new(probe).unwrap().draw_trace();
+        let fused = evaluate_cell(&base, &methods, &trace).unwrap();
+        for (outcome, method) in fused.iter().zip(&methods) {
+            let reference =
+                RunSummary::of(&run_scenario_on_trace(&base, method.clone(), &trace).unwrap());
+            assert_eq!(outcome.summary, reference, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn evaluate_cell_empty_methods_and_mismatched_trace() {
+        let mut base = paper_run(model_i(), Method::FullRecompute);
+        base.iterations = 4;
+        let mut probe = base.clone();
+        probe.seed = 3;
+        let trace = Simulator::new(probe.clone()).unwrap().draw_trace();
+        assert!(evaluate_cell(&base, &[], &trace).unwrap().is_empty());
+        // short trace
+        let mut short = probe.clone();
+        short.iterations = 2;
+        let short_trace = Simulator::new(short).unwrap().draw_trace();
+        assert!(evaluate_cell(&base, &[Method::FullRecompute], &short_trace).is_err());
+        // wrong model
+        let mut other = paper_run(model_ii(), Method::FullRecompute);
+        other.iterations = 4;
+        other.seed = 3;
+        let trace_ii = Simulator::new(other).unwrap().draw_trace();
+        assert!(evaluate_cell(&base, &[Method::FullRecompute], &trace_ii).is_err());
+    }
+
+    #[test]
+    fn run_summary_of_collapses_outcome() {
+        let o = outcome(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+        let s = RunSummary::of(&o);
+        assert_eq!(s.iterations, 20);
+        assert_eq!(s.oom_iterations, o.oom_iterations);
+        assert_eq!(s.trained(), o.trained());
+        assert_eq!(s.peak_act_bytes, o.peak_act_bytes);
+        assert_eq!(s.static_bytes, o.static_bytes);
+        assert_eq!(s.chunk_mean_per_iteration.len(), 20);
+        assert_eq!(
+            s.peak_total_bytes,
+            o.iterations.iter().map(|i| i.peak_total_bytes).max().unwrap()
+        );
     }
 
     #[test]

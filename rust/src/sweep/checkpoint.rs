@@ -28,6 +28,13 @@
 //! grid (hashes are position-independent), which keeps the final
 //! artifact byte-identical to an uninterrupted run of that grid — the
 //! kill-and-resume integration test pins this.
+//!
+//! Rows are engine-agnostic: the fused cell evaluator
+//! ([`crate::sim::evaluate_cell`], the default) and the per-method
+//! path (`--unfused`) emit byte-identical
+//! [`ScenarioResult`](crate::sweep::report::ScenarioResult) lines, so
+//! checkpoints written under either engine resume under the other —
+//! the CLI tests and the CI smoke cross-merge them deliberately.
 
 use std::collections::BTreeMap;
 use std::io::Write;

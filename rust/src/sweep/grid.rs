@@ -52,7 +52,9 @@ pub fn expand(cfg: &SweepConfig) -> Result<Vec<Scenario>> {
 /// The scenarios of one (model, seed) *trace cell*: they differ only
 /// in method, so they share a single routed-token stream
 /// ([`crate::trace::SharedRoutingTrace`]) — this is the execution
-/// granularity of the trace-sharing sweep engine. Scenario `index`
+/// granularity of the sweep engine, which dispatches the whole cell as
+/// **one fused job**: a single trace walk evaluating every method
+/// simultaneously ([`crate::sim::evaluate_cell`]). Scenario `index`
 /// values are the global grid enumeration (methods stride by the seed
 /// count), so any per-scenario reduction is unchanged by the regroup.
 #[derive(Clone, Debug)]

@@ -5,9 +5,14 @@
 //! [`SweepConfig`], expanded into ordered [`grid::Scenario`]s and
 //! grouped into [`grid::TraceCell`]s — the (model, seed) cells whose
 //! scenarios differ only in method. Each cell draws its routed-token
-//! stream **once** ([`crate::trace::SharedRoutingTrace`]) and
-//! evaluates every method against it
-//! ([`crate::sim::run_scenario_on_trace`]): the paper's
+//! stream **once** ([`crate::trace::SharedRoutingTrace`]) and then
+//! dispatches **one fused job** that walks the trace once and
+//! evaluates every method simultaneously
+//! ([`crate::sim::evaluate_cell`], memoised kernels, `RunSummary`
+//! aggregates); the per-method pass
+//! ([`crate::sim::run_scenario_on_trace`]) survives behind
+//! [`SweepRunOptions::unfused`] as the A/B reference the fused path is
+//! pinned byte-identical against. This is the paper's
 //! paired-comparison structure, exploited for throughput. Workers
 //! stream flat [`report::ScenarioResult`]s back as scenarios finish;
 //! the [`report::SweepReducer`] folds them incrementally in grid-index
@@ -98,6 +103,12 @@ pub struct SweepRunOptions {
     /// distribution, materially faster on peaky expert popularity,
     /// different bit-stream (so it participates in the scenario hash).
     pub fast_router: bool,
+    /// Evaluate each of a cell's methods as its own pass over the
+    /// shared trace ([`sim::run_scenario_on_trace`] per scenario) — the
+    /// pre-fusion engine, kept as the A/B reference the fused default
+    /// ([`sim::evaluate_cell`]) is pinned byte-identical against.
+    /// Execution-only: artifacts never depend on this flag.
+    pub unfused: bool,
 }
 
 /// What a sweep invocation did, plus the report it produced.
@@ -124,7 +135,11 @@ struct CellWork {
     todo: Vec<(String, grid::Scenario)>,
 }
 
-fn run_cell(work: CellWork, fast_router: bool) -> Result<Vec<(String, ScenarioResult)>> {
+fn run_cell(
+    work: CellWork,
+    fast_router: bool,
+    unfused: bool,
+) -> Result<Vec<(String, ScenarioResult)>> {
     let first = &work.todo[0].1;
     // One trace per (model, seed) cell; every method below evaluates
     // against it. GatingSim only reads (model, parallel, seed), all of
@@ -136,14 +151,34 @@ fn run_cell(work: CellWork, fast_router: bool) -> Result<Vec<(String, ScenarioRe
     )
     .with_fast_multinomial(fast_router);
     let trace = SharedRoutingTrace::generate(&gating, first.run.iterations);
-    work.todo
+    if unfused {
+        // Pre-fusion A/B path: one full evaluation pass per method.
+        return work
+            .todo
+            .into_iter()
+            .map(|(hash, sc)| {
+                debug_assert!(sc.run.method == sc.method && sc.run.seed == sc.seed);
+                let out = sim::run_scenario_on_trace(&sc.run, sc.method.clone(), &trace)?;
+                Ok((hash, ScenarioResult::new(&sc, &out)))
+            })
+            .collect();
+    }
+    // Fused default: one trace walk evaluates every still-to-run
+    // method of the cell simultaneously (sim::evaluate_cell), returning
+    // lightweight RunSummary aggregates — pinned byte-identical to the
+    // per-method path above.
+    let methods: Vec<_> = work.todo.iter().map(|(_, sc)| sc.method.clone()).collect();
+    let outcomes = sim::evaluate_cell(&first.run, &methods, &trace)?;
+    debug_assert_eq!(outcomes.len(), work.todo.len());
+    Ok(work
+        .todo
         .into_iter()
-        .map(|(hash, sc)| {
-            debug_assert!(sc.run.method == sc.method && sc.run.seed == sc.seed);
-            let out = sim::run_scenario_on_trace(&sc.run, sc.method.clone(), &trace)?;
-            Ok((hash, ScenarioResult::new(&sc, &out)))
+        .zip(outcomes)
+        .map(|((hash, sc), out)| {
+            debug_assert!(out.method == sc.method && sc.run.seed == sc.seed);
+            (hash, ScenarioResult::from_summary(&sc, &out.summary))
         })
-        .collect()
+        .collect())
 }
 
 /// Run a sweep under the given execution options: resume from
@@ -234,10 +269,11 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
     // checkpoint line out first (kill-safety), then fold.
     let mut first_err: Option<Error> = None;
     let fast_router = opts.fast_router;
+    let unfused = opts.unfused;
     pool::parallel_for_each_indexed(
         work,
         workers,
-        |_, w| run_cell(w, fast_router),
+        |_, w| run_cell(w, fast_router, unfused),
         |_, res| match res {
             Ok(rows) => {
                 for (hash, row) in rows {
@@ -341,13 +377,57 @@ mod tests {
 
     #[test]
     fn trace_sharing_matches_legacy_bytes() {
-        // THE trace-sharing invariant at engine level: the shared-trace
-        // engine and the per-scenario legacy path emit identical bytes.
+        // THE trace-sharing invariant at engine level: the (fused)
+        // shared-trace engine and the per-scenario legacy path emit
+        // identical bytes.
         let shared = run_sweep(&tiny_grid(), 2).unwrap();
         let legacy = run_sweep_legacy(&tiny_grid(), 2).unwrap();
         assert_eq!(
             shared.to_json().to_string_pretty(),
             legacy.to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn fused_matches_unfused_and_legacy_bytes() {
+        // The fusion invariant at engine level: fused (default),
+        // unfused (per-method trace-shared) and legacy (per-scenario)
+        // all emit identical bytes — on a grid that includes a
+        // fixed-chunk method so cross-method kernel sharing is
+        // exercised too.
+        let mut cfg = tiny_grid();
+        cfg.methods = vec![
+            Method::FullRecompute,
+            Method::FixedChunk(8),
+            Method::Mact(vec![1, 2, 4, 8]),
+        ];
+        let fused = run_sweep(&cfg, 2).unwrap();
+        let unfused_opts = SweepRunOptions { workers: 2, unfused: true, ..Default::default() };
+        let unfused = run_sweep_with(&cfg, &unfused_opts).unwrap().report;
+        let legacy = run_sweep_legacy(&cfg, 2).unwrap();
+        let fused_json = fused.to_json().to_string_pretty();
+        assert_eq!(fused_json, unfused.to_json().to_string_pretty());
+        assert_eq!(fused_json, legacy.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn fused_matches_unfused_under_fast_router() {
+        // Same invariant on the fast-router sample: the sampler changes
+        // the drawn trace, never the evaluation, so fused and unfused
+        // still agree byte for byte.
+        let fused_opts =
+            SweepRunOptions { workers: 2, fast_router: true, ..Default::default() };
+        let unfused_opts = SweepRunOptions {
+            workers: 2,
+            fast_router: true,
+            unfused: true,
+            ..Default::default()
+        };
+        let fused = run_sweep_with(&tiny_grid(), &fused_opts).unwrap().report;
+        let unfused = run_sweep_with(&tiny_grid(), &unfused_opts).unwrap().report;
+        assert_eq!(
+            fused.to_json().to_string_pretty(),
+            unfused.to_json().to_string_pretty()
         );
     }
 

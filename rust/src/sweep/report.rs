@@ -28,7 +28,7 @@
 use crate::bench::BenchReport;
 use crate::config::SweepConfig;
 use crate::json::{self, Value};
-use crate::sim::RunOutcome;
+use crate::sim::{RunOutcome, RunSummary};
 use crate::sweep::grid::Scenario;
 use crate::util::fmt_bytes;
 
@@ -68,6 +68,27 @@ impl ScenarioResult {
                 .max()
                 .unwrap_or(0),
             static_bytes: out.static_bytes,
+        }
+    }
+
+    /// Build a row from a fused-evaluation [`RunSummary`] — field for
+    /// field the same mapping as [`ScenarioResult::new`] (the summary
+    /// carries `peak_total_bytes` pre-folded), so the fused sweep path
+    /// emits byte-identical rows without ever materialising a
+    /// [`RunOutcome`].
+    pub fn from_summary(scenario: &Scenario, s: &RunSummary) -> Self {
+        ScenarioResult {
+            index: scenario.index,
+            model: scenario.model.clone(),
+            method: scenario.method.name(),
+            seed: scenario.seed,
+            iterations: s.iterations,
+            trained: s.trained(),
+            oom_iterations: s.oom_iterations,
+            avg_tgs: s.avg_tgs,
+            peak_act_bytes: s.peak_act_bytes,
+            peak_total_bytes: s.peak_total_bytes,
+            static_bytes: s.static_bytes,
         }
     }
 

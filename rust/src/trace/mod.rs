@@ -33,13 +33,29 @@ pub struct RoutingTrace {
 }
 
 impl RoutingTrace {
+    /// Append a record. Records must arrive in ascending iteration
+    /// order (the simulator emits them iteration-major) — the
+    /// invariant [`RoutingTrace::iteration`]'s binary search relies
+    /// on, checked O(1) here against the previous record.
     pub fn push(&mut self, r: RoutingRecord) {
+        debug_assert!(
+            self.records.last().map_or(true, |prev| prev.iteration <= r.iteration),
+            "RoutingTrace records must be pushed in ascending iteration order"
+        );
         self.records.push(r);
     }
 
-    /// All records of one iteration (a Fig. 2 slice).
-    pub fn iteration(&self, it: u64) -> Vec<&RoutingRecord> {
-        self.records.iter().filter(|r| r.iteration == it).collect()
+    /// All records of one iteration (a Fig. 2 slice), as a sub-slice.
+    ///
+    /// Records are pushed in ascending-iteration order (enforced by
+    /// [`RoutingTrace::push`]), so the range is found by binary
+    /// search — walking every iteration of a trace is O(iterations ·
+    /// log records) instead of the old O(records × iterations) full
+    /// re-filter per call.
+    pub fn iteration(&self, it: u64) -> &[RoutingRecord] {
+        let start = self.records.partition_point(|r| r.iteration < it);
+        let end = self.records.partition_point(|r| r.iteration <= it);
+        &self.records[start..end]
     }
 
     /// Peak received tokens over the whole trace (drives Table 4's
@@ -108,16 +124,20 @@ impl SharedRoutingTrace {
         let dense_layers = gating.model.dense_layers;
         let moe = (layers - dense_layers) as usize;
         let mut records = Vec::with_capacity(moe * iterations as usize);
+        // One set of probability/count buffers serves every draw of the
+        // trace ([`GatingSim::route_stats`] is pinned bit-identical to
+        // the allocating `route()` path).
+        let mut scratch = crate::router::RouteScratch::new(&gating.model, &gating.parallel);
         for iteration in 0..iterations {
             for layer in dense_layers..layers {
-                let r = gating.route(iteration, layer);
-                let s = r.summary();
+                let (min_recv, mean_recv, max_recv) =
+                    gating.route_stats(iteration, layer, &mut scratch);
                 records.push(RoutingRecord {
                     iteration,
                     layer,
-                    min_recv: r.min_received(),
-                    mean_recv: s.mean(),
-                    max_recv: r.max_received(),
+                    min_recv,
+                    mean_recv,
+                    max_recv,
                 });
             }
         }
@@ -180,22 +200,24 @@ impl ChunkTrace {
     }
 
     /// Mean chunk value per iteration — the "first increases then
-    /// decreases" trend the paper reads off Fig. 5.
+    /// decreases" trend the paper reads off Fig. 5. One pass over the
+    /// records into per-iteration accumulators (the old implementation
+    /// re-filtered the whole record list per iteration and collected a
+    /// throwaway `Vec<f64>` each time — O(records × iterations));
+    /// per-iteration sums still accumulate in record order, so the
+    /// emitted floats are unchanged.
     pub fn mean_per_iteration(&self, iterations: u64) -> Vec<f64> {
-        (0..iterations)
-            .map(|it| {
-                let vals: Vec<f64> = self
-                    .records
-                    .iter()
-                    .filter(|r| r.iteration == it)
-                    .map(|r| r.chosen_c as f64)
-                    .collect();
-                if vals.is_empty() {
-                    0.0
-                } else {
-                    vals.iter().sum::<f64>() / vals.len() as f64
-                }
-            })
+        let mut sums = vec![0.0f64; iterations as usize];
+        let mut counts = vec![0u64; iterations as usize];
+        for r in &self.records {
+            if r.iteration < iterations {
+                sums[r.iteration as usize] += r.chosen_c as f64;
+                counts[r.iteration as usize] += 1;
+            }
+        }
+        sums.into_iter()
+            .zip(counts)
+            .map(|(sum, n)| if n == 0 { 0.0 } else { sum / n as f64 })
             .collect()
     }
 

@@ -12,6 +12,16 @@ pub struct Rng {
     s: [u64; 4],
 }
 
+/// Marsaglia–Tsang constants for Gamma(shape ≥ 1): `d = shape − 1/3`,
+/// `c = 1/√(9d)`. Pure in `shape`, so batch samplers hoist them out of
+/// their draw loops with bit-identical results.
+#[inline]
+fn gamma_dc(shape: f64) -> (f64, f64) {
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    (d, c)
+}
+
 fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;
@@ -109,8 +119,16 @@ impl Rng {
             };
             return g * u.powf(1.0 / shape);
         }
-        let d = shape - 1.0 / 3.0;
-        let c = 1.0 / (9.0 * d).sqrt();
+        let (d, c) = gamma_dc(shape);
+        self.gamma_core(d, c)
+    }
+
+    /// The Marsaglia–Tsang accept-reject loop for precomputed `(d, c)`
+    /// (see [`gamma_dc`]). Shared by [`Rng::gamma`] and
+    /// [`Rng::gamma_batch`] so the two are the same sampler by
+    /// construction.
+    #[inline]
+    fn gamma_core(&mut self, d: f64, c: f64) -> f64 {
         loop {
             let x = self.normal();
             let v = 1.0 + c * x;
@@ -128,6 +146,36 @@ impl Rng {
         }
     }
 
+    /// Fill `out` with independent Gamma(shape, 1) draws. Bit-identical
+    /// to calling [`Rng::gamma`] once per slot — the Marsaglia–Tsang
+    /// constants (a division plus a square root per call, and the
+    /// `1/shape` boost exponent below 1) are hoisted out of the loop,
+    /// which is the whole point: the Dirichlet hot path draws hundreds
+    /// of gammas of one shared shape per (iteration, layer).
+    pub fn gamma_batch(&mut self, shape: f64, out: &mut [f64]) {
+        assert!(shape > 0.0);
+        if shape < 1.0 {
+            // boost: Gamma(a) = Gamma(a+1) * U^(1/a), constants hoisted
+            let (d, c) = gamma_dc(shape + 1.0);
+            let inv_shape = 1.0 / shape;
+            for slot in out.iter_mut() {
+                let g = self.gamma_core(d, c);
+                let u = loop {
+                    let u = self.f64();
+                    if u > 0.0 {
+                        break u;
+                    }
+                };
+                *slot = g * u.powf(inv_shape);
+            }
+        } else {
+            let (d, c) = gamma_dc(shape);
+            for slot in out.iter_mut() {
+                *slot = self.gamma_core(d, c);
+            }
+        }
+    }
+
     /// Dirichlet(alpha) sample of dimension `alpha.len()` — the expert
     /// popularity vector of the routing simulator. Smaller alpha ⇒ more
     /// concentrated (imbalanced) distributions.
@@ -141,21 +189,38 @@ impl Rng {
     /// materialising the concentration vector — the routing hot path
     /// calls this once per (iteration, layer).
     pub fn dirichlet_symmetric(&mut self, alpha: f64, n: usize) -> Vec<f64> {
-        let draws: Vec<f64> = (0..n).map(|_| self.gamma(alpha)).collect();
-        Self::normalize_simplex(draws)
+        let mut out = vec![0.0; n];
+        self.dirichlet_symmetric_into(alpha, &mut out);
+        out
+    }
+
+    /// Allocation-free symmetric Dirichlet: fill `out` with a
+    /// `Dirichlet(alpha·1)` sample of dimension `out.len()`.
+    /// Bit-identical to [`Rng::dirichlet_symmetric`] (which delegates
+    /// here) — batched gamma draws, normalised in place. The trace
+    /// generator reuses one buffer across every (iteration, layer)
+    /// draw of a cell.
+    pub fn dirichlet_symmetric_into(&mut self, alpha: f64, out: &mut [f64]) {
+        self.gamma_batch(alpha, out);
+        Self::normalize_simplex_in_place(out);
     }
 
     fn normalize_simplex(mut draws: Vec<f64>) -> Vec<f64> {
+        Self::normalize_simplex_in_place(&mut draws);
+        draws
+    }
+
+    fn normalize_simplex_in_place(draws: &mut [f64]) {
         let sum: f64 = draws.iter().sum();
         if sum <= 0.0 {
             // pathological underflow: fall back to uniform
             let n = draws.len() as f64;
-            return vec![1.0 / n; draws.len()];
+            draws.fill(1.0 / n);
+            return;
         }
-        for d in &mut draws {
+        for d in draws.iter_mut() {
             *d /= sum;
         }
-        draws
     }
 
     /// Multinomial: distribute `n` trials over `probs` (must sum ≈ 1).
@@ -171,6 +236,18 @@ impl Rng {
     /// outputs (the routing trace) stay on this path by default.
     pub fn multinomial(&mut self, n: u64, probs: &[f64]) -> Vec<u64> {
         let mut out = vec![0u64; probs.len()];
+        self.multinomial_into(n, probs, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`Rng::multinomial`]: write the counts
+    /// into a caller-owned buffer (zeroed here; `out.len()` must equal
+    /// `probs.len()`). Bit-identical — the allocating form delegates
+    /// here — so the trace generator reuses one count buffer across
+    /// every (iteration, layer) draw.
+    pub fn multinomial_into(&mut self, n: u64, probs: &[f64], out: &mut [u64]) {
+        assert_eq!(out.len(), probs.len(), "multinomial buffer shape");
+        out.fill(0);
         let mut remaining = n;
         let mut rest: f64 = 1.0;
         for (i, &p) in probs.iter().enumerate() {
@@ -192,7 +269,6 @@ impl Rng {
             let last = out.len() - 1;
             out[last] += remaining;
         }
-        out
     }
 
     /// Multinomial via recursive binomial splitting: draw the total of
@@ -212,12 +288,21 @@ impl Rng {
     /// what makes the balanced mode trustworthy as the same sampler.
     pub fn multinomial_split(&mut self, n: u64, probs: &[f64]) -> Vec<u64> {
         let mut out = vec![0u64; probs.len()];
+        self.multinomial_split_into(n, probs, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`Rng::multinomial_split`] (which
+    /// delegates here): zero `out` and run the splitting recursion in
+    /// place. Same sampler, same bits, reusable buffer.
+    pub fn multinomial_split_into(&mut self, n: u64, probs: &[f64], out: &mut [u64]) {
+        assert_eq!(out.len(), probs.len(), "multinomial buffer shape");
+        out.fill(0);
         if probs.is_empty() {
             debug_assert_eq!(n, 0, "multinomial_split: trials with no categories");
-            return out;
+            return;
         }
-        self.split_range(&mut out, probs, 0..probs.len(), (n, 1.0), true);
-        out
+        self.split_range(out, probs, 0..probs.len(), (n, 1.0), true);
     }
 
     /// Conditional-binomial recursion over `probs[range]` holding the
@@ -493,6 +578,56 @@ mod tests {
         assert_eq!(general, symmetric);
         let s: f64 = symmetric.iter().sum();
         assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_batch_bit_identical_to_per_draw() {
+        // Both the boost path (shape < 1, the routing regime) and the
+        // direct Marsaglia–Tsang path must replay the exact per-draw
+        // stream: same generator state in, same bits out.
+        for &shape in &[0.02, 0.3, 0.999, 1.0, 4.5, 50.0] {
+            let mut a = Rng::new(23);
+            let per_draw: Vec<f64> = (0..257).map(|_| a.gamma(shape)).collect();
+            let mut b = Rng::new(23);
+            let mut batched = vec![0.0; 257];
+            b.gamma_batch(shape, &mut batched);
+            for (i, (x, y)) in per_draw.iter().zip(&batched).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "shape {shape} draw {i}: {x} vs {y}"
+                );
+            }
+            // and the generators end in the same state
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn dirichlet_symmetric_into_bit_identical_and_alloc_free() {
+        for &(seed, alpha, n) in &[(17u64, 0.3f64, 16usize), (7, 0.02, 256), (9, 50.0, 64)] {
+            let fresh = Rng::new(seed).dirichlet_symmetric(alpha, n);
+            // a dirty reused buffer must not leak into the sample
+            let mut buf = vec![123.456; n];
+            Rng::new(seed).dirichlet_symmetric_into(alpha, &mut buf);
+            assert_eq!(fresh, buf, "seed {seed} alpha {alpha}");
+        }
+    }
+
+    #[test]
+    fn multinomial_into_variants_bit_identical() {
+        let probs = paper_scale_probs(5, 0.1);
+        let n = 1u64 << 20;
+        let fresh = Rng::new(42).multinomial(n, &probs);
+        let mut buf = vec![999u64; probs.len()];
+        Rng::new(42).multinomial_into(n, &probs, &mut buf);
+        assert_eq!(fresh, buf);
+        let fresh_split = Rng::new(42).multinomial_split(n, &probs);
+        let mut buf_split = vec![999u64; probs.len()];
+        Rng::new(42).multinomial_split_into(n, &probs, &mut buf_split);
+        assert_eq!(fresh_split, buf_split);
+        // the two samplers still differ (different stream consumption)
+        assert_ne!(fresh, fresh_split);
     }
 
     #[test]

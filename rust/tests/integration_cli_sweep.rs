@@ -78,6 +78,43 @@ fn cli_two_shard_merge_matches_direct_run() {
 }
 
 #[test]
+fn cli_unfused_matches_fused_artifact() {
+    // `--unfused` (the pre-fusion per-method engine) must emit the
+    // byte-identical artifact of the fused default — and checkpoint
+    // rows written by one path must satisfy a resume under the other.
+    let fused = tmp("fused.json");
+    let unfused = tmp("unfused.json");
+    let mixed = tmp("mixed.json");
+    let ck = tmp("unfused.jsonl");
+
+    sweep(&["--out", fused.to_str().unwrap()]);
+    sweep(&["--unfused", "--out", unfused.to_str().unwrap()]);
+    assert_eq!(
+        std::fs::read(&fused).expect("fused artifact"),
+        std::fs::read(&unfused).expect("unfused artifact"),
+        "--unfused diverged from the fused artifact"
+    );
+
+    // cross-path checkpoint: rows written unfused, folded by a fused
+    // resume run
+    sweep(&["--unfused", "--checkpoint", ck.to_str().unwrap(), "--out", "/dev/null"]);
+    sweep(&[
+        "--resume",
+        "--checkpoint", ck.to_str().unwrap(),
+        "--out", mixed.to_str().unwrap(),
+    ]);
+    assert_eq!(
+        std::fs::read(&fused).expect("fused artifact"),
+        std::fs::read(&mixed).expect("mixed artifact"),
+        "unfused checkpoint rows diverged under a fused resume"
+    );
+
+    for p in [&fused, &unfused, &mixed, &ck] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
 fn cli_limit_then_resume_completes_the_grid() {
     let ck = tmp("limit.jsonl");
     let out_a = tmp("limit-a.json");

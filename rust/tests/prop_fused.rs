@@ -1,0 +1,125 @@
+//! Property test of the fused cell evaluator: across randomised
+//! (model, memory envelope, iteration count, seed, sampler, method
+//! set) cells, `sim::evaluate_cell` must be **bit-identical** to
+//! per-method `sim::run_scenario_on_trace` — and, for default-sampler
+//! traces, transitively to the per-scenario `sim::run_scenario` (which
+//! re-draws the trace from the seed). Cases include fast-router traces
+//! and OOM-heavy cells (budgets small enough that every iteration
+//! violates Eq. 3), so both the trained and the all-OOM aggregation
+//! paths are exercised.
+
+use memfine::config::{model_i, model_ii, paper_run, Method, GB};
+use memfine::prop::{assert_prop, Gen};
+use memfine::router::GatingSim;
+use memfine::sim::{evaluate_cell, run_scenario, run_scenario_on_trace, RunSummary};
+use memfine::trace::SharedRoutingTrace;
+use memfine::util::rng::Rng;
+
+/// One randomised paired-comparison cell.
+#[derive(Clone, Debug)]
+struct Case {
+    model_ii: bool,
+    seed: u64,
+    iterations: u64,
+    gpu_mem_gb: u64,
+    fast_router: bool,
+    selective: bool,
+    methods: Vec<Method>,
+}
+
+struct CaseGen;
+
+impl Gen for CaseGen {
+    type Value = Case;
+
+    fn generate(&self, rng: &mut Rng) -> Case {
+        // Method pool: always MACT (the interesting decision path),
+        // plus a random subset of the others — duplicates included
+        // sometimes (the fused path must treat each entry
+        // independently).
+        let mut methods = vec![Method::Mact(vec![1, 2, 4, 8])];
+        if rng.below(2) == 1 {
+            methods.push(Method::FullRecompute);
+        }
+        if rng.below(2) == 1 {
+            methods.push(Method::FixedChunk(1 + rng.below(8)));
+        }
+        if rng.below(4) == 0 {
+            methods.push(Method::Mact(vec![1, 2, 4, 8]));
+        }
+        Case {
+            model_ii: rng.below(2) == 1,
+            seed: rng.below(1 << 16),
+            iterations: 3 + rng.below(5),
+            // 24 GB sinks under static memory (all-OOM cells); 64/80 GB
+            // are the paper's envelopes.
+            gpu_mem_gb: [24u64, 48, 64, 80][rng.below(4) as usize],
+            fast_router: rng.below(2) == 1,
+            selective: rng.below(4) != 0,
+            methods,
+        }
+    }
+}
+
+#[test]
+fn prop_fused_cell_bit_identical_to_reference_paths() {
+    assert_prop(113, 10, &CaseGen, |case: &Case| {
+        let model = if case.model_ii { model_ii() } else { model_i() };
+        let mut base = paper_run(model, Method::FullRecompute);
+        base.iterations = case.iterations;
+        base.gpu_mem_bytes = case.gpu_mem_gb * GB;
+        base.allow_selective_recompute = case.selective;
+
+        let gating = GatingSim::new(base.model.clone(), base.parallel.clone(), case.seed)
+            .with_fast_multinomial(case.fast_router);
+        let trace = SharedRoutingTrace::generate(&gating, case.iterations);
+
+        let fused = evaluate_cell(&base, &case.methods, &trace)
+            .map_err(|e| format!("evaluate_cell failed: {e}"))?;
+        if fused.len() != case.methods.len() {
+            return Err(format!(
+                "{} outcomes for {} methods",
+                fused.len(),
+                case.methods.len()
+            ));
+        }
+        for (outcome, method) in fused.iter().zip(&case.methods) {
+            if &outcome.method != method {
+                return Err(format!("method order broken at {method:?}"));
+            }
+            let on_trace = run_scenario_on_trace(&base, method.clone(), &trace)
+                .map_err(|e| format!("run_scenario_on_trace failed: {e}"))?;
+            let reference = RunSummary::of(&on_trace);
+            if outcome.summary != reference {
+                return Err(format!(
+                    "fused != on-trace for {method:?}:\n  fused {:?}\n  ref   {:?}",
+                    outcome.summary, reference
+                ));
+            }
+            // float fields to the bit, not just PartialEq
+            if outcome.summary.avg_tgs.to_bits() != reference.avg_tgs.to_bits() {
+                return Err(format!("avg_tgs bits differ for {method:?}"));
+            }
+            for (a, b) in outcome
+                .summary
+                .chunk_mean_per_iteration
+                .iter()
+                .zip(&reference.chunk_mean_per_iteration)
+            {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("chunk-mean bits differ for {method:?}"));
+                }
+            }
+            // default-sampler traces close the loop to the per-scenario
+            // reference (which re-draws the same trace from the seed)
+            if !case.fast_router {
+                let direct = run_scenario(&base, method.clone(), case.seed)
+                    .map_err(|e| format!("run_scenario failed: {e}"))?;
+                if outcome.summary != RunSummary::of(&direct) {
+                    return Err(format!("fused != per-scenario for {method:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
