@@ -61,6 +61,23 @@ fn main() {
         gamma_buf[0]
     }));
 
+    // Normal draws: per-draw vs the chunked fixed-lane batch (also
+    // bit-identical by construction).
+    let mut rng = Rng::new(13);
+    add(time_fn("rng.normal x256", 30, 2_000, || {
+        let mut acc = 0.0;
+        for _ in 0..256 {
+            acc += rng.normal();
+        }
+        acc
+    }));
+    let mut rng = Rng::new(13);
+    let mut normal_buf = vec![0.0f64; 256];
+    add(time_fn("rng.normal_batch(256)", 30, 2_000, || {
+        rng.normal_batch(&mut normal_buf);
+        normal_buf[0]
+    }));
+
     // Dispatch planning at coordinator scale: 4 ranks × 512 tokens × top-2.
     let parallel = {
         let mut p = paper_parallel();

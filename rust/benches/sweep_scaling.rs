@@ -9,20 +9,23 @@
 //!   trace-shared engine); pinned bit-identical to legacy;
 //! * **fused** — one trace per cell AND one trace walk evaluating all
 //!   methods simultaneously (`sim::evaluate_cell`, the default);
-//!   pinned bit-identical to both;
-//! * **fused+fast** — fusion plus the binomial-splitting multinomial
-//!   (`--fast-router`; same distribution, different sample).
+//!   pinned bit-identical to both. All three draw with the **default
+//!   splitting sampler** (the trace-provenance flip);
+//! * **fused_seq** — the pre-flip sequential sampler (`--router seq`;
+//!   same distribution, different sample, hash-distinct).
 //!
-//! Also micro-benches the multinomial samplers on paper-scale draws
-//! and the method-evaluation stage in isolation (fused vs unfused on
-//! pre-drawn traces — the stage fusion actually accelerates, measured
-//! without the trace-generation cost both modes share), and re-asserts
+//! Also micro-benches the trace stage (cold-vs-warm trace cache
+//! through the store, byte-identity re-asserted), the chunked batch
+//! samplers against their scalar per-draw paths (gamma and normal —
+//! pinned bit-identical elsewhere, measured here), the multinomial
+//! samplers on paper-scale draws, and the method-evaluation stage in
+//! isolation (fused vs unfused on pre-drawn traces), and re-asserts
 //! the determinism contract (every worker count and every mode must
 //! emit the serial legacy run's exact bytes).
 //!
 //! Writes `BENCH_sweep.json` (scenarios/sec per mode × worker count,
-//! end-to-end and eval-stage speedups, sampler draws/sec) so the perf
-//! trajectory is tracked PR-over-PR.
+//! end-to-end / eval-stage / trace-stage speedups, sampler draws/sec)
+//! so the perf trajectory is tracked PR-over-PR.
 
 use std::time::Instant;
 
@@ -31,7 +34,7 @@ use memfine::config::SweepConfig;
 use memfine::json::{self, Value};
 use memfine::sim;
 use memfine::sweep::{self, SweepRunOptions};
-use memfine::trace::SharedRoutingTrace;
+use memfine::trace::{RouterSampler, SharedRoutingTrace};
 use memfine::util::rng::Rng;
 
 const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
@@ -45,7 +48,7 @@ enum Mode {
     Legacy,
     Unfused,
     Fused,
-    FusedFast,
+    FusedSeq,
 }
 
 /// Time one sweep invocation, returning (wall seconds, pretty JSON).
@@ -61,10 +64,13 @@ fn timed_run(cfg: &SweepConfig, workers: usize, mode: Mode) -> (f64, String) {
             let opts = SweepRunOptions { workers, ..Default::default() };
             sweep::run_sweep_with(cfg, &opts).expect("fused sweep").report
         }
-        Mode::FusedFast => {
-            let opts =
-                SweepRunOptions { workers, fast_router: true, ..Default::default() };
-            sweep::run_sweep_with(cfg, &opts).expect("fused fast sweep").report
+        Mode::FusedSeq => {
+            let opts = SweepRunOptions {
+                workers,
+                sampler: RouterSampler::Sequential,
+                ..Default::default()
+            };
+            sweep::run_sweep_with(cfg, &opts).expect("fused seq sweep").report
         }
     };
     (t0.elapsed().as_secs_f64(), report.to_json().to_string_pretty())
@@ -85,7 +91,8 @@ fn eval_stage_micro(cfg: &SweepConfig) -> (f64, f64) {
                 run.model.clone(),
                 run.parallel.clone(),
                 run.seed,
-            );
+            )
+            .with_sampler(RouterSampler::default());
             SharedRoutingTrace::generate(&gating, run.iterations)
         })
         .collect();
@@ -120,6 +127,89 @@ fn eval_stage_micro(cfg: &SweepConfig) -> (f64, f64) {
     let fused = n / t0.elapsed().as_secs_f64().max(1e-9);
     assert!(acc > 0, "keep the evaluations observable");
     (unfused, fused)
+}
+
+/// The trace stage through the on-disk store: a serial sweep with a
+/// cold cache (draws + saves every cell) vs the same sweep warm
+/// (loads every cell). Byte-identity is re-asserted; the wall-clock
+/// gap is the trace-generation share the cache removes.
+fn trace_stage_micro(cfg: &SweepConfig) -> (f64, f64) {
+    let mut dir = std::env::temp_dir();
+    dir.push(format!("memfine-bench-trace-cache-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let opts = SweepRunOptions {
+        workers: 1,
+        trace_cache: Some(dir.clone()),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let cold = sweep::run_sweep_with(cfg, &opts).expect("cold cached sweep");
+    let cold_s = t0.elapsed().as_secs_f64();
+    assert_eq!(cold.traces_cached, 0, "first cached run must be cold");
+    let t0 = Instant::now();
+    let warm = sweep::run_sweep_with(cfg, &opts).expect("warm cached sweep");
+    let warm_s = t0.elapsed().as_secs_f64();
+    assert_eq!(warm.traces_generated, 0, "second cached run must be warm");
+    assert_eq!(
+        cold.report.to_json().to_string_pretty(),
+        warm.report.to_json().to_string_pretty(),
+        "warm-cache sweep diverged from the cold bytes"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    (cold_s, warm_s)
+}
+
+/// The chunked batch samplers against their scalar per-draw paths
+/// (which they are pinned bit-identical to): gamma at the routing
+/// regime's boost shape over 256 experts, and raw normals. Returns
+/// (gamma scalar draws/s, gamma batch draws/s, normal scalar draws/s,
+/// normal batch draws/s).
+fn batch_sampler_micro() -> (f64, f64, f64, f64) {
+    let shape = 0.02; // deep-layer chaos concentration: the boost path
+    let n = 256;
+    let reps = 2_000;
+    let total = (n * reps) as f64;
+    let mut buf = vec![0.0f64; n];
+    let mut acc = 0.0f64;
+
+    let t0 = Instant::now();
+    let mut rng = Rng::new(11);
+    for _ in 0..reps {
+        for slot in buf.iter_mut() {
+            *slot = rng.gamma(shape);
+        }
+        acc += buf[n - 1];
+    }
+    let gamma_scalar = total / t0.elapsed().as_secs_f64().max(1e-9);
+
+    let t0 = Instant::now();
+    let mut rng = Rng::new(11);
+    for _ in 0..reps {
+        rng.gamma_batch(shape, &mut buf);
+        acc += buf[n - 1];
+    }
+    let gamma_batch = total / t0.elapsed().as_secs_f64().max(1e-9);
+
+    let t0 = Instant::now();
+    let mut rng = Rng::new(12);
+    for _ in 0..reps {
+        for slot in buf.iter_mut() {
+            *slot = rng.normal();
+        }
+        acc += buf[n - 1];
+    }
+    let normal_scalar = total / t0.elapsed().as_secs_f64().max(1e-9);
+
+    let t0 = Instant::now();
+    let mut rng = Rng::new(12);
+    for _ in 0..reps {
+        rng.normal_batch(&mut buf);
+        acc += buf[n - 1];
+    }
+    let normal_batch = total / t0.elapsed().as_secs_f64().max(1e-9);
+
+    assert!(acc.is_finite(), "keep the draws observable");
+    (gamma_scalar, gamma_batch, normal_scalar, normal_batch)
 }
 
 fn multinomial_micro() -> (f64, f64) {
@@ -162,7 +252,7 @@ fn main() {
     let (legacy_serial_s, legacy_json) = timed_run(&cfg, 1, Mode::Legacy);
 
     let mut report = BenchReport::new(
-        "sweep scaling — legacy vs trace-shared (unfused) vs fused vs fused+fast-router",
+        "sweep scaling — legacy vs trace-shared (unfused) vs fused vs fused+seq-router",
         &["mode", "workers", "wall clock", "scn/s", "vs legacy serial", "bit-identical"],
     );
     let mut artifact_rows: Vec<(String, Value)> = Vec::new();
@@ -188,7 +278,7 @@ fn main() {
     let mut unfused_serial_s = f64::NAN;
     let mut fused_serial_s = f64::NAN;
     let mut fused_2w_s = f64::NAN;
-    let mut fused_fast_serial_s = f64::NAN;
+    let mut fused_seq_serial_s = f64::NAN;
     for &workers in &WORKER_COUNTS {
         let (wall, jsn) = if workers == 1 {
             (legacy_serial_s, legacy_json.clone())
@@ -223,22 +313,22 @@ fn main() {
         let row = record("fused", workers, wall, Some(identical));
         report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
     }
-    let mut fast_json: Option<String> = None;
+    let mut seq_json: Option<String> = None;
     for &workers in &WORKER_COUNTS {
-        let (wall, jsn) = timed_run(&cfg, workers, Mode::FusedFast);
+        let (wall, jsn) = timed_run(&cfg, workers, Mode::FusedSeq);
         if workers == 1 {
-            fused_fast_serial_s = wall;
+            fused_seq_serial_s = wall;
         }
-        // the fast router is its own deterministic sample: identical
-        // across worker counts, different from the default sample
-        match &fast_json {
-            None => fast_json = Some(jsn),
+        // the sequential sampler is its own deterministic sample:
+        // identical across worker counts, different from the default
+        match &seq_json {
+            None => seq_json = Some(jsn),
             Some(first) => assert_eq!(
                 first, &jsn,
-                "fast-router workers={workers} diverged from its serial bytes"
+                "seq-router workers={workers} diverged from its serial bytes"
             ),
         }
-        let row = record("fused_fast", workers, wall, None);
+        let row = record("fused_seq", workers, wall, None);
         report.row(&[row.0, row.1, row.2, row.3, row.4, row.5]);
     }
     // Orchestrated: the same grid as a supervised 2-process fleet of
@@ -275,24 +365,45 @@ fn main() {
     report.print();
 
     let (seq_dps, split_dps) = multinomial_micro();
+    let (gamma_scalar_dps, gamma_batch_dps, normal_scalar_dps, normal_batch_dps) =
+        batch_sampler_micro();
+    let (trace_cold_s, trace_warm_s) = trace_stage_micro(&cfg);
     let (eval_unfused_sps, eval_fused_sps) = eval_stage_micro(&cfg);
     let sharing_speedup = legacy_serial_s / unfused_serial_s;
     let fusion_speedup = unfused_serial_s / fused_serial_s;
     let eval_fusion_speedup = eval_fused_sps / eval_unfused_sps;
-    let total_speedup = legacy_serial_s / fused_fast_serial_s;
+    let warm_cache_speedup = trace_cold_s / trace_warm_s;
+    let total_speedup = legacy_serial_s / fused_serial_s;
     println!(
         "\nmultinomial (2^20 copies, 256 experts, chaos-peak popularity): \
-         sequential {seq_dps:.0} draws/s, split {split_dps:.0} draws/s ({:.2}x)",
+         sequential {seq_dps:.0} draws/s, split {split_dps:.0} draws/s ({:.2}x — \
+         the default sampler since the provenance flip)",
         split_dps / seq_dps
     );
     println!(
+        "batch samplers (chunked fixed-lane, pinned bit-identical to scalar): \
+         gamma(0.02) {gamma_scalar_dps:.0} -> {gamma_batch_dps:.0} draws/s ({:.2}x), \
+         normal {normal_scalar_dps:.0} -> {normal_batch_dps:.0} draws/s ({:.2}x)",
+        gamma_batch_dps / gamma_scalar_dps,
+        normal_batch_dps / normal_scalar_dps,
+    );
+    println!(
+        "trace stage (serial sweep through the on-disk store): cold {} \
+         ({:.1} scn/s) -> warm {} ({:.1} scn/s), {warm_cache_speedup:.2}x — \
+         byte-identical artifacts",
+        fmt_time(trace_cold_s),
+        scenarios_per_sec(n, trace_cold_s),
+        fmt_time(trace_warm_s),
+        scenarios_per_sec(n, trace_warm_s),
+    );
+    println!(
         "serial scenarios/sec: legacy {:.1} → trace-shared {:.1} ({sharing_speedup:.2}x) \
-         → fused {:.1} ({fusion_speedup:.2}x on top) → +fast-router {:.1} \
-         ({total_speedup:.2}x total)",
+         → fused {:.1} ({fusion_speedup:.2}x on top, {total_speedup:.2}x total); \
+         seq-router reference {:.1}",
         scenarios_per_sec(n, legacy_serial_s),
         scenarios_per_sec(n, unfused_serial_s),
         scenarios_per_sec(n, fused_serial_s),
-        scenarios_per_sec(n, fused_fast_serial_s),
+        scenarios_per_sec(n, fused_seq_serial_s),
     );
     println!(
         "method-evaluation stage (pre-drawn traces, 3 methods/cell): \
@@ -307,9 +418,10 @@ fn main() {
         orchestrated_2p_s / fused_2w_s,
     );
     println!("\nreading: cells share one routed-token stream across methods AND walk it");
-    println!("once for all methods (memoised kernels, RunSummary aggregates); the");
-    println!("splitting multinomial then cheapens the one remaining draw. Output bytes");
-    println!("never depend on schedule, worker count, shard split or resume point.");
+    println!("once for all methods; the splitting multinomial (now the default, with");
+    println!("provenance recorded everywhere) cheapens the one remaining draw, and the");
+    println!("trace store removes it entirely on re-sweeps. Output bytes never depend");
+    println!("on schedule, worker count, shard split, resume point or cache state.");
 
     let mut fields = vec![
         ("grid_scenarios", json::num(n as f64)),
@@ -317,16 +429,31 @@ fn main() {
         ("legacy_serial_s", json::num(legacy_serial_s)),
         ("unfused_serial_s", json::num(unfused_serial_s)),
         ("fused_serial_s", json::num(fused_serial_s)),
-        ("fused_fast_serial_s", json::num(fused_fast_serial_s)),
+        ("fused_seq_serial_s", json::num(fused_seq_serial_s)),
         ("speedup_trace_sharing", json::num(sharing_speedup)),
         ("speedup_fused_vs_unfused", json::num(fusion_speedup)),
         ("speedup_total", json::num(total_speedup)),
         ("eval_stage_unfused_scn_per_sec", json::num(eval_unfused_sps)),
         ("eval_stage_fused_scn_per_sec", json::num(eval_fused_sps)),
         ("eval_stage_fused_speedup", json::num(eval_fusion_speedup)),
+        ("trace_stage_cold_s", json::num(trace_cold_s)),
+        ("trace_stage_warm_s", json::num(trace_warm_s)),
+        ("trace_stage_warm_cache_speedup", json::num(warm_cache_speedup)),
         ("multinomial_seq_draws_per_sec", json::num(seq_dps)),
         ("multinomial_split_draws_per_sec", json::num(split_dps)),
         ("multinomial_split_speedup", json::num(split_dps / seq_dps)),
+        ("gamma_scalar_draws_per_sec", json::num(gamma_scalar_dps)),
+        ("gamma_batch_draws_per_sec", json::num(gamma_batch_dps)),
+        (
+            "gamma_batch_speedup",
+            json::num(gamma_batch_dps / gamma_scalar_dps),
+        ),
+        ("normal_scalar_draws_per_sec", json::num(normal_scalar_dps)),
+        ("normal_batch_draws_per_sec", json::num(normal_batch_dps)),
+        (
+            "normal_batch_speedup",
+            json::num(normal_batch_dps / normal_scalar_dps),
+        ),
         ("orchestrated_2procs_s", json::num(orchestrated_2p_s)),
         ("inprocess_2workers_s", json::num(fused_2w_s)),
         (
@@ -336,6 +463,7 @@ fn main() {
         ("determinism_legacy_vs_shared", Value::Bool(true)),
         ("determinism_fused_vs_unfused", Value::Bool(true)),
         ("determinism_orchestrated_vs_inprocess", Value::Bool(true)),
+        ("determinism_warm_cache_vs_cold", Value::Bool(true)),
     ];
     fields.extend(artifact_rows.iter().map(|(k, v)| (k.as_str(), v.clone())));
     let doc = json::obj(fields);

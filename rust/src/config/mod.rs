@@ -8,6 +8,7 @@
 
 use crate::error::{Error, Result};
 use crate::json::{self, Value};
+use crate::trace::provenance::RouterSampler;
 
 /// Model architecture parameters — the paper's Table 1 notation.
 #[derive(Clone, Debug, PartialEq)]
@@ -781,8 +782,10 @@ pub struct LaunchConfig {
     /// Relaunches allowed per shard (beyond the initial spawn) before
     /// the supervisor gives up on it.
     pub max_retries: u64,
-    /// Run shards with `--fast-router` (part of the scenario hash).
-    pub fast_router: bool,
+    /// Router sampler the campaign draws with (part of every scenario
+    /// hash and trace-cache key). Defaults to the splitting
+    /// multinomial; `--router seq` reproduces pre-flip campaigns.
+    pub sampler: RouterSampler,
 }
 
 impl LaunchConfig {
@@ -797,7 +800,7 @@ impl LaunchConfig {
             stall_timeout_ms: 30_000,
             poll_ms: 100,
             max_retries: 2,
-            fast_router: false,
+            sampler: RouterSampler::default(),
         }
     }
 
@@ -842,11 +845,25 @@ impl LaunchConfig {
             ("stall_timeout_ms", json::num(self.stall_timeout_ms as f64)),
             ("poll_ms", json::num(self.poll_ms as f64)),
             ("max_retries", json::num(self.max_retries as f64)),
-            ("fast_router", Value::Bool(self.fast_router)),
+            ("router", json::s(self.sampler.tag().to_string())),
         ])
     }
 
     pub fn from_json(v: &Value) -> Result<Self> {
+        // "router" is the current spelling; pre-flip launch.json files
+        // carried `"fast_router": bool` — still accepted, so recorded
+        // campaigns keep resuming and auditing under their sampler.
+        let sampler = match v.get("router") {
+            Some(tag) => RouterSampler::parse(
+                tag.as_str()
+                    .ok_or_else(|| Error::config("launch router must be a string"))?,
+            )?,
+            None => RouterSampler::from_fast_flag(
+                v.get("fast_router")
+                    .and_then(Value::as_bool)
+                    .ok_or_else(|| Error::config("launch missing router sampler"))?,
+            ),
+        };
         let cfg = LaunchConfig {
             sweep: SweepConfig::from_json(
                 v.get("sweep").ok_or_else(|| Error::config("launch missing sweep"))?,
@@ -856,10 +873,7 @@ impl LaunchConfig {
             stall_timeout_ms: v.req_u64("stall_timeout_ms")?,
             poll_ms: v.req_u64("poll_ms")?,
             max_retries: v.req_u64("max_retries")?,
-            fast_router: v
-                .get("fast_router")
-                .and_then(Value::as_bool)
-                .ok_or_else(|| Error::config("launch missing fast_router"))?,
+            sampler,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1120,18 +1134,51 @@ mod tests {
         let mut cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 4, 10));
         cfg.procs = 3;
         cfg.stall_timeout_ms = 5_000;
-        cfg.fast_router = true;
+        cfg.sampler = RouterSampler::Sequential;
         cfg.validate().unwrap();
         let back = LaunchConfig::from_json(
             &crate::json::parse(&cfg.to_json().to_string_pretty()).unwrap(),
         )
         .unwrap();
         assert_eq!(cfg, back);
-        // defaults are sane and validate
+        // defaults are sane and validate; the sampler default is the
+        // post-flip splitting multinomial
         let d = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
         d.validate().unwrap();
         assert_eq!(d.procs, 0);
         assert!(d.max_retries >= 1);
+        assert_eq!(d.sampler, RouterSampler::Split);
+    }
+
+    #[test]
+    fn launch_config_accepts_legacy_fast_router_field() {
+        // pre-flip launch.json files spell the sampler as a bool —
+        // they must keep loading under their recorded choice
+        let cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
+        let mut doc = cfg.to_json();
+        if let crate::json::Value::Obj(map) = &mut doc {
+            map.remove("router");
+            map.insert("fast_router".into(), Value::Bool(false));
+        } else {
+            panic!("launch config serialises to an object");
+        }
+        let back = LaunchConfig::from_json(&doc).unwrap();
+        assert_eq!(back.sampler, RouterSampler::Sequential);
+        let mut doc = cfg.to_json();
+        if let crate::json::Value::Obj(map) = &mut doc {
+            map.remove("router");
+            map.insert("fast_router".into(), Value::Bool(true));
+        }
+        assert_eq!(
+            LaunchConfig::from_json(&doc).unwrap().sampler,
+            RouterSampler::Split
+        );
+        // neither spelling present is an error
+        let mut doc = cfg.to_json();
+        if let crate::json::Value::Obj(map) = &mut doc {
+            map.remove("router");
+        }
+        assert!(LaunchConfig::from_json(&doc).is_err());
     }
 
     #[test]

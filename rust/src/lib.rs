@@ -21,9 +21,11 @@
 //!   whole-training-run simulator ([`sim`]), a deterministic parallel
 //!   scenario-sweep engine ([`sweep`]) that fans method × config ×
 //!   seed grids over a worker pool — drawing each (model, seed) cell's
-//!   routing trace once ([`trace`]::SharedRoutingTrace), reducing
-//!   results as a stream, and checkpointing by scenario content hash
-//!   for resumable/sharded grids — a shard [`orchestrator`] that
+//!   routing trace once ([`trace`]::SharedRoutingTrace), caching drawn
+//!   traces on disk keyed by sampler/RNG provenance
+//!   ([`trace`]::store, [`trace`]::provenance), reducing results as a
+//!   stream, and checkpointing by scenario content hash for
+//!   resumable/sharded grids — a shard [`orchestrator`] that
 //!   launches, supervises, heals and auto-merges multi-process sweep
 //!   fleets (`memfine launch`), and a real-execution coordinator
 //!   ([`coordinator`]) that drives the AOT artifacts through the PJRT

@@ -7,8 +7,8 @@
 //! memfine simulate [--model i|ii] [--method 1|2|3] [--iters N]
 //! memfine sweep   [--models i,ii] [--methods 1,2,3] [--seeds N|a,b,...]
 //!                 [--workers N] [--out FILE] [--checkpoint F[,F...]]
-//!                 [--resume] [--shard i/n] [--limit N] [--fast-router]
-//!                 [--unfused] [--config FILE]
+//!                 [--resume] [--shard i/n] [--limit N] [--router seq|split]
+//!                 [--trace-cache DIR] [--unfused] [--config FILE]
 //!                 parallel scenario grid, resumable/shardable
 //! memfine launch  [grid flags | --config FILE] [--procs N] [--dir DIR]
 //!                 [--stall-timeout-ms N] [--poll-ms N] [--retries N]
@@ -16,7 +16,7 @@
 //!                 orchestrated multi-process sweep: spawn, supervise,
 //!                 heal, auto-merge
 //! memfine checkpoint compact FILE... [--out FILE]
-//! memfine checkpoint audit FILE... --config FILE [--fast-router]
+//! memfine checkpoint audit FILE... --config FILE [--router seq|split]
 //! memfine repro   table4|fig2|fig4|fig5      regenerate a paper artifact
 //! memfine train   [--steps N] [--artifacts DIR]  E2E mini-model training
 //! memfine coord   [--policy mact|fixed] [--budget-mb N]  real EP layer pass
@@ -27,6 +27,7 @@ use memfine::config::{
     derive_seeds, model_i, model_ii, paper_run, LaunchConfig, Method, ModelConfig,
     SweepConfig,
 };
+use memfine::trace::{RouterSampler, TraceProvenance};
 use memfine::coordinator::ep::{ChunkPolicy, EpCoordinator};
 use memfine::coordinator::train::TrainDriver;
 use memfine::memory::{ActivationModel, StaticModel};
@@ -39,7 +40,7 @@ const VALUE_OPTS: &[&str] = &[
     "model", "method", "iters", "seed", "steps", "artifacts", "policy",
     "budget-mb", "bins", "chunk", "models", "methods", "seeds", "workers",
     "out", "checkpoint", "shard", "limit", "config", "procs", "dir",
-    "stall-timeout-ms", "poll-ms", "retries",
+    "stall-timeout-ms", "poll-ms", "retries", "router", "trace-cache",
 ];
 
 fn main() {
@@ -110,7 +111,9 @@ fn print_usage() {
                 OptSpec { name: "resume", help: "skip scenarios already in the checkpoint file(s)", takes_value: false, default: None },
                 OptSpec { name: "shard", help: "run shard i of n (i/n) of the sweep grid", takes_value: true, default: None },
                 OptSpec { name: "limit", help: "execute at most N sweep scenarios this run", takes_value: true, default: None },
-                OptSpec { name: "fast-router", help: "binomial-splitting routing draw (faster; different sample)", takes_value: false, default: None },
+                OptSpec { name: "router", help: "routing sampler: split (binomial-splitting, fast) or seq (pre-flip sequential; different sample, hash-distinct)", takes_value: true, default: Some("split") },
+                OptSpec { name: "trace-cache", help: "sweep: on-disk routed-trace cache dir (launch manages its own under --dir)", takes_value: true, default: None },
+                OptSpec { name: "fast-router", help: "deprecated alias for --router split (the default since the sampler flip)", takes_value: false, default: None },
                 OptSpec { name: "unfused", help: "evaluate each method as its own pass over the shared trace (pre-fusion A/B path; identical artifacts)", takes_value: false, default: None },
                 OptSpec { name: "config", help: "JSON grid/launch spec file (sweep/launch/checkpoint audit)", takes_value: true, default: None },
                 OptSpec { name: "procs", help: "launch: shard processes (0 = cores / workers)", takes_value: true, default: Some("0") },
@@ -265,29 +268,40 @@ fn sweep_config_from_doc(doc: &memfine::json::Value) -> memfine::Result<SweepCon
     SweepConfig::from_json(grid)
 }
 
+/// The explicit sampler choice on the command line, if any: `--router
+/// seq|split` is the current spelling; the pre-flip `--fast-router`
+/// flag survives as an alias for `--router split`.
+fn sampler_flag(args: &Args) -> memfine::Result<Option<RouterSampler>> {
+    match args.get("router") {
+        Some(tag) => Ok(Some(RouterSampler::parse(tag)?)),
+        None if args.has_flag("fast-router") => Ok(Some(RouterSampler::Split)),
+        None => Ok(None),
+    }
+}
+
 /// Extract (grid, sampler) from a parsed config doc: a `LaunchConfig`
-/// carries its own fast-router choice — which is part of every
-/// scenario hash, so resuming or auditing a fast-router campaign from
-/// its launch.json must not silently fall back to the sequential
-/// sampler. Other doc shapes default to sequential (override with
-/// `--fast-router`).
+/// carries its own sampler choice — which is part of every scenario
+/// hash, so resuming or auditing a campaign from its launch.json must
+/// not silently fall back to another sampler. Other doc shapes carry
+/// no sampler (resolution falls through to flags, checkpoint headers,
+/// or the default).
 fn grid_and_sampler_from_doc(
     doc: &memfine::json::Value,
-) -> memfine::Result<(SweepConfig, bool)> {
+) -> memfine::Result<(SweepConfig, Option<RouterSampler>)> {
     if doc.get("sweep").is_some() {
         let launch = LaunchConfig::from_json(doc)?;
-        Ok((launch.sweep, launch.fast_router))
+        Ok((launch.sweep, Some(launch.sampler)))
     } else {
-        Ok((sweep_config_from_doc(doc)?, false))
+        Ok((sweep_config_from_doc(doc)?, None))
     }
 }
 
 fn cmd_sweep(args: &Args) -> memfine::Result<()> {
     // --config wins over grid flags; a LaunchConfig file also carries
-    // its sampler choice
-    let (cfg, cfg_fast_router) = match args.get("config") {
+    // its sampler choice (explicit flags override it)
+    let (cfg, doc_sampler) = match args.get("config") {
         Some(path) => grid_and_sampler_from_doc(&parse_config_file(path)?)?,
-        None => (sweep_config_from_flags(args)?, false),
+        None => (sweep_config_from_flags(args)?, None),
     };
     let checkpoint: Vec<std::path::PathBuf> = args
         .get("checkpoint")
@@ -304,14 +318,46 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         .map(memfine::config::ShardSpec::parse)
         .transpose()?;
     let limit = args.get("limit").map(|_| args.get_u64("limit", 0)).transpose()?;
+    // Sampler resolution mirrors `checkpoint audit`: an explicit
+    // --router flag (or a launch.json's recorded sampler) wins; a
+    // resumed checkpoint's own provenance header comes next — so a
+    // pre-flip campaign resumes under its recorded sampler instead of
+    // silently re-running the whole grid under the new default — and
+    // only then the engine default.
+    let resume = args.has_flag("resume");
+    let recorded = if resume {
+        memfine::sweep::checkpoint::CheckpointSet::peek_provenance(&checkpoint)
+    } else {
+        None
+    };
+    let sampler = match (sampler_flag(args)?.or(doc_sampler), &recorded) {
+        (Some(s), _) => s,
+        (None, Some(p)) => {
+            eprintln!("sweep: resuming under the checkpoint's recorded router '{}'", p.tag());
+            p.sampler
+        }
+        (None, None) => RouterSampler::default(),
+    };
+    if let Some(p) = &recorded {
+        if p.sampler != sampler {
+            eprintln!(
+                "sweep: warning: checkpoint records router '{}' but this run uses \
+                 '{}' — no stored row will match, and the file will mix hash \
+                 universes under a stale header",
+                p.tag(),
+                sampler.tag()
+            );
+        }
+    }
     let opts = memfine::sweep::SweepRunOptions {
         workers: args.get_u64("workers", 0)? as usize,
         checkpoint,
-        resume: args.has_flag("resume"),
+        resume,
         shard,
         limit: limit.map(|n| n as usize),
-        fast_router: cfg_fast_router || args.has_flag("fast-router"),
+        sampler,
         unfused: args.has_flag("unfused"),
+        trace_cache: args.get("trace-cache").map(std::path::PathBuf::from),
     };
     eprintln!(
         "sweep: {} scenarios{}{}",
@@ -337,6 +383,12 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
             String::new()
         },
     );
+    if opts.trace_cache.is_some() {
+        eprintln!(
+            "sweep: trace cache: {} cell(s) reused, {} generated",
+            summary.traces_cached, summary.traces_generated
+        );
+    }
     let report = summary.report;
     // Human-readable table goes to stderr so stdout carries only the
     // JSON artifact — `memfine sweep | jq .` and `> sweep.json` both
@@ -384,8 +436,8 @@ fn cmd_launch(args: &Args) -> memfine::Result<()> {
     if args.get("retries").is_some() {
         cfg.max_retries = args.get_u64("retries", 2)?;
     }
-    if args.has_flag("fast-router") {
-        cfg.fast_router = true;
+    if let Some(sampler) = sampler_flag(args)? {
+        cfg.sampler = sampler;
     }
 
     let opts = LaunchOptions {
@@ -497,14 +549,27 @@ fn cmd_checkpoint(args: &Args) -> memfine::Result<()> {
             let cfg_path = args.get("config").ok_or_else(|| {
                 memfine::Error::Cli("checkpoint audit needs --config <grid.json>".into())
             })?;
-            let (cfg, cfg_fast_router) =
+            let (cfg, doc_sampler) =
                 grid_and_sampler_from_doc(&parse_config_file(cfg_path)?)?;
             let set = checkpoint::CheckpointSet::load(&files)?;
-            let audit = checkpoint::audit_coverage(
-                &cfg,
-                cfg_fast_router || args.has_flag("fast-router"),
-                &set,
-            )?;
+            // Provenance resolution, most explicit first: --router flag
+            // > the launch.json's recorded sampler > the checkpoint
+            // files' own header > the engine default. Headerless
+            // legacy files under a bare grid therefore need --router
+            // seq if they predate the sampler flip.
+            let prov = match sampler_flag(args)?.or(doc_sampler) {
+                Some(sampler) => TraceProvenance::current(sampler),
+                None => match &set.header_provenance {
+                    Some(recorded) => recorded.clone(),
+                    None => TraceProvenance::default(),
+                },
+            };
+            eprintln!(
+                "audit: hashing under router '{}' (rng v{})",
+                prov.tag(),
+                prov.rng_version
+            );
+            let audit = checkpoint::audit_coverage(&cfg, &prov, &set)?;
             eprintln!(
                 "audit: {}/{} planned scenario(s) present, {} missing, \
                  {} foreign record(s), {} unreadable line(s)",

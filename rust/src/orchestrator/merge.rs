@@ -68,15 +68,17 @@ pub fn merge_and_finish(
 
     // Catch-up + merge in one resume run: fold every checkpointed row,
     // execute whatever is missing (appended to the first shard file,
-    // like any resumed sweep).
+    // like any resumed sweep) — reading the campaign's shared trace
+    // cache, so healing a gap never re-draws a cached cell.
     let opts = SweepRunOptions {
         workers: 0,
         checkpoint: paths.clone(),
         resume: true,
         shard: None,
         limit: None,
-        fast_router: cfg.fast_router,
+        sampler: cfg.sampler,
         unfused: false,
+        trace_cache: Some(dir.join("trace-cache")),
     };
     let summary = sweep::run_sweep_with(&cfg.sweep, &opts)?;
 

@@ -159,7 +159,7 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
                 .ok()
                 .and_then(|v| LaunchConfig::from_json(&v).ok())
                 .is_some_and(|prev| {
-                    prev.sweep == cfg.sweep && prev.fast_router == cfg.fast_router
+                    prev.sweep == cfg.sweep && prev.sampler == cfg.sampler
                 });
             if !same_campaign {
                 return Err(Error::config(format!(
@@ -216,7 +216,12 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
     prior_state.sort();
 
     let workers = cfg.workers_per_proc;
-    let fast_router = cfg.fast_router;
+    let sampler = cfg.sampler;
+    // One trace cache per campaign dir: every shard process (and the
+    // merge catch-up) shares it, so a cell's routed stream is drawn at
+    // most once per campaign — and relaunches/topology changes reuse
+    // it across runs.
+    let trace_cache = opts.dir.join("trace-cache");
     let prior = &prior_state;
     let spawner = |shard: &ShardPlan, _attempt: u32| -> Result<std::process::Child> {
         let log = std::fs::File::options()
@@ -244,14 +249,17 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
             .arg("--resume")
             .arg("--workers")
             .arg(workers.to_string())
+            // explicit sampler: children must not depend on defaults
+            // matching across binary versions
+            .arg("--router")
+            .arg(sampler.tag())
+            .arg("--trace-cache")
+            .arg(&trace_cache)
             .arg("--out")
             .arg("-")
             .stdin(Stdio::null())
             .stdout(Stdio::null())
             .stderr(Stdio::from(log));
-        if fast_router {
-            cmd.arg("--fast-router");
-        }
         cmd.spawn().map_err(|e| {
             Error::Io(std::io::Error::new(
                 e.kind(),

@@ -14,8 +14,9 @@ use std::path::{Path, PathBuf};
 
 use crate::config::{LaunchConfig, ShardSpec};
 use crate::error::Result;
-use crate::sweep::checkpoint::scenario_hash;
+use crate::sweep::checkpoint::planned_hashes;
 use crate::sweep::grid;
+use crate::trace::provenance::TraceProvenance;
 
 /// One shard process of a launch: its grid split, its checkpoint file
 /// (heartbeat + resume target), its stderr log, and the work it owns.
@@ -64,11 +65,10 @@ pub fn plan_shards(cfg: &LaunchConfig, dir: &Path) -> Result<LaunchPlan> {
     // The coverage contract: hash every scenario of the grid exactly
     // as the children will (scenario hashes are position- and
     // execution-independent, so planner and children always agree).
-    let scenarios = grid::expand(&cfg.sweep)?;
-    let planned: Vec<(usize, String)> = scenarios
-        .iter()
-        .map(|sc| (sc.index, scenario_hash(&sc.run, cfg.fast_router)))
-        .collect();
+    // Hashed per trace cell — the envelope serialises once per cell,
+    // not once per scenario.
+    let planned = planned_hashes(&cfg.sweep, &TraceProvenance::current(cfg.sampler))?;
+    let total_scenarios = planned.len();
 
     let shards = (0..procs)
         .map(|i| {
@@ -96,7 +96,7 @@ pub fn plan_shards(cfg: &LaunchConfig, dir: &Path) -> Result<LaunchPlan> {
         shards,
         planned,
         total_cells: cells.len(),
-        total_scenarios: scenarios.len(),
+        total_scenarios,
     })
 }
 
@@ -151,14 +151,29 @@ mod tests {
         hashes.dedup();
         assert_eq!(hashes.len(), 24);
         // the sampler choice perturbs every planned hash
-        let mut fast = launch_cfg(2);
-        fast.fast_router = true;
-        let fast_plan = plan_shards(&fast, Path::new("d")).unwrap();
+        let mut seq = launch_cfg(2);
+        seq.sampler = crate::trace::provenance::RouterSampler::Sequential;
+        let seq_plan = plan_shards(&seq, Path::new("d")).unwrap();
         assert!(plan
             .planned
             .iter()
-            .zip(&fast_plan.planned)
+            .zip(&seq_plan.planned)
             .all(|((_, a), (_, b))| a != b));
+        // and the planned hashes equal the per-scenario reference
+        let scenarios = grid::expand(&plan_cfg_sweep()).unwrap();
+        let prov = TraceProvenance::current(launch_cfg(2).sampler);
+        for (sc, (index, hash)) in scenarios.iter().zip(&plan.planned) {
+            assert_eq!(sc.index, *index);
+            assert_eq!(
+                *hash,
+                crate::sweep::checkpoint::scenario_hash(&sc.run, &prov)
+            );
+        }
+    }
+
+    /// The sweep grid `launch_cfg` wraps (for reference hashing).
+    fn plan_cfg_sweep() -> crate::config::SweepConfig {
+        SweepConfig::paper_grid(7, 4, 10)
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! All draws are seeded forks — identical traces for identical seeds.
 
 use crate::config::{ModelConfig, ParallelConfig};
+use crate::trace::provenance::RouterSampler;
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -71,13 +72,16 @@ pub struct GatingSim {
     /// and the gating params, so the trace generator computes it once
     /// per job instead of once per (iteration, layer) draw.
     layer_depth: Vec<f64>,
-    /// Opt-in binomial-splitting multinomial
-    /// ([`crate::util::rng::Rng::multinomial_split`]). Same
-    /// distribution, different stream consumption — OFF by default so
-    /// every default-path trace stays bit-identical across versions;
-    /// large sweeps opt in for throughput (`memfine sweep
-    /// --fast-router`).
-    fast_multinomial: bool,
+    /// Which multinomial assigns token copies
+    /// ([`crate::util::rng::Rng::multinomial`] vs
+    /// [`Rng::multinomial_split`]). Same distribution, different
+    /// stream consumption — two equally valid samples, so the choice
+    /// is part of every trace identity ([`RouterSampler`] provenance).
+    /// [`GatingSim::new`] starts **sequential** (the low-level API
+    /// keeps its historical bits); the sweep engine sets its own
+    /// default — split, since the trace-store PR — explicitly via
+    /// [`GatingSim::with_sampler`].
+    sampler: RouterSampler,
 }
 
 /// Reusable draw buffers for the trace-generation hot loop: the
@@ -151,7 +155,14 @@ impl GatingSim {
     pub fn new(model: ModelConfig, parallel: ParallelConfig, seed: u64) -> Self {
         let params = GatingParams::default();
         let layer_depth = depth_cache(&model, &params);
-        GatingSim { model, parallel, params, seed, layer_depth, fast_multinomial: false }
+        GatingSim {
+            model,
+            parallel,
+            params,
+            seed,
+            layer_depth,
+            sampler: RouterSampler::Sequential,
+        }
     }
 
     pub fn with_params(mut self, params: GatingParams) -> Self {
@@ -160,14 +171,30 @@ impl GatingSim {
         self
     }
 
-    /// Switch the token-assignment draw to the binomial-splitting
-    /// multinomial. Identical distribution and determinism guarantees,
-    /// different bit-stream: traces drawn with and without it are two
-    /// different (equally valid) samples, so the flag is part of the
-    /// scenario identity in checkpointed sweeps.
-    pub fn with_fast_multinomial(mut self, on: bool) -> Self {
-        self.fast_multinomial = on;
+    /// Select the token-assignment sampler. Identical distribution and
+    /// determinism guarantees either way, different bit-stream: traces
+    /// drawn under the two samplers are two different (equally valid)
+    /// samples, so the choice is part of the scenario identity in
+    /// checkpointed sweeps ([`crate::trace::TraceProvenance`]).
+    pub fn with_sampler(mut self, sampler: RouterSampler) -> Self {
+        self.sampler = sampler;
         self
+    }
+
+    /// In-place form of [`GatingSim::with_sampler`].
+    pub fn set_sampler(&mut self, sampler: RouterSampler) {
+        self.sampler = sampler;
+    }
+
+    /// The sampler traces are drawn with.
+    pub fn sampler(&self) -> RouterSampler {
+        self.sampler
+    }
+
+    /// Historical bool form of [`GatingSim::with_sampler`]
+    /// (`true` = splitting multinomial).
+    pub fn with_fast_multinomial(self, on: bool) -> Self {
+        self.with_sampler(RouterSampler::from_fast_flag(on))
     }
 
     /// The job seed the trace streams derive from.
@@ -240,10 +267,9 @@ impl GatingSim {
         let probs = self.expert_popularity(iteration, layer);
         let mut rng = Rng::new(self.seed ^ 0x5EED_0001)
             .fork(iteration.wrapping_mul(7_368_787).wrapping_add(layer));
-        let per_expert = if self.fast_multinomial {
-            rng.multinomial_split(self.total_copies(), &probs)
-        } else {
-            rng.multinomial(self.total_copies(), &probs)
+        let per_expert = match self.sampler {
+            RouterSampler::Split => rng.multinomial_split(self.total_copies(), &probs),
+            RouterSampler::Sequential => rng.multinomial(self.total_copies(), &probs),
         };
         let per_rank = per_rank_from_experts(&per_expert, self.parallel.ep);
         LayerRouting { per_expert, per_rank }
@@ -265,14 +291,17 @@ impl GatingSim {
         self.expert_popularity_into(iteration, layer, &mut scratch.probs);
         let mut rng = Rng::new(self.seed ^ 0x5EED_0001)
             .fork(iteration.wrapping_mul(7_368_787).wrapping_add(layer));
-        if self.fast_multinomial {
-            rng.multinomial_split_into(
+        match self.sampler {
+            RouterSampler::Split => rng.multinomial_split_into(
                 self.total_copies(),
                 &scratch.probs,
                 &mut scratch.per_expert,
-            );
-        } else {
-            rng.multinomial_into(self.total_copies(), &scratch.probs, &mut scratch.per_expert);
+            ),
+            RouterSampler::Sequential => rng.multinomial_into(
+                self.total_copies(),
+                &scratch.probs,
+                &mut scratch.per_expert,
+            ),
         }
         per_rank_from_experts_into(&scratch.per_expert, &mut scratch.per_rank);
         // same reductions as min_received / Summary::mean / max_received,
@@ -424,6 +453,26 @@ mod tests {
     #[test]
     fn total_copies_matches_paper() {
         assert_eq!(sim().total_copies(), 32 * 4096 * 8);
+    }
+
+    #[test]
+    fn sampler_selection_and_historical_default() {
+        use crate::trace::provenance::RouterSampler;
+        // the low-level constructor keeps the historical sequential
+        // bits; with_sampler/with_fast_multinomial agree
+        let s = sim();
+        assert_eq!(s.sampler(), RouterSampler::Sequential);
+        let fast = sim().with_sampler(RouterSampler::Split);
+        assert_eq!(fast.sampler(), RouterSampler::Split);
+        assert_eq!(
+            fast.route(7, 10).per_expert,
+            sim().with_fast_multinomial(true).route(7, 10).per_expert
+        );
+        let mut inplace = sim();
+        inplace.set_sampler(RouterSampler::Split);
+        assert_eq!(inplace.route(7, 10).per_expert, fast.route(7, 10).per_expert);
+        // and the two samplers really are different samples
+        assert_ne!(fast.route(7, 10).per_expert, s.route(7, 10).per_expert);
     }
 
     #[test]

@@ -33,6 +33,7 @@ use crate::error::Error;
 use crate::memory::{ActivationModel, StaticModel};
 use crate::perf::PerfModel;
 use crate::router::GatingSim;
+use crate::trace::provenance::RouterSampler;
 pub mod ablation;
 pub mod repro;
 
@@ -100,11 +101,29 @@ impl RunOutcome {
 /// (trace-per-scenario) execution path; the sweep engine shares one
 /// trace across a cell's methods via [`run_scenario_on_trace`] and is
 /// pinned bit-identical to this path.
+///
+/// Draws through the historical **sequential** sampler (the
+/// [`crate::router::GatingSim::new`] default); [`run_scenario_sampled`]
+/// takes an explicit [`RouterSampler`] — the sweep engine's legacy A/B
+/// path uses it with the engine default (split).
 pub fn run_scenario(base: &RunConfig, method: Method, seed: u64) -> crate::Result<RunOutcome> {
+    run_scenario_sampled(base, method, seed, RouterSampler::Sequential)
+}
+
+/// [`run_scenario`] with an explicit router sampler: the per-scenario
+/// reference path for either sampler's sample, pinned bit-identical to
+/// trace sharing (`run_scenario_on_trace` over a trace drawn with the
+/// same sampler) and to the fused [`evaluate_cell`].
+pub fn run_scenario_sampled(
+    base: &RunConfig,
+    method: Method,
+    seed: u64,
+    sampler: RouterSampler,
+) -> crate::Result<RunOutcome> {
     let mut run = base.clone();
     run.method = method;
     run.seed = seed;
-    Ok(Simulator::new(run)?.run_all())
+    Ok(Simulator::new(run)?.with_sampler(sampler).run_all())
 }
 
 /// Evaluate one method against an already-drawn routing trace: the
@@ -567,6 +586,13 @@ impl Simulator {
         Ok(Simulator { run, gating, act, sta, perf, mact })
     }
 
+    /// Select the router sampler traces are drawn with (see
+    /// [`GatingSim::with_sampler`]); evaluation is sampler-blind.
+    pub fn with_sampler(mut self, sampler: RouterSampler) -> Self {
+        self.gating.set_sampler(sampler);
+        self
+    }
+
     /// Pipeline stage hosting `layer`.
     fn stage_of(&self, layer: u64) -> u64 {
         let per = self.run.parallel.layers_per_stage(self.run.model.layers);
@@ -969,6 +995,36 @@ mod tests {
             assert_eq!(shared.peak_act_bytes, direct.peak_act_bytes);
             assert_eq!(shared.oom_iterations, direct.oom_iterations);
             assert_eq!(shared.avg_tgs, direct.avg_tgs);
+        }
+    }
+
+    #[test]
+    fn run_scenario_sampled_matches_sampled_trace_path() {
+        // The per-scenario reference under the split sampler must equal
+        // evaluating against a split-sampler trace — the invariant that
+        // lets the sweep default flip without breaking the A/B chain.
+        use crate::trace::provenance::RouterSampler;
+        let mut base = paper_run(model_i(), Method::FullRecompute);
+        base.iterations = 6;
+        let seed = 11u64;
+        let gating = crate::router::GatingSim::new(
+            base.model.clone(),
+            base.parallel.clone(),
+            seed,
+        )
+        .with_sampler(RouterSampler::Split);
+        let trace = SharedRoutingTrace::generate(&gating, base.iterations);
+        for method in [Method::FullRecompute, Method::Mact(vec![1, 2, 4, 8])] {
+            let direct =
+                run_scenario_sampled(&base, method.clone(), seed, RouterSampler::Split)
+                    .unwrap();
+            let shared = run_scenario_on_trace(&base, method.clone(), &trace).unwrap();
+            assert_eq!(direct.routing.records, shared.routing.records);
+            assert_eq!(direct.chunks.records, shared.chunks.records);
+            assert_eq!(direct.avg_tgs.to_bits(), shared.avg_tgs.to_bits());
+            // the sequential reference is a different sample
+            let seq = run_scenario(&base, method.clone(), seed).unwrap();
+            assert_ne!(direct.routing.records, seq.routing.records);
         }
     }
 

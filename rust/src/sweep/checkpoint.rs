@@ -3,26 +3,40 @@
 //!
 //! Every scenario is identified by [`scenario_hash`] — FNV-1a 64 over
 //! the canonical compact JSON of its fully-resolved
-//! [`RunConfig`](crate::config::RunConfig) plus the router-sampler tag.
-//! The hash therefore captures *what will be simulated* (model,
-//! parallelism, method, seed, iterations, memory envelope, sampler)
-//! and deliberately excludes *how it is executed* (worker count,
-//! shard split, grid position): two hosts running different shards of
-//! the same grid, or re-runs of a reordered/extended grid, agree on
-//! every hash.
+//! [`RunConfig`](crate::config::RunConfig) plus the trace provenance
+//! ([`TraceProvenance`]: router-sampler tag and, for post-v1
+//! generators, the RNG version). The hash therefore captures *what
+//! will be simulated* (model, parallelism, method, seed, iterations,
+//! memory envelope, sampler/RNG provenance) and deliberately excludes
+//! *how it is executed* (worker count, shard split, grid position):
+//! two hosts running different shards of the same grid, or re-runs of
+//! a reordered/extended grid, agree on every hash. Within one trace
+//! cell the scenarios differ **only** in method, so the per-scenario
+//! loops of resume, audit and planning hash through a [`CellHasher`]:
+//! the cell-invariant JSON (model, parallel, seed, envelope,
+//! provenance) is serialised and FNV-folded once per cell and only
+//! the method value is re-hashed per scenario — same hashes, a
+//! fraction of the serialisation work.
 //!
-//! The file format is one line per completed scenario:
+//! The file format is an optional provenance header followed by one
+//! line per completed scenario:
 //!
 //! ```text
+//! {"header":{"rng_algorithm":"...","rng_version":1,"router":"split"}}
 //! {"hash":"94fd0a31c7e02b44","result":{...ScenarioResult row...}}
 //! ```
 //!
 //! appended and flushed as each scenario finishes, so a killed sweep
-//! loses at most the in-flight cells. Loading tolerates a torn final
-//! line (the kill-mid-write case) by skipping lines that fail to
-//! parse and reporting the count; merging is file concatenation or
-//! passing several `--checkpoint` paths — duplicate hashes collapse
-//! (results are deterministic, so duplicates are identical).
+//! loses at most the in-flight cells. The header records what the
+//! rows were drawn under (sampler + RNG version) — `memfine
+//! checkpoint audit` uses it to pick the right hash universe without
+//! being told, and pre-header files simply have no header line (their
+//! rows still resume fine: provenance is baked into every row's
+//! hash). Loading tolerates a torn final line (the kill-mid-write
+//! case) by skipping lines that fail to parse and reporting the
+//! count; merging is file concatenation or passing several
+//! `--checkpoint` paths — duplicate hashes collapse (results are
+//! deterministic, so duplicates are identical).
 //!
 //! On resume the stored row's `index` is re-derived from the *current*
 //! grid (hashes are position-independent), which keeps the final
@@ -40,23 +54,83 @@ use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
-use crate::config::RunConfig;
+use crate::config::{Method, RunConfig};
 use crate::error::{Error, Result};
 use crate::json::{self, Value};
 use crate::sweep::report::ScenarioResult;
-use crate::util::fnv1a_64;
+use crate::trace::provenance::TraceProvenance;
+use crate::util::{fnv1a_64, fnv1a_64_update, FNV1A_OFFSET};
+
+/// The canonical hash document of one scenario: the provenance fields
+/// (version-1 serialises exactly the historical `{"router": tag}`, so
+/// every pre-provenance hash is preserved) plus the resolved run
+/// envelope.
+fn hash_doc(run: &RunConfig, prov: &TraceProvenance) -> Value {
+    let mut fields = prov.hash_fields();
+    fields.push(("run", run.to_json()));
+    json::obj(fields)
+}
 
 /// Content hash of one scenario: FNV-1a 64 (16 hex chars) over the
-/// canonical run JSON plus the router-sampler tag. `fast_router`
-/// changes the drawn trace (same distribution, different bits), so it
-/// is part of the identity — a checkpoint written with one sampler
-/// never silently satisfies a sweep run with the other.
-pub fn scenario_hash(run: &RunConfig, fast_router: bool) -> String {
-    let doc = json::obj(vec![
-        ("router", json::s(if fast_router { "split" } else { "seq" }.to_string())),
-        ("run", run.to_json()),
-    ]);
-    format!("{:016x}", fnv1a_64(doc.to_string_compact().as_bytes()))
+/// canonical run JSON plus the trace provenance. The sampler (and any
+/// future RNG version bump) changes the drawn trace — same
+/// distribution, different bits — so it is part of the identity: a
+/// checkpoint written under one provenance never silently satisfies a
+/// sweep run under another.
+pub fn scenario_hash(run: &RunConfig, prov: &TraceProvenance) -> String {
+    format!(
+        "{:016x}",
+        fnv1a_64(hash_doc(run, prov).to_string_compact().as_bytes())
+    )
+}
+
+/// Per-trace-cell scenario hasher. A cell's scenarios differ only in
+/// `method`, yet [`scenario_hash`] re-serialises the entire canonical
+/// envelope per call — which the resume/audit/plan loops used to pay
+/// per *scenario*. `CellHasher` serialises the envelope once, splits
+/// it around the method value, pre-folds the FNV state over the
+/// prefix, and per scenario re-hashes only the method JSON plus the
+/// cached suffix. Bit-identical to [`scenario_hash`] by construction
+/// (FNV-1a streams over concatenated bytes) and pinned by tests and a
+/// debug assertion.
+pub struct CellHasher {
+    /// FNV state after folding everything up to (and including) the
+    /// `"method":` key of the canonical document.
+    prefix_hash: u64,
+    /// Canonical bytes after the method value.
+    suffix: String,
+}
+
+impl CellHasher {
+    /// Build from any scenario of the cell (its method is irrelevant —
+    /// only the cell-invariant fields are retained).
+    pub fn new(run: &RunConfig, prov: &TraceProvenance) -> Self {
+        let doc = hash_doc(run, prov).to_string_compact();
+        let method_json = run.method.to_json().to_string_compact();
+        let marker = format!("\"method\":{method_json}");
+        // RunConfig's canonical JSON has exactly one "method" key and
+        // no free-form string values that could fake one.
+        let pos = doc
+            .find(&marker)
+            .expect("canonical run JSON contains its method field");
+        let split = pos + "\"method\":".len();
+        let hasher = CellHasher {
+            prefix_hash: fnv1a_64_update(FNV1A_OFFSET, doc[..split].as_bytes()),
+            suffix: doc[split + method_json.len()..].to_string(),
+        };
+        debug_assert_eq!(hasher.hash(&run.method), scenario_hash(run, prov));
+        hasher
+    }
+
+    /// The cell scenario with this method — equals
+    /// `scenario_hash(run_with(method), prov)`.
+    pub fn hash(&self, method: &Method) -> String {
+        let h = fnv1a_64_update(
+            self.prefix_hash,
+            method.to_json().to_string_compact().as_bytes(),
+        );
+        format!("{:016x}", fnv1a_64_update(h, self.suffix.as_bytes()))
+    }
 }
 
 /// Completed scenarios loaded from checkpoint files, keyed by hash.
@@ -68,11 +142,26 @@ pub struct CheckpointSet {
     pub skipped_lines: usize,
     /// Files that existed and were read.
     pub loaded_files: usize,
-    /// Non-blank lines seen across all files.
+    /// Non-blank lines seen across all files (headers included).
     pub total_lines: usize,
     /// Parseable records that duplicated an already-loaded hash
     /// (identical by the determinism contract; later files win).
     pub duplicate_records: usize,
+    /// Header lines seen across all files.
+    pub header_lines: usize,
+    /// The recorded trace provenance, when every header agrees.
+    /// `None` with `header_lines == 0` means legacy (pre-header)
+    /// files; `None` with headers seen means the files disagree —
+    /// the caller must say which universe it wants.
+    pub header_provenance: Option<TraceProvenance>,
+    /// Headers were seen but disagreed (locks `header_provenance`).
+    header_conflict: bool,
+}
+
+/// One parsed checkpoint line.
+enum CheckpointLine {
+    Header(TraceProvenance),
+    Record(String, ScenarioResult),
 }
 
 impl CheckpointSet {
@@ -105,7 +194,8 @@ impl CheckpointSet {
                 }
                 set.total_lines += 1;
                 match Self::parse_line(line) {
-                    Ok((hash, result)) => {
+                    Ok(CheckpointLine::Header(prov)) => set.note_header(prov),
+                    Ok(CheckpointLine::Record(hash, result)) => {
                         if set.map.insert(hash, result).is_some() {
                             set.duplicate_records += 1;
                         }
@@ -117,14 +207,66 @@ impl CheckpointSet {
         Ok(set)
     }
 
-    fn parse_line(line: &str) -> Result<(String, ScenarioResult)> {
+    fn parse_line(line: &str) -> Result<CheckpointLine> {
         let v = json::parse(line)?;
+        if let Some(h) = v.get("header") {
+            return Ok(CheckpointLine::Header(TraceProvenance::from_json(h)?));
+        }
         let hash = v.req_str("hash")?.to_string();
         let result = ScenarioResult::from_json(
             v.get("result")
                 .ok_or_else(|| Error::config("checkpoint line missing result"))?,
         )?;
-        Ok((hash, result))
+        Ok(CheckpointLine::Record(hash, result))
+    }
+
+    /// Read just the recorded provenance headers of the given files —
+    /// the first line of each that exists — without loading any rows.
+    /// `Some` when at least one header was found and all of them
+    /// agree; `None` for legacy headerless files, unreadable first
+    /// lines, or disagreeing headers. This is how `memfine sweep
+    /// --resume` (and `checkpoint audit`) adopt a checkpoint's
+    /// recorded sampler instead of silently re-hashing a pre-flip
+    /// file under the new default.
+    pub fn peek_provenance(paths: &[PathBuf]) -> Option<TraceProvenance> {
+        use std::io::{BufRead, BufReader};
+        let mut recorded: Option<TraceProvenance> = None;
+        for path in paths {
+            let Ok(f) = std::fs::File::open(path) else {
+                continue; // missing shard file: fine, like load()
+            };
+            let mut first = String::new();
+            if BufReader::new(f).read_line(&mut first).is_err() {
+                continue;
+            }
+            let Ok(CheckpointLine::Header(prov)) = Self::parse_line(first.trim_end())
+            else {
+                // headerless (legacy) or torn first line: no recorded
+                // provenance for this file — the set has none overall
+                return None;
+            };
+            match &recorded {
+                None => recorded = Some(prov),
+                Some(prev) if *prev == prov => {}
+                Some(_) => return None,
+            }
+        }
+        recorded
+    }
+
+    fn note_header(&mut self, prov: TraceProvenance) {
+        self.header_lines += 1;
+        if self.header_conflict {
+            return;
+        }
+        match &self.header_provenance {
+            None if self.header_lines == 1 => self.header_provenance = Some(prov),
+            Some(prev) if *prev == prov => {}
+            _ => {
+                self.header_provenance = None;
+                self.header_conflict = true;
+            }
+        }
     }
 
     pub fn get(&self, hash: &str) -> Option<&ScenarioResult> {
@@ -197,7 +339,10 @@ pub fn write_compacted(set: &CheckpointSet, output: &Path) -> Result<CompactStat
     tmp_name.push(".tmp");
     let tmp = PathBuf::from(tmp_name);
     {
-        let mut w = CheckpointWriter::create(&tmp)?;
+        // the compacted file re-records the inputs' provenance header
+        // when they agree on one (legacy/conflicting inputs compact to
+        // a headerless file rather than inventing a provenance)
+        let mut w = CheckpointWriter::create(&tmp, set.header_provenance.as_ref())?;
         for (hash, result) in set.iter() {
             w.record(hash, result)?;
         }
@@ -241,23 +386,38 @@ impl CoverageAudit {
 }
 
 /// Audit a checkpoint set against a sweep grid: expand the grid,
-/// derive every scenario's content hash under the given router
-/// sampler, and report which planned scenarios are present, missing,
-/// or foreign to the grid. This is how the orchestrator proves the
-/// merged artifact covers every planned scenario before it publishes
-/// a report (and how `memfine checkpoint audit` exposes the same
-/// check standalone).
+/// derive every scenario's content hash under the given trace
+/// provenance (one [`CellHasher`] per trace cell — the envelope is
+/// serialised once per cell, not once per scenario), and report which
+/// planned scenarios are present, missing, or foreign to the grid.
+/// This is how the orchestrator proves the merged artifact covers
+/// every planned scenario before it publishes a report (and how
+/// `memfine checkpoint audit` exposes the same check standalone).
 pub fn audit_coverage(
     cfg: &crate::config::SweepConfig,
-    fast_router: bool,
+    prov: &TraceProvenance,
     set: &CheckpointSet,
 ) -> Result<CoverageAudit> {
-    let scenarios = crate::sweep::grid::expand(cfg)?;
-    let planned: Vec<(usize, String)> = scenarios
-        .iter()
-        .map(|sc| (sc.index, scenario_hash(&sc.run, fast_router)))
-        .collect();
-    Ok(audit_planned(&planned, set))
+    Ok(audit_planned(&planned_hashes(cfg, prov)?, set))
+}
+
+/// Every scenario of the grid as (grid index, content hash),
+/// index-ascending — the coverage contract [`audit_coverage`] and the
+/// orchestrator's launch plan both audit against, hashed per cell.
+pub fn planned_hashes(
+    cfg: &crate::config::SweepConfig,
+    prov: &TraceProvenance,
+) -> Result<Vec<(usize, String)>> {
+    let cells = crate::sweep::grid::expand_cells(cfg)?;
+    let mut planned: Vec<(usize, String)> = Vec::with_capacity(cfg.scenario_count());
+    for cell in &cells {
+        let hasher = CellHasher::new(&cell.scenarios[0].run, prov);
+        for sc in &cell.scenarios {
+            planned.push((sc.index, hasher.hash(&sc.method)));
+        }
+    }
+    planned.sort_unstable_by_key(|&(index, _)| index);
+    Ok(planned)
 }
 
 /// [`audit_coverage`] against an already-derived planned hash set —
@@ -296,23 +456,31 @@ impl CheckpointWriter {
     }
 
     /// Start a fresh checkpoint (truncates an existing file — the
-    /// non-`--resume` path).
-    pub fn create(path: &Path) -> Result<Self> {
+    /// non-`--resume` path), recording the trace provenance as the
+    /// header line when given.
+    pub fn create(path: &Path, header: Option<&TraceProvenance>) -> Result<Self> {
         let f = std::fs::File::create(path).map_err(|e| {
             Error::Io(std::io::Error::new(
                 e.kind(),
                 format!("create checkpoint {}: {e}", path.display()),
             ))
         })?;
-        Ok(CheckpointWriter { out: Some(f) })
+        let mut w = CheckpointWriter { out: Some(f) };
+        if let Some(prov) = header {
+            w.write_header(prov)?;
+        }
+        Ok(w)
     }
 
     /// Append to an existing checkpoint (the `--resume` path; the file
-    /// may not exist yet). If a previous run died mid-write the file
-    /// ends in a torn fragment without a newline — terminate it first
+    /// may not exist yet). A brand-new (empty) file gets the
+    /// provenance header first; an existing file keeps whatever header
+    /// era it was started in. If a previous run died mid-write the
+    /// file ends in a torn fragment without a newline — terminate it
     /// so the next record starts on its own line (the fragment stays
-    /// unparseable and is skipped on load; its scenario simply re-runs).
-    pub fn append(path: &Path) -> Result<Self> {
+    /// unparseable and is skipped on load; its scenario simply
+    /// re-runs).
+    pub fn append(path: &Path, header: Option<&TraceProvenance>) -> Result<Self> {
         use std::io::{Read, Seek, SeekFrom};
         let mut f = std::fs::File::options()
             .read(true)
@@ -325,7 +493,8 @@ impl CheckpointWriter {
                     format!("append checkpoint {}: {e}", path.display()),
                 ))
             })?;
-        if f.metadata().map_err(Error::Io)?.len() > 0 {
+        let len = f.metadata().map_err(Error::Io)?.len();
+        if len > 0 {
             f.seek(SeekFrom::End(-1)).map_err(Error::Io)?;
             let mut last = [0u8; 1];
             f.read_exact(&mut last).map_err(Error::Io)?;
@@ -335,7 +504,25 @@ impl CheckpointWriter {
                 f.write_all(b"\n").map_err(Error::Io)?;
             }
         }
-        Ok(CheckpointWriter { out: Some(f) })
+        let mut w = CheckpointWriter { out: Some(f) };
+        if len == 0 {
+            if let Some(prov) = header {
+                w.write_header(prov)?;
+            }
+        }
+        Ok(w)
+    }
+
+    /// Write the provenance header line (first line of a fresh file).
+    fn write_header(&mut self, prov: &TraceProvenance) -> Result<()> {
+        let Some(f) = self.out.as_mut() else {
+            return Ok(());
+        };
+        let line = json::obj(vec![("header", prov.to_json())]).to_string_compact();
+        f.write_all(line.as_bytes())
+            .and_then(|_| f.write_all(b"\n"))
+            .and_then(|_| f.flush())
+            .map_err(Error::Io)
     }
 
     /// Record one completed scenario. One compact-JSON line, written
@@ -361,11 +548,18 @@ impl CheckpointWriter {
 mod tests {
     use super::*;
     use crate::config::{model_i, paper_run, Method};
+    use crate::trace::provenance::RouterSampler;
 
     fn tmp_path(name: &str) -> PathBuf {
         let mut p = std::env::temp_dir();
         p.push(format!("memfine-ckpt-test-{}-{name}", std::process::id()));
         p
+    }
+
+    /// The pre-flip provenance most of these fixtures were written
+    /// under (sequential sampler, RNG v1).
+    fn seq() -> TraceProvenance {
+        TraceProvenance::legacy_sequential()
     }
 
     fn sample_result(index: usize, seed: u64) -> ScenarioResult {
@@ -387,39 +581,76 @@ mod tests {
     #[test]
     fn hash_is_stable_and_content_sensitive() {
         let run = paper_run(model_i(), Method::FullRecompute);
-        let h = scenario_hash(&run, false);
+        let h = scenario_hash(&run, &seq());
         assert_eq!(h.len(), 16);
-        assert_eq!(h, scenario_hash(&run, false));
+        assert_eq!(h, scenario_hash(&run, &seq()));
         // every identity-bearing field perturbs the hash
-        let mut seed = run.clone();
-        seed.seed += 1;
-        assert_ne!(h, scenario_hash(&seed, false));
+        let mut seed_run = run.clone();
+        seed_run.seed += 1;
+        assert_ne!(h, scenario_hash(&seed_run, &seq()));
         let mut iters = run.clone();
         iters.iterations += 1;
-        assert_ne!(h, scenario_hash(&iters, false));
+        assert_ne!(h, scenario_hash(&iters, &seq()));
         let mut method = run.clone();
         method.method = Method::FixedChunk(8);
-        assert_ne!(h, scenario_hash(&method, false));
+        assert_ne!(h, scenario_hash(&method, &seq()));
         let mut mem = run.clone();
         mem.gpu_mem_bytes /= 2;
-        assert_ne!(h, scenario_hash(&mem, false));
-        // the sampler tag is part of the identity
-        assert_ne!(h, scenario_hash(&run, true));
+        assert_ne!(h, scenario_hash(&mem, &seq()));
+        // the provenance is part of the identity: sampler tag and any
+        // post-v1 RNG version both perturb the hash
+        let split = TraceProvenance::current(RouterSampler::Split);
+        assert_ne!(h, scenario_hash(&run, &split));
+        let v2 = TraceProvenance { sampler: RouterSampler::Sequential, rng_version: 2 };
+        assert_ne!(h, scenario_hash(&run, &v2));
+    }
+
+    #[test]
+    fn cell_hasher_matches_scenario_hash() {
+        // The cell-level hasher must reproduce scenario_hash exactly
+        // for every method kind, under every provenance — including a
+        // future RNG version whose hash doc gains a field.
+        let methods = [
+            Method::FullRecompute,
+            Method::FixedChunk(4),
+            Method::Mact(vec![1, 2, 4, 8]),
+        ];
+        for prov in [
+            seq(),
+            TraceProvenance::current(RouterSampler::Split),
+            TraceProvenance { sampler: RouterSampler::Split, rng_version: 2 },
+        ] {
+            // built from one method, queried for all of them
+            let base = paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+            let hasher = CellHasher::new(&base, &prov);
+            for method in &methods {
+                let mut run = base.clone();
+                run.method = method.clone();
+                assert_eq!(
+                    hasher.hash(method),
+                    scenario_hash(&run, &prov),
+                    "{method:?} under {prov:?}"
+                );
+            }
+        }
     }
 
     #[test]
     fn writer_then_loader_roundtrip() {
         let path = tmp_path("roundtrip");
         let run = paper_run(model_i(), Method::FixedChunk(8));
-        let hash = scenario_hash(&run, false);
+        let hash = scenario_hash(&run, &seq());
         let result = sample_result(3, 7);
         {
-            let mut w = CheckpointWriter::create(&path).unwrap();
+            let mut w = CheckpointWriter::create(&path, Some(&seq())).unwrap();
             w.record(&hash, &result).unwrap();
         }
         let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
         assert_eq!(set.len(), 1);
         assert_eq!(set.skipped_lines, 0);
+        // the file recorded its provenance header
+        assert_eq!(set.header_lines, 1);
+        assert_eq!(set.header_provenance, Some(seq()));
         let back = set.get(&hash).unwrap();
         assert_eq!(back, &result);
         assert_eq!(back.avg_tgs.to_bits(), result.avg_tgs.to_bits());
@@ -427,12 +658,107 @@ mod tests {
     }
 
     #[test]
+    fn legacy_headerless_files_still_load() {
+        // A pre-provenance checkpoint (raw record lines, no header)
+        // must load exactly as before: rows resume by hash, and the
+        // absence of a header is observable (auditors fall back to an
+        // explicit sampler choice).
+        let path = tmp_path("legacy");
+        let run = paper_run(model_i(), Method::FixedChunk(8));
+        let hash = scenario_hash(&run, &seq());
+        let line = json::obj(vec![
+            ("hash", json::s(hash.clone())),
+            ("result", sample_result(0, 7).to_json()),
+        ])
+        .to_string_compact();
+        std::fs::write(&path, format!("{line}\n")).unwrap();
+        let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.header_lines, 0);
+        assert!(set.header_provenance.is_none());
+        assert!(set.get(&hash).is_some());
+        // appending via the writer does NOT inject a header mid-file
+        {
+            let mut w = CheckpointWriter::append(&path, Some(&seq())).unwrap();
+            let run2 = paper_run(model_i(), Method::FullRecompute);
+            w.record(&scenario_hash(&run2, &seq()), &sample_result(1, 7)).unwrap();
+        }
+        let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.header_lines, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn peek_provenance_reads_headers_cheaply() {
+        let a = tmp_path("peek-a");
+        let b = tmp_path("peek-b");
+        let run = paper_run(model_i(), Method::FixedChunk(8));
+        {
+            let mut w = CheckpointWriter::create(&a, Some(&seq())).unwrap();
+            w.record(&scenario_hash(&run, &seq()), &sample_result(0, 7)).unwrap();
+        }
+        // agreeing headers (missing files are skipped like load())
+        let missing = tmp_path("peek-missing");
+        assert_eq!(
+            CheckpointSet::peek_provenance(&[a.clone(), missing]),
+            Some(seq())
+        );
+        // a headerless legacy file in the set: no trusted provenance
+        let line = json::obj(vec![
+            ("hash", json::s(scenario_hash(&run, &seq()))),
+            ("result", sample_result(0, 7).to_json()),
+        ])
+        .to_string_compact();
+        std::fs::write(&b, format!("{line}\n")).unwrap();
+        assert_eq!(CheckpointSet::peek_provenance(&[a.clone(), b.clone()]), None);
+        // disagreeing headers: no trusted provenance either
+        let split = TraceProvenance::current(RouterSampler::Split);
+        {
+            let _w = CheckpointWriter::create(&b, Some(&split)).unwrap();
+        }
+        assert_eq!(CheckpointSet::peek_provenance(&[a.clone(), b.clone()]), None);
+        assert_eq!(
+            CheckpointSet::peek_provenance(std::slice::from_ref(&b)),
+            Some(split)
+        );
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
+    fn conflicting_headers_yield_no_provenance() {
+        let a = tmp_path("hdr-a");
+        let b = tmp_path("hdr-b");
+        let run = paper_run(model_i(), Method::FixedChunk(8));
+        {
+            let mut w = CheckpointWriter::create(&a, Some(&seq())).unwrap();
+            w.record(&scenario_hash(&run, &seq()), &sample_result(0, 7)).unwrap();
+        }
+        {
+            let split = TraceProvenance::current(RouterSampler::Split);
+            let mut w = CheckpointWriter::create(&b, Some(&split)).unwrap();
+            w.record(&scenario_hash(&run, &split), &sample_result(0, 7)).unwrap();
+        }
+        // each alone reports its own provenance
+        let only_a = CheckpointSet::load(std::slice::from_ref(&a)).unwrap();
+        assert_eq!(only_a.header_provenance, Some(seq()));
+        // together they disagree: no provenance, both headers counted
+        let both = CheckpointSet::load(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(both.header_lines, 2);
+        assert!(both.header_provenance.is_none());
+        assert_eq!(both.len(), 2);
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
+    }
+
+    #[test]
     fn loader_skips_torn_final_line() {
         let path = tmp_path("torn");
         let run = paper_run(model_i(), Method::FixedChunk(8));
-        let hash = scenario_hash(&run, false);
+        let hash = scenario_hash(&run, &seq());
         {
-            let mut w = CheckpointWriter::create(&path).unwrap();
+            let mut w = CheckpointWriter::create(&path, Some(&seq())).unwrap();
             w.record(&hash, &sample_result(0, 7)).unwrap();
         }
         // simulate a kill mid-write: half a second line, no newline
@@ -454,13 +780,13 @@ mod tests {
         let b = tmp_path("merge-b");
         let run1 = paper_run(model_i(), Method::FullRecompute);
         let run2 = paper_run(model_i(), Method::FixedChunk(8));
-        let (h1, h2) = (scenario_hash(&run1, false), scenario_hash(&run2, false));
+        let (h1, h2) = (scenario_hash(&run1, &seq()), scenario_hash(&run2, &seq()));
         {
-            let mut w = CheckpointWriter::create(&a).unwrap();
+            let mut w = CheckpointWriter::create(&a, Some(&seq())).unwrap();
             w.record(&h1, &sample_result(0, 7)).unwrap();
         }
         {
-            let mut w = CheckpointWriter::create(&b).unwrap();
+            let mut w = CheckpointWriter::create(&b, Some(&seq())).unwrap();
             w.record(&h2, &sample_result(1, 7)).unwrap();
             // duplicate of h1: collapses
             w.record(&h1, &sample_result(0, 7)).unwrap();
@@ -480,9 +806,9 @@ mod tests {
         let path = tmp_path("torn-append");
         let run1 = paper_run(model_i(), Method::FullRecompute);
         let run2 = paper_run(model_i(), Method::FixedChunk(8));
-        let (h1, h2) = (scenario_hash(&run1, false), scenario_hash(&run2, false));
+        let (h1, h2) = (scenario_hash(&run1, &seq()), scenario_hash(&run2, &seq()));
         {
-            let mut w = CheckpointWriter::create(&path).unwrap();
+            let mut w = CheckpointWriter::create(&path, Some(&seq())).unwrap();
             w.record(&h1, &sample_result(0, 7)).unwrap();
         }
         {
@@ -491,7 +817,7 @@ mod tests {
             f.write_all(b"{\"hash\":\"torn").unwrap();
         }
         {
-            let mut w = CheckpointWriter::append(&path).unwrap();
+            let mut w = CheckpointWriter::append(&path, Some(&seq())).unwrap();
             w.record(&h2, &sample_result(1, 7)).unwrap();
         }
         let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
@@ -505,19 +831,19 @@ mod tests {
     fn create_truncates_append_preserves() {
         let path = tmp_path("trunc");
         let run = paper_run(model_i(), Method::FullRecompute);
-        let hash = scenario_hash(&run, false);
+        let hash = scenario_hash(&run, &seq());
         {
-            let mut w = CheckpointWriter::create(&path).unwrap();
+            let mut w = CheckpointWriter::create(&path, Some(&seq())).unwrap();
             w.record(&hash, &sample_result(0, 7)).unwrap();
         }
         {
-            let mut w = CheckpointWriter::append(&path).unwrap();
+            let mut w = CheckpointWriter::append(&path, Some(&seq())).unwrap();
             let run2 = paper_run(model_i(), Method::FixedChunk(8));
-            w.record(&scenario_hash(&run2, false), &sample_result(1, 7)).unwrap();
+            w.record(&scenario_hash(&run2, &seq()), &sample_result(1, 7)).unwrap();
         }
         assert_eq!(CheckpointSet::load(std::slice::from_ref(&path)).unwrap().len(), 2);
         {
-            let _w = CheckpointWriter::create(&path).unwrap();
+            let _w = CheckpointWriter::create(&path, Some(&seq())).unwrap();
         }
         assert!(CheckpointSet::load(std::slice::from_ref(&path)).unwrap().is_empty());
         std::fs::remove_file(&path).ok();
@@ -536,16 +862,16 @@ mod tests {
         let out = tmp_path("compact-out");
         let run1 = paper_run(model_i(), Method::FullRecompute);
         let run2 = paper_run(model_i(), Method::FixedChunk(8));
-        let (h1, h2) = (scenario_hash(&run1, false), scenario_hash(&run2, false));
+        let (h1, h2) = (scenario_hash(&run1, &seq()), scenario_hash(&run2, &seq()));
         {
-            let mut w = CheckpointWriter::create(&a).unwrap();
+            let mut w = CheckpointWriter::create(&a, Some(&seq())).unwrap();
             w.record(&h2, &sample_result(1, 7)).unwrap();
             w.record(&h1, &sample_result(0, 7)).unwrap();
             // duplicate of h1 within the same file
             w.record(&h1, &sample_result(0, 7)).unwrap();
         }
         {
-            let mut w = CheckpointWriter::create(&b).unwrap();
+            let mut w = CheckpointWriter::create(&b, Some(&seq())).unwrap();
             // cross-file duplicate of h2, then a torn tail
             w.record(&h2, &sample_result(1, 7)).unwrap();
         }
@@ -556,7 +882,7 @@ mod tests {
         }
         let stats = compact(&[a.clone(), b.clone()], &out).unwrap();
         assert_eq!(stats.files_in, 2);
-        assert_eq!(stats.lines_in, 5);
+        assert_eq!(stats.lines_in, 7); // 5 record/torn lines + 2 headers
         assert_eq!(stats.dropped_lines, 1);
         assert_eq!(stats.duplicate_records, 2);
         assert_eq!(stats.records_out, 2);
@@ -564,6 +890,9 @@ mod tests {
         let set = CheckpointSet::load(std::slice::from_ref(&out)).unwrap();
         assert_eq!(set.len(), 2);
         assert_eq!(set.skipped_lines, 0);
+        // the agreeing input headers were re-recorded in the output
+        assert_eq!(set.header_lines, 1);
+        assert_eq!(set.header_provenance, Some(seq()));
         // records come out hash-ascending
         let hashes: Vec<String> = set.iter().map(|(h, _)| h.to_string()).collect();
         let mut sorted = hashes.clone();
@@ -600,40 +929,40 @@ mod tests {
         };
         let scenarios = crate::sweep::grid::expand(&cfg).unwrap();
         assert_eq!(scenarios.len(), 2);
-        let h0 = scenario_hash(&scenarios[0].run, false);
+        let h0 = scenario_hash(&scenarios[0].run, &seq());
 
         let path = tmp_path("audit");
         {
-            let mut w = CheckpointWriter::create(&path).unwrap();
+            let mut w = CheckpointWriter::create(&path, Some(&seq())).unwrap();
             w.record(&h0, &sample_result(0, 7)).unwrap();
             // a foreign record (other grid / other sampler)
             w.record("ffffffffffffffff", &sample_result(9, 9)).unwrap();
         }
         let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
-        let audit = audit_coverage(&cfg, false, &set).unwrap();
+        let audit = audit_coverage(&cfg, &seq(), &set).unwrap();
         assert_eq!(audit.planned, 2);
         assert_eq!(audit.present, 1);
         assert_eq!(audit.extra, 1);
         assert!(!audit.complete());
         assert_eq!(audit.missing.len(), 1);
         assert_eq!(audit.missing[0].0, scenarios[1].index);
-        assert_eq!(audit.missing[0].1, scenario_hash(&scenarios[1].run, false));
+        assert_eq!(audit.missing[0].1, scenario_hash(&scenarios[1].run, &seq()));
 
         // the same rows under the other sampler cover nothing: the
         // sampler tag is part of the identity
-        let fast = audit_coverage(&cfg, true, &set).unwrap();
+        let fast = audit_coverage(&cfg, &TraceProvenance::current(RouterSampler::Split), &set).unwrap();
         assert_eq!(fast.present, 0);
         assert_eq!(fast.missing.len(), 2);
         assert_eq!(fast.extra, 2);
 
         // complete set audits clean
         {
-            let mut w = CheckpointWriter::append(&path).unwrap();
-            w.record(&scenario_hash(&scenarios[1].run, false), &sample_result(1, 7))
+            let mut w = CheckpointWriter::append(&path, Some(&seq())).unwrap();
+            w.record(&scenario_hash(&scenarios[1].run, &seq()), &sample_result(1, 7))
                 .unwrap();
         }
         let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
-        let audit = audit_coverage(&cfg, false, &set).unwrap();
+        let audit = audit_coverage(&cfg, &seq(), &set).unwrap();
         assert!(audit.complete());
         assert_eq!(audit.present, 2);
         std::fs::remove_file(&path).ok();

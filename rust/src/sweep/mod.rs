@@ -22,11 +22,20 @@
 //! to a JSON-lines file keyed by scenario content hash, enabling
 //! `--resume`, `--shard i/n` splits, and cross-host merges.
 //!
+//! Trace generation itself is cacheable: with a `trace_cache`
+//! directory configured ([`crate::trace::store::TraceStore`], always
+//! on under `memfine launch`), each cell's drawn stream is persisted
+//! keyed by its full provenance (model, parallel, seed, iterations,
+//! sampler, RNG version) and re-sweeps of the same cells skip the
+//! gamma/multinomial draw loop entirely — warm-cache artifacts are
+//! pinned byte-identical to cold runs.
+//!
 //! **Determinism contract:** the report — including its serialised
-//! bytes — depends only on the `SweepConfig` (and the opt-in
-//! `fast_router` sampler choice). Worker count, thread scheduling,
-//! shard splits, kill/resume points, and checkpoint merge order cannot
-//! perturb it, because
+//! bytes — depends only on the `SweepConfig` and the router `sampler`
+//! choice (default: the splitting multinomial; the sequential sampler
+//! remains selectable and hash-distinct). Worker count, thread
+//! scheduling, shard splits, kill/resume points, trace-cache state,
+//! and checkpoint merge order cannot perturb it, because
 //!
 //! 1. every scenario derives its RNG streams purely from its own
 //!    config/seed (no shared mutable state, nothing drawn from a
@@ -62,6 +71,8 @@ use crate::config::{ShardSpec, SweepConfig};
 use crate::error::{Error, Result};
 use crate::router::GatingSim;
 use crate::sim;
+use crate::trace::provenance::{RouterSampler, TraceProvenance};
+use crate::trace::store::{trace_key, TraceStore};
 use crate::trace::SharedRoutingTrace;
 
 /// Default worker count: the machine's parallelism, capped so a small
@@ -78,9 +89,9 @@ pub fn default_workers(scenarios: usize) -> usize {
 /// serialised into the artifact and hashed into checkpoints), while
 /// everything here only decides *how* that grid gets executed — the
 /// artifact bytes must come out identical for any choice of these
-/// (`fast_router` excepted: it selects a different, equally valid
-/// sample of the same routing distribution and is therefore part of
-/// the scenario hash).
+/// (`sampler` excepted: it selects a different, equally valid sample
+/// of the same routing distribution and is therefore part of the
+/// scenario hash and the stamped report provenance).
 #[derive(Clone, Debug, Default)]
 pub struct SweepRunOptions {
     /// Worker threads (0 = all cores, capped to the grid).
@@ -98,17 +109,24 @@ pub struct SweepRunOptions {
     /// runs; also how the tests simulate a killed sweep). Resumed
     /// results don't count against it.
     pub limit: Option<usize>,
-    /// Draw routing traces with the binomial-splitting multinomial
-    /// ([`crate::util::rng::Rng::multinomial_split`]) — same
-    /// distribution, materially faster on peaky expert popularity,
-    /// different bit-stream (so it participates in the scenario hash).
-    pub fast_router: bool,
+    /// Router sampler the traces are drawn with. **Defaults to the
+    /// splitting multinomial** ([`RouterSampler::Split`]) — the flip
+    /// the trace-provenance layer made safe; `--router seq` keeps the
+    /// historical sequential sample reachable (and is what pre-flip
+    /// checkpoints were recorded under).
+    pub sampler: RouterSampler,
     /// Evaluate each of a cell's methods as its own pass over the
     /// shared trace ([`sim::run_scenario_on_trace`] per scenario) — the
     /// pre-fusion engine, kept as the A/B reference the fused default
     /// ([`sim::evaluate_cell`]) is pinned byte-identical against.
     /// Execution-only: artifacts never depend on this flag.
     pub unfused: bool,
+    /// On-disk trace cache directory ([`TraceStore`]): cells whose
+    /// trace is already cached under this run's provenance skip
+    /// generation entirely; cells drawn cold are saved for the next
+    /// campaign over the same (model, seed) axes. Execution-only —
+    /// warm and cold runs are pinned byte-identical.
+    pub trace_cache: Option<PathBuf>,
 }
 
 /// What a sweep invocation did, plus the report it produced.
@@ -127,6 +145,11 @@ pub struct SweepRunSummary {
     /// Unparseable checkpoint lines that were ignored (torn tail of a
     /// killed run).
     pub skipped_checkpoint_lines: usize,
+    /// Trace cells whose routed stream was generated this invocation
+    /// (every executed cell when no trace cache is configured).
+    pub traces_generated: usize,
+    /// Trace cells satisfied from the on-disk trace cache.
+    pub traces_cached: usize,
 }
 
 /// One worker job: the still-to-run scenarios of a trace cell, with
@@ -137,23 +160,65 @@ struct CellWork {
 
 fn run_cell(
     work: CellWork,
-    fast_router: bool,
+    sampler: RouterSampler,
     unfused: bool,
-) -> Result<Vec<(String, ScenarioResult)>> {
+    store: Option<&TraceStore>,
+) -> Result<(Vec<(String, ScenarioResult)>, bool)> {
     let first = &work.todo[0].1;
     // One trace per (model, seed) cell; every method below evaluates
-    // against it. GatingSim only reads (model, parallel, seed), all of
-    // which are method-independent within the cell.
-    let gating = GatingSim::new(
-        first.run.model.clone(),
-        first.run.parallel.clone(),
-        first.run.seed,
-    )
-    .with_fast_multinomial(fast_router);
-    let trace = SharedRoutingTrace::generate(&gating, first.run.iterations);
+    // against it. The trace identity is (model, parallel, seed,
+    // iterations, provenance) — method-independent within the cell —
+    // which is exactly the trace store's key.
+    let draw = || {
+        let gating = GatingSim::new(
+            first.run.model.clone(),
+            first.run.parallel.clone(),
+            first.run.seed,
+        )
+        .with_sampler(sampler);
+        SharedRoutingTrace::generate(&gating, first.run.iterations)
+    };
+    let mut cache_hit = false;
+    let trace = match store {
+        Some(st) => {
+            let key = trace_key(
+                &first.run.model,
+                &first.run.parallel,
+                first.run.seed,
+                first.run.iterations,
+                &TraceProvenance::current(sampler),
+            );
+            match st.load(
+                &key,
+                &first.run.model,
+                &first.run.parallel,
+                first.run.seed,
+                first.run.iterations,
+            ) {
+                Some(t) => {
+                    cache_hit = true;
+                    t
+                }
+                None => {
+                    let t = draw();
+                    // The cache is a pure optimisation: a write failure
+                    // (disk full, permissions) must not kill a sweep
+                    // whose trace generated fine — degrade to uncached.
+                    if let Err(e) = st.save(&key, &t) {
+                        crate::logging::warn(
+                            "sweep",
+                            format!("trace cache write failed ({key}): {e}"),
+                        );
+                    }
+                    t
+                }
+            }
+        }
+        None => draw(),
+    };
     if unfused {
         // Pre-fusion A/B path: one full evaluation pass per method.
-        return work
+        let rows = work
             .todo
             .into_iter()
             .map(|(hash, sc)| {
@@ -161,7 +226,8 @@ fn run_cell(
                 let out = sim::run_scenario_on_trace(&sc.run, sc.method.clone(), &trace)?;
                 Ok((hash, ScenarioResult::new(&sc, &out)))
             })
-            .collect();
+            .collect::<Result<Vec<_>>>()?;
+        return Ok((rows, cache_hit));
     }
     // Fused default: one trace walk evaluates every still-to-run
     // method of the cell simultaneously (sim::evaluate_cell), returning
@@ -170,7 +236,7 @@ fn run_cell(
     let methods: Vec<_> = work.todo.iter().map(|(_, sc)| sc.method.clone()).collect();
     let outcomes = sim::evaluate_cell(&first.run, &methods, &trace)?;
     debug_assert_eq!(outcomes.len(), work.todo.len());
-    Ok(work
+    let rows = work
         .todo
         .into_iter()
         .zip(outcomes)
@@ -178,7 +244,8 @@ fn run_cell(
             debug_assert!(out.method == sc.method && sc.run.seed == sc.seed);
             (hash, ScenarioResult::from_summary(&sc, &out.summary))
         })
-        .collect())
+        .collect();
+    Ok((rows, cache_hit))
 }
 
 /// Run a sweep under the given execution options: resume from
@@ -189,6 +256,7 @@ fn run_cell(
 pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<SweepRunSummary> {
     let cells = grid::expand_cells(cfg)?;
     let total = cfg.scenario_count();
+    let prov = TraceProvenance::current(opts.sampler);
 
     if opts.resume && opts.checkpoint.is_empty() {
         return Err(Error::config("resume requires at least one checkpoint path"));
@@ -200,17 +268,21 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
     };
     let mut writer = match opts.checkpoint.first() {
         None => checkpoint::CheckpointWriter::disabled(),
-        Some(p) if opts.resume => checkpoint::CheckpointWriter::append(p)?,
-        Some(p) => checkpoint::CheckpointWriter::create(p)?,
+        Some(p) if opts.resume => checkpoint::CheckpointWriter::append(p, Some(&prov))?,
+        Some(p) => checkpoint::CheckpointWriter::create(p, Some(&prov))?,
     };
+    let store = opts.trace_cache.as_deref().map(TraceStore::open).transpose()?;
 
-    let mut reducer = SweepReducer::new(cfg.clone())?;
+    let mut reducer = SweepReducer::new(cfg.clone(), prov.clone())?;
     let mut resumed = 0usize;
     let mut skipped = 0usize;
     let mut budget = opts.limit.unwrap_or(usize::MAX);
     let mut work: Vec<CellWork> = Vec::new();
-    // Hashing serialises the full run envelope per scenario — only
-    // worth it when a checkpoint will be read or written.
+    // Hashing serialises the run envelope — only worth it when a
+    // checkpoint will be read or written, and then only once per trace
+    // cell (checkpoint::CellHasher): a cell's scenarios differ solely
+    // in method, so the per-scenario cost is re-hashing the method
+    // value, not re-serialising the whole canonical RunConfig.
     let hashing = !opts.checkpoint.is_empty();
     for (cell_index, cell) in cells.into_iter().enumerate() {
         // Shard ownership is per trace *cell*, never per scenario: a
@@ -223,15 +295,19 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
             Some(s) => s.owns(cell_index),
             None => true,
         };
+        // Resume must hash every scenario (other shards' rows fold
+        // in regardless of ownership); a write-only checkpoint run
+        // needs hashes only for the scenarios it will execute.
+        let hasher = if opts.resume || (hashing && owned) {
+            Some(checkpoint::CellHasher::new(&cell.scenarios[0].run, &prov))
+        } else {
+            None
+        };
         let mut todo = Vec::new();
         for sc in cell.scenarios {
-            // Resume must hash every scenario (other shards' rows fold
-            // in regardless of ownership); a write-only checkpoint run
-            // needs hashes only for the scenarios it will execute.
-            let hash = if opts.resume || (hashing && owned) {
-                checkpoint::scenario_hash(&sc.run, opts.fast_router)
-            } else {
-                String::new()
+            let hash = match &hasher {
+                Some(h) => h.hash(&sc.method),
+                None => String::new(),
             };
             if let Some(prev) = done.get(&hash) {
                 // hashes are grid-position-independent; re-key the
@@ -268,14 +344,22 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
     // Stream: each finished cell delivers its rows on this thread —
     // checkpoint line out first (kill-safety), then fold.
     let mut first_err: Option<Error> = None;
-    let fast_router = opts.fast_router;
+    let sampler = opts.sampler;
     let unfused = opts.unfused;
+    let store_ref = store.as_ref();
+    let mut traces_generated = 0usize;
+    let mut traces_cached = 0usize;
     pool::parallel_for_each_indexed(
         work,
         workers,
-        |_, w| run_cell(w, fast_router, unfused),
+        |_, w| run_cell(w, sampler, unfused, store_ref),
         |_, res| match res {
-            Ok(rows) => {
+            Ok((rows, cache_hit)) => {
+                if cache_hit {
+                    traces_cached += 1;
+                } else {
+                    traces_generated += 1;
+                }
                 for (hash, row) in rows {
                     if let Err(e) = writer.record(&hash, &row) {
                         if first_err.is_none() {
@@ -303,6 +387,8 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
         executed,
         skipped,
         skipped_checkpoint_lines: done.skipped_lines,
+        traces_generated,
+        traces_cached,
     })
 }
 
@@ -315,22 +401,28 @@ pub fn run_sweep(cfg: &SweepConfig, workers: usize) -> Result<SweepReport> {
 }
 
 /// The pre-trace-sharing execution path: every scenario draws its own
-/// routing trace through the pure [`sim::run_scenario`]. Kept as the
-/// A/B reference — `benches/sweep_scaling.rs` measures trace sharing
+/// routing trace through the pure [`sim::run_scenario_sampled`], under
+/// the engine's default sampler so it stays the A/B reference for the
+/// default engine — `benches/sweep_scaling.rs` measures trace sharing
 /// against it, and the unit tests pin both paths to identical bytes
 /// (which is the trace-sharing correctness argument in one line).
 pub fn run_sweep_legacy(cfg: &SweepConfig, workers: usize) -> Result<SweepReport> {
     let scenarios = grid::expand(cfg)?;
     let outcomes = pool::parallel_map_indexed(scenarios, workers, |_, sc| {
         debug_assert!(sc.run.method == sc.method && sc.run.seed == sc.seed);
-        let out = sim::run_scenario(&sc.run, sc.method.clone(), sc.seed);
+        let out = sim::run_scenario_sampled(
+            &sc.run,
+            sc.method.clone(),
+            sc.seed,
+            RouterSampler::default(),
+        );
         (sc, out)
     });
     let mut results = Vec::with_capacity(outcomes.len());
     for (sc, out) in outcomes {
         results.push(ScenarioResult::new(&sc, &out?));
     }
-    Ok(SweepReport::build(cfg.clone(), results))
+    Ok(SweepReport::build(cfg.clone(), TraceProvenance::default(), results))
 }
 
 #[cfg(test)]
@@ -411,15 +503,18 @@ mod tests {
     }
 
     #[test]
-    fn fused_matches_unfused_under_fast_router() {
-        // Same invariant on the fast-router sample: the sampler changes
-        // the drawn trace, never the evaluation, so fused and unfused
-        // still agree byte for byte.
-        let fused_opts =
-            SweepRunOptions { workers: 2, fast_router: true, ..Default::default() };
+    fn fused_matches_unfused_under_seq_router() {
+        // Same invariant on the sequential (pre-flip) sample: the
+        // sampler changes the drawn trace, never the evaluation, so
+        // fused and unfused still agree byte for byte.
+        let fused_opts = SweepRunOptions {
+            workers: 2,
+            sampler: RouterSampler::Sequential,
+            ..Default::default()
+        };
         let unfused_opts = SweepRunOptions {
             workers: 2,
-            fast_router: true,
+            sampler: RouterSampler::Sequential,
             unfused: true,
             ..Default::default()
         };
@@ -432,8 +527,15 @@ mod tests {
     }
 
     #[test]
-    fn fast_router_is_deterministic_but_a_different_sample() {
-        let opts = |w| SweepRunOptions { workers: w, fast_router: true, ..Default::default() };
+    fn seq_router_is_deterministic_but_a_different_sample() {
+        // Post-flip the splitting sampler is the default; the
+        // sequential sampler stays reachable, deterministic, and a
+        // different (hash-distinct) sample.
+        let opts = |w| SweepRunOptions {
+            workers: w,
+            sampler: RouterSampler::Sequential,
+            ..Default::default()
+        };
         let a = run_sweep_with(&tiny_grid(), &opts(1)).unwrap();
         let b = run_sweep_with(&tiny_grid(), &opts(4)).unwrap();
         assert_eq!(
@@ -441,7 +543,10 @@ mod tests {
             b.report.to_json().to_string_pretty()
         );
         let default = run_sweep(&tiny_grid(), 2).unwrap();
-        // same grid shape, different drawn sample
+        // the default report stamps the split provenance, the opt-out
+        // stamps seq — and the drawn samples differ
+        assert_eq!(default.provenance.sampler, RouterSampler::Split);
+        assert_eq!(a.report.provenance.sampler, RouterSampler::Sequential);
         assert_eq!(a.report.scenarios.len(), default.scenarios.len());
         assert!(a
             .report
@@ -449,6 +554,78 @@ mod tests {
             .iter()
             .zip(&default.scenarios)
             .any(|(f, s)| f.peak_act_bytes != s.peak_act_bytes));
+    }
+
+    #[test]
+    fn warm_trace_cache_is_byte_identical_and_reports_hits() {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("memfine-sweep-cache-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = tiny_grid();
+        let opts = SweepRunOptions {
+            workers: 2,
+            trace_cache: Some(dir.clone()),
+            ..Default::default()
+        };
+        let cold = run_sweep_with(&cfg, &opts).unwrap();
+        assert_eq!(cold.traces_generated, 2); // one per (model, seed) cell
+        assert_eq!(cold.traces_cached, 0);
+        let warm = run_sweep_with(&cfg, &opts).unwrap();
+        assert_eq!(warm.traces_generated, 0);
+        assert_eq!(warm.traces_cached, 2);
+        let no_cache = run_sweep(&cfg, 2).unwrap();
+        // THE warm-cache invariant: cold, warm, and uncached runs all
+        // emit identical bytes.
+        let cold_json = cold.report.to_json().to_string_pretty();
+        assert_eq!(cold_json, warm.report.to_json().to_string_pretty());
+        assert_eq!(cold_json, no_cache.to_json().to_string_pretty());
+        // a different sampler misses the cache (provenance-keyed)
+        let seq_opts = SweepRunOptions {
+            workers: 2,
+            sampler: RouterSampler::Sequential,
+            trace_cache: Some(dir.clone()),
+            ..Default::default()
+        };
+        let seq = run_sweep_with(&cfg, &seq_opts).unwrap();
+        assert_eq!(seq.traces_cached, 0);
+        assert_eq!(seq.traces_generated, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_cache_survives_corruption_and_unfused_reads_it() {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("memfine-sweep-cache-corrupt-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = tiny_grid();
+        let opts = SweepRunOptions {
+            workers: 1,
+            trace_cache: Some(dir.clone()),
+            ..Default::default()
+        };
+        let baseline = run_sweep_with(&cfg, &opts).unwrap();
+        let baseline_json = baseline.report.to_json().to_string_pretty();
+        // corrupt every cached file: the sweep must regenerate (miss),
+        // not fail, and still emit identical bytes
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            std::fs::write(&path, b"garbage").unwrap();
+        }
+        let healed = run_sweep_with(&cfg, &opts).unwrap();
+        assert_eq!(healed.traces_cached, 0);
+        assert_eq!(healed.traces_generated, 2);
+        assert_eq!(baseline_json, healed.report.to_json().to_string_pretty());
+        // the unfused A/B engine shares the same cache and bytes
+        let unfused_opts = SweepRunOptions {
+            workers: 1,
+            unfused: true,
+            trace_cache: Some(dir.clone()),
+            ..Default::default()
+        };
+        let unfused = run_sweep_with(&cfg, &unfused_opts).unwrap();
+        assert_eq!(unfused.traces_cached, 2);
+        assert_eq!(baseline_json, unfused.report.to_json().to_string_pretty());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -30,6 +30,7 @@ use crate::config::SweepConfig;
 use crate::json::{self, Value};
 use crate::sim::{RunOutcome, RunSummary};
 use crate::sweep::grid::Scenario;
+use crate::trace::provenance::TraceProvenance;
 use crate::util::fmt_bytes;
 
 /// Flat result of one scenario — everything the aggregation and the
@@ -180,10 +181,15 @@ impl CellStats {
 
 /// The aggregated outcome of a sweep. Note: the worker count is
 /// deliberately NOT part of the report — identical grids must emit
-/// identical bytes however they were scheduled.
+/// identical bytes however they were scheduled. The trace provenance
+/// (sampler + RNG version) IS part of it: it decides the drawn sample,
+/// and stamping it makes every artifact self-describing under the
+/// default-sampler flip.
 #[derive(Clone, Debug)]
 pub struct SweepReport {
     pub config: SweepConfig,
+    /// What the routing traces were drawn under.
+    pub provenance: TraceProvenance,
     pub scenarios: Vec<ScenarioResult>,
     pub cells: Vec<CellStats>,
 }
@@ -257,6 +263,7 @@ impl CellAccumulator {
 /// statement of the sweep determinism contract.
 pub struct SweepReducer {
     config: SweepConfig,
+    provenance: TraceProvenance,
     n_seeds: usize,
     rows: Vec<Option<ScenarioResult>>,
     folded: Vec<bool>,
@@ -265,7 +272,7 @@ pub struct SweepReducer {
 }
 
 impl SweepReducer {
-    pub fn new(config: SweepConfig) -> crate::Result<Self> {
+    pub fn new(config: SweepConfig, provenance: TraceProvenance) -> crate::Result<Self> {
         config.validate()?;
         let n = config.scenario_count();
         let n_cells = config.models.len() * config.methods.len();
@@ -276,6 +283,7 @@ impl SweepReducer {
             frontier: 0,
             cells: vec![CellAccumulator::default(); n_cells],
             config,
+            provenance,
         })
     }
 
@@ -359,6 +367,7 @@ impl SweepReducer {
         }
         SweepReport {
             config: self.config,
+            provenance: self.provenance,
             scenarios: self.rows.into_iter().flatten().collect(),
             cells,
         }
@@ -370,8 +379,13 @@ impl SweepReport {
     /// [`SweepReducer`] — retained as the collect-then-reduce
     /// convenience; the sweep engine streams into the reducer
     /// directly.
-    pub fn build(config: SweepConfig, results: Vec<ScenarioResult>) -> Self {
-        let mut reducer = SweepReducer::new(config).expect("valid sweep config");
+    pub fn build(
+        config: SweepConfig,
+        provenance: TraceProvenance,
+        results: Vec<ScenarioResult>,
+    ) -> Self {
+        let mut reducer =
+            SweepReducer::new(config, provenance).expect("valid sweep config");
         for r in results {
             reducer.push(r);
         }
@@ -382,6 +396,7 @@ impl SweepReport {
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("config", self.config.to_json()),
+            ("provenance", self.provenance.to_json()),
             (
                 "scenarios",
                 json::arr(self.scenarios.iter().map(ScenarioResult::to_json).collect()),
@@ -432,6 +447,7 @@ impl SweepReport {
 mod tests {
     use super::*;
     use crate::config::Method;
+    use crate::trace::provenance::TraceProvenance;
 
     fn result(
         index: usize,
@@ -477,7 +493,7 @@ mod tests {
             result(2, "i", &m2, 1, true, 110.0, 500),
             result(1, "i", &m1, 2, false, 0.0, 1200),
         ];
-        let report = SweepReport::build(two_cell_config(), results);
+        let report = SweepReport::build(two_cell_config(), TraceProvenance::default(), results);
         assert_eq!(
             report.scenarios.iter().map(|r| r.index).collect::<Vec<_>>(),
             vec![0, 1, 2, 3]
@@ -514,8 +530,8 @@ mod tests {
         ];
         let mut b = a.clone();
         b.reverse();
-        let ja = SweepReport::build(two_cell_config(), a).to_json().to_string_pretty();
-        let jb = SweepReport::build(two_cell_config(), b).to_json().to_string_pretty();
+        let ja = SweepReport::build(two_cell_config(), TraceProvenance::default(), a).to_json().to_string_pretty();
+        let jb = SweepReport::build(two_cell_config(), TraceProvenance::default(), b).to_json().to_string_pretty();
         assert_eq!(ja, jb);
         // and the artifact reparses
         crate::json::parse(&ja).unwrap();
@@ -532,17 +548,17 @@ mod tests {
             result(3, "i", &m2, 2, true, 120.75, 400),
         ];
         // streamed in-order vs streamed reversed vs build()
-        let mut fwd = SweepReducer::new(two_cell_config()).unwrap();
+        let mut fwd = SweepReducer::new(two_cell_config(), TraceProvenance::default()).unwrap();
         for r in rows.clone() {
             fwd.push(r);
         }
-        let mut rev = SweepReducer::new(two_cell_config()).unwrap();
+        let mut rev = SweepReducer::new(two_cell_config(), TraceProvenance::default()).unwrap();
         for r in rows.iter().rev().cloned() {
             rev.push(r);
         }
         let a = fwd.finish().to_json().to_string_pretty();
         let b = rev.finish().to_json().to_string_pretty();
-        let c = SweepReport::build(two_cell_config(), rows)
+        let c = SweepReport::build(two_cell_config(), TraceProvenance::default(), rows)
             .to_json()
             .to_string_pretty();
         assert_eq!(a, b);
@@ -553,7 +569,7 @@ mod tests {
     fn reducer_partial_grid_folds_sparse_rows() {
         // A shard that only ran (m2, seed 2): one row, index 3.
         let m2 = Method::FixedChunk(8);
-        let mut red = SweepReducer::new(two_cell_config()).unwrap();
+        let mut red = SweepReducer::new(two_cell_config(), TraceProvenance::default()).unwrap();
         red.push(result(3, "i", &m2, 2, true, 120.0, 400));
         assert_eq!(red.received(), 1);
         let report = red.finish();
@@ -568,7 +584,7 @@ mod tests {
     #[should_panic(expected = "delivered twice")]
     fn reducer_rejects_duplicate_index() {
         let m1 = Method::FullRecompute;
-        let mut red = SweepReducer::new(two_cell_config()).unwrap();
+        let mut red = SweepReducer::new(two_cell_config(), TraceProvenance::default()).unwrap();
         red.push(result(0, "i", &m1, 1, true, 100.0, 1000));
         red.push(result(0, "i", &m1, 1, true, 100.0, 1000));
     }
@@ -594,7 +610,7 @@ mod tests {
         let mut cfg = two_cell_config();
         cfg.methods = vec![m1];
         cfg.seeds = vec![1];
-        let table = SweepReport::build(cfg, results).render_table();
+        let table = SweepReport::build(cfg, TraceProvenance::default(), results).render_table();
         assert!(table.contains("method1/full-recompute"));
         assert!(table.contains("1/1"));
     }

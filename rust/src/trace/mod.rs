@@ -10,6 +10,18 @@
 //! and evaluated by every method — the paper's paired-comparison
 //! structure (Methods 1/2/3 on identical token streams) made
 //! first-class, and the sweep engine's main throughput lever.
+//!
+//! [`provenance`] records *which sampler and RNG version* drew a
+//! stream (baked into scenario hashes, checkpoint headers and report
+//! metadata), and [`store`] caches drawn traces on disk keyed by that
+//! full identity, so re-sweeps of the same (model, seed) cells skip
+//! generation entirely.
+
+pub mod provenance;
+pub mod store;
+
+pub use provenance::{RouterSampler, TraceProvenance};
+pub use store::{trace_key, TraceStore};
 
 use crate::json::{self, Value};
 use crate::metrics::CsvWriter;

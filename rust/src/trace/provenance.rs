@@ -1,0 +1,226 @@
+//! Sampler provenance and RNG versioning — the golden-trace migration
+//! layer.
+//!
+//! A routed trace is a pure function of `(model, parallel, seed,
+//! iterations, sampler, rng algorithm)`. The first four live in the
+//! run config; this module makes the last two first-class: a
+//! [`RouterSampler`] names *which* multinomial consumes the stream and
+//! a [`TraceProvenance`] pairs it with the RNG algorithm version. The
+//! provenance is baked into every scenario content hash
+//! ([`crate::sweep::checkpoint::scenario_hash`]), written as a header
+//! line into every checkpoint file, stamped into the sweep report
+//! artifact, and keyed into the on-disk trace cache
+//! ([`crate::trace::store::TraceStore`]).
+//!
+//! That record is what made flipping the **default** router sampler to
+//! the splitting multinomial safe: artifacts drawn under the old
+//! sequential sampler keep resuming and auditing under their recorded
+//! `router: "seq"` tag (their hashes never collide with split-sampler
+//! runs), while new campaigns get the fast sampler without asking.
+//! Likewise, any future change to the generator itself bumps
+//! [`RNG_VERSION`], which perturbs every hash and trace key from that
+//! point on — old artifacts stay valid under version 1, and version 1
+//! deliberately serialises to the exact historical hash documents so
+//! no pre-existing checkpoint is orphaned by this layer's
+//! introduction.
+
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+
+/// The RNG stack every trace stream is drawn from. Part of the
+/// recorded provenance: a different algorithm would be a different
+/// (equally valid) sample, exactly like a sampler change.
+pub const RNG_ALGORITHM: &str = "splitmix64+xoshiro256**";
+
+/// Version of the drawn bit-streams. Bump this when any sampler or
+/// generator change alters the drawn bits (the batched/vectorised
+/// kernels do **not** — they are pinned bit-identical to the scalar
+/// paths); version 1 hashes serialise exactly as the pre-provenance
+/// era did, so all historical checkpoints remain resumable.
+pub const RNG_VERSION: u64 = 1;
+
+/// Which multinomial consumes the routing stream. Both draw the same
+/// distribution over the same forked streams; they consume the raw
+/// u64 stream in different orders, so they are two different (equally
+/// valid) samples and therefore part of every trace identity.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RouterSampler {
+    /// Left-to-right conditional-binomial chain
+    /// ([`crate::util::rng::Rng::multinomial`]) — the historical
+    /// default, kept reachable as `--router seq` so pre-flip artifacts
+    /// can be reproduced and resumed.
+    Sequential,
+    /// Recursive binomial splitting
+    /// ([`crate::util::rng::Rng::multinomial_split`]) — cost scales
+    /// with *populated* categories instead of `n_experts`, which on
+    /// the router's peaky popularity vectors makes it materially
+    /// faster. **The default sampler** since the trace-store PR (the
+    /// provenance record above is the migration story).
+    #[default]
+    Split,
+}
+
+impl RouterSampler {
+    /// The short tag hashed into scenario identities and written into
+    /// headers/artifacts ("seq" / "split"). Stable forever — it is
+    /// load-bearing in every recorded hash.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            RouterSampler::Sequential => "seq",
+            RouterSampler::Split => "split",
+        }
+    }
+
+    /// Parse a tag back (CLI `--router`, artifact headers).
+    pub fn parse(tag: &str) -> Result<Self> {
+        match tag.trim() {
+            "seq" | "sequential" => Ok(RouterSampler::Sequential),
+            "split" | "fast" => Ok(RouterSampler::Split),
+            other => Err(Error::config(format!(
+                "unknown router sampler '{other}' (expected seq or split)"
+            ))),
+        }
+    }
+
+    /// The historical `fast_router: bool` encoding (true = split),
+    /// still accepted in legacy `launch.json` files.
+    pub fn from_fast_flag(fast: bool) -> Self {
+        if fast {
+            RouterSampler::Split
+        } else {
+            RouterSampler::Sequential
+        }
+    }
+}
+
+/// Everything that decides the drawn bits of a trace besides the run
+/// config: the sampler and the RNG algorithm version. Recorded in
+/// checkpoint headers, report metadata and trace-cache keys; hashed
+/// into every scenario identity.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceProvenance {
+    pub sampler: RouterSampler,
+    pub rng_version: u64,
+}
+
+impl Default for TraceProvenance {
+    /// The current engine default: splitting sampler, current RNG
+    /// version.
+    fn default() -> Self {
+        TraceProvenance::current(RouterSampler::default())
+    }
+}
+
+impl TraceProvenance {
+    /// Provenance of traces drawn by this build with the given sampler.
+    pub fn current(sampler: RouterSampler) -> Self {
+        TraceProvenance { sampler, rng_version: RNG_VERSION }
+    }
+
+    /// Provenance of pre-flip default-path artifacts (sequential
+    /// sampler, version 1) — what a legacy checkpoint without a header
+    /// was drawn under.
+    pub fn legacy_sequential() -> Self {
+        TraceProvenance { sampler: RouterSampler::Sequential, rng_version: 1 }
+    }
+
+    /// The provenance fields of a hash document. Version 1 contributes
+    /// exactly the historical `{"router": tag}` field — and nothing
+    /// else — so every hash recorded before this layer existed is
+    /// preserved; later versions add `rng_version` and thereby perturb
+    /// every hash, which is the point.
+    pub fn hash_fields(&self) -> Vec<(&'static str, Value)> {
+        let mut fields = vec![("router", json::s(self.tag().to_string()))];
+        if self.rng_version != 1 {
+            fields.push(("rng_version", json::num(self.rng_version as f64)));
+        }
+        fields
+    }
+
+    /// The sampler tag (see [`RouterSampler::tag`]).
+    pub fn tag(&self) -> &'static str {
+        self.sampler.tag()
+    }
+
+    /// Full metadata form (checkpoint headers, report artifacts).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("router", json::s(self.tag().to_string())),
+            ("rng_algorithm", json::s(RNG_ALGORITHM.to_string())),
+            ("rng_version", json::num(self.rng_version as f64)),
+        ])
+    }
+
+    /// Parse the metadata form back (headers of future versions may
+    /// carry a different `rng_version`; `rng_algorithm` is
+    /// informational and not validated here).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(TraceProvenance {
+            sampler: RouterSampler::parse(v.req_str("router")?)?,
+            rng_version: v.req_u64("rng_version")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sampler_is_split() {
+        // THE flip: the engine-wide default sampler is the splitting
+        // multinomial; the sequential sampler stays reachable by tag.
+        assert_eq!(RouterSampler::default(), RouterSampler::Split);
+        assert_eq!(TraceProvenance::default().sampler, RouterSampler::Split);
+        assert_eq!(TraceProvenance::default().rng_version, RNG_VERSION);
+    }
+
+    #[test]
+    fn tags_parse_and_roundtrip() {
+        for s in [RouterSampler::Sequential, RouterSampler::Split] {
+            assert_eq!(RouterSampler::parse(s.tag()).unwrap(), s);
+        }
+        assert_eq!(
+            RouterSampler::parse("fast").unwrap(),
+            RouterSampler::Split
+        );
+        assert!(RouterSampler::parse("bogus").is_err());
+        assert_eq!(RouterSampler::from_fast_flag(true), RouterSampler::Split);
+        assert_eq!(
+            RouterSampler::from_fast_flag(false),
+            RouterSampler::Sequential
+        );
+    }
+
+    #[test]
+    fn version_1_hash_fields_match_the_historical_doc() {
+        // The migration contract: version-1 provenance contributes the
+        // exact pre-provenance hash field, nothing more.
+        let seq = TraceProvenance::legacy_sequential();
+        let doc = json::obj(seq.hash_fields());
+        assert_eq!(doc.to_string_compact(), "{\"router\":\"seq\"}");
+        let split = TraceProvenance::current(RouterSampler::Split);
+        let doc = json::obj(split.hash_fields());
+        assert_eq!(doc.to_string_compact(), "{\"router\":\"split\"}");
+        // a future version perturbs the doc
+        let v2 = TraceProvenance { sampler: RouterSampler::Split, rng_version: 2 };
+        assert!(json::obj(v2.hash_fields())
+            .to_string_compact()
+            .contains("rng_version"));
+    }
+
+    #[test]
+    fn metadata_json_roundtrip() {
+        for p in [
+            TraceProvenance::default(),
+            TraceProvenance::legacy_sequential(),
+            TraceProvenance { sampler: RouterSampler::Split, rng_version: 3 },
+        ] {
+            let back = TraceProvenance::from_json(&p.to_json()).unwrap();
+            assert_eq!(back, p);
+        }
+        // the metadata form names the algorithm
+        let text = TraceProvenance::default().to_json().to_string_compact();
+        assert!(text.contains(RNG_ALGORITHM));
+    }
+}

@@ -28,20 +28,31 @@ pub fn ceil_div(a: u64, b: u64) -> u64 {
     a.div_ceil(b)
 }
 
+/// FNV-1a 64 offset basis — the initial state of the streaming form.
+pub const FNV1A_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// Streaming FNV-1a 64 step: fold `bytes` into the running state `h`.
+/// `fnv1a_64(x)` ≡ `fnv1a_64_update(FNV1A_OFFSET, x)`, and hashing a
+/// concatenation equals chaining updates — which is what lets the
+/// checkpoint layer hash a cell's invariant JSON prefix once and
+/// re-hash only the per-method middle (see
+/// `sweep::checkpoint::CellHasher`).
+pub fn fnv1a_64_update(mut h: u64, bytes: &[u8]) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 /// FNV-1a 64-bit hash — the checkpoint layer's content hash over
 /// canonical scenario JSON. Not cryptographic; chosen because it is
 /// tiny, dependency-free, and stable across platforms/versions (the
 /// std `Hasher` is explicitly not stable), which is what a resumable
 /// artifact format needs.
 pub fn fnv1a_64(bytes: &[u8]) -> u64 {
-    const OFFSET: u64 = 0xcbf29ce484222325;
-    const PRIME: u64 = 0x100000001b3;
-    let mut h = OFFSET;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(PRIME);
-    }
-    h
+    fnv1a_64_update(FNV1A_OFFSET, bytes)
 }
 
 #[cfg(test)]
@@ -82,5 +93,16 @@ mod tests {
     fn fnv1a_64_sensitivity() {
         assert_ne!(fnv1a_64(b"scenario-1"), fnv1a_64(b"scenario-2"));
         assert_ne!(fnv1a_64(b"ab"), fnv1a_64(b"ba"));
+    }
+
+    #[test]
+    fn fnv1a_64_streaming_equals_whole() {
+        // concatenation ≡ chained updates, at every split point
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let whole = fnv1a_64(data);
+        for split in 0..=data.len() {
+            let h = fnv1a_64_update(FNV1A_OFFSET, &data[..split]);
+            assert_eq!(fnv1a_64_update(h, &data[split..]), whole, "split {split}");
+        }
     }
 }

@@ -5,6 +5,34 @@
 //! (Blackman–Vigna 2018), plus the distribution samplers the routing
 //! simulator needs (uniform, normal, gamma/Dirichlet, zipf,
 //! multinomial). All paths are deterministic given the seed.
+//!
+//! ## Chunked fixed-lane batch kernels
+//!
+//! The hot samplers ([`Rng::gamma_batch`], [`Rng::normal_batch`], the
+//! small-`n` Bernoulli path of [`Rng::binomial`]) run over fixed-width
+//! lane chunks: a chunk's raw `u64`s are drawn up front, converted and
+//! transformed in straight-line per-lane loops the compiler can
+//! vectorise/pipeline, and the rare rejection branches are hoisted to
+//! one accept-scan per chunk. **Bit-stability is absolute**: rejection
+//! samplers speculate — the generator state is snapshotted before each
+//! chunk, and on the first lane whose draw the scalar path would have
+//! retried, the state is rewound past the accepted lanes' draws and
+//! that slot finishes on the scalar path — so the batch kernels
+//! consume the stream in exactly the scalar order and are pinned
+//! bit-identical to per-draw sampling (unit + property tests). The
+//! Bernoulli chunk has no rejection at all: one `u64` per trial either
+//! way, so it is the same sampler with the branches lifted out.
+
+/// Lane width of the chunked batch kernels. Eight f64 lanes: two AVX2
+/// registers' worth, small enough that a speculation failure wastes
+/// little work.
+const BATCH_LANES: usize = 8;
+
+/// The uniform-[0,1) mapping every `f64` draw uses (53 mantissa bits).
+#[inline]
+fn u64_to_f64(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
 
 /// xoshiro256** PRNG seeded via splitmix64.
 #[derive(Clone, Debug)]
@@ -75,7 +103,17 @@ impl Rng {
     /// Uniform in [0, 1).
     #[inline]
     pub fn f64(&mut self) -> f64 {
-        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+        u64_to_f64(self.next_u64())
+    }
+
+    /// Fill `out` with raw generator words, in stream order. The
+    /// chunked batch kernels draw a whole chunk's words through this
+    /// before doing any lane math.
+    #[inline]
+    pub fn fill_u64(&mut self, out: &mut [u64]) {
+        for slot in out.iter_mut() {
+            *slot = self.next_u64();
+        }
     }
 
     /// Uniform integer in [0, n). Lemire multiply-shift with rejection
@@ -103,6 +141,45 @@ impl Rng {
         };
         let u2 = self.f64();
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fill `out` with independent standard normals. Chunked fixed-lane
+    /// rewrite of per-draw [`Rng::normal`], bit-identical to it: each
+    /// chunk's `2·lanes` uniforms are drawn up front and the Box–Muller
+    /// transform runs as a straight-line lane loop; the (astronomically
+    /// rare) `u1 ≤ 1e-300` rejection rewinds the snapshot past the
+    /// accepted lanes and finishes that slot on the scalar path, so the
+    /// stream is consumed in exactly the scalar order.
+    pub fn normal_batch(&mut self, out: &mut [f64]) {
+        let mut raw = [0u64; 2 * BATCH_LANES];
+        let mut vals = [0.0f64; BATCH_LANES];
+        let mut ok = [false; BATCH_LANES];
+        let mut i = 0;
+        while i < out.len() {
+            let k = BATCH_LANES.min(out.len() - i);
+            let snap = self.s;
+            self.fill_u64(&mut raw[..2 * k]);
+            for j in 0..k {
+                let u1 = u64_to_f64(raw[2 * j]);
+                let u2 = u64_to_f64(raw[2 * j + 1]);
+                ok[j] = u1 > 1e-300;
+                vals[j] = (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+            // lanes past the first rejection consumed stream words the
+            // scalar path would have spent differently — discard them
+            let accepted = ok[..k].iter().take_while(|&&b| b).count();
+            out[i..i + accepted].copy_from_slice(&vals[..accepted]);
+            i += accepted;
+            if accepted < k {
+                self.s = snap;
+                for _ in 0..2 * accepted {
+                    self.next_u64();
+                }
+                out[i] = self.normal();
+                i += 1;
+            }
+        }
     }
 
     /// Gamma(shape, 1) via Marsaglia–Tsang; shape > 0.
@@ -150,28 +227,92 @@ impl Rng {
     /// to calling [`Rng::gamma`] once per slot — the Marsaglia–Tsang
     /// constants (a division plus a square root per call, and the
     /// `1/shape` boost exponent below 1) are hoisted out of the loop,
-    /// which is the whole point: the Dirichlet hot path draws hundreds
-    /// of gammas of one shared shape per (iteration, layer).
+    /// and the accept-reject loop is run as a chunked fixed-lane
+    /// speculative kernel ([`Rng::gamma_chunks`]): the common case — a
+    /// lane that passes the squeeze test on its first attempt — runs
+    /// branch-free over pre-drawn chunk words; any lane the scalar
+    /// sampler would have retried rewinds to its exact stream position
+    /// and finishes scalar. This is the Dirichlet hot path: hundreds of
+    /// gammas of one shared shape per (iteration, layer).
     pub fn gamma_batch(&mut self, shape: f64, out: &mut [f64]) {
         assert!(shape > 0.0);
         if shape < 1.0 {
             // boost: Gamma(a) = Gamma(a+1) * U^(1/a), constants hoisted
             let (d, c) = gamma_dc(shape + 1.0);
             let inv_shape = 1.0 / shape;
-            for slot in out.iter_mut() {
-                let g = self.gamma_core(d, c);
-                let u = loop {
-                    let u = self.f64();
-                    if u > 0.0 {
-                        break u;
-                    }
-                };
-                *slot = g * u.powf(inv_shape);
-            }
+            self.gamma_chunks(d, c, Some(inv_shape), out);
         } else {
             let (d, c) = gamma_dc(shape);
-            for slot in out.iter_mut() {
-                *slot = self.gamma_core(d, c);
+            self.gamma_chunks(d, c, None, out);
+        }
+    }
+
+    /// The chunked speculative Marsaglia–Tsang kernel behind
+    /// [`Rng::gamma_batch`]. Per lane the scalar sampler's first
+    /// attempt consumes exactly `u1, u2` (Box–Muller), `u` (squeeze
+    /// test) and — on the boost path (`inv_shape = Some(1/a)`) — one
+    /// boost uniform; the chunk pre-draws that many words per lane and
+    /// replays the identical arithmetic. A lane is committed only when
+    /// the scalar path would have accepted that very attempt (`u1`
+    /// above the Box–Muller floor, `v > 0`, squeeze accept, boost
+    /// uniform nonzero); at the first failing lane the snapshot is
+    /// rewound past the committed lanes' words and the slot finishes on
+    /// the scalar [`Rng::gamma_core`] path — same draws, same bits.
+    fn gamma_chunks(&mut self, d: f64, c: f64, inv_shape: Option<f64>, out: &mut [f64]) {
+        let per = if inv_shape.is_some() { 4 } else { 3 };
+        let mut raw = [0u64; 4 * BATCH_LANES];
+        let mut vals = [0.0f64; BATCH_LANES];
+        let mut ok = [false; BATCH_LANES];
+        let mut i = 0;
+        while i < out.len() {
+            let k = BATCH_LANES.min(out.len() - i);
+            let snap = self.s;
+            self.fill_u64(&mut raw[..per * k]);
+            for j in 0..k {
+                let u1 = u64_to_f64(raw[per * j]);
+                let u2 = u64_to_f64(raw[per * j + 1]);
+                let u = u64_to_f64(raw[per * j + 2]);
+                let x = (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+                let v = 1.0 + c * x;
+                // first-attempt acceptance, exactly the scalar tests
+                // (a `v <= 0` attempt would not even have consumed `u`)
+                ok[j] = u1 > 1e-300 && v > 0.0 && u < 1.0 - 0.0331 * x.powi(4);
+                let v = v * v * v;
+                vals[j] = d * v;
+            }
+            if let Some(inv) = inv_shape {
+                for j in 0..k {
+                    let bu = u64_to_f64(raw[per * j + 3]);
+                    ok[j] = ok[j] && bu > 0.0;
+                    vals[j] *= bu.powf(inv);
+                }
+            }
+            let accepted = ok[..k].iter().take_while(|&&b| b).count();
+            out[i..i + accepted].copy_from_slice(&vals[..accepted]);
+            i += accepted;
+            if accepted < k {
+                // rewind to the chunk start, burn the committed lanes'
+                // words, finish this slot on the scalar path (which
+                // handles retries and the second-chance log test)
+                self.s = snap;
+                for _ in 0..per * accepted {
+                    self.next_u64();
+                }
+                out[i] = match inv_shape {
+                    Some(inv) => {
+                        let g = self.gamma_core(d, c);
+                        let bu = loop {
+                            let u = self.f64();
+                            if u > 0.0 {
+                                break u;
+                            }
+                        };
+                        g * bu.powf(inv)
+                    }
+                    None => self.gamma_core(d, c),
+                };
+                i += 1;
             }
         }
     }
@@ -305,12 +446,20 @@ impl Rng {
         self.split_range(out, probs, 0..probs.len(), (n, 1.0), true);
     }
 
-    /// Conditional-binomial recursion over `probs[range]` holding the
+    /// Conditional-binomial split over `probs[range]` holding the
     /// `(trials, rest)` state, where `rest` is the probability mass not
     /// yet assigned to the left of the range (the sequential
     /// algorithm's running `rest`). `balanced` picks the split point:
     /// midpoint (fast path) or `lo + 1` (degenerate mode, bit-identical
     /// to `multinomial`).
+    ///
+    /// Runs the recursion on an explicit stack, left child first, so
+    /// the binomial draw order — node, whole left subtree, right
+    /// subtree — is exactly the recursive order (bit-identical), with
+    /// no call overhead and no recursion-depth concern on the
+    /// degenerate chain. The left-half sums stay per-node left-to-right
+    /// reductions: caching them tree-wide would change float
+    /// association and the drawn bits.
     fn split_range(
         &mut self,
         out: &mut [u64],
@@ -319,25 +468,33 @@ impl Rng {
         state: (u64, f64),
         balanced: bool,
     ) {
-        let (lo, hi) = (range.start, range.end);
-        let (t, rest) = state;
-        debug_assert!(lo < hi);
-        if t == 0 {
-            return;
+        // Balanced splits halve the range (stack depth ≤ word size);
+        // the degenerate chain resolves its left leaf immediately
+        // (depth ≤ 2). 2·64 covers both with headroom.
+        let mut stack: Vec<(std::ops::Range<usize>, (u64, f64))> =
+            Vec::with_capacity(2 * u64::BITS as usize);
+        stack.push((range, state));
+        while let Some((range, (t, rest))) = stack.pop() {
+            let (lo, hi) = (range.start, range.end);
+            debug_assert!(lo < hi);
+            if t == 0 {
+                continue;
+            }
+            if hi - lo == 1 || rest <= 0.0 {
+                // single category — or no mass left to condition on, in
+                // which case the sequential path also dumps the
+                // remainder on the current category.
+                out[lo] = t;
+                continue;
+            }
+            let mid = if balanced { lo + (hi - lo) / 2 } else { lo + 1 };
+            let p_left: f64 = probs[lo..mid].iter().sum();
+            let q = (p_left / rest).clamp(0.0, 1.0);
+            let k = self.binomial(t, q);
+            // right pushed first so the left half pops (and draws) next
+            stack.push((mid..hi, (t - k, rest - p_left)));
+            stack.push((lo..mid, (k, p_left)));
         }
-        if hi - lo == 1 || rest <= 0.0 {
-            // single category — or no mass left to condition on, in
-            // which case the sequential path also dumps the remainder
-            // on the current category.
-            out[lo] = t;
-            return;
-        }
-        let mid = if balanced { lo + (hi - lo) / 2 } else { lo + 1 };
-        let p_left: f64 = probs[lo..mid].iter().sum();
-        let q = (p_left / rest).clamp(0.0, 1.0);
-        let k = self.binomial(t, q);
-        self.split_range(out, probs, lo..mid, (k, p_left), balanced);
-        self.split_range(out, probs, mid..hi, (t - k, rest - p_left), balanced);
     }
 
     /// Binomial(n, p) — BTPE would be overkill; the simulator needs
@@ -366,11 +523,16 @@ impl Rng {
             return x.clamp(0.0, nf) as u64;
         }
         if n <= 64 {
+            // Chunked Bernoulli inversion: one generator word per trial
+            // either way, so pre-drawing the whole block and counting
+            // in a straight-line compare loop (which autovectorises) is
+            // the same sampler bit for bit, minus the per-trial branch.
+            let mut raw = [0u64; 64];
+            let lanes = &mut raw[..n as usize];
+            self.fill_u64(lanes);
             let mut k = 0u64;
-            for _ in 0..n {
-                if self.f64() < p {
-                    k += 1;
-                }
+            for &r in lanes.iter() {
+                k += u64::from(u64_to_f64(r) < p);
             }
             return k;
         }
@@ -600,6 +762,53 @@ mod tests {
             }
             // and the generators end in the same state
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn normal_batch_bit_identical_to_per_draw() {
+        // Chunk boundaries, tails and the empty batch must all replay
+        // the exact per-draw stream and leave the generator in the
+        // same state.
+        for &n in &[0usize, 1, 7, 8, 9, 64, 257] {
+            let mut a = Rng::new(31);
+            let per_draw: Vec<f64> = (0..n).map(|_| a.normal()).collect();
+            let mut b = Rng::new(31);
+            let mut batched = vec![0.0; n];
+            b.normal_batch(&mut batched);
+            for (i, (x, y)) in per_draw.iter().zip(&batched).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "n {n} draw {i}");
+            }
+            assert_eq!(a.next_u64(), b.next_u64(), "n {n} end state");
+        }
+    }
+
+    #[test]
+    fn binomial_small_n_matches_scalar_bernoulli_replica() {
+        // The chunked Bernoulli block must be the scalar per-trial loop
+        // bit for bit (same words, same compares), across the whole
+        // small-n regime and both p reflections.
+        let scalar = |rng: &mut Rng, n: u64, p: f64| -> u64 {
+            let mut k = 0u64;
+            for _ in 0..n {
+                if rng.f64() < p {
+                    k += 1;
+                }
+            }
+            k
+        };
+        for &(seed, n, p) in &[
+            (3u64, 1u64, 0.2f64),
+            (4, 7, 0.49),
+            (5, 64, 0.01),
+            (6, 64, 0.5),
+            (7, 33, 0.3),
+        ] {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let want = scalar(&mut a, n, p);
+            assert_eq!(b.binomial(n, p), want, "seed {seed} n {n} p {p}");
+            assert_eq!(a.next_u64(), b.next_u64(), "seed {seed} end state");
         }
     }
 

@@ -70,7 +70,8 @@ fn cli_two_shard_merge_matches_direct_run() {
             .lines()
             .count()
     };
-    assert_eq!(lines(&ck0) + lines(&ck1), 4);
+    // 4 records + one provenance header per shard file
+    assert_eq!(lines(&ck0) + lines(&ck1), 6);
 
     for p in [&direct, &shard_out, &merged, &ck0, &ck1] {
         std::fs::remove_file(p).ok();
@@ -129,7 +130,7 @@ fn cli_limit_then_resume_completes_the_grid() {
     ]);
     assert_eq!(
         std::fs::read_to_string(&ck).expect("checkpoint").lines().count(),
-        2
+        3 // provenance header + 2 records
     );
     sweep(&[
         "--resume",
@@ -164,7 +165,7 @@ fn cli_resumed_capped_slices_complete_the_grid() {
         "--out", out_a.to_str().unwrap(),
     ]);
     let lines = std::fs::read_to_string(&ck).expect("checkpoint").lines().count();
-    assert_eq!(lines, 3);
+    assert_eq!(lines, 4); // provenance header + 3 records
     sweep(&[
         "--resume",
         "--limit", "3",
@@ -172,7 +173,7 @@ fn cli_resumed_capped_slices_complete_the_grid() {
         "--out", out_b.to_str().unwrap(),
     ]);
     let lines = std::fs::read_to_string(&ck).expect("checkpoint").lines().count();
-    assert_eq!(lines, 4, "the resumed capped slice must run the remaining scenario");
+    assert_eq!(lines, 5, "the resumed capped slice must run the remaining scenario");
     assert_eq!(
         std::fs::read(&direct).expect("direct"),
         std::fs::read(&out_b).expect("resumed capped"),
@@ -209,10 +210,11 @@ fn cli_checkpoint_compact_and_audit() {
 
     sweep(&["--checkpoint", ck.to_str().unwrap()]);
 
-    // dirty the checkpoint: duplicate the first record, tear a tail
+    // dirty the checkpoint: duplicate the first record (line 2 —
+    // line 1 is the provenance header), tear a tail
     let text = std::fs::read_to_string(&ck).expect("checkpoint");
-    let first_line = text.lines().next().expect("has lines").to_string();
-    let dirty = format!("{text}{first_line}\n{{\"hash\":\"torn");
+    let first_record = text.lines().nth(1).expect("has records").to_string();
+    let dirty = format!("{text}{first_record}\n{{\"hash\":\"torn");
     std::fs::write(&ck, dirty).expect("dirty checkpoint");
 
     // compact drops the duplicate and the torn tail
@@ -229,7 +231,7 @@ fn cli_checkpoint_compact_and_audit() {
         String::from_utf8_lossy(&out.stderr)
     );
     let lines = std::fs::read_to_string(&compacted).expect("compacted").lines().count();
-    assert_eq!(lines, 4, "4 scenarios survive compaction");
+    assert_eq!(lines, 5, "header + 4 scenarios survive compaction");
 
     // audit passes on the compacted file against the grid spec
     let out = Command::new(env!("CARGO_BIN_EXE_memfine"))
@@ -245,9 +247,15 @@ fn cli_checkpoint_compact_and_audit() {
         String::from_utf8_lossy(&out.stderr)
     );
 
-    // drop a record: the audit must fail with a missing scenario
+    // drop a record (keep the header): the audit must fail with a
+    // missing scenario
     let text = std::fs::read_to_string(&compacted).expect("compacted");
-    let truncated: Vec<&str> = text.lines().skip(1).collect();
+    let truncated: Vec<&str> = text
+        .lines()
+        .enumerate()
+        .filter(|&(i, _)| i != 1) // line 0 is the header; drop record 1
+        .map(|(_, l)| l)
+        .collect();
     std::fs::write(&compacted, format!("{}\n", truncated.join("\n"))).unwrap();
     let out = Command::new(env!("CARGO_BIN_EXE_memfine"))
         .args([
@@ -318,6 +326,87 @@ fn cli_launch_matches_direct_sweep_artifact() {
     std::fs::remove_file(&direct).ok();
     std::fs::remove_file(&launch_out).ok();
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_trace_cache_and_router_flags() {
+    // --trace-cache: a warm second run must emit identical bytes (and
+    // identical to the uncached run — the default sampler everywhere);
+    // --router seq must produce a different, deterministic artifact,
+    // and --fast-router must remain an alias for the split default.
+    let plain = tmp("rc-plain.json");
+    let cold = tmp("rc-cold.json");
+    let warm = tmp("rc-warm.json");
+    let seq_a = tmp("rc-seq-a.json");
+    let seq_b = tmp("rc-seq-b.json");
+    let alias = tmp("rc-alias.json");
+    let cache = tmp("rc-cache");
+    std::fs::remove_dir_all(&cache).ok();
+
+    sweep(&["--out", plain.to_str().unwrap()]);
+    sweep(&["--trace-cache", cache.to_str().unwrap(), "--out", cold.to_str().unwrap()]);
+    sweep(&["--trace-cache", cache.to_str().unwrap(), "--out", warm.to_str().unwrap()]);
+    let plain_bytes = std::fs::read(&plain).expect("plain artifact");
+    assert_eq!(
+        plain_bytes,
+        std::fs::read(&cold).expect("cold artifact"),
+        "cold cached run diverged from the uncached artifact"
+    );
+    assert_eq!(
+        plain_bytes,
+        std::fs::read(&warm).expect("warm artifact"),
+        "warm cached run diverged from the cold artifact"
+    );
+    assert!(cache.is_dir(), "trace cache dir was created");
+
+    sweep(&["--router", "seq", "--out", seq_a.to_str().unwrap()]);
+    sweep(&["--router", "seq", "--out", seq_b.to_str().unwrap()]);
+    let seq_bytes = std::fs::read(&seq_a).expect("seq artifact");
+    assert_eq!(seq_bytes, std::fs::read(&seq_b).expect("seq artifact b"));
+    assert_ne!(seq_bytes, plain_bytes, "seq sampler must be a different sample");
+
+    sweep(&["--fast-router", "--out", alias.to_str().unwrap()]);
+    assert_eq!(
+        plain_bytes,
+        std::fs::read(&alias).expect("alias artifact"),
+        "--fast-router must alias the split default"
+    );
+
+    for p in [&plain, &cold, &warm, &seq_a, &seq_b, &alias] {
+        std::fs::remove_file(p).ok();
+    }
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+#[test]
+fn cli_resume_adopts_the_checkpoints_recorded_sampler() {
+    // The golden-trace migration promise at the CLI: a checkpoint
+    // recorded under the non-default sequential sampler must resume
+    // under its recorded provenance (no --router flag needed) — every
+    // row folds back and the artifact matches the seq run, not a
+    // silently re-executed split-default grid.
+    let ck = tmp("recorded.jsonl");
+    let seq_direct = tmp("recorded-direct.json");
+    let resumed = tmp("recorded-resumed.json");
+
+    sweep(&["--router", "seq", "--out", seq_direct.to_str().unwrap()]);
+    sweep(&["--router", "seq", "--checkpoint", ck.to_str().unwrap(), "--out", "/dev/null"]);
+    // resume WITHOUT any sampler flag: the header decides
+    sweep(&["--resume", "--checkpoint", ck.to_str().unwrap(), "--out", resumed.to_str().unwrap()]);
+    assert_eq!(
+        std::fs::read(&seq_direct).expect("seq artifact"),
+        std::fs::read(&resumed).expect("resumed artifact"),
+        "resume did not adopt the checkpoint's recorded sampler"
+    );
+    // nothing re-ran: the checkpoint still holds header + 4 records
+    assert_eq!(
+        std::fs::read_to_string(&ck).expect("checkpoint").lines().count(),
+        5
+    );
+
+    for p in [&ck, &seq_direct, &resumed] {
+        std::fs::remove_file(p).ok();
+    }
 }
 
 #[test]

@@ -120,7 +120,7 @@ fn killed_sweep_resumes_to_identical_bytes() {
     // as if the process died mid-write
     let text = std::fs::read_to_string(&ck).expect("checkpoint readable");
     let mut lines: Vec<&str> = text.lines().collect();
-    assert_eq!(lines.len(), 7);
+    assert_eq!(lines.len(), 8); // provenance header + 7 records
     let last = lines.pop().expect("has lines");
     let torn = format!("{}\n{}", lines.join("\n"), &last[..last.len() / 2]);
     std::fs::write(&ck, torn).expect("tear checkpoint");
@@ -211,6 +211,69 @@ fn resumed_capped_slices_always_make_limit_progress() {
         "capped campaign changed the artifact"
     );
     std::fs::remove_file(&ck).ok();
+}
+
+#[test]
+fn trace_cached_shard_merge_is_byte_identical() {
+    // The trace cache composes with sharding and resume: two cached
+    // shard runs plus a warm-cache merge must emit the direct
+    // (uncached, unsharded) artifact byte for byte — and the merge
+    // pass, which executes nothing, reuses every cached cell it owns.
+    let cfg = grid_3x2x4();
+    let direct_json = sweep::run_sweep(&cfg, 4)
+        .expect("direct sweep")
+        .to_json()
+        .to_string_pretty();
+    let cache = tmp("trace-cache-dir");
+    std::fs::remove_dir_all(&cache).ok();
+    let ck0 = tmp("cached-shard0.jsonl");
+    let ck1 = tmp("cached-shard1.jsonl");
+    for (index, path) in [(0u64, &ck0), (1u64, &ck1)] {
+        let opts = SweepRunOptions {
+            workers: 2,
+            checkpoint: vec![path.clone()],
+            shard: Some(ShardSpec { index, count: 2 }),
+            trace_cache: Some(cache.clone()),
+            ..Default::default()
+        };
+        let s = sweep::run_sweep_with(&cfg, &opts).expect("cached shard");
+        // every owned cell was cold this first time around
+        assert_eq!(s.traces_cached, 0);
+        assert!(s.traces_generated > 0);
+    }
+    let merge = SweepRunOptions {
+        workers: 2,
+        checkpoint: vec![ck0.clone(), ck1.clone()],
+        resume: true,
+        trace_cache: Some(cache.clone()),
+        ..Default::default()
+    };
+    let merged = sweep::run_sweep_with(&cfg, &merge).expect("merge");
+    assert_eq!(merged.resumed, 24);
+    assert_eq!(merged.executed, 0);
+    assert_eq!(
+        merged.report.to_json().to_string_pretty(),
+        direct_json,
+        "cached shard merge diverged from the direct artifact"
+    );
+    // a fresh full run over the warm cache re-executes everything from
+    // cached traces and still matches
+    let warm = SweepRunOptions {
+        workers: 4,
+        trace_cache: Some(cache.clone()),
+        ..Default::default()
+    };
+    let warm_run = sweep::run_sweep_with(&cfg, &warm).expect("warm full run");
+    assert_eq!(warm_run.traces_generated, 0);
+    assert_eq!(warm_run.traces_cached, 8); // 2 models × 4 seeds cells
+    assert_eq!(
+        warm_run.report.to_json().to_string_pretty(),
+        direct_json,
+        "warm-cache full run diverged from the direct artifact"
+    );
+    std::fs::remove_dir_all(&cache).ok();
+    std::fs::remove_file(&ck0).ok();
+    std::fs::remove_file(&ck1).ok();
 }
 
 #[test]

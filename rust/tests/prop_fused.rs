@@ -1,18 +1,18 @@
 //! Property test of the fused cell evaluator: across randomised
 //! (model, memory envelope, iteration count, seed, sampler, method
 //! set) cells, `sim::evaluate_cell` must be **bit-identical** to
-//! per-method `sim::run_scenario_on_trace` — and, for default-sampler
-//! traces, transitively to the per-scenario `sim::run_scenario` (which
-//! re-draws the trace from the seed). Cases include fast-router traces
-//! and OOM-heavy cells (budgets small enough that every iteration
-//! violates Eq. 3), so both the trained and the all-OOM aggregation
-//! paths are exercised.
+//! per-method `sim::run_scenario_on_trace` — and transitively to the
+//! per-scenario `sim::run_scenario_sampled` under the same sampler
+//! (which re-draws the trace from the seed). Cases cover both router
+//! samplers and OOM-heavy cells (budgets small enough that every
+//! iteration violates Eq. 3), so both the trained and the all-OOM
+//! aggregation paths are exercised.
 
 use memfine::config::{model_i, model_ii, paper_run, Method, GB};
 use memfine::prop::{assert_prop, Gen};
 use memfine::router::GatingSim;
-use memfine::sim::{evaluate_cell, run_scenario, run_scenario_on_trace, RunSummary};
-use memfine::trace::SharedRoutingTrace;
+use memfine::sim::{evaluate_cell, run_scenario_on_trace, run_scenario_sampled, RunSummary};
+use memfine::trace::{RouterSampler, SharedRoutingTrace};
 use memfine::util::rng::Rng;
 
 /// One randomised paired-comparison cell.
@@ -110,14 +110,18 @@ fn prop_fused_cell_bit_identical_to_reference_paths() {
                     return Err(format!("chunk-mean bits differ for {method:?}"));
                 }
             }
-            // default-sampler traces close the loop to the per-scenario
-            // reference (which re-draws the same trace from the seed)
-            if !case.fast_router {
-                let direct = run_scenario(&base, method.clone(), case.seed)
-                    .map_err(|e| format!("run_scenario failed: {e}"))?;
-                if outcome.summary != RunSummary::of(&direct) {
-                    return Err(format!("fused != per-scenario for {method:?}"));
-                }
+            // close the loop to the per-scenario reference (which
+            // re-draws the same trace from the seed) under whichever
+            // sampler this case drew with
+            let direct = run_scenario_sampled(
+                &base,
+                method.clone(),
+                case.seed,
+                RouterSampler::from_fast_flag(case.fast_router),
+            )
+            .map_err(|e| format!("run_scenario_sampled failed: {e}"))?;
+            if outcome.summary != RunSummary::of(&direct) {
+                return Err(format!("fused != per-scenario for {method:?}"));
             }
         }
         Ok(())

@@ -1,0 +1,147 @@
+//! Property tests for the sampler edge cases the chunked batch
+//! kernels and the trace store must survive:
+//!
+//! * `gamma_batch` with alpha < 1 (the Marsaglia–Tsang boost path —
+//!   the routing regime's concentrations live here) must replay the
+//!   per-draw `gamma` stream bit for bit, including the generator's
+//!   end state;
+//! * `multinomial_split` with `n = 0` trials and with `k = 1`
+//!   categories must match the sequential sampler exactly (counts and
+//!   stream consumption);
+//! * empty-iteration traces (`iterations = 0`) must round-trip the
+//!   on-disk trace store bit-exactly.
+
+use memfine::config::{model_i, paper_parallel};
+use memfine::prop::{assert_prop, Gen, PairGen, U64Range};
+use memfine::router::GatingSim;
+use memfine::trace::{trace_key, SharedRoutingTrace, TraceProvenance, TraceStore};
+use memfine::util::rng::Rng;
+
+/// Shapes strictly below 1 (mapped from a u64 grid): the boost path.
+#[derive(Clone, Debug)]
+struct SubOneShape;
+
+impl Gen for SubOneShape {
+    type Value = (u64, f64);
+    fn generate(&self, rng: &mut Rng) -> (u64, f64) {
+        let seed = rng.below(1 << 20);
+        // alpha in (0, 1): from 1e-3 (deep-layer chaos) up to 0.999
+        let alpha = (1 + rng.below(999)) as f64 / 1000.0;
+        (seed, alpha)
+    }
+}
+
+#[test]
+fn prop_gamma_batch_sub_one_alpha_bit_identical() {
+    assert_prop(211, 40, &SubOneShape, |&(seed, alpha): &(u64, f64)| {
+        if !(0.0..1.0).contains(&alpha) || alpha <= 0.0 {
+            return Err(format!("generator produced alpha {alpha}"));
+        }
+        // odd length exercises the chunk tail
+        let n = 257;
+        let mut a = Rng::new(seed);
+        let per_draw: Vec<f64> = (0..n).map(|_| a.gamma(alpha)).collect();
+        let mut b = Rng::new(seed);
+        let mut batched = vec![0.0; n];
+        b.gamma_batch(alpha, &mut batched);
+        for (i, (x, y)) in per_draw.iter().zip(&batched).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!(
+                    "alpha {alpha} seed {seed} draw {i}: {x} != {y}"
+                ));
+            }
+        }
+        if a.next_u64() != b.next_u64() {
+            return Err(format!("alpha {alpha} seed {seed}: end states differ"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multinomial_split_zero_trials_and_single_category() {
+    // n = 0 over any category count: all-zero counts, no stream
+    // consumption difference vs the sequential sampler.
+    assert_prop(
+        223,
+        40,
+        &PairGen(U64Range(0, 1 << 20), U64Range(1, 64)),
+        |&(seed, k): &(u64, u64)| {
+            let probs = Rng::new(seed).dirichlet_symmetric(0.5, k as usize);
+            let mut a = Rng::new(seed ^ 0xF00D);
+            let mut b = Rng::new(seed ^ 0xF00D);
+            let split = a.multinomial_split(0, &probs);
+            let seq = b.multinomial(0, &probs);
+            if split != seq || split.iter().sum::<u64>() != 0 {
+                return Err(format!("k {k}: zero-trial draws differ: {split:?} vs {seq:?}"));
+            }
+            if a.next_u64() != b.next_u64() {
+                return Err(format!("k {k}: zero-trial stream consumption differs"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_multinomial_split_one_category() {
+    // k = 1 over any trial count: everything lands on the only
+    // category, bit-identically to the sequential sampler, with no
+    // generator words consumed by either.
+    assert_prop(
+        227,
+        40,
+        &PairGen(U64Range(0, 17), U64Range(0, 1 << 20)),
+        |&(seed, n): &(u64, u64)| {
+            let probs = [1.0f64];
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let split = a.multinomial_split(n, &probs);
+            let seq = b.multinomial(n, &probs);
+            if split != vec![n] || seq != vec![n] {
+                return Err(format!("n {n}: single-category counts wrong: {split:?} / {seq:?}"));
+            }
+            if a.next_u64() != b.next_u64() {
+                return Err(format!("n {n}: single-category consumption differs"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_empty_iteration_traces_roundtrip_the_store() {
+    let mut dir = std::env::temp_dir();
+    dir.push(format!("memfine-prop-store-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = TraceStore::open(&dir).unwrap();
+    assert_prop(229, 20, &U64Range(0, 1 << 20), |&seed: &u64| {
+        let gating = GatingSim::new(model_i(), paper_parallel(), seed);
+        let trace = SharedRoutingTrace::generate(&gating, 0);
+        if !trace.records.is_empty() {
+            return Err("empty-iteration trace drew records".into());
+        }
+        let key = trace_key(
+            &trace.model,
+            &trace.parallel,
+            seed,
+            0,
+            &TraceProvenance::default(),
+        );
+        store.save(&key, &trace).map_err(|e| format!("save: {e}"))?;
+        let back = store
+            .load(&key, &trace.model, &trace.parallel, seed, 0)
+            .ok_or("empty trace missed the cache")?;
+        if back.records.is_empty() && back.seed == seed && back.iterations == 0 {
+            Ok(())
+        } else {
+            Err(format!(
+                "roundtrip mutated the trace: seed {} iterations {} records {}",
+                back.seed,
+                back.iterations,
+                back.records.len()
+            ))
+        }
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
