@@ -18,9 +18,12 @@
 //! through the store, byte-identity re-asserted), the chunked batch
 //! samplers against their scalar per-draw paths (gamma and normal —
 //! pinned bit-identical elsewhere, measured here), the multinomial
-//! samplers on paper-scale draws, and the method-evaluation stage in
-//! isolation (fused vs unfused on pre-drawn traces), and re-asserts
-//! the determinism contract (every worker count and every mode must
+//! samplers on paper-scale draws, the method-evaluation stage in
+//! isolation (fused vs unfused on pre-drawn traces), and the pool
+//! runtime in isolation (shared injector vs work-stealing on a
+//! heavy-tailed synthetic grid — `steal_*` and `tail_latency_*` rows
+//! per worker count), and re-asserts the determinism contract (every
+//! worker count, every mode, and every pool/channel/pinning knob must
 //! emit the serial legacy run's exact bytes).
 //!
 //! Writes `BENCH_sweep.json` (scenarios/sec per mode × worker count,
@@ -212,6 +215,71 @@ fn batch_sampler_micro() -> (f64, f64, f64, f64) {
     (gamma_scalar, gamma_batch, normal_scalar, normal_batch)
 }
 
+/// One synthetic pool job: a deterministic xorshift spin whose cost
+/// is heavily skewed (every 8th job ~50× the base) so stragglers
+/// dominate unless the runtime rebalances.
+fn pool_job(x: u64) -> u64 {
+    let spins = if x % 8 == 0 { 500_000 } else { 10_000 };
+    let mut acc = x.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+    for _ in 0..spins {
+        acc ^= acc << 13;
+        acc ^= acc >> 7;
+        acc ^= acc << 17;
+    }
+    acc
+}
+
+/// The pool runtime in isolation: 256 skewed synthetic jobs, shared
+/// injector vs work-stealing at each worker count. Output equality
+/// with the serial run is asserted; the emitted `pool_*`, `steal_*`
+/// and `tail_latency_*` rows track steal traffic and straggler
+/// overhead PR-over-PR.
+fn pool_stage_micro(rows: &mut Vec<(String, Value)>) {
+    use memfine::sweep::pool::{self, PoolConfig, Schedule};
+    let items: Vec<u64> = (0..256).collect();
+    let serial_cfg = PoolConfig::with_workers(1);
+    let (serial, _) =
+        pool::parallel_map_indexed_with(items.clone(), &serial_cfg, |_, x| pool_job(x));
+    let mut table = BenchReport::new(
+        "pool runtime — injector vs stealing, 256 skewed jobs (every 8th ~50x)",
+        &["schedule", "workers", "wall clock", "steals ok/try", "tail latency"],
+    );
+    for &schedule in &[Schedule::Injector, Schedule::Stealing] {
+        for &workers in &WORKER_COUNTS {
+            let cfg = PoolConfig { workers, schedule, ..PoolConfig::default() };
+            let (out, stats) =
+                pool::parallel_map_indexed_with(items.clone(), &cfg, |_, x| pool_job(x));
+            assert_eq!(
+                out,
+                serial,
+                "pool {}/{workers}w diverged from the serial outputs",
+                schedule.tag()
+            );
+            let tag = stats.schedule.tag();
+            let wall_s = stats.wall_ns as f64 / 1e9;
+            let tail_s = stats.tail_latency_ns() as f64 / 1e9;
+            rows.push((format!("pool_{tag}_{workers}w_wall_s"), json::num(wall_s)));
+            rows.push((
+                format!("steal_attempts_{tag}_{workers}w"),
+                json::num(stats.steals_attempted() as f64),
+            ));
+            rows.push((
+                format!("steal_successes_{tag}_{workers}w"),
+                json::num(stats.steals_succeeded() as f64),
+            ));
+            rows.push((format!("tail_latency_{tag}_{workers}w_s"), json::num(tail_s)));
+            table.row(&[
+                tag.to_string(),
+                workers.to_string(),
+                fmt_time(wall_s),
+                format!("{}/{}", stats.steals_succeeded(), stats.steals_attempted()),
+                fmt_time(tail_s),
+            ]);
+        }
+    }
+    table.print();
+}
+
 fn multinomial_micro() -> (f64, f64) {
     // paper-scale draw: 2^20 token copies over 256 experts with the
     // deep-layer chaos-peak popularity shape
@@ -364,6 +432,36 @@ fn main() {
     }
     report.print();
 
+    // The pool knobs are execution-only: the fused sweep under the old
+    // shared-injector schedule, the unbounded std channel, and core
+    // pinning must all reproduce the legacy bytes exactly.
+    for (pool, channel, pin_cores) in [
+        (sweep::Schedule::Injector, sweep::ChannelKind::Bounded, false),
+        (sweep::Schedule::Stealing, sweep::ChannelKind::StdMpsc, true),
+    ] {
+        let opts = SweepRunOptions {
+            workers: 8,
+            pool,
+            channel,
+            pin_cores,
+            ..Default::default()
+        };
+        let jsn = sweep::run_sweep_with(&cfg, &opts)
+            .expect("pool-knob sweep")
+            .report
+            .to_json()
+            .to_string_pretty();
+        assert_eq!(
+            jsn,
+            legacy_json,
+            "pool {}/{} pin={pin_cores} diverged from the legacy bytes",
+            pool.tag(),
+            channel.tag()
+        );
+    }
+
+    pool_stage_micro(&mut artifact_rows);
+
     let (seq_dps, split_dps) = multinomial_micro();
     let (gamma_scalar_dps, gamma_batch_dps, normal_scalar_dps, normal_batch_dps) =
         batch_sampler_micro();
@@ -460,6 +558,7 @@ fn main() {
             "orchestrated_overhead_vs_inprocess",
             json::num(orchestrated_2p_s / fused_2w_s),
         ),
+        ("determinism_pool_knobs", Value::Bool(true)),
         ("determinism_legacy_vs_shared", Value::Bool(true)),
         ("determinism_fused_vs_unfused", Value::Bool(true)),
         ("determinism_orchestrated_vs_inprocess", Value::Bool(true)),

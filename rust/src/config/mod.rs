@@ -786,6 +786,10 @@ pub struct LaunchConfig {
     /// hash and trace-cache key). Defaults to the splitting
     /// multinomial; `--router seq` reproduces pre-flip campaigns.
     pub sampler: RouterSampler,
+    /// Pin each shard's worker threads to cores (`--pin-cores`,
+    /// forwarded to every child sweep). Execution-only: never part of
+    /// any scenario identity, never perturbs artifact bytes.
+    pub pin_cores: bool,
 }
 
 impl LaunchConfig {
@@ -801,6 +805,7 @@ impl LaunchConfig {
             poll_ms: 100,
             max_retries: 2,
             sampler: RouterSampler::default(),
+            pin_cores: false,
         }
     }
 
@@ -846,6 +851,7 @@ impl LaunchConfig {
             ("poll_ms", json::num(self.poll_ms as f64)),
             ("max_retries", json::num(self.max_retries as f64)),
             ("router", json::s(self.sampler.tag().to_string())),
+            ("pin_cores", Value::Bool(self.pin_cores)),
         ])
     }
 
@@ -874,6 +880,8 @@ impl LaunchConfig {
             poll_ms: v.req_u64("poll_ms")?,
             max_retries: v.req_u64("max_retries")?,
             sampler,
+            // absent in pre-pinning launch.json files — default off
+            pin_cores: v.get("pin_cores").and_then(Value::as_bool).unwrap_or(false),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1135,12 +1143,20 @@ mod tests {
         cfg.procs = 3;
         cfg.stall_timeout_ms = 5_000;
         cfg.sampler = RouterSampler::Sequential;
+        cfg.pin_cores = true;
         cfg.validate().unwrap();
         let back = LaunchConfig::from_json(
             &crate::json::parse(&cfg.to_json().to_string_pretty()).unwrap(),
         )
         .unwrap();
         assert_eq!(cfg, back);
+        // pre-pinning launch.json files carry no "pin_cores" — absent
+        // means off, not a parse error
+        let mut doc = cfg.to_json();
+        if let crate::json::Value::Obj(map) = &mut doc {
+            map.remove("pin_cores");
+        }
+        assert!(!LaunchConfig::from_json(&doc).unwrap().pin_cores);
         // defaults are sane and validate; the sampler default is the
         // post-flip splitting multinomial
         let d = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));

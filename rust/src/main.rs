@@ -9,6 +9,8 @@
 //!                 [--workers N] [--out FILE] [--checkpoint F[,F...]]
 //!                 [--resume] [--shard i/n] [--limit N] [--router seq|split]
 //!                 [--trace-cache DIR] [--unfused] [--config FILE]
+//!                 [--pool stealing|injector] [--channel bounded|std]
+//!                 [--pin-cores] [--pool-stats]
 //!                 parallel scenario grid, resumable/shardable
 //! memfine launch  [grid flags | --config FILE] [--procs N] [--dir DIR]
 //!                 [--stall-timeout-ms N] [--poll-ms N] [--retries N]
@@ -41,6 +43,7 @@ const VALUE_OPTS: &[&str] = &[
     "budget-mb", "bins", "chunk", "models", "methods", "seeds", "workers",
     "out", "checkpoint", "shard", "limit", "config", "procs", "dir",
     "stall-timeout-ms", "poll-ms", "retries", "router", "trace-cache",
+    "pool", "channel",
 ];
 
 fn main() {
@@ -113,6 +116,10 @@ fn print_usage() {
                 OptSpec { name: "limit", help: "execute at most N sweep scenarios this run", takes_value: true, default: None },
                 OptSpec { name: "router", help: "routing sampler: split (binomial-splitting, fast) or seq (pre-flip sequential; different sample, hash-distinct)", takes_value: true, default: Some("split") },
                 OptSpec { name: "trace-cache", help: "sweep: on-disk routed-trace cache dir (launch manages its own under --dir)", takes_value: true, default: None },
+                OptSpec { name: "pool", help: "sweep worker schedule: stealing (per-worker deques) or injector (shared queue); never changes artifact bytes", takes_value: true, default: Some("stealing") },
+                OptSpec { name: "channel", help: "sweep result channel: bounded (backpressure, ~4x workers) or std (unbounded mpsc)", takes_value: true, default: Some("bounded") },
+                OptSpec { name: "pin-cores", help: "sweep/launch: best-effort pin worker k to core k (Linux sched_setaffinity; no-op elsewhere)", takes_value: false, default: None },
+                OptSpec { name: "pool-stats", help: "sweep: print the per-worker jobs/steals/depth table to stderr", takes_value: false, default: None },
                 OptSpec { name: "fast-router", help: "deprecated alias for --router split (the default since the sampler flip)", takes_value: false, default: None },
                 OptSpec { name: "unfused", help: "evaluate each method as its own pass over the shared trace (pre-fusion A/B path; identical artifacts)", takes_value: false, default: None },
                 OptSpec { name: "config", help: "JSON grid/launch spec file (sweep/launch/checkpoint audit)", takes_value: true, default: None },
@@ -358,6 +365,9 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         sampler,
         unfused: args.has_flag("unfused"),
         trace_cache: args.get("trace-cache").map(std::path::PathBuf::from),
+        pool: memfine::sweep::Schedule::parse(&args.get_or("pool", "stealing"))?,
+        channel: memfine::sweep::ChannelKind::parse(&args.get_or("channel", "bounded"))?,
+        pin_cores: args.has_flag("pin-cores"),
     };
     eprintln!(
         "sweep: {} scenarios{}{}",
@@ -387,6 +397,20 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         eprintln!(
             "sweep: trace cache: {} cell(s) reused, {} generated",
             summary.traces_cached, summary.traces_generated
+        );
+    }
+    // Execution facts only — PoolStats never enter the JSON artifact.
+    if args.has_flag("pool-stats") {
+        eprint!("{}", memfine::sweep::report::render_pool_stats(&summary.pool));
+    } else {
+        eprintln!(
+            "sweep: pool {}/{}: {} worker(s), {}/{} steals, tail latency {:.1} ms",
+            summary.pool.schedule.tag(),
+            summary.pool.channel.tag(),
+            summary.pool.workers.len(),
+            summary.pool.steals_succeeded(),
+            summary.pool.steals_attempted(),
+            summary.pool.tail_latency_ns() as f64 / 1e6,
         );
     }
     let report = summary.report;
@@ -438,6 +462,9 @@ fn cmd_launch(args: &Args) -> memfine::Result<()> {
     }
     if let Some(sampler) = sampler_flag(args)? {
         cfg.sampler = sampler;
+    }
+    if args.has_flag("pin-cores") {
+        cfg.pin_cores = true;
     }
 
     let opts = LaunchOptions {

@@ -74,11 +74,10 @@ pub fn merge_and_finish(
         workers: 0,
         checkpoint: paths.clone(),
         resume: true,
-        shard: None,
-        limit: None,
         sampler: cfg.sampler,
-        unfused: false,
         trace_cache: Some(dir.join("trace-cache")),
+        pin_cores: cfg.pin_cores,
+        ..Default::default()
     };
     let summary = sweep::run_sweep_with(&cfg.sweep, &opts)?;
 

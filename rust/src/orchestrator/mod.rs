@@ -217,6 +217,7 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
 
     let workers = cfg.workers_per_proc;
     let sampler = cfg.sampler;
+    let pin_cores = cfg.pin_cores;
     // One trace cache per campaign dir: every shard process (and the
     // merge catch-up) shares it, so a cell's routed stream is drawn at
     // most once per campaign — and relaunches/topology changes reuse
@@ -256,8 +257,13 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
             .arg("--trace-cache")
             .arg(&trace_cache)
             .arg("--out")
-            .arg("-")
-            .stdin(Stdio::null())
+            .arg("-");
+        if pin_cores {
+            // execution-only: pinned and unpinned shards produce the
+            // same checkpoint bytes, this just steadies throughput
+            cmd.arg("--pin-cores");
+        }
+        cmd.stdin(Stdio::null())
             .stdout(Stdio::null())
             .stderr(Stdio::from(log));
         cmd.spawn().map_err(|e| {

@@ -338,7 +338,19 @@ pub fn write_compacted(set: &CheckpointSet, output: &Path) -> Result<CompactStat
     let mut tmp_name = output.as_os_str().to_os_string();
     tmp_name.push(".tmp");
     let tmp = PathBuf::from(tmp_name);
-    {
+    // a compaction killed between create and rename leaves `<output>.tmp`
+    // behind; a stale tmp (possibly from a *different* set) must not
+    // survive into — or collide with — this run, so drop it first and
+    // clean up again on every error path below
+    if tmp.exists() {
+        std::fs::remove_file(&tmp).map_err(|e| {
+            Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("remove stale {}: {e}", tmp.display()),
+            ))
+        })?;
+    }
+    let write = (|| -> Result<()> {
         // the compacted file re-records the inputs' provenance header
         // when they agree on one (legacy/conflicting inputs compact to
         // a headerless file rather than inventing a provenance)
@@ -346,13 +358,19 @@ pub fn write_compacted(set: &CheckpointSet, output: &Path) -> Result<CompactStat
         for (hash, result) in set.iter() {
             w.record(hash, result)?;
         }
+        Ok(())
+    })();
+    if let Err(e) = write {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
     }
-    std::fs::rename(&tmp, output).map_err(|e| {
-        Error::Io(std::io::Error::new(
+    if let Err(e) = std::fs::rename(&tmp, output) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(Error::Io(std::io::Error::new(
             e.kind(),
             format!("rename {} -> {}: {e}", tmp.display(), output.display()),
-        ))
-    })?;
+        )));
+    }
     Ok(CompactStats {
         files_in: set.loaded_files,
         lines_in: set.total_lines,
@@ -916,6 +934,57 @@ mod tests {
         let missing = tmp_path("compact-missing");
         let out = tmp_path("compact-missing-out");
         assert!(compact(&[missing], &out).is_err());
+    }
+
+    #[test]
+    fn compact_survives_a_stale_tmp_from_a_killed_run() {
+        let a = tmp_path("compact-stale-in");
+        let out = tmp_path("compact-stale-out");
+        let mut tmp = out.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        let run = paper_run(model_i(), Method::FullRecompute);
+        let h = scenario_hash(&run, &seq());
+        {
+            let mut w = CheckpointWriter::create(&a, Some(&seq())).unwrap();
+            w.record(&h, &sample_result(0, 7)).unwrap();
+        }
+        // a compaction of some *other* set died between create and
+        // rename, stranding garbage at `<output>.tmp` — the next
+        // compact must neither fail on it nor let it leak into the
+        // output
+        std::fs::write(&tmp, b"{\"hash\":\"dead-stale-garbage\n").unwrap();
+        let stats = compact(&[a.clone()], &out).unwrap();
+        assert_eq!(stats.records_out, 1);
+        assert!(!tmp.exists(), "stale tmp must be consumed by the rename");
+        let set = CheckpointSet::load(std::slice::from_ref(&out)).unwrap();
+        assert_eq!(set.len(), 1);
+        assert_eq!(set.skipped_lines, 0);
+        for p in [&a, &out] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn compact_cleans_its_tmp_when_rename_fails() {
+        let a = tmp_path("compact-renamefail-in");
+        let out = tmp_path("compact-renamefail-out");
+        let mut tmp = out.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        let run = paper_run(model_i(), Method::FullRecompute);
+        let h = scenario_hash(&run, &seq());
+        {
+            let mut w = CheckpointWriter::create(&a, Some(&seq())).unwrap();
+            w.record(&h, &sample_result(0, 7)).unwrap();
+        }
+        // renaming a file onto a non-empty directory fails on every
+        // platform we run on, forcing the rename error path
+        std::fs::create_dir_all(out.join("occupied")).unwrap();
+        assert!(compact(&[a.clone()], &out).is_err());
+        assert!(!tmp.exists(), "failed compact must not leak its tmp");
+        std::fs::remove_dir_all(&out).ok();
+        std::fs::remove_file(&a).ok();
     }
 
     #[test]

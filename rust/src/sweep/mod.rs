@@ -34,8 +34,10 @@
 //! bytes — depends only on the `SweepConfig` and the router `sampler`
 //! choice (default: the splitting multinomial; the sequential sampler
 //! remains selectable and hash-distinct). Worker count, thread
-//! scheduling, shard splits, kill/resume points, trace-cache state,
-//! and checkpoint merge order cannot perturb it, because
+//! scheduling — including the pool's work-stealing schedule, channel
+//! backend, and core pinning ([`pool::PoolConfig`]) — shard splits,
+//! kill/resume points, trace-cache state, and checkpoint merge order
+//! cannot perturb it, because
 //!
 //! 1. every scenario derives its RNG streams purely from its own
 //!    config/seed (no shared mutable state, nothing drawn from a
@@ -62,7 +64,10 @@ pub mod pool;
 pub mod report;
 
 pub use grid::{expand, expand_cells, Scenario, TraceCell};
-pub use pool::{parallel_for_each_indexed, parallel_map_indexed};
+pub use pool::{
+    parallel_for_each_indexed, parallel_map_indexed, ChannelKind, PoolConfig, PoolStats,
+    Schedule, WorkerStats,
+};
 pub use report::{CellStats, ScenarioResult, SweepReducer, SweepReport};
 
 use std::path::PathBuf;
@@ -127,6 +132,16 @@ pub struct SweepRunOptions {
     /// campaign over the same (model, seed) axes. Execution-only —
     /// warm and cold runs are pinned byte-identical.
     pub trace_cache: Option<PathBuf>,
+    /// Worker-pool schedule: work stealing (default) or the legacy
+    /// shared injector, kept as the A/B reference. Execution-only —
+    /// the chaos tests pin byte-identity across both.
+    pub pool: pool::Schedule,
+    /// Result-channel backend: bounded backpressure (default, ~4×
+    /// workers) or unbounded `std::sync::mpsc`. Execution-only.
+    pub channel: pool::ChannelKind,
+    /// Best-effort pin of worker `k` to core `k % cores` (Linux
+    /// `sched_setaffinity`; no-op elsewhere). Execution-only.
+    pub pin_cores: bool,
 }
 
 /// What a sweep invocation did, plus the report it produced.
@@ -150,6 +165,9 @@ pub struct SweepRunSummary {
     pub traces_generated: usize,
     /// Trace cells satisfied from the on-disk trace cache.
     pub traces_cached: usize,
+    /// What the worker pool did (jobs/steals/queue depths per worker).
+    /// Execution facts only — never folded into the report artifact.
+    pub pool: pool::PoolStats,
 }
 
 /// One worker job: the still-to-run scenarios of a trace cell, with
@@ -349,9 +367,16 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
     let store_ref = store.as_ref();
     let mut traces_generated = 0usize;
     let mut traces_cached = 0usize;
-    pool::parallel_for_each_indexed(
-        work,
+    let pool_cfg = pool::PoolConfig {
         workers,
+        schedule: opts.pool,
+        channel: opts.channel,
+        pin_cores: opts.pin_cores,
+        ..pool::PoolConfig::default()
+    };
+    let pool_stats = pool::parallel_for_each_indexed_with(
+        work,
+        &pool_cfg,
         |_, w| run_cell(w, sampler, unfused, store_ref),
         |_, res| match res {
             Ok((rows, cache_hit)) => {
@@ -389,6 +414,7 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
         skipped_checkpoint_lines: done.skipped_lines,
         traces_generated,
         traces_cached,
+        pool: pool_stats,
     })
 }
 
@@ -465,6 +491,55 @@ mod tests {
             a.to_json().to_string_pretty(),
             b.to_json().to_string_pretty()
         );
+    }
+
+    #[test]
+    fn pool_schedule_channel_and_pinning_do_not_change_bytes() {
+        // The stealing runtime vs the legacy injector, bounded vs
+        // unbounded channel, pinned vs unpinned — every combination
+        // must emit the serial run's exact bytes (these are execution
+        // knobs; the artifact depends only on the grid + sampler).
+        let cfg = tiny_grid();
+        let serial = run_sweep(&cfg, 1).unwrap().to_json().to_string_pretty();
+        for schedule in [pool::Schedule::Stealing, pool::Schedule::Injector] {
+            for channel in [pool::ChannelKind::Bounded, pool::ChannelKind::StdMpsc] {
+                for pin_cores in [false, true] {
+                    let opts = SweepRunOptions {
+                        workers: 4,
+                        pool: schedule,
+                        channel,
+                        pin_cores,
+                        ..Default::default()
+                    };
+                    let summary = run_sweep_with(&cfg, &opts).unwrap();
+                    let label = format!(
+                        "schedule={} channel={} pin={pin_cores}",
+                        schedule.tag(),
+                        channel.tag()
+                    );
+                    assert_eq!(
+                        serial,
+                        summary.report.to_json().to_string_pretty(),
+                        "{label}"
+                    );
+                    assert_eq!(summary.pool.schedule, schedule, "{label}");
+                    assert_eq!(summary.pool.jobs_total() as usize, 2, "{label}"); // 2 cells
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_summary_carries_pool_stats() {
+        let summary = run_sweep_with(
+            &tiny_grid(),
+            &SweepRunOptions { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        // 2 (model, seed) cells = 2 pool jobs over 2 workers
+        assert_eq!(summary.pool.jobs_total(), 2);
+        assert_eq!(summary.pool.workers.len(), 2);
+        assert!(summary.pool.wall_ns > 0);
     }
 
     #[test]

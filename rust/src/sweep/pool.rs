@@ -1,34 +1,430 @@
 //! Deterministic worker pool for embarrassingly-parallel scenario
-//! grids (the structured-parallelism idiom of ppl's `ThreadPool`,
-//! reduced to std): a shared injector queue that idle workers pull
-//! from, with results flowing back to the caller over an `mpsc`
-//! channel tagged by job index.
+//! grids — a work-stealing runtime in the FastFlow style of ppl's
+//! `thread_pool`/`channel` split, reduced to std.
 //!
-//! Scheduling order is nondeterministic by design (whichever worker is
-//! free takes the next job), but the *output* is not: every job
-//! carries its index, jobs are pure functions of their input, and the
-//! consumer keys everything by that index — so any index-keyed
-//! reduction is bit-identical for any worker count. The sweep engine's
-//! determinism guarantee rests on exactly this property.
+//! **Scheduling** ([`Schedule`]): the default is per-worker local
+//! deques seeded round-robin from the grid. Owners pop their own deque
+//! LIFO (the hot tail stays local); an idle worker steals FIFO (the
+//! oldest, coldest job) from a randomized victim, backing off
+//! exponentially while the whole pool is out of work. The pre-stealing
+//! design — one shared injector queue every worker pulls from — stays
+//! selectable as the A/B reference ([`Schedule::Injector`]).
+//!
+//! **Result transport** ([`ResultChannel`]): finished results flow
+//! back to a consumer on the caller's thread through a pluggable
+//! backend. The default is an in-tree **bounded** Mutex+Condvar
+//! channel sized ~4× the worker count, so a slow consumer (checkpoint
+//! append + flush per scenario) backpressures the workers instead of
+//! buffering the whole grid in memory; `std::sync::mpsc` (unbounded,
+//! the original behaviour) remains selectable.
+//!
+//! Scheduling order is nondeterministic by design — stealing makes it
+//! *more* so — but the *output* is not: every job carries its index,
+//! jobs are pure functions of their input, and the consumer keys
+//! everything by that index, so any index-keyed reduction is
+//! bit-identical for any worker count, schedule, channel backend, or
+//! core-pinning choice. The sweep engine's determinism guarantee rests
+//! on exactly this property, and the chaos tests below attack it with
+//! forced steal storms.
 //!
 //! Two entry points: [`parallel_for_each_indexed`] streams each result
 //! to a caller-side consumer as it lands (the million-scenario path —
 //! nothing is retained in the pool), and [`parallel_map_indexed`]
-//! collects into an input-ordered `Vec` on top of it.
+//! collects into an input-ordered `Vec` on top of it. The `_with`
+//! variants take a full [`PoolConfig`] and surface [`PoolStats`]
+//! (per-worker jobs, steal counts, queue depths, busy time) — which
+//! are execution facts and must NEVER be folded into sweep artifacts.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-/// Run `f` over `items` on `workers` threads, streaming every result
-/// to `consume` on the **caller's thread** as it arrives. `f` receives
-/// `(index, item)`; `consume` receives `(index, result)` in completion
-/// order, which is nondeterministic for `workers > 1` — consumers must
-/// key on the index (the sweep reducer folds by grid index for exactly
-/// this reason). With `workers <= 1` the loop runs inline in input
-/// order with no threads spawned; serial and parallel deliver the same
-/// (index, result) multiset.
-pub fn parallel_for_each_indexed<T, R, F, C>(items: Vec<T>, workers: usize, f: F, mut consume: C)
+use crate::error::{Error, Result};
+
+/// How jobs are distributed over the worker threads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Schedule {
+    /// Per-worker deques seeded round-robin; owners pop LIFO, idle
+    /// workers steal FIFO from randomized victims (the default).
+    #[default]
+    Stealing,
+    /// The pre-stealing design: one shared injector queue every worker
+    /// pulls from. Kept selectable as the A/B reference the stealing
+    /// runtime is pinned byte-identical against.
+    Injector,
+}
+
+impl Schedule {
+    pub fn parse(tag: &str) -> Result<Self> {
+        match tag {
+            "stealing" => Ok(Schedule::Stealing),
+            "injector" => Ok(Schedule::Injector),
+            other => Err(Error::Cli(format!(
+                "unknown pool schedule '{other}' (stealing|injector)"
+            ))),
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Schedule::Stealing => "stealing",
+            Schedule::Injector => "injector",
+        }
+    }
+}
+
+/// Which backend carries finished results back to the caller thread.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ChannelKind {
+    /// In-tree bounded channel (capacity ~4× workers unless
+    /// overridden): producers block when the consumer falls behind, so
+    /// finished results can never pile up unboundedly (the default).
+    #[default]
+    Bounded,
+    /// `std::sync::mpsc` — unbounded, never blocks producers (the
+    /// pre-backpressure behaviour, kept selectable for A/B).
+    StdMpsc,
+}
+
+impl ChannelKind {
+    pub fn parse(tag: &str) -> Result<Self> {
+        match tag {
+            "bounded" => Ok(ChannelKind::Bounded),
+            "std" | "mpsc" => Ok(ChannelKind::StdMpsc),
+            other => Err(Error::Cli(format!(
+                "unknown channel backend '{other}' (bounded|std)"
+            ))),
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ChannelKind::Bounded => "bounded",
+            ChannelKind::StdMpsc => "std",
+        }
+    }
+}
+
+/// Full execution spec of one pool invocation. Everything here is
+/// execution-only: artifact bytes must come out identical for any
+/// choice of these knobs (the chaos tests pin it).
+#[derive(Clone, Debug, Default)]
+pub struct PoolConfig {
+    /// Worker threads (clamped to `[1, jobs]`; 0 behaves as 1).
+    pub workers: usize,
+    pub schedule: Schedule,
+    pub channel: ChannelKind,
+    /// Bounded-channel capacity (0 = auto: 4 × workers).
+    pub channel_capacity: usize,
+    /// Best-effort pin of worker `k` to core `k % cores` (Linux
+    /// `sched_setaffinity`; a no-op elsewhere). A failed pin is a
+    /// performance hint missed, never an error.
+    pub pin_cores: bool,
+    /// Chaos knob for the determinism tests: seed the entire grid into
+    /// worker 0's deque, so every other worker can only make progress
+    /// by stealing (a forced steal storm).
+    pub steal_storm: bool,
+}
+
+impl PoolConfig {
+    /// The production defaults for `workers` threads.
+    pub fn with_workers(workers: usize) -> Self {
+        PoolConfig { workers, ..PoolConfig::default() }
+    }
+}
+
+/// Per-worker execution counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Jobs this worker executed.
+    pub jobs: u64,
+    /// Steal attempts: times a victim's deque was probed (stealing
+    /// schedule only).
+    pub steals_attempted: u64,
+    /// Steal attempts that yielded a job.
+    pub steals_succeeded: u64,
+    /// Deepest the queue this worker popped from ever was (its own
+    /// deque under stealing; the shared injector under `Injector`).
+    pub max_queue_depth: usize,
+    /// Nanoseconds spent inside job bodies.
+    pub busy_ns: u64,
+    /// Whether this worker's core pin took effect.
+    pub pinned: bool,
+}
+
+/// What one pool invocation did — execution facts only, surfaced for
+/// stderr and bench reporting and NEVER part of sweep artifacts (the
+/// determinism contract: scheduling cannot leak into artifact bytes).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolStats {
+    pub schedule: Schedule,
+    pub channel: ChannelKind,
+    /// One entry per worker thread (a single entry for serial runs).
+    pub workers: Vec<WorkerStats>,
+    /// Wall-clock nanoseconds of the whole pool run.
+    pub wall_ns: u64,
+}
+
+impl PoolStats {
+    pub fn jobs_total(&self) -> u64 {
+        self.workers.iter().map(|w| w.jobs).sum()
+    }
+
+    pub fn steals_attempted(&self) -> u64 {
+        self.workers.iter().map(|w| w.steals_attempted).sum()
+    }
+
+    pub fn steals_succeeded(&self) -> u64 {
+        self.workers.iter().map(|w| w.steals_succeeded).sum()
+    }
+
+    pub fn pinned_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.pinned).count()
+    }
+
+    pub fn max_queue_depth(&self) -> usize {
+        self.workers.iter().map(|w| w.max_queue_depth).max().unwrap_or(0)
+    }
+
+    pub fn busy_ns_total(&self) -> u64 {
+        self.workers.iter().map(|w| w.busy_ns).sum()
+    }
+
+    /// Straggler overhead: wall clock minus the perfectly balanced
+    /// lower bound (total busy time / workers). This is the tail
+    /// latency a scheduler can actually fight — 0 means every worker
+    /// stayed busy until the last job finished.
+    pub fn tail_latency_ns(&self) -> u64 {
+        let n = self.workers.len().max(1) as u64;
+        self.wall_ns.saturating_sub(self.busy_ns_total() / n)
+    }
+}
+
+/// Result transport between the workers and the caller-side consumer —
+/// the FastFlow-style seam (ppl keeps its channel backends behind one
+/// trait for the same reason). Exactly one consumer calls `recv`; each
+/// of the N producers calls `send` any number of times and `done`
+/// exactly once (a drop guard makes that hold even under panics).
+pub trait ResultChannel<R>: Sync {
+    /// Deliver one result. May block (bounded backend, consumer
+    /// behind); silently drops the result if the consumer is gone.
+    fn send(&self, item: R);
+    /// One producer finished. After the last `done`, `recv` drains the
+    /// queue and then returns `None`.
+    fn done(&self);
+    /// Next result, blocking; `None` once all producers are done and
+    /// the queue is drained.
+    fn recv(&self) -> Option<R>;
+    /// Consumer is gone: wake any blocked producer and make further
+    /// sends no-ops, so an unwinding consumer can never deadlock the
+    /// pool.
+    fn close(&self);
+}
+
+/// Bounded MPSC built on a `Mutex<VecDeque>` and two condvars. `send`
+/// blocks while the queue is at capacity — the backpressure that keeps
+/// a slow consumer from buffering the whole grid.
+pub struct BoundedChannel<R> {
+    state: Mutex<BoundedState<R>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct BoundedState<R> {
+    queue: VecDeque<R>,
+    producers: usize,
+    closed: bool,
+}
+
+impl<R> BoundedChannel<R> {
+    pub fn new(capacity: usize, producers: usize) -> Self {
+        let capacity = capacity.max(1);
+        BoundedChannel {
+            state: Mutex::new(BoundedState {
+                queue: VecDeque::with_capacity(capacity),
+                producers,
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+}
+
+impl<R: Send> ResultChannel<R> for BoundedChannel<R> {
+    fn send(&self, item: R) {
+        let mut st = self.state.lock().unwrap();
+        while st.queue.len() >= self.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return;
+        }
+        st.queue.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+    }
+
+    fn done(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.producers -= 1;
+        let last = st.producers == 0;
+        drop(st);
+        if last {
+            self.not_empty.notify_all();
+        }
+    }
+
+    fn recv(&self) -> Option<R> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.queue.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.producers == 0 {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_full.notify_all();
+    }
+}
+
+/// `std::sync::mpsc` behind the trait: unbounded, non-blocking sends.
+/// `mpsc::Sender` is only `Sync` on newer std, so the sender lives
+/// behind a mutex with explicit producer counting — the last `done`
+/// drops it, which is what unblocks `recv`. A send after the receiver
+/// unwound simply errors into the void, matching `close`'s contract.
+pub struct StdMpscChannel<R> {
+    tx: Mutex<Option<mpsc::Sender<R>>>,
+    rx: Mutex<mpsc::Receiver<R>>,
+    producers: AtomicUsize,
+}
+
+impl<R> StdMpscChannel<R> {
+    pub fn new(producers: usize) -> Self {
+        let (tx, rx) = mpsc::channel();
+        StdMpscChannel {
+            tx: Mutex::new(Some(tx)),
+            rx: Mutex::new(rx),
+            producers: AtomicUsize::new(producers),
+        }
+    }
+}
+
+impl<R: Send> ResultChannel<R> for StdMpscChannel<R> {
+    fn send(&self, item: R) {
+        if let Some(tx) = self.tx.lock().unwrap().as_ref() {
+            tx.send(item).ok();
+        }
+    }
+
+    fn done(&self) {
+        if self.producers.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.tx.lock().unwrap().take();
+        }
+    }
+
+    fn recv(&self) -> Option<R> {
+        self.rx.lock().unwrap().recv().ok()
+    }
+
+    fn close(&self) {}
+}
+
+/// Calls `done` on drop, so a panicking job body still releases the
+/// consumer: `recv` must see the producer count reach zero even when a
+/// worker unwinds mid-job.
+struct DoneGuard<'a, R>(&'a dyn ResultChannel<R>);
+
+impl<R> Drop for DoneGuard<'_, R> {
+    fn drop(&mut self) {
+        self.0.done();
+    }
+}
+
+/// Marks the channel closed on drop: if the consumer unwinds mid-drain
+/// (a reducer invariant panic), blocked bounded-channel producers must
+/// wake and bail out instead of deadlocking the thread scope.
+struct CloseGuard<'a, R>(&'a dyn ResultChannel<R>);
+
+impl<R> Drop for CloseGuard<'_, R> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Best-effort: pin the calling thread to core `worker % cores` via
+/// raw `sched_setaffinity` (pid 0 = calling thread; the crate links no
+/// libc crate, but std itself links libc on Linux). Returns whether
+/// the pin took effect. Failure is never an error — pinning is a
+/// cache-locality hint, and the determinism contract holds either way.
+#[cfg(target_os = "linux")]
+fn pin_current_thread(worker: usize) -> bool {
+    // glibc cpu_set_t: a 1024-bit mask
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; 16],
+    }
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+    let cores = std::thread::available_parallelism()
+        .map(std::num::NonZeroUsize::get)
+        .unwrap_or(1)
+        .min(16 * 64);
+    let core = worker % cores;
+    let mut set = CpuSet { bits: [0; 16] };
+    set.bits[core / 64] |= 1u64 << (core % 64);
+    unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_current_thread(_worker: usize) -> bool {
+    false
+}
+
+type JobQueue<T> = Mutex<VecDeque<(usize, T)>>;
+
+/// Run `f` over `items` on `workers` threads under the default
+/// [`PoolConfig`] (stealing schedule, bounded channel), streaming
+/// every result to `consume` on the **caller's thread** as it arrives.
+/// `f` receives `(index, item)`; `consume` receives `(index, result)`
+/// in completion order, which is nondeterministic for `workers > 1` —
+/// consumers must key on the index (the sweep reducer folds by grid
+/// index for exactly this reason). With `workers <= 1` the loop runs
+/// inline in input order with no threads spawned; serial and parallel
+/// deliver the same (index, result) multiset.
+pub fn parallel_for_each_indexed<T, R, F, C>(items: Vec<T>, workers: usize, f: F, consume: C)
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+    C: FnMut(usize, R),
+{
+    parallel_for_each_indexed_with(items, &PoolConfig::with_workers(workers), f, consume);
+}
+
+/// [`parallel_for_each_indexed`] under an explicit [`PoolConfig`],
+/// returning the run's [`PoolStats`].
+pub fn parallel_for_each_indexed_with<T, R, F, C>(
+    items: Vec<T>,
+    cfg: &PoolConfig,
+    f: F,
+    mut consume: C,
+) -> PoolStats
 where
     T: Send,
     R: Send,
@@ -36,48 +432,279 @@ where
     C: FnMut(usize, R),
 {
     let n = items.len();
+    let mut stats = PoolStats {
+        schedule: cfg.schedule,
+        channel: cfg.channel,
+        workers: Vec::new(),
+        wall_ns: 0,
+    };
     if n == 0 {
-        return;
+        return stats;
     }
-    let workers = workers.max(1).min(n);
+    let workers = cfg.workers.max(1).min(n);
+    let t0 = Instant::now();
     if workers == 1 {
+        // Inline serial path: input order, no threads, no channel.
+        let mut ws = WorkerStats { max_queue_depth: n, ..WorkerStats::default() };
         for (i, t) in items.into_iter().enumerate() {
+            let job_t0 = Instant::now();
             let r = f(i, t);
+            ws.busy_ns += job_t0.elapsed().as_nanos() as u64;
+            ws.jobs += 1;
             consume(i, r);
         }
-        return;
+        stats.workers.push(ws);
+        stats.wall_ns = t0.elapsed().as_nanos() as u64;
+        return stats;
     }
 
-    // Global injector: workers steal the next job when idle, so a slow
-    // scenario never blocks the queue behind it (dynamic load balance
-    // over a heterogeneous grid — method 1 runs cost ~2× method 3).
-    let injector: Mutex<VecDeque<(usize, T)>> =
-        Mutex::new(items.into_iter().enumerate().collect());
-    let (tx, rx) = mpsc::channel::<(usize, R)>();
-    let injector = &injector;
-    let f = &f;
+    // Channel backend behind one trait object; both candidates live on
+    // this frame so the scoped workers can borrow whichever was built.
+    let bounded;
+    let unbounded;
+    let chan: &dyn ResultChannel<(usize, R)> = match cfg.channel {
+        ChannelKind::Bounded => {
+            let cap = if cfg.channel_capacity == 0 {
+                4 * workers
+            } else {
+                cfg.channel_capacity
+            };
+            bounded = BoundedChannel::new(cap, workers);
+            &bounded
+        }
+        ChannelKind::StdMpsc => {
+            unbounded = StdMpscChannel::new(workers);
+            &unbounded
+        }
+    };
 
+    stats.workers = match cfg.schedule {
+        Schedule::Stealing => {
+            run_stealing(items, workers, cfg.pin_cores, cfg.steal_storm, chan, &f, &mut consume)
+        }
+        Schedule::Injector => run_injector(items, workers, cfg.pin_cores, chan, &f, &mut consume),
+    };
+    stats.wall_ns = t0.elapsed().as_nanos() as u64;
+    stats
+}
+
+/// The work-stealing runtime: per-worker deques (owner pops LIFO,
+/// thieves steal FIFO), randomized victim order, exponential backoff
+/// when the whole pool runs dry.
+fn run_stealing<T, R, F, C>(
+    items: Vec<T>,
+    workers: usize,
+    pin_cores: bool,
+    steal_storm: bool,
+    chan: &dyn ResultChannel<(usize, R)>,
+    f: &F,
+    consume: &mut C,
+) -> Vec<WorkerStats>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+    C: FnMut(usize, R),
+{
+    let n = items.len();
+    // Seed round-robin so every worker starts with local work — or,
+    // under the steal-storm chaos knob, everything into worker 0 so
+    // the rest can only make progress by stealing.
+    let queues: Vec<JobQueue<T>> = (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    {
+        let mut seeded: Vec<_> = queues.iter().map(|q| q.lock().unwrap()).collect();
+        for (i, t) in items.into_iter().enumerate() {
+            let dst = if steal_storm { 0 } else { i % workers };
+            seeded[dst].push_back((i, t));
+        }
+    }
+    // Termination: jobs *taken*, not completed — decremented at claim
+    // time, so a panicking job can never strand the other workers in
+    // the idle loop.
+    let remaining = AtomicUsize::new(n);
+    let queues = &queues;
+    let remaining = &remaining;
+    let mut per_worker = Vec::with_capacity(workers);
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let tx = tx.clone();
-            scope.spawn(move || loop {
-                let job = injector.lock().unwrap().pop_front();
-                match job {
-                    Some((i, t)) => {
-                        let r = f(i, t);
-                        if tx.send((i, r)).is_err() {
-                            break;
+        let handles: Vec<_> = (0..workers)
+            .map(|k| {
+                scope.spawn(move || {
+                    let _done = DoneGuard(chan);
+                    let pinned = pin_cores && pin_current_thread(k);
+                    steal_loop(k, queues, remaining, chan, f, pinned)
+                })
+            })
+            .collect();
+        let _close = CloseGuard(chan);
+        while let Some((i, r)) = chan.recv() {
+            consume(i, r);
+        }
+        for h in handles {
+            match h.join() {
+                Ok(ws) => per_worker.push(ws),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+    });
+    per_worker
+}
+
+fn steal_loop<T, R, F>(
+    k: usize,
+    queues: &[JobQueue<T>],
+    remaining: &AtomicUsize,
+    chan: &dyn ResultChannel<(usize, R)>,
+    f: &F,
+    pinned: bool,
+) -> WorkerStats
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let mut ws = WorkerStats { pinned, ..WorkerStats::default() };
+    // Deterministic per-worker xorshift for victim choice: scheduling
+    // may be as random as it likes — results are keyed by index, so
+    // none of this can reach the artifact.
+    let mut rng = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(k as u64 + 1) | 1;
+    let mut idle_rounds = 0u32;
+    loop {
+        let job = {
+            let mut q = queues[k].lock().unwrap();
+            ws.max_queue_depth = ws.max_queue_depth.max(q.len());
+            // owner end: LIFO keeps the hot tail local
+            q.pop_back()
+        };
+        let job = match job {
+            Some(j) => Some(j),
+            None => try_steal(k, queues, &mut rng, &mut ws),
+        };
+        match job {
+            Some((i, t)) => {
+                idle_rounds = 0;
+                remaining.fetch_sub(1, Ordering::AcqRel);
+                let job_t0 = Instant::now();
+                let r = f(i, t);
+                ws.busy_ns += job_t0.elapsed().as_nanos() as u64;
+                ws.jobs += 1;
+                chan.send((i, r));
+            }
+            None => {
+                if remaining.load(Ordering::Acquire) == 0 {
+                    break;
+                }
+                // Exponential backoff while out of work: spin-yield
+                // first, then sleep up to ~1 ms. Taken-but-running
+                // jobs may still be in flight elsewhere, so this loop
+                // only ends when every job has been claimed.
+                idle_rounds = (idle_rounds + 1).min(10);
+                if idle_rounds <= 3 {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(Duration::from_micros(1u64 << idle_rounds));
+                }
+            }
+        }
+    }
+    ws
+}
+
+/// One randomized sweep over the other workers' deques, stealing from
+/// the FIFO end (the oldest job — the one its owner would reach last).
+fn try_steal<T>(
+    k: usize,
+    queues: &[JobQueue<T>],
+    rng: &mut u64,
+    ws: &mut WorkerStats,
+) -> Option<(usize, T)> {
+    let workers = queues.len();
+    if workers <= 1 {
+        return None;
+    }
+    let start = (xorshift(rng) as usize) % workers;
+    for off in 0..workers {
+        let victim = (start + off) % workers;
+        if victim == k {
+            continue;
+        }
+        ws.steals_attempted += 1;
+        if let Some(job) = queues[victim].lock().unwrap().pop_front() {
+            ws.steals_succeeded += 1;
+            return Some(job);
+        }
+    }
+    None
+}
+
+fn xorshift(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x
+}
+
+/// The pre-stealing design, kept as the A/B reference: one shared
+/// injector queue every worker pulls from (every dispatch serialises
+/// on its lock — the contention stealing removes).
+fn run_injector<T, R, F, C>(
+    items: Vec<T>,
+    workers: usize,
+    pin_cores: bool,
+    chan: &dyn ResultChannel<(usize, R)>,
+    f: &F,
+    consume: &mut C,
+) -> Vec<WorkerStats>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+    C: FnMut(usize, R),
+{
+    let injector: JobQueue<T> = Mutex::new(items.into_iter().enumerate().collect());
+    let injector = &injector;
+    let mut per_worker = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|k| {
+                scope.spawn(move || {
+                    let _done = DoneGuard(chan);
+                    let pinned = pin_cores && pin_current_thread(k);
+                    let mut ws = WorkerStats { pinned, ..WorkerStats::default() };
+                    loop {
+                        let job = {
+                            let mut q = injector.lock().unwrap();
+                            ws.max_queue_depth = ws.max_queue_depth.max(q.len());
+                            q.pop_front()
+                        };
+                        match job {
+                            Some((i, t)) => {
+                                let job_t0 = Instant::now();
+                                let r = f(i, t);
+                                ws.busy_ns += job_t0.elapsed().as_nanos() as u64;
+                                ws.jobs += 1;
+                                chan.send((i, r));
+                            }
+                            None => break,
                         }
                     }
-                    None => break,
-                }
-            });
-        }
-        drop(tx);
-        for (i, r) in rx {
+                    ws
+                })
+            })
+            .collect();
+        let _close = CloseGuard(chan);
+        while let Some((i, r)) = chan.recv() {
             consume(i, r);
         }
-    })
+        for h in handles {
+            match h.join() {
+                Ok(ws) => per_worker.push(ws),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+    });
+    per_worker
 }
 
 /// Map `f` over `items` on `workers` threads, preserving input order
@@ -90,15 +717,39 @@ where
     R: Send,
     F: Fn(usize, T) -> R + Sync,
 {
+    parallel_map_indexed_with(items, &PoolConfig::with_workers(workers), f).0
+}
+
+/// [`parallel_map_indexed`] under an explicit [`PoolConfig`],
+/// returning the run's [`PoolStats`] alongside the mapped values.
+pub fn parallel_map_indexed_with<T, R, F>(
+    items: Vec<T>,
+    cfg: &PoolConfig,
+    f: F,
+) -> (Vec<R>, PoolStats)
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
     let n = items.len();
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    parallel_for_each_indexed(items, workers, f, |i, r| {
-        debug_assert!(out[i].is_none(), "job {i} delivered twice");
-        out[i] = Some(r);
-    });
-    out.into_iter()
+    let stats = parallel_for_each_indexed_with(items, cfg, f, |i, r| deliver_once(&mut out, i, r));
+    let collected = out
+        .into_iter()
         .map(|r| r.expect("every job delivers exactly one result"))
-        .collect()
+        .collect();
+    (collected, stats)
+}
+
+/// THE delivery invariant, enforced in **every** build: a
+/// double-delivered index would silently overwrite `out[i]` and
+/// corrupt results if this were a `debug_assert!` (it once was). Both
+/// runtimes' collect path routes through here, and the sweep reducer
+/// enforces the same invariant independently on the streaming path.
+fn deliver_once<R>(out: &mut [Option<R>], i: usize, r: R) {
+    assert!(out[i].is_none(), "job {i} delivered twice");
+    out[i] = Some(r);
 }
 
 #[cfg(test)]
@@ -162,7 +813,7 @@ mod tests {
 
     #[test]
     fn uneven_job_costs_all_complete() {
-        // Jobs with wildly different costs: the injector rebalances and
+        // Jobs with wildly different costs: the pool rebalances and
         // every result still lands at its index.
         let items: Vec<u64> = (0..32).collect();
         let out = parallel_map_indexed(items, 4, |_, x| {
@@ -176,5 +827,141 @@ mod tests {
         for (i, (x, _)) in out.iter().enumerate() {
             assert_eq!(i as u64, *x);
         }
+    }
+
+    /// Pseudo-random per-job spin keyed on the index: adversarially
+    /// uneven costs, deterministic across runs.
+    fn chaos_work(i: usize, x: u64) -> u64 {
+        let mut h = (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+        h ^= h >> 29;
+        let spin = h % 20_000;
+        let mut acc = x;
+        for j in 0..spin {
+            acc = acc.wrapping_add(j).rotate_left(1);
+        }
+        acc ^ h
+    }
+
+    #[test]
+    fn chaos_adversarial_stealing_is_byte_identical_to_serial() {
+        // THE determinism contract under attack: forced steal storms
+        // (all jobs seeded to worker 0), randomized per-job costs,
+        // 2/8/64 workers, pinned and unpinned, both channel backends —
+        // the output must equal the workers=1 run exactly.
+        let items: Vec<u64> = (0..200).collect();
+        let serial = parallel_map_indexed(items.clone(), 1, chaos_work);
+        for workers in [2usize, 8, 64] {
+            for pin_cores in [false, true] {
+                for steal_storm in [false, true] {
+                    for channel in [ChannelKind::Bounded, ChannelKind::StdMpsc] {
+                        let cfg = PoolConfig {
+                            workers,
+                            pin_cores,
+                            steal_storm,
+                            channel,
+                            ..PoolConfig::default()
+                        };
+                        let label = format!(
+                            "workers={workers} pin={pin_cores} storm={steal_storm} channel={}",
+                            channel.tag()
+                        );
+                        let (out, stats) =
+                            parallel_map_indexed_with(items.clone(), &cfg, chaos_work);
+                        assert_eq!(out, serial, "{label}");
+                        assert_eq!(stats.jobs_total(), items.len() as u64, "{label}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn injector_and_stealing_schedules_agree() {
+        let items: Vec<u64> = (0..128).collect();
+        let serial = parallel_map_indexed(items.clone(), 1, chaos_work);
+        for workers in [2usize, 8] {
+            for schedule in [Schedule::Injector, Schedule::Stealing] {
+                let cfg = PoolConfig { workers, schedule, ..PoolConfig::default() };
+                let (out, stats) = parallel_map_indexed_with(items.clone(), &cfg, chaos_work);
+                assert_eq!(out, serial, "workers={workers} schedule={}", schedule.tag());
+                assert_eq!(stats.schedule, schedule);
+                assert_eq!(stats.jobs_total(), items.len() as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_stats_add_up_and_steals_happen_under_skew() {
+        // Steal storm at 8 workers: everything starts on worker 0, so
+        // the other 7 can only make progress by stealing.
+        let items: Vec<u64> = (0..200).collect();
+        let cfg = PoolConfig { workers: 8, steal_storm: true, ..PoolConfig::default() };
+        let (_, stats) = parallel_map_indexed_with(items, &cfg, chaos_work);
+        assert_eq!(stats.workers.len(), 8);
+        assert_eq!(stats.jobs_total(), 200);
+        assert!(stats.steals_attempted() >= stats.steals_succeeded());
+        assert!(stats.steals_succeeded() > 0, "steal storm produced no steals");
+        // worker 0's deque held the whole grid at its first pop
+        assert_eq!(stats.max_queue_depth(), 200);
+        assert!(stats.wall_ns > 0);
+        assert!(stats.busy_ns_total() > 0);
+        assert!(stats.tail_latency_ns() <= stats.wall_ns);
+    }
+
+    #[test]
+    fn serial_stats_report_one_worker() {
+        let cfg = PoolConfig::with_workers(1);
+        let (out, stats) = parallel_map_indexed_with((0..10u64).collect(), &cfg, |_, x| x + 1);
+        assert_eq!(out, (1..11).collect::<Vec<u64>>());
+        assert_eq!(stats.workers.len(), 1);
+        assert_eq!(stats.jobs_total(), 10);
+        assert_eq!(stats.steals_attempted(), 0);
+        assert_eq!(stats.pinned_workers(), 0);
+    }
+
+    #[test]
+    fn bounded_channel_tiny_capacity_backpressures_without_loss() {
+        // Capacity 1 with a deliberately slow consumer: producers must
+        // block (not drop, not duplicate) and every result lands.
+        let items: Vec<u64> = (0..64).collect();
+        let cfg = PoolConfig { workers: 4, channel_capacity: 1, ..PoolConfig::default() };
+        let mut seen = vec![0u32; 64];
+        parallel_for_each_indexed_with(items, &cfg, |_, x| x, |i, r| {
+            if i % 8 == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            assert_eq!(i as u64, r);
+            seen[i] += 1;
+        });
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+    }
+
+    #[test]
+    fn bounded_channel_done_drains_then_ends() {
+        let chan: BoundedChannel<u64> = BoundedChannel::new(2, 1);
+        chan.send(7);
+        chan.send(8);
+        chan.done();
+        assert_eq!(chan.recv(), Some(7));
+        assert_eq!(chan.recv(), Some(8));
+        assert_eq!(chan.recv(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "delivered twice")]
+    fn duplicate_delivery_panics_in_all_builds() {
+        let mut out: Vec<Option<u64>> = vec![None; 2];
+        deliver_once(&mut out, 1, 10);
+        deliver_once(&mut out, 1, 11);
+    }
+
+    #[test]
+    fn pin_cores_is_best_effort_and_harmless() {
+        let cfg = PoolConfig { workers: 2, pin_cores: true, ..PoolConfig::default() };
+        let (out, stats) = parallel_map_indexed_with((0..20u64).collect(), &cfg, |_, x| x * 2);
+        assert_eq!(out, (0..20u64).map(|x| x * 2).collect::<Vec<u64>>());
+        // on Linux the pin should normally take; elsewhere it's a
+        // no-op — either way the run completes and stats stay sane
+        assert!(stats.pinned_workers() <= stats.workers.len());
     }
 }

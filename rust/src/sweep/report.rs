@@ -25,11 +25,12 @@
 //! deltas are computed from the folded cell aggregates alone, so no
 //! per-scenario state is retained for them either.
 
-use crate::bench::BenchReport;
+use crate::bench::{fmt_time, BenchReport};
 use crate::config::SweepConfig;
 use crate::json::{self, Value};
 use crate::sim::{RunOutcome, RunSummary};
 use crate::sweep::grid::Scenario;
+use crate::sweep::pool::PoolStats;
 use crate::trace::provenance::TraceProvenance;
 use crate::util::fmt_bytes;
 
@@ -443,6 +444,37 @@ impl SweepReport {
     }
 }
 
+/// Human-readable per-worker table of one pool run's execution facts.
+/// Stderr/bench surface only: [`PoolStats`] are scheduling facts, and
+/// the determinism contract forbids them from ever entering the JSON
+/// artifact — note [`SweepReport::to_json`] takes no pool input.
+pub fn render_pool_stats(stats: &PoolStats) -> String {
+    let mut report = BenchReport::new(
+        &format!(
+            "pool — {}/{}: {} job(s) on {} worker(s) ({} pinned), wall {}, tail latency {}",
+            stats.schedule.tag(),
+            stats.channel.tag(),
+            stats.jobs_total(),
+            stats.workers.len(),
+            stats.pinned_workers(),
+            fmt_time(stats.wall_ns as f64 / 1e9),
+            fmt_time(stats.tail_latency_ns() as f64 / 1e9),
+        ),
+        &["worker", "jobs", "steals ok/try", "max depth", "busy", "pinned"],
+    );
+    for (k, w) in stats.workers.iter().enumerate() {
+        report.row(&[
+            k.to_string(),
+            w.jobs.to_string(),
+            format!("{}/{}", w.steals_succeeded, w.steals_attempted),
+            w.max_queue_depth.to_string(),
+            fmt_time(w.busy_ns as f64 / 1e9),
+            if w.pinned { "yes".into() } else { "no".into() },
+        ]);
+    }
+    report.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -601,6 +633,31 @@ mod tests {
         // float round-trips to the exact same bits — the resume path's
         // byte-identity depends on it
         assert_eq!(back.avg_tgs.to_bits(), r.avg_tgs.to_bits());
+    }
+
+    #[test]
+    fn pool_stats_table_renders_execution_facts() {
+        use crate::sweep::pool::WorkerStats;
+        let stats = PoolStats {
+            workers: vec![
+                WorkerStats {
+                    jobs: 3,
+                    steals_attempted: 4,
+                    steals_succeeded: 2,
+                    max_queue_depth: 5,
+                    busy_ns: 1_000_000,
+                    pinned: true,
+                },
+                WorkerStats { jobs: 1, ..WorkerStats::default() },
+            ],
+            wall_ns: 2_000_000,
+            ..PoolStats::default()
+        };
+        let table = render_pool_stats(&stats);
+        assert!(table.contains("stealing/bounded"));
+        assert!(table.contains("4 job(s)"));
+        assert!(table.contains("2/4"));
+        assert!(table.contains("1 pinned"));
     }
 
     #[test]

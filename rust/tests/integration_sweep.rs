@@ -277,6 +277,51 @@ fn trace_cached_shard_merge_is_byte_identical() {
 }
 
 #[test]
+fn pool_schedule_channel_and_pinning_never_perturb_artifacts() {
+    // The acceptance grid of the work-stealing runtime: {stealing,
+    // injector} × {1, 8 workers} × {pinned, unpinned} (both channel
+    // backends covered across the cells) must all emit the serial
+    // run's exact bytes — scheduling, backpressure, and core affinity
+    // are execution knobs, never identity.
+    use memfine::sweep::{ChannelKind, Schedule};
+    let cfg = grid_3x2x4();
+    let direct_json = sweep::run_sweep(&cfg, 1)
+        .expect("direct sweep")
+        .to_json()
+        .to_string_pretty();
+    for schedule in [Schedule::Stealing, Schedule::Injector] {
+        for workers in [1usize, 8] {
+            for pin_cores in [false, true] {
+                // alternate the channel backend across the grid so
+                // both carry real traffic in this test
+                let channel = if workers == 8 && pin_cores {
+                    ChannelKind::StdMpsc
+                } else {
+                    ChannelKind::Bounded
+                };
+                let opts = SweepRunOptions {
+                    workers,
+                    pool: schedule,
+                    channel,
+                    pin_cores,
+                    ..Default::default()
+                };
+                let run = sweep::run_sweep_with(&cfg, &opts).expect("pool-knob sweep");
+                assert_eq!(
+                    run.report.to_json().to_string_pretty(),
+                    direct_json,
+                    "{}/{} workers={workers} pinned={pin_cores} changed the artifact",
+                    schedule.tag(),
+                    channel.tag(),
+                );
+                assert_eq!(run.pool.jobs_total() as usize, 8); // 2 models × 4 seeds cells
+                assert_eq!(run.pool.schedule, schedule);
+            }
+        }
+    }
+}
+
+#[test]
 fn sweep_artifact_reparses_and_covers_grid() {
     let cfg = grid_3x2x4();
     let report = sweep::run_sweep(&cfg, 8).expect("sweep");
