@@ -19,7 +19,7 @@ use memfine::memory::ActivationModel;
 use memfine::perf::PerfModel;
 use memfine::router::GatingSim;
 use memfine::sim::{evaluate_cell, run_scenario_on_trace, Simulator};
-use memfine::util::rng::Rng;
+use memfine::util::rng::{gamma_many2, philox4x64, CounterRng, Rng};
 
 fn main() {
     memfine::logging::init();
@@ -76,6 +76,41 @@ fn main() {
     add(time_fn("rng.normal_batch(256)", 30, 2_000, || {
         rng.normal_batch(&mut normal_buf);
         normal_buf[0]
+    }));
+
+    // v2 counter-based generator: raw block throughput vs the v1
+    // sequential stream, and the lane-oblivious wide gamma (one lane
+    // per element, retries isolated to their lane — no
+    // snapshot-rewind-replay) in scalar and wide form.
+    let mut rng = Rng::new(17);
+    add(time_fn("rng2_philox_raw x256 (64 blocks)", 30, 2_000, || {
+        let mut acc = 0u64;
+        for b in 0..64u64 {
+            let out = philox4x64([17, 0xC0FFEE], [b, 0, 7, 15]);
+            acc = acc.wrapping_add(out[0] ^ out[3]);
+        }
+        acc
+    }));
+    add(time_fn("rng1_xoshiro_raw x256", 30, 2_000, || {
+        let mut acc = 0u64;
+        for _ in 0..256 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        acc
+    }));
+    let key2 = [17u64, 0xBEEF];
+    let site2 = [7u64, 15];
+    add(time_fn("rng2_gamma scalar x256 (shape 0.02)", 30, 2_000, || {
+        let mut acc = 0.0;
+        for lane in 0..256 {
+            acc += CounterRng::new(key2, site2, lane).gamma(0.02);
+        }
+        acc
+    }));
+    let mut gamma2_buf = vec![0.0f64; 256];
+    add(time_fn("rng2_gamma_many2(256, shape 0.02)", 30, 2_000, || {
+        gamma_many2(key2, site2, 0.02, &mut gamma2_buf);
+        gamma2_buf[0]
     }));
 
     // Dispatch planning at coordinator scale: 4 ranks × 512 tokens × top-2.

@@ -14,7 +14,11 @@
 //! * **fused_seq** — the pre-flip sequential sampler (`--router seq`;
 //!   same distribution, different sample, hash-distinct).
 //!
-//! Also micro-benches the trace stage (cold-vs-warm trace cache
+//! Also measures the `--rng v2` counter-based generator (`rng2_*`
+//! rows): the paper grid end to end, and a single dominant cell where
+//! the intra-cell iteration splitter engages at 8 workers —
+//! byte-identity across the split re-asserted. And micro-benches the
+//! trace stage (cold-vs-warm trace cache
 //! through the store, byte-identity re-asserted), the chunked batch
 //! samplers against their scalar per-draw paths (gamma and normal —
 //! pinned bit-identical elsewhere, measured here), the multinomial
@@ -37,7 +41,7 @@ use memfine::config::SweepConfig;
 use memfine::json::{self, Value};
 use memfine::sim;
 use memfine::sweep::{self, SweepRunOptions};
-use memfine::trace::{RouterSampler, SharedRoutingTrace};
+use memfine::trace::{RngVersion, RouterSampler, SharedRoutingTrace};
 use memfine::util::rng::Rng;
 
 const WORKER_COUNTS: [usize; 4] = [1, 2, 4, 8];
@@ -280,6 +284,71 @@ fn pool_stage_micro(rows: &mut Vec<(String, Value)>) {
     table.print();
 }
 
+/// The v2 counter-based generator end to end: the paper grid under
+/// `--rng v2` (a different, hash-distinct sample — its bytes compare
+/// only against itself), and a single dominant cell where the
+/// intra-cell splitter actually engages — serial whole-cell vs 8
+/// workers cutting the cell into iteration-range jobs. Byte-identity
+/// across the split is re-asserted; the wall-clock gap is the
+/// straggler tail the splitter removes. Returns (grid serial s, grid
+/// 8w s, single-cell unsplit s, single-cell split 8w s).
+fn rng2_stage_micro(cfg: &SweepConfig) -> (f64, f64, f64, f64) {
+    let t0 = Instant::now();
+    let serial = sweep::run_sweep_with(
+        cfg,
+        &SweepRunOptions { workers: 1, rng: RngVersion::V2, ..Default::default() },
+    )
+    .expect("v2 serial sweep");
+    let v2_serial_s = t0.elapsed().as_secs_f64();
+    let v2_json = serial.report.to_json().to_string_pretty();
+    let t0 = Instant::now();
+    let wide = sweep::run_sweep_with(
+        cfg,
+        &SweepRunOptions { workers: 8, rng: RngVersion::V2, ..Default::default() },
+    )
+    .expect("v2 8-worker sweep");
+    let v2_8w_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        v2_json,
+        wide.report.to_json().to_string_pretty(),
+        "v2 8-worker sweep diverged from its serial bytes"
+    );
+
+    // One dominant cell — the shape whole-cell scheduling cannot
+    // parallelise at all, and the only place intra-cell splitting can
+    // win wall-clock.
+    let single = SweepConfig {
+        models: vec![cfg.models[0].clone()],
+        methods: cfg.methods.clone(),
+        seeds: vec![cfg.seeds[0]],
+        iterations: cfg.iterations * 8,
+    };
+    let t0 = Instant::now();
+    let whole = sweep::run_sweep_with(
+        &single,
+        &SweepRunOptions { workers: 1, rng: RngVersion::V2, ..Default::default() },
+    )
+    .expect("v2 single-cell serial sweep");
+    let unsplit_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let split = sweep::run_sweep_with(
+        &single,
+        &SweepRunOptions { workers: 8, rng: RngVersion::V2, ..Default::default() },
+    )
+    .expect("v2 single-cell split sweep");
+    let split_s = t0.elapsed().as_secs_f64();
+    assert!(
+        split.pool.jobs_total() > 1,
+        "the dominant cell must auto-split at 8 workers"
+    );
+    assert_eq!(
+        whole.report.to_json().to_string_pretty(),
+        split.report.to_json().to_string_pretty(),
+        "intra-cell split diverged from the whole-cell bytes"
+    );
+    (v2_serial_s, v2_8w_s, unsplit_s, split_s)
+}
+
 fn multinomial_micro() -> (f64, f64) {
     // paper-scale draw: 2^20 token copies over 256 experts with the
     // deep-layer chaos-peak popularity shape
@@ -462,6 +531,8 @@ fn main() {
 
     pool_stage_micro(&mut artifact_rows);
 
+    let (rng2_serial_s, rng2_8w_s, rng2_unsplit_s, rng2_split_s) = rng2_stage_micro(&cfg);
+
     let (seq_dps, split_dps) = multinomial_micro();
     let (gamma_scalar_dps, gamma_batch_dps, normal_scalar_dps, normal_batch_dps) =
         batch_sampler_micro();
@@ -515,6 +586,17 @@ fn main() {
         fmt_time(fused_2w_s),
         orchestrated_2p_s / fused_2w_s,
     );
+    println!(
+        "rng v2 (counter-based Philox, --rng v2): grid serial {} -> 8 workers {} \
+         ({:.2}x); dominant single cell {} -> intra-cell split at 8 workers {} \
+         ({:.2}x) — byte-identical across every split",
+        fmt_time(rng2_serial_s),
+        fmt_time(rng2_8w_s),
+        rng2_serial_s / rng2_8w_s,
+        fmt_time(rng2_unsplit_s),
+        fmt_time(rng2_split_s),
+        rng2_unsplit_s / rng2_split_s,
+    );
     println!("\nreading: cells share one routed-token stream across methods AND walk it");
     println!("once for all methods; the splitting multinomial (now the default, with");
     println!("provenance recorded everywhere) cheapens the one remaining draw, and the");
@@ -558,6 +640,19 @@ fn main() {
             "orchestrated_overhead_vs_inprocess",
             json::num(orchestrated_2p_s / fused_2w_s),
         ),
+        ("rng2_fused_serial_s", json::num(rng2_serial_s)),
+        ("rng2_fused_8w_s", json::num(rng2_8w_s)),
+        (
+            "rng2_fused_serial_scenarios_per_sec",
+            json::num(scenarios_per_sec(n, rng2_serial_s)),
+        ),
+        ("rng2_singlecell_unsplit_s", json::num(rng2_unsplit_s)),
+        ("rng2_singlecell_split_8w_s", json::num(rng2_split_s)),
+        (
+            "rng2_intracell_split_speedup",
+            json::num(rng2_unsplit_s / rng2_split_s),
+        ),
+        ("determinism_rng2_split_vs_serial", Value::Bool(true)),
         ("determinism_pool_knobs", Value::Bool(true)),
         ("determinism_legacy_vs_shared", Value::Bool(true)),
         ("determinism_fused_vs_unfused", Value::Bool(true)),

@@ -8,7 +8,7 @@
 
 use crate::error::{Error, Result};
 use crate::json::{self, Value};
-use crate::trace::provenance::RouterSampler;
+use crate::trace::provenance::{RngVersion, RouterSampler};
 
 /// Model architecture parameters — the paper's Table 1 notation.
 #[derive(Clone, Debug, PartialEq)]
@@ -786,6 +786,12 @@ pub struct LaunchConfig {
     /// hash and trace-cache key). Defaults to the splitting
     /// multinomial; `--router seq` reproduces pre-flip campaigns.
     pub sampler: RouterSampler,
+    /// RNG generation the campaign draws with (`--rng`, forwarded to
+    /// every child sweep). Part of every scenario hash and trace-cache
+    /// key, exactly like `sampler`. Defaults to v1; absent in
+    /// pre-counter-RNG launch.json files, which therefore keep
+    /// resolving to the v1 streams they were recorded under.
+    pub rng: RngVersion,
     /// Pin each shard's worker threads to cores (`--pin-cores`,
     /// forwarded to every child sweep). Execution-only: never part of
     /// any scenario identity, never perturbs artifact bytes.
@@ -805,6 +811,7 @@ impl LaunchConfig {
             poll_ms: 100,
             max_retries: 2,
             sampler: RouterSampler::default(),
+            rng: RngVersion::default(),
             pin_cores: false,
         }
     }
@@ -851,6 +858,7 @@ impl LaunchConfig {
             ("poll_ms", json::num(self.poll_ms as f64)),
             ("max_retries", json::num(self.max_retries as f64)),
             ("router", json::s(self.sampler.tag().to_string())),
+            ("rng", json::s(self.rng.tag().to_string())),
             ("pin_cores", Value::Bool(self.pin_cores)),
         ])
     }
@@ -880,6 +888,15 @@ impl LaunchConfig {
             poll_ms: v.req_u64("poll_ms")?,
             max_retries: v.req_u64("max_retries")?,
             sampler,
+            // absent in pre-counter-RNG launch.json files — those
+            // campaigns were drawn under (and stay on) the v1 streams
+            rng: match v.get("rng") {
+                Some(tag) => RngVersion::parse(
+                    tag.as_str()
+                        .ok_or_else(|| Error::config("launch rng must be a string"))?,
+                )?,
+                None => RngVersion::V1,
+            },
             // absent in pre-pinning launch.json files — default off
             pin_cores: v.get("pin_cores").and_then(Value::as_bool).unwrap_or(false),
         };
@@ -1143,6 +1160,7 @@ mod tests {
         cfg.procs = 3;
         cfg.stall_timeout_ms = 5_000;
         cfg.sampler = RouterSampler::Sequential;
+        cfg.rng = RngVersion::V2;
         cfg.pin_cores = true;
         cfg.validate().unwrap();
         let back = LaunchConfig::from_json(
@@ -1151,19 +1169,24 @@ mod tests {
         .unwrap();
         assert_eq!(cfg, back);
         // pre-pinning launch.json files carry no "pin_cores" — absent
-        // means off, not a parse error
+        // means off, not a parse error; likewise pre-counter-RNG files
+        // carry no "rng" — absent means the v1 streams they recorded
         let mut doc = cfg.to_json();
         if let crate::json::Value::Obj(map) = &mut doc {
             map.remove("pin_cores");
+            map.remove("rng");
         }
-        assert!(!LaunchConfig::from_json(&doc).unwrap().pin_cores);
+        let legacy = LaunchConfig::from_json(&doc).unwrap();
+        assert!(!legacy.pin_cores);
+        assert_eq!(legacy.rng, RngVersion::V1);
         // defaults are sane and validate; the sampler default is the
-        // post-flip splitting multinomial
+        // post-flip splitting multinomial, the RNG default is v1
         let d = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
         d.validate().unwrap();
         assert_eq!(d.procs, 0);
         assert!(d.max_retries >= 1);
         assert_eq!(d.sampler, RouterSampler::Split);
+        assert_eq!(d.rng, RngVersion::V1);
     }
 
     #[test]

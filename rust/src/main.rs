@@ -8,7 +8,8 @@
 //! memfine sweep   [--models i,ii] [--methods 1,2,3] [--seeds N|a,b,...]
 //!                 [--workers N] [--out FILE] [--checkpoint F[,F...]]
 //!                 [--resume] [--shard i/n] [--limit N] [--router seq|split]
-//!                 [--trace-cache DIR] [--unfused] [--config FILE]
+//!                 [--rng v1|v2] [--split-iters N] [--trace-cache DIR]
+//!                 [--unfused] [--config FILE]
 //!                 [--pool stealing|injector] [--channel bounded|std]
 //!                 [--pin-cores] [--pool-stats]
 //!                 parallel scenario grid, resumable/shardable
@@ -18,7 +19,7 @@
 //!                 orchestrated multi-process sweep: spawn, supervise,
 //!                 heal, auto-merge
 //! memfine checkpoint compact FILE... [--out FILE]
-//! memfine checkpoint audit FILE... --config FILE [--router seq|split]
+//! memfine checkpoint audit FILE... --config FILE [--router seq|split] [--rng v1|v2]
 //! memfine repro   table4|fig2|fig4|fig5      regenerate a paper artifact
 //! memfine train   [--steps N] [--artifacts DIR]  E2E mini-model training
 //! memfine coord   [--policy mact|fixed] [--budget-mb N]  real EP layer pass
@@ -29,7 +30,7 @@ use memfine::config::{
     derive_seeds, model_i, model_ii, paper_run, LaunchConfig, Method, ModelConfig,
     SweepConfig,
 };
-use memfine::trace::{RouterSampler, TraceProvenance};
+use memfine::trace::{RngVersion, RouterSampler, TraceProvenance};
 use memfine::coordinator::ep::{ChunkPolicy, EpCoordinator};
 use memfine::coordinator::train::TrainDriver;
 use memfine::memory::{ActivationModel, StaticModel};
@@ -43,7 +44,7 @@ const VALUE_OPTS: &[&str] = &[
     "budget-mb", "bins", "chunk", "models", "methods", "seeds", "workers",
     "out", "checkpoint", "shard", "limit", "config", "procs", "dir",
     "stall-timeout-ms", "poll-ms", "retries", "router", "trace-cache",
-    "pool", "channel",
+    "pool", "channel", "rng", "split-iters",
 ];
 
 fn main() {
@@ -115,6 +116,8 @@ fn print_usage() {
                 OptSpec { name: "shard", help: "run shard i of n (i/n) of the sweep grid", takes_value: true, default: None },
                 OptSpec { name: "limit", help: "execute at most N sweep scenarios this run", takes_value: true, default: None },
                 OptSpec { name: "router", help: "routing sampler: split (binomial-splitting, fast) or seq (pre-flip sequential; different sample, hash-distinct)", takes_value: true, default: Some("split") },
+                OptSpec { name: "rng", help: "trace generator: v1 (sequential xoshiro forks; the frozen default) or v2 (counter-based Philox; O(1) stream access, enables intra-cell splitting; hash-distinct)", takes_value: true, default: Some("v1") },
+                OptSpec { name: "split-iters", help: "sweep: force the v2 intra-cell split width (iterations per job; 0 = auto, v2 only)", takes_value: true, default: Some("0") },
                 OptSpec { name: "trace-cache", help: "sweep: on-disk routed-trace cache dir (launch manages its own under --dir)", takes_value: true, default: None },
                 OptSpec { name: "pool", help: "sweep worker schedule: stealing (per-worker deques) or injector (shared queue); never changes artifact bytes", takes_value: true, default: Some("stealing") },
                 OptSpec { name: "channel", help: "sweep result channel: bounded (backpressure, ~4x workers) or std (unbounded mpsc)", takes_value: true, default: Some("bounded") },
@@ -286,29 +289,35 @@ fn sampler_flag(args: &Args) -> memfine::Result<Option<RouterSampler>> {
     }
 }
 
-/// Extract (grid, sampler) from a parsed config doc: a `LaunchConfig`
-/// carries its own sampler choice — which is part of every scenario
-/// hash, so resuming or auditing a campaign from its launch.json must
-/// not silently fall back to another sampler. Other doc shapes carry
-/// no sampler (resolution falls through to flags, checkpoint headers,
-/// or the default).
+/// The explicit generator choice on the command line, if any
+/// (`--rng v1|v2`).
+fn rng_flag(args: &Args) -> memfine::Result<Option<RngVersion>> {
+    args.get("rng").map(|tag| RngVersion::parse(tag)).transpose()
+}
+
+/// Extract (grid, sampler, rng) from a parsed config doc: a
+/// `LaunchConfig` carries its own sampler and rng choices — both are
+/// part of every scenario hash, so resuming or auditing a campaign
+/// from its launch.json must not silently fall back to other
+/// defaults. Other doc shapes carry neither (resolution falls through
+/// to flags, checkpoint headers, or the defaults).
 fn grid_and_sampler_from_doc(
     doc: &memfine::json::Value,
-) -> memfine::Result<(SweepConfig, Option<RouterSampler>)> {
+) -> memfine::Result<(SweepConfig, Option<RouterSampler>, Option<RngVersion>)> {
     if doc.get("sweep").is_some() {
         let launch = LaunchConfig::from_json(doc)?;
-        Ok((launch.sweep, Some(launch.sampler)))
+        Ok((launch.sweep, Some(launch.sampler), Some(launch.rng)))
     } else {
-        Ok((sweep_config_from_doc(doc)?, None))
+        Ok((sweep_config_from_doc(doc)?, None, None))
     }
 }
 
 fn cmd_sweep(args: &Args) -> memfine::Result<()> {
     // --config wins over grid flags; a LaunchConfig file also carries
-    // its sampler choice (explicit flags override it)
-    let (cfg, doc_sampler) = match args.get("config") {
+    // its sampler and rng choices (explicit flags override both)
+    let (cfg, doc_sampler, doc_rng) = match args.get("config") {
         Some(path) => grid_and_sampler_from_doc(&parse_config_file(path)?)?,
-        None => (sweep_config_from_flags(args)?, None),
+        None => (sweep_config_from_flags(args)?, None, None),
     };
     let checkpoint: Vec<std::path::PathBuf> = args
         .get("checkpoint")
@@ -325,12 +334,14 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         .map(memfine::config::ShardSpec::parse)
         .transpose()?;
     let limit = args.get("limit").map(|_| args.get_u64("limit", 0)).transpose()?;
-    // Sampler resolution mirrors `checkpoint audit`: an explicit
-    // --router flag (or a launch.json's recorded sampler) wins; a
-    // resumed checkpoint's own provenance header comes next — so a
-    // pre-flip campaign resumes under its recorded sampler instead of
-    // silently re-running the whole grid under the new default — and
-    // only then the engine default.
+    // Sampler and rng resolution mirror `checkpoint audit`, field by
+    // field: an explicit flag (or a launch.json's recorded choice)
+    // wins; a resumed checkpoint's own provenance header comes next —
+    // so a pre-flip campaign resumes under its recorded sampler (and a
+    // v2 campaign under its recorded generator) instead of silently
+    // re-running the whole grid under the defaults — and only then the
+    // engine defaults. A surviving mismatch is warned about once, by
+    // the engine itself.
     let resume = args.has_flag("resume");
     let recorded = if resume {
         memfine::sweep::checkpoint::CheckpointSet::peek_provenance(&checkpoint)
@@ -345,17 +356,11 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         }
         (None, None) => RouterSampler::default(),
     };
-    if let Some(p) = &recorded {
-        if p.sampler != sampler {
-            eprintln!(
-                "sweep: warning: checkpoint records router '{}' but this run uses \
-                 '{}' — no stored row will match, and the file will mix hash \
-                 universes under a stale header",
-                p.tag(),
-                sampler.tag()
-            );
-        }
-    }
+    let rng = match (rng_flag(args)?.or(doc_rng), &recorded) {
+        (Some(v), _) => v,
+        (None, Some(p)) => p.rng()?,
+        (None, None) => RngVersion::default(),
+    };
     let opts = memfine::sweep::SweepRunOptions {
         workers: args.get_u64("workers", 0)? as usize,
         checkpoint,
@@ -363,6 +368,8 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         shard,
         limit: limit.map(|n| n as usize),
         sampler,
+        rng,
+        split_iters: args.get_u64("split-iters", 0)?,
         unfused: args.has_flag("unfused"),
         trace_cache: args.get("trace-cache").map(std::path::PathBuf::from),
         pool: memfine::sweep::Schedule::parse(&args.get_or("pool", "stealing"))?,
@@ -462,6 +469,9 @@ fn cmd_launch(args: &Args) -> memfine::Result<()> {
     }
     if let Some(sampler) = sampler_flag(args)? {
         cfg.sampler = sampler;
+    }
+    if let Some(rng) = rng_flag(args)? {
+        cfg.rng = rng;
     }
     if args.has_flag("pin-cores") {
         cfg.pin_cores = true;
@@ -576,20 +586,31 @@ fn cmd_checkpoint(args: &Args) -> memfine::Result<()> {
             let cfg_path = args.get("config").ok_or_else(|| {
                 memfine::Error::Cli("checkpoint audit needs --config <grid.json>".into())
             })?;
-            let (cfg, doc_sampler) =
+            let (cfg, doc_sampler, doc_rng) =
                 grid_and_sampler_from_doc(&parse_config_file(cfg_path)?)?;
             let set = checkpoint::CheckpointSet::load(&files)?;
-            // Provenance resolution, most explicit first: --router flag
-            // > the launch.json's recorded sampler > the checkpoint
-            // files' own header > the engine default. Headerless
-            // legacy files under a bare grid therefore need --router
-            // seq if they predate the sampler flip.
-            let prov = match sampler_flag(args)?.or(doc_sampler) {
-                Some(sampler) => TraceProvenance::current(sampler),
-                None => match &set.header_provenance {
+            // Provenance resolution, most explicit first and field by
+            // field: a --router/--rng flag > the launch.json's
+            // recorded choice > the checkpoint files' own header > the
+            // engine default. Headerless legacy files under a bare
+            // grid therefore need --router seq if they predate the
+            // sampler flip. A fully implicit audit adopts the header
+            // verbatim, so files from future rng versions still audit.
+            let prov = match (sampler_flag(args)?.or(doc_sampler), rng_flag(args)?.or(doc_rng)) {
+                (None, None) => match &set.header_provenance {
                     Some(recorded) => recorded.clone(),
                     None => TraceProvenance::default(),
                 },
+                (s, r) => {
+                    let recorded = set.header_provenance.as_ref();
+                    let sampler =
+                        s.or(recorded.map(|p| p.sampler)).unwrap_or_default();
+                    let rng = match r {
+                        Some(v) => v,
+                        None => recorded.map(|p| p.rng()).transpose()?.unwrap_or_default(),
+                    };
+                    TraceProvenance::with(sampler, rng)
+                }
             };
             eprintln!(
                 "audit: hashing under router '{}' (rng v{})",

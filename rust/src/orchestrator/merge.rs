@@ -75,6 +75,7 @@ pub fn merge_and_finish(
         checkpoint: paths.clone(),
         resume: true,
         sampler: cfg.sampler,
+        rng: cfg.rng,
         trace_cache: Some(dir.join("trace-cache")),
         pin_cores: cfg.pin_cores,
         ..Default::default()

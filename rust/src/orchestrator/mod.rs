@@ -159,7 +159,9 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
                 .ok()
                 .and_then(|v| LaunchConfig::from_json(&v).ok())
                 .is_some_and(|prev| {
-                    prev.sweep == cfg.sweep && prev.sampler == cfg.sampler
+                    prev.sweep == cfg.sweep
+                        && prev.sampler == cfg.sampler
+                        && prev.rng == cfg.rng
                 });
             if !same_campaign {
                 return Err(Error::config(format!(
@@ -217,6 +219,7 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
 
     let workers = cfg.workers_per_proc;
     let sampler = cfg.sampler;
+    let rng = cfg.rng;
     let pin_cores = cfg.pin_cores;
     // One trace cache per campaign dir: every shard process (and the
     // merge catch-up) shares it, so a cell's routed stream is drawn at
@@ -250,10 +253,12 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
             .arg("--resume")
             .arg("--workers")
             .arg(workers.to_string())
-            // explicit sampler: children must not depend on defaults
-            // matching across binary versions
+            // explicit sampler and generator: children must not depend
+            // on defaults matching across binary versions
             .arg("--router")
             .arg(sampler.tag())
+            .arg("--rng")
+            .arg(rng.tag())
             .arg("--trace-cache")
             .arg(&trace_cache)
             .arg("--out")

@@ -16,11 +16,20 @@
 //! All draws are seeded forks — identical traces for identical seeds.
 
 use crate::config::{ModelConfig, ParallelConfig};
-use crate::trace::provenance::RouterSampler;
-use crate::util::rng::Rng;
+use crate::trace::provenance::{RngVersion, RouterSampler};
+use crate::util::rng::{self, Rng};
 use crate::util::stats::Summary;
 
 pub mod baselines;
+
+/// v2 key salts separating the popularity and token-assignment
+/// streams: under the counter-based generator the two draw families of
+/// a (seed, iteration, layer) site live under distinct Philox keys
+/// (`[seed, SALT]`), the v2 analogue of v1's `seed ^ 0x5EED_0001`
+/// routing-seed split. Stable forever — they are part of what
+/// `rng_version: 2` means.
+const RNG2_POPULARITY_SALT: u64 = 0x4D46_504F_5055_4C41; // "MFPOPULA"
+const RNG2_ROUTE_SALT: u64 = 0x4D46_524F_5554_4531; // "MFROUTE1"
 
 /// Parameters of the imbalance process. Defaults are calibrated so the
 /// Fig. 2-style trace at iteration 7 reaches ~50–65 % of the
@@ -82,6 +91,11 @@ pub struct GatingSim {
     /// default — split, since the trace-store PR — explicitly via
     /// [`GatingSim::with_sampler`].
     sampler: RouterSampler,
+    /// Which generator draws the streams: v1 (sequential xoshiro
+    /// forks — the default, the historical bits) or v2 (counter-based
+    /// Philox — O(1) stream access, lane-oblivious wide draws). Like
+    /// the sampler, part of every trace identity.
+    rng: RngVersion,
 }
 
 /// Reusable draw buffers for the trace-generation hot loop: the
@@ -162,6 +176,7 @@ impl GatingSim {
             seed,
             layer_depth,
             sampler: RouterSampler::Sequential,
+            rng: RngVersion::V1,
         }
     }
 
@@ -195,6 +210,24 @@ impl GatingSim {
     /// (`true` = splitting multinomial).
     pub fn with_fast_multinomial(self, on: bool) -> Self {
         self.with_sampler(RouterSampler::from_fast_flag(on))
+    }
+
+    /// Select the generator version the streams are drawn with
+    /// (default v1, the historical bits). v2 is a different (equally
+    /// valid) sample, recorded in provenance like the sampler.
+    pub fn with_rng(mut self, rng: RngVersion) -> Self {
+        self.rng = rng;
+        self
+    }
+
+    /// In-place form of [`GatingSim::with_rng`].
+    pub fn set_rng(&mut self, rng: RngVersion) {
+        self.rng = rng;
+    }
+
+    /// The generator version streams are drawn with.
+    pub fn rng(&self) -> RngVersion {
+        self.rng
     }
 
     /// The job seed the trace streams derive from.
@@ -256,23 +289,58 @@ impl GatingSim {
         }
         let alpha = (self.params.base_alpha / self.intensity(iteration, layer))
             .max(1e-3);
-        let mut rng = Rng::new(self.seed)
-            .fork(iteration.wrapping_mul(1_000_003).wrapping_add(layer));
-        rng.dirichlet_symmetric_into(alpha, out);
+        match self.rng {
+            RngVersion::V1 => {
+                let mut rng = Rng::new(self.seed)
+                    .fork(iteration.wrapping_mul(1_000_003).wrapping_add(layer));
+                rng.dirichlet_symmetric_into(alpha, out);
+            }
+            RngVersion::V2 => rng::dirichlet_symmetric2(
+                [self.seed, RNG2_POPULARITY_SALT],
+                [iteration, layer],
+                alpha,
+                out,
+            ),
+        }
     }
 
     /// Route one (iteration, layer): returns per-expert and per-rank
     /// received counts. Conservation: counts sum to `total_copies()`.
     pub fn route(&self, iteration: u64, layer: u64) -> LayerRouting {
         let probs = self.expert_popularity(iteration, layer);
-        let mut rng = Rng::new(self.seed ^ 0x5EED_0001)
-            .fork(iteration.wrapping_mul(7_368_787).wrapping_add(layer));
-        let per_expert = match self.sampler {
-            RouterSampler::Split => rng.multinomial_split(self.total_copies(), &probs),
-            RouterSampler::Sequential => rng.multinomial(self.total_copies(), &probs),
-        };
+        let mut per_expert = vec![0u64; probs.len()];
+        self.assign_tokens(iteration, layer, &probs, &mut per_expert);
         let per_rank = per_rank_from_experts(&per_expert, self.parallel.ep);
         LayerRouting { per_expert, per_rank }
+    }
+
+    /// The token-assignment multinomial shared by [`GatingSim::route`]
+    /// and [`GatingSim::route_stats`]: one implementation per (rng,
+    /// sampler) pair, so the two call paths cannot drift apart.
+    fn assign_tokens(&self, iteration: u64, layer: u64, probs: &[f64], out: &mut [u64]) {
+        let n = self.total_copies();
+        match self.rng {
+            RngVersion::V1 => {
+                let mut rng = Rng::new(self.seed ^ 0x5EED_0001)
+                    .fork(iteration.wrapping_mul(7_368_787).wrapping_add(layer));
+                match self.sampler {
+                    RouterSampler::Split => rng.multinomial_split_into(n, probs, out),
+                    RouterSampler::Sequential => rng.multinomial_into(n, probs, out),
+                }
+            }
+            RngVersion::V2 => {
+                let key = [self.seed, RNG2_ROUTE_SALT];
+                let site = [iteration, layer];
+                match self.sampler {
+                    RouterSampler::Split => {
+                        rng::multinomial_split_into2(key, site, n, probs, out)
+                    }
+                    RouterSampler::Sequential => {
+                        rng::multinomial_into2(key, site, n, probs, out)
+                    }
+                }
+            }
+        }
     }
 
     /// The trace generator's form of [`GatingSim::route`]: the same
@@ -289,20 +357,7 @@ impl GatingSim {
         scratch: &mut RouteScratch,
     ) -> (u64, f64, u64) {
         self.expert_popularity_into(iteration, layer, &mut scratch.probs);
-        let mut rng = Rng::new(self.seed ^ 0x5EED_0001)
-            .fork(iteration.wrapping_mul(7_368_787).wrapping_add(layer));
-        match self.sampler {
-            RouterSampler::Split => rng.multinomial_split_into(
-                self.total_copies(),
-                &scratch.probs,
-                &mut scratch.per_expert,
-            ),
-            RouterSampler::Sequential => rng.multinomial_into(
-                self.total_copies(),
-                &scratch.probs,
-                &mut scratch.per_expert,
-            ),
-        }
+        self.assign_tokens(iteration, layer, &scratch.probs, &mut scratch.per_expert);
         per_rank_from_experts_into(&scratch.per_expert, &mut scratch.per_rank);
         // same reductions as min_received / Summary::mean / max_received,
         // in the same per-rank order (mean sums f64 left to right)
@@ -540,6 +595,86 @@ mod tests {
             s.expert_popularity_into(it, layer, &mut buf);
             assert_eq!(buf, s.expert_popularity(it, layer), "it={it} l={layer}");
         }
+    }
+
+    #[test]
+    fn rng_v2_selection_and_distinct_sample() {
+        // default is v1 (the historical bits)...
+        let v1 = sim();
+        assert_eq!(v1.rng(), RngVersion::V1);
+        // ...and v2 is a different deterministic sample of the same
+        // conserving process
+        let v2 = sim().with_rng(RngVersion::V2);
+        assert_eq!(v2.rng(), RngVersion::V2);
+        let a = v2.route(7, 10);
+        assert_eq!(a.per_expert.iter().sum::<u64>(), v2.total_copies());
+        assert_ne!(a.per_expert, v1.route(7, 10).per_expert);
+        let b = sim().with_rng(RngVersion::V2).route(7, 10);
+        assert_eq!(a.per_expert, b.per_expert);
+        let mut inplace = sim();
+        inplace.set_rng(RngVersion::V2);
+        assert_eq!(inplace.route(7, 10).per_expert, a.per_expert);
+        // seed sensitivity under v2
+        let other = GatingSim::new(model_i(), paper_parallel(), 8).with_rng(RngVersion::V2);
+        assert_ne!(other.route(7, 10).per_expert, a.per_expert);
+    }
+
+    #[test]
+    fn rng_v2_popularity_is_a_simplex_and_site_sensitive() {
+        let v2 = sim().with_rng(RngVersion::V2);
+        let p = v2.expert_popularity(7, 10);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert_ne!(p, v2.expert_popularity(7, 11));
+        assert_ne!(p, v2.expert_popularity(8, 10));
+        // dense layers stay uniform under every rng version
+        let d = v2.expert_popularity(7, 0);
+        assert!(d.iter().all(|&x| (x - d[0]).abs() < 1e-12));
+    }
+
+    #[test]
+    fn rng_v2_route_stats_bit_identical_to_route_under_both_samplers() {
+        // The trace-generation path must match route() under v2 too —
+        // same invariant the v1 path pins, now over counter streams.
+        for sampler in [RouterSampler::Sequential, RouterSampler::Split] {
+            let s = sim().with_sampler(sampler).with_rng(RngVersion::V2);
+            let mut scratch = RouteScratch::new(&s.model, &s.parallel);
+            for (it, layer) in [(0u64, 3u64), (7, 10), (7, 15), (24, 8)] {
+                let r = s.route(it, layer);
+                let (min, mean, max) = s.route_stats(it, layer, &mut scratch);
+                assert_eq!(min, r.min_received(), "{sampler:?} it={it} l={layer}");
+                assert_eq!(max, r.max_received(), "{sampler:?} it={it} l={layer}");
+                assert_eq!(
+                    mean.to_bits(),
+                    r.summary().mean().to_bits(),
+                    "{sampler:?} it={it} l={layer}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rng_v2_same_imbalance_regime_as_v1() {
+        // v2 draws the same Dirichlet/multinomial process, so the
+        // imbalance statistics must land in the same regime even
+        // though the individual bits differ.
+        let (mut v1_cv, mut v2_cv) = (0.0, 0.0);
+        for seed in 0..10 {
+            v1_cv += GatingSim::new(model_i(), paper_parallel(), seed)
+                .route(7, 15)
+                .summary()
+                .cv();
+            v2_cv += GatingSim::new(model_i(), paper_parallel(), seed)
+                .with_rng(RngVersion::V2)
+                .route(7, 15)
+                .summary()
+                .cv();
+        }
+        let ratio = v2_cv / v1_cv;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "imbalance regimes diverged: v1 {v1_cv:.2} v2 {v2_cv:.2}"
+        );
     }
 
     #[test]

@@ -230,6 +230,39 @@ pub struct CellMethodOutcome {
     pub summary: RunSummary,
 }
 
+/// One iteration's contribution to a method's [`RunSummary`] — the
+/// unit [`fold_cell_partials`] re-accumulates in ascending iteration
+/// order so a split cell folds bit-identically to an unsplit walk
+/// (float sums are order-sensitive; u64 peaks are not, but we keep
+/// one canonical order for everything).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MethodIterationRow {
+    /// Eq. 3 violated on some stage this iteration.
+    pub oom: bool,
+    /// TGS of this iteration (counted into the mean only when not OOM).
+    pub tgs: f64,
+    /// Max per-stage activation peak this iteration.
+    pub peak_act: u64,
+    /// Max per-stage static + activation total this iteration.
+    pub peak_total: u64,
+    /// Mean chunk count over the iteration's MoE layers (Fig. 5 point).
+    pub chunk_mean: f64,
+}
+
+/// One method's partial result from evaluating a contiguous iteration
+/// range of a cell ([`evaluate_cell_range`]). Concatenating the `rows`
+/// of adjacent ranges and folding with [`fold_cell_partials`]
+/// reproduces the whole-cell [`CellMethodOutcome`] exactly — this is
+/// the contract the intra-cell sweep splitter relies on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellMethodPartial {
+    pub method: Method,
+    /// Static bytes of the heaviest stage (range-invariant).
+    pub static_bytes: u64,
+    /// Per-iteration rows for `lo..hi`, ascending.
+    pub rows: Vec<MethodIterationRow>,
+}
+
 /// Memoised method-evaluation kernels for one `(max_recv, chunks)`
 /// query. Everything here is stage-independent: the chunked memory
 /// peaks are evaluated at `m_g = 1` (full recompute of the dense part,
@@ -276,7 +309,8 @@ struct LayerEval {
 }
 
 /// Per-method state of a fused cell evaluation: the method's chunking
-/// policy plus its running aggregates.
+/// policy plus its per-iteration rows (folded into aggregates by
+/// [`fold_cell_partials`]).
 struct MethodState {
     method: Method,
     method1: bool,
@@ -285,12 +319,7 @@ struct MethodState {
     /// Eq. 8 budget per pipeline stage (MACT only) — constant over the
     /// run, hoisted out of the per-layer decision.
     s_max: Vec<u64>,
-    tgs_sum: f64,
-    tgs_n: u64,
-    oom_iterations: u64,
-    peak_act: u64,
-    peak_total: u64,
-    chunk_means: Vec<f64>,
+    rows: Vec<MethodIterationRow>,
 }
 
 fn memfine_kernel(
@@ -352,6 +381,30 @@ pub fn evaluate_cell(
     methods: &[Method],
     trace: &SharedRoutingTrace,
 ) -> crate::Result<Vec<CellMethodOutcome>> {
+    if trace.iterations < base.iterations {
+        return Err(Error::config(format!(
+            "trace covers {} iterations, run needs {}",
+            trace.iterations, base.iterations
+        )));
+    }
+    let parts = evaluate_cell_range(base, methods, trace, 0, base.iterations)?;
+    fold_cell_partials(vec![parts])
+}
+
+/// Evaluate iterations `lo..hi` of a fused cell against `trace` —
+/// the range form of [`evaluate_cell`], which is literally
+/// `evaluate_cell_range(_, _, _, 0, iterations)` + one fold. The trace
+/// must cover the range (`trace.first_iteration <= lo && hi <=
+/// trace.iterations`); per-iteration evaluation has no cross-iteration
+/// state (memo caches are pure), so any partition of `0..iterations`
+/// into contiguous ranges folds back bit-identically.
+pub fn evaluate_cell_range(
+    base: &RunConfig,
+    methods: &[Method],
+    trace: &SharedRoutingTrace,
+    lo: u64,
+    hi: u64,
+) -> crate::Result<Vec<CellMethodPartial>> {
     let mut run = base.clone();
     run.seed = trace.seed;
     // Same trace-identity contract as run_scenario_on_trace: the
@@ -361,10 +414,10 @@ pub fn evaluate_cell(
             "trace was drawn for a different (model, parallel) configuration than the run",
         ));
     }
-    if trace.iterations < run.iterations {
+    if lo > hi || lo < trace.first_iteration || hi > trace.iterations {
         return Err(Error::config(format!(
-            "trace covers {} iterations, run needs {}",
-            trace.iterations, run.iterations
+            "iteration range {}..{} outside trace coverage {}..{}",
+            lo, hi, trace.first_iteration, trace.iterations
         )));
     }
 
@@ -398,12 +451,7 @@ pub fn evaluate_cell(
                 fixed_c,
                 mact,
                 s_max,
-                tgs_sum: 0.0,
-                tgs_n: 0,
-                oom_iterations: 0,
-                peak_act: 0,
-                peak_total: 0,
-                chunk_means: Vec::with_capacity(run.iterations as usize),
+                rows: Vec::with_capacity((hi - lo) as usize),
             })
         })
         .collect::<crate::Result<Vec<MethodState>>>()?;
@@ -441,7 +489,7 @@ pub fn evaluate_cell(
     let mut per_stage_time = vec![0.0f64; pp];
     let mut per_stage_act_peak = vec![0u64; pp];
 
-    for it in 0..run.iterations {
+    for it in lo..hi {
         let recs = trace.iteration(it);
         debug_assert_eq!(recs.len(), n_moe);
         for state in &mut states {
@@ -529,37 +577,82 @@ pub fn evaluate_cell(
             }
             let iteration_s = perf.iteration_time(&per_stage_time, micro_batches);
             let tgs = perf.tgs(iteration_s);
-            if oom {
-                state.oom_iterations += 1;
-            } else {
-                state.tgs_sum += tgs;
-                state.tgs_n += 1;
-            }
-            state.peak_act = state.peak_act.max(it_peak_act);
-            state.peak_total = state.peak_total.max(it_peak_total);
-            state.chunk_means.push(if n_moe == 0 {
-                0.0
-            } else {
-                chunk_sum / n_moe as f64
+            state.rows.push(MethodIterationRow {
+                oom,
+                tgs,
+                peak_act: it_peak_act,
+                peak_total: it_peak_total,
+                chunk_mean: if n_moe == 0 { 0.0 } else { chunk_sum / n_moe as f64 },
             });
         }
     }
 
     Ok(states
         .into_iter()
-        .map(|s| CellMethodOutcome {
-            method: s.method,
-            summary: RunSummary {
-                iterations: run.iterations,
-                oom_iterations: s.oom_iterations,
-                avg_tgs: if s.tgs_n > 0 { s.tgs_sum / s.tgs_n as f64 } else { 0.0 },
-                peak_act_bytes: s.peak_act,
-                peak_total_bytes: s.peak_total,
-                static_bytes,
-                chunk_mean_per_iteration: s.chunk_means,
-            },
-        })
+        .map(|s| CellMethodPartial { method: s.method, static_bytes, rows: s.rows })
         .collect())
+}
+
+/// Fold the partial results of contiguous iteration ranges (given in
+/// ascending range order, jointly covering the whole run) back into
+/// whole-cell outcomes. The accumulation replays [`evaluate_cell`]'s
+/// original in-place order exactly — rows visited ascending, TGS
+/// summed left-to-right over non-OOM iterations, peaks max-folded,
+/// chunk means appended — so the result is bit-identical for every
+/// partition of the run, including the trivial one-range partition.
+pub fn fold_cell_partials(
+    parts: Vec<Vec<CellMethodPartial>>,
+) -> crate::Result<Vec<CellMethodOutcome>> {
+    let n_methods = match parts.first() {
+        Some(first) => first.len(),
+        None => return Err(Error::config("no cell partials to fold")),
+    };
+    if parts.iter().any(|p| p.len() != n_methods) {
+        return Err(Error::config("cell partials disagree on method count"));
+    }
+    let mut out = Vec::with_capacity(n_methods);
+    for m in 0..n_methods {
+        let method = parts[0][m].method.clone();
+        let static_bytes = parts[0][m].static_bytes;
+        let mut iterations = 0u64;
+        let mut oom_iterations = 0u64;
+        let mut tgs_sum = 0.0f64;
+        let mut tgs_n = 0u64;
+        let mut peak_act = 0u64;
+        let mut peak_total = 0u64;
+        let mut chunk_means = Vec::new();
+        for part in &parts {
+            let p = &part[m];
+            if p.method != method || p.static_bytes != static_bytes {
+                return Err(Error::config("cell partials disagree on method identity"));
+            }
+            iterations += p.rows.len() as u64;
+            for row in &p.rows {
+                if row.oom {
+                    oom_iterations += 1;
+                } else {
+                    tgs_sum += row.tgs;
+                    tgs_n += 1;
+                }
+                peak_act = peak_act.max(row.peak_act);
+                peak_total = peak_total.max(row.peak_total);
+                chunk_means.push(row.chunk_mean);
+            }
+        }
+        out.push(CellMethodOutcome {
+            method,
+            summary: RunSummary {
+                iterations,
+                oom_iterations,
+                avg_tgs: if tgs_n > 0 { tgs_sum / tgs_n as f64 } else { 0.0 },
+                peak_act_bytes: peak_act,
+                peak_total_bytes: peak_total,
+                static_bytes,
+                chunk_mean_per_iteration: chunk_means,
+            },
+        });
+    }
+    Ok(out)
 }
 
 /// The simulator.
@@ -1108,6 +1201,89 @@ mod tests {
         other.seed = 3;
         let trace_ii = Simulator::new(other).unwrap().draw_trace();
         assert!(evaluate_cell(&base, &[Method::FullRecompute], &trace_ii).is_err());
+    }
+
+    #[test]
+    fn evaluate_cell_range_split_folds_bit_identical() {
+        // The intra-cell split invariant: ANY partition of the run into
+        // contiguous ranges, folded in order, equals the unsplit walk
+        // to the bit (the sweep splitter's artifact-stability contract).
+        let methods = vec![
+            Method::FullRecompute,
+            Method::FixedChunk(8),
+            Method::Mact(vec![1, 2, 4, 8]),
+        ];
+        let mut base = paper_run(model_i(), Method::FullRecompute);
+        base.iterations = 9;
+        let mut probe = base.clone();
+        probe.seed = 11;
+        let trace = Simulator::new(probe).unwrap().draw_trace();
+        let whole = evaluate_cell(&base, &methods, &trace).unwrap();
+        for bounds in [
+            vec![0u64, 9],
+            vec![0, 1, 9],
+            vec![0, 4, 9],
+            vec![0, 3, 6, 9],
+            vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9],
+        ] {
+            let parts = bounds
+                .windows(2)
+                .map(|w| evaluate_cell_range(&base, &methods, &trace, w[0], w[1]).unwrap())
+                .collect::<Vec<_>>();
+            let folded = fold_cell_partials(parts).unwrap();
+            assert_eq!(folded.len(), whole.len());
+            for (f, w) in folded.iter().zip(&whole) {
+                assert_eq!(
+                    f.summary.avg_tgs.to_bits(),
+                    w.summary.avg_tgs.to_bits(),
+                    "split {bounds:?}"
+                );
+                assert_eq!(f, w, "split {bounds:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_cell_range_on_range_trace_matches_full_trace() {
+        // Slice jobs draw only their own iteration range
+        // (generate_range) — the partial must equal evaluating the
+        // same range against the full trace, under both RNG versions.
+        use crate::trace::provenance::RngVersion;
+        let methods = vec![Method::FixedChunk(8), Method::Mact(vec![1, 2, 4, 8])];
+        let mut base = paper_run(model_i(), Method::FullRecompute);
+        base.iterations = 8;
+        for rng in [RngVersion::V1, RngVersion::V2] {
+            let gating = crate::router::GatingSim::new(
+                base.model.clone(),
+                base.parallel.clone(),
+                11,
+            )
+            .with_rng(rng);
+            let full = SharedRoutingTrace::generate(&gating, base.iterations);
+            for (lo, hi) in [(0u64, 8u64), (0, 3), (3, 8), (5, 6), (8, 8)] {
+                let range = SharedRoutingTrace::generate_range(&gating, lo, hi);
+                let a = evaluate_cell_range(&base, &methods, &range, lo, hi).unwrap();
+                let b = evaluate_cell_range(&base, &methods, &full, lo, hi).unwrap();
+                assert_eq!(a, b, "{rng:?} range {lo}..{hi}");
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_cell_range_rejects_uncovered_ranges() {
+        let mut base = paper_run(model_i(), Method::FullRecompute);
+        base.iterations = 6;
+        let gating = crate::router::GatingSim::new(base.model.clone(), base.parallel.clone(), 3);
+        let range_trace = SharedRoutingTrace::generate_range(&gating, 2, 5);
+        let methods = [Method::FullRecompute];
+        // inside coverage: fine
+        assert!(evaluate_cell_range(&base, &methods, &range_trace, 2, 5).is_ok());
+        // before / past coverage, inverted bounds: rejected
+        assert!(evaluate_cell_range(&base, &methods, &range_trace, 0, 5).is_err());
+        assert!(evaluate_cell_range(&base, &methods, &range_trace, 2, 6).is_err());
+        assert!(evaluate_cell_range(&base, &methods, &range_trace, 4, 3).is_err());
+        // fold of nothing is an error, not a silent empty result
+        assert!(fold_cell_partials(Vec::new()).is_err());
     }
 
     #[test]

@@ -460,6 +460,46 @@ pub fn audit_planned(planned: &[(usize, String)], set: &CheckpointSet) -> Covera
     }
 }
 
+/// Set once the process has warned about a checkpoint-header
+/// provenance mismatch — large launches resume dozens of checkpoint
+/// sets (every shard child, plus the merge catch-up), and each used to
+/// print its own copy of the same warning, drowning stderr.
+static PROVENANCE_WARNED: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+/// Warn that resumed checkpoint files record a different trace
+/// provenance than this run executes under — **at most once per
+/// process**, with the shard context when the caller is a shard child.
+/// The mismatch is safe (provenance is baked into every row hash, so
+/// foreign rows simply don't resume) but almost always means the whole
+/// grid will re-run, which the operator should know about exactly once.
+pub fn warn_provenance_mismatch(
+    recorded: &TraceProvenance,
+    using: &TraceProvenance,
+    shard: Option<&crate::config::ShardSpec>,
+) {
+    use std::sync::atomic::Ordering;
+    if PROVENANCE_WARNED.swap(true, Ordering::Relaxed) {
+        return;
+    }
+    let ctx = match shard {
+        Some(s) => format!("shard {}/{}: ", s.index, s.count),
+        None => String::new(),
+    };
+    crate::logging::warn(
+        "sweep",
+        format!(
+            "{ctx}checkpoint records router '{}' rng v{} but this run uses router '{}' \
+             rng v{}; recorded rows will not resume under this run's hashes (pass \
+             --router/--rng to match, or omit them to adopt the recorded provenance)",
+            recorded.sampler.tag(),
+            recorded.rng_version,
+            using.sampler.tag(),
+            using.rng_version,
+        ),
+    );
+}
+
 /// Appends one line per completed scenario, flushed immediately so a
 /// kill loses at most in-flight work. `disabled()` is the no-op used
 /// when no `--checkpoint` path is configured.

@@ -30,12 +30,26 @@
 //! gamma/multinomial draw loop entirely — warm-cache artifacts are
 //! pinned byte-identical to cold runs.
 //!
+//! Under the counter-based RNG generation (`--rng v2`,
+//! [`crate::trace::provenance::RngVersion`]) cells additionally admit
+//! **intra-cell parallelism**: because every (iteration, layer) draw
+//! site is O(1)-addressable in the Philox counter streams, a cell's
+//! iterations can be cut into contiguous ranges dispatched as
+//! independent pool jobs ([`sim::evaluate_cell_range`] over
+//! [`SharedRoutingTrace::generate_range`]), with the consumer folding
+//! the per-range partials in iteration order
+//! ([`sim::fold_cell_partials`]) — so a grid with one dominant cell no
+//! longer serialises on it, and the artifact stays byte-identical at
+//! every split width ([`SweepRunOptions::split_iters`]).
+//!
 //! **Determinism contract:** the report — including its serialised
-//! bytes — depends only on the `SweepConfig` and the router `sampler`
+//! bytes — depends only on the `SweepConfig`, the router `sampler`
 //! choice (default: the splitting multinomial; the sequential sampler
-//! remains selectable and hash-distinct). Worker count, thread
-//! scheduling — including the pool's work-stealing schedule, channel
-//! backend, and core pinning ([`pool::PoolConfig`]) — shard splits,
+//! remains selectable and hash-distinct) and the RNG version (default:
+//! v1, byte-frozen; v2 is an equally valid, hash-distinct sample).
+//! Worker count, thread scheduling — including the pool's
+//! work-stealing schedule, channel backend, and core pinning
+//! ([`pool::PoolConfig`]) — intra-cell split widths, shard splits,
 //! kill/resume points, trace-cache state, and checkpoint merge order
 //! cannot perturb it, because
 //!
@@ -70,13 +84,15 @@ pub use pool::{
 };
 pub use report::{CellStats, ScenarioResult, SweepReducer, SweepReport};
 
+use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::config::{ShardSpec, SweepConfig};
 use crate::error::{Error, Result};
 use crate::router::GatingSim;
 use crate::sim;
-use crate::trace::provenance::{RouterSampler, TraceProvenance};
+use crate::trace::provenance::{RngVersion, RouterSampler, TraceProvenance};
 use crate::trace::store::{trace_key, TraceStore};
 use crate::trace::SharedRoutingTrace;
 
@@ -142,6 +158,21 @@ pub struct SweepRunOptions {
     /// Best-effort pin of worker `k` to core `k % cores` (Linux
     /// `sched_setaffinity`; no-op elsewhere). Execution-only.
     pub pin_cores: bool,
+    /// RNG generation the routing streams are drawn with. **Defaults
+    /// to v1** (the fork-per-site splitmix/xoshiro streams every
+    /// existing artifact was drawn under, byte-frozen); `--rng v2`
+    /// selects the counter-based Philox4x64 streams — a different,
+    /// hash-distinct sample of the same distributions whose O(1)
+    /// random access unlocks intra-cell splitting. Like `sampler`,
+    /// part of the scenario hash and the stamped report provenance.
+    pub rng: RngVersion,
+    /// Intra-cell split width in iterations (v2 + fused only; ignored
+    /// — cells stay whole — under v1 or `--unfused`). 0 = auto: split
+    /// only when the grid has fewer cells than workers, so a dominant
+    /// cell stops serialising the sweep tail. Execution-only: the
+    /// per-cell partials fold in iteration order, so artifacts are
+    /// byte-identical at every width and worker count.
+    pub split_iters: u64,
 }
 
 /// What a sweep invocation did, plus the report it produced.
@@ -176,9 +207,38 @@ struct CellWork {
     todo: Vec<(String, grid::Scenario)>,
 }
 
+/// A cell that has been split into iteration-range slices: the shared
+/// job plan every slice of the cell carries (behind an `Arc`), plus
+/// what the consumer needs to reassemble it.
+struct CellPlan {
+    todo: Vec<(String, grid::Scenario)>,
+    /// Dense per-run index of this split cell (the consumer's
+    /// assembly-map key).
+    cell_seq: usize,
+    /// Slices the cell was cut into.
+    n_slices: usize,
+}
+
+/// One unit of pool work: a whole cell (the classic job) or one
+/// iteration-range slice of a split cell.
+enum SweepJob {
+    Whole(CellWork),
+    Slice { plan: Arc<CellPlan>, slice: usize, lo: u64, hi: u64 },
+}
+
+/// What one pool job sends back to the consumer thread.
+enum JobOutput {
+    /// A whole cell's finished rows (+ whether its trace came from the
+    /// cache).
+    Cell(Vec<(String, ScenarioResult)>, bool),
+    /// One slice's per-method partials, awaiting cell reassembly.
+    Slice { plan: Arc<CellPlan>, slice: usize, parts: Vec<sim::CellMethodPartial> },
+}
+
 fn run_cell(
     work: CellWork,
     sampler: RouterSampler,
+    rng: RngVersion,
     unfused: bool,
     store: Option<&TraceStore>,
 ) -> Result<(Vec<(String, ScenarioResult)>, bool)> {
@@ -193,7 +253,8 @@ fn run_cell(
             first.run.parallel.clone(),
             first.run.seed,
         )
-        .with_sampler(sampler);
+        .with_sampler(sampler)
+        .with_rng(rng);
         SharedRoutingTrace::generate(&gating, first.run.iterations)
     };
     let mut cache_hit = false;
@@ -204,7 +265,7 @@ fn run_cell(
                 &first.run.parallel,
                 first.run.seed,
                 first.run.iterations,
-                &TraceProvenance::current(sampler),
+                &TraceProvenance::with(sampler, rng),
             );
             match st.load(
                 &key,
@@ -266,6 +327,33 @@ fn run_cell(
     Ok((rows, cache_hit))
 }
 
+/// Evaluate one iteration-range slice of a split cell: draw exactly
+/// this range of the cell's routing stream (O(1) random access is what
+/// the v2 counter RNG buys — each (iteration, layer) site is addressed
+/// directly, no sequential prefix to replay) and walk it through the
+/// fused range evaluator. Slices bypass the trace store: the store
+/// only holds whole-cell traces, and a split cell is by definition one
+/// this run wants to parallelise *inside*, not re-load.
+fn run_slice(
+    plan: &CellPlan,
+    sampler: RouterSampler,
+    rng: RngVersion,
+    lo: u64,
+    hi: u64,
+) -> Result<Vec<sim::CellMethodPartial>> {
+    let first = &plan.todo[0].1;
+    let gating = GatingSim::new(
+        first.run.model.clone(),
+        first.run.parallel.clone(),
+        first.run.seed,
+    )
+    .with_sampler(sampler)
+    .with_rng(rng);
+    let trace = SharedRoutingTrace::generate_range(&gating, lo, hi);
+    let methods: Vec<_> = plan.todo.iter().map(|(_, sc)| sc.method.clone()).collect();
+    sim::evaluate_cell_range(&first.run, &methods, &trace, lo, hi)
+}
+
 /// Run a sweep under the given execution options: resume from
 /// checkpoints, apply the shard filter and scenario budget, execute
 /// the remaining trace cells on the worker pool, stream results
@@ -274,7 +362,7 @@ fn run_cell(
 pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<SweepRunSummary> {
     let cells = grid::expand_cells(cfg)?;
     let total = cfg.scenario_count();
-    let prov = TraceProvenance::current(opts.sampler);
+    let prov = TraceProvenance::with(opts.sampler, opts.rng);
 
     if opts.resume && opts.checkpoint.is_empty() {
         return Err(Error::config("resume requires at least one checkpoint path"));
@@ -284,6 +372,14 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
     } else {
         checkpoint::CheckpointSet::empty()
     };
+    // Engine-level (and therefore once-per-process) mismatch warning:
+    // shard children and the merge catch-up all pass through here, so
+    // none of them needs its own copy of this check.
+    if let Some(recorded) = &done.header_provenance {
+        if *recorded != prov {
+            checkpoint::warn_provenance_mismatch(recorded, &prov, opts.shard.as_ref());
+        }
+    }
     let mut writer = match opts.checkpoint.first() {
         None => checkpoint::CheckpointWriter::disabled(),
         Some(p) if opts.resume => checkpoint::CheckpointWriter::append(p, Some(&prov))?,
@@ -359,14 +455,60 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
         opts.workers
     };
 
-    // Stream: each finished cell delivers its rows on this thread —
-    // checkpoint line out first (kill-safety), then fold.
+    // Intra-cell parallelism (v2 + fused only): when one cell would
+    // serialise the sweep tail — fewer cells than workers — cut each
+    // cell's iterations into contiguous ranges and dispatch them as
+    // independent pool jobs. The v1 generators stay whole-cell: their
+    // streams are cheap to draw sequentially and the v1 execution
+    // graph is byte-frozen. Artifacts cannot depend on the policy —
+    // partials fold in iteration order (sim::fold_cell_partials), so
+    // any width is bit-identical to unsplit.
+    let split_width = if opts.rng == RngVersion::V2 && !opts.unfused {
+        if opts.split_iters > 0 {
+            opts.split_iters
+        } else if workers > 1 && work.len() < workers {
+            // auto: ~4 slices per idle worker, floor 16 so small cells
+            // stay whole and per-slice setup stays amortised
+            cfg.iterations.div_ceil(4 * workers as u64).max(16)
+        } else {
+            0
+        }
+    } else {
+        0
+    };
+    let mut jobs: Vec<SweepJob> = Vec::with_capacity(work.len());
+    let mut n_split_cells = 0usize;
+    for w in work {
+        let iters = w.todo[0].1.run.iterations;
+        if split_width > 0 && split_width < iters {
+            let n_slices = iters.div_ceil(split_width) as usize;
+            let plan =
+                Arc::new(CellPlan { todo: w.todo, cell_seq: n_split_cells, n_slices });
+            n_split_cells += 1;
+            for slice in 0..n_slices {
+                let lo = slice as u64 * split_width;
+                let hi = (lo + split_width).min(iters);
+                jobs.push(SweepJob::Slice { plan: Arc::clone(&plan), slice, lo, hi });
+            }
+        } else {
+            jobs.push(SweepJob::Whole(w));
+        }
+    }
+
+    // Stream: each finished job delivers on this thread — whole cells
+    // emit their rows directly (checkpoint line out first for
+    // kill-safety, then fold); slices park in the assembly map until
+    // their cell is complete, then fold in range order and emit the
+    // same way.
     let mut first_err: Option<Error> = None;
     let sampler = opts.sampler;
+    let rng = opts.rng;
     let unfused = opts.unfused;
     let store_ref = store.as_ref();
     let mut traces_generated = 0usize;
     let mut traces_cached = 0usize;
+    let mut pending: HashMap<usize, Vec<Option<Vec<sim::CellMethodPartial>>>> =
+        HashMap::new();
     let pool_cfg = pool::PoolConfig {
         workers,
         schedule: opts.pool,
@@ -375,11 +517,17 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
         ..pool::PoolConfig::default()
     };
     let pool_stats = pool::parallel_for_each_indexed_with(
-        work,
+        jobs,
         &pool_cfg,
-        |_, w| run_cell(w, sampler, unfused, store_ref),
+        |_, job| match job {
+            SweepJob::Whole(w) => {
+                run_cell(w, sampler, rng, unfused, store_ref).map(|(rows, hit)| JobOutput::Cell(rows, hit))
+            }
+            SweepJob::Slice { plan, slice, lo, hi } => run_slice(&plan, sampler, rng, lo, hi)
+                .map(|parts| JobOutput::Slice { plan, slice, parts }),
+        },
         |_, res| match res {
-            Ok((rows, cache_hit)) => {
+            Ok(JobOutput::Cell(rows, cache_hit)) => {
                 if cache_hit {
                     traces_cached += 1;
                 } else {
@@ -392,6 +540,42 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
                         }
                     }
                     reducer.push(row);
+                }
+            }
+            Ok(JobOutput::Slice { plan, slice, parts }) => {
+                let slots = pending
+                    .entry(plan.cell_seq)
+                    .or_insert_with(|| vec![None; plan.n_slices]);
+                debug_assert!(slots[slice].is_none(), "slice delivered twice");
+                slots[slice] = Some(parts);
+                if !slots.iter().all(Option::is_some) {
+                    return;
+                }
+                let slots = pending.remove(&plan.cell_seq).expect("just inserted");
+                let in_order: Vec<_> =
+                    slots.into_iter().map(|s| s.expect("all slices present")).collect();
+                match sim::fold_cell_partials(in_order) {
+                    Ok(outcomes) => {
+                        traces_generated += 1;
+                        debug_assert_eq!(outcomes.len(), plan.todo.len());
+                        for ((hash, sc), out) in plan.todo.iter().zip(outcomes) {
+                            debug_assert!(
+                                out.method == sc.method && sc.run.seed == sc.seed
+                            );
+                            let row = ScenarioResult::from_summary(sc, &out.summary);
+                            if let Err(e) = writer.record(hash, &row) {
+                                if first_err.is_none() {
+                                    first_err = Some(e);
+                                }
+                            }
+                            reducer.push(row);
+                        }
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
                 }
             }
             Err(e) => {
@@ -734,6 +918,152 @@ mod tests {
         assert_eq!(s.executed, 3);
         assert_eq!(s.skipped, 1);
         assert_eq!(s.report.scenarios.len(), 3);
+    }
+
+    #[test]
+    fn rng_v2_is_a_distinct_sample_with_v2_provenance() {
+        let cfg = tiny_grid();
+        let v1 = run_sweep(&cfg, 2).unwrap();
+        let v2 = run_sweep_with(
+            &cfg,
+            &SweepRunOptions { workers: 2, rng: RngVersion::V2, ..Default::default() },
+        )
+        .unwrap()
+        .report;
+        assert_eq!(v1.provenance.rng_version, 1);
+        assert_eq!(v2.provenance.rng_version, 2);
+        // same grid shape, different draws
+        assert_eq!(v1.scenarios.len(), v2.scenarios.len());
+        assert!(v1
+            .scenarios
+            .iter()
+            .zip(&v2.scenarios)
+            .any(|(a, b)| a.peak_act_bytes != b.peak_act_bytes));
+    }
+
+    #[test]
+    fn rng_v2_split_widths_and_worker_counts_are_byte_identical() {
+        // THE intra-cell-split invariant at engine level: every
+        // (workers, split width) combination — including widths that
+        // cut mid-cell at awkward boundaries — emits the serial
+        // unsplit run's exact bytes, fused and unfused alike.
+        let cfg = tiny_grid(); // 10 iterations per cell
+        let serial = run_sweep_with(
+            &cfg,
+            &SweepRunOptions { workers: 1, rng: RngVersion::V2, ..Default::default() },
+        )
+        .unwrap();
+        let serial_json = serial.report.to_json().to_string_pretty();
+        for workers in [1usize, 2, 8] {
+            for split_iters in [0u64, 1, 3, 4, 7, 100] {
+                let opts = SweepRunOptions {
+                    workers,
+                    rng: RngVersion::V2,
+                    split_iters,
+                    ..Default::default()
+                };
+                let s = run_sweep_with(&cfg, &opts).unwrap();
+                assert_eq!(
+                    serial_json,
+                    s.report.to_json().to_string_pretty(),
+                    "workers={workers} split_iters={split_iters}"
+                );
+            }
+        }
+        // forced width 3 on 10-iteration cells: 4 slices × 2 cells
+        let forced = run_sweep_with(
+            &cfg,
+            &SweepRunOptions {
+                workers: 2,
+                rng: RngVersion::V2,
+                split_iters: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(forced.pool.jobs_total(), 8);
+        assert_eq!(forced.traces_generated, 2); // counted per cell, not per slice
+        // the per-method unfused engine agrees byte-for-byte under v2
+        let unfused = run_sweep_with(
+            &cfg,
+            &SweepRunOptions {
+                workers: 2,
+                rng: RngVersion::V2,
+                unfused: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(serial_json, unfused.report.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn rng_v2_auto_split_engages_on_a_dominant_cell_v1_never_splits() {
+        // One (model, seed) cell, many workers: under v2 the auto
+        // policy must cut the cell so the extra workers do something;
+        // under v1 cells always stay whole (the frozen execution
+        // graph), even when split_iters is forced.
+        let cfg = SweepConfig {
+            models: vec!["i".into()],
+            methods: vec![Method::FullRecompute, Method::Mact(vec![1, 2, 4, 8])],
+            seeds: vec![7],
+            iterations: 40,
+        };
+        let auto = run_sweep_with(
+            &cfg,
+            &SweepRunOptions { workers: 8, rng: RngVersion::V2, ..Default::default() },
+        )
+        .unwrap();
+        assert!(auto.pool.jobs_total() > 1, "auto split must engage");
+        assert_eq!(auto.traces_generated, 1);
+        let whole = run_sweep_with(
+            &cfg,
+            &SweepRunOptions { workers: 1, rng: RngVersion::V2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(whole.pool.jobs_total(), 1);
+        assert_eq!(
+            whole.report.to_json().to_string_pretty(),
+            auto.report.to_json().to_string_pretty()
+        );
+        let v1_forced = run_sweep_with(
+            &cfg,
+            &SweepRunOptions { workers: 8, split_iters: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(v1_forced.pool.jobs_total(), 1, "v1 cells stay whole");
+        assert_eq!(v1_forced.report.provenance.rng_version, 1);
+    }
+
+    #[test]
+    fn rng_v2_split_sweep_checkpoints_and_resumes() {
+        // Rows emitted by reassembled split cells must checkpoint and
+        // resume exactly like whole-cell rows.
+        let path = {
+            let mut p = std::env::temp_dir();
+            p.push(format!("memfine-sweep-v2-ckpt-{}", std::process::id()));
+            p
+        };
+        std::fs::remove_file(&path).ok();
+        let cfg = tiny_grid();
+        let opts = SweepRunOptions {
+            workers: 2,
+            rng: RngVersion::V2,
+            split_iters: 3,
+            checkpoint: vec![path.clone()],
+            ..Default::default()
+        };
+        let first = run_sweep_with(&cfg, &opts).unwrap();
+        assert_eq!(first.executed, 4);
+        let resume_opts = SweepRunOptions { resume: true, ..opts };
+        let second = run_sweep_with(&cfg, &resume_opts).unwrap();
+        assert_eq!(second.executed, 0);
+        assert_eq!(second.resumed, 4);
+        assert_eq!(
+            first.report.to_json().to_string_pretty(),
+            second.report.to_json().to_string_pretty()
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

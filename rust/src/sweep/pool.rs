@@ -195,7 +195,10 @@ impl PoolStats {
     /// Straggler overhead: wall clock minus the perfectly balanced
     /// lower bound (total busy time / workers). This is the tail
     /// latency a scheduler can actually fight — 0 means every worker
-    /// stayed busy until the last job finished.
+    /// stayed busy until the last job finished. Busy time is sampled
+    /// inside job bodies while wall brackets the whole run, so on
+    /// coarse clocks `busy/workers` can exceed `wall`; the saturating
+    /// subtraction clamps that at 0 instead of wrapping to ~u64::MAX.
     pub fn tail_latency_ns(&self) -> u64 {
         let n = self.workers.len().max(1) as u64;
         self.wall_ns.saturating_sub(self.busy_ns_total() / n)
@@ -906,6 +909,25 @@ mod tests {
         assert!(stats.wall_ns > 0);
         assert!(stats.busy_ns_total() > 0);
         assert!(stats.tail_latency_ns() <= stats.wall_ns);
+    }
+
+    #[test]
+    fn tail_latency_clamps_to_zero_when_busy_exceeds_wall() {
+        // Busy time is measured per job body, wall around the whole
+        // run: on coarse clocks busy/workers can exceed wall. The
+        // subtraction must clamp at zero, never underflow.
+        let stats = PoolStats {
+            wall_ns: 1_000,
+            workers: vec![
+                WorkerStats { busy_ns: 4_000, ..WorkerStats::default() },
+                WorkerStats { busy_ns: 3_000, ..WorkerStats::default() },
+            ],
+            ..PoolStats::default()
+        };
+        assert_eq!(stats.tail_latency_ns(), 0);
+        // the degenerate no-worker snapshot divides by max(1), not 0
+        let empty = PoolStats { wall_ns: 5, ..PoolStats::default() };
+        assert_eq!(empty.tail_latency_ns(), 5);
     }
 
     #[test]

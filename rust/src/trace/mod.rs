@@ -20,7 +20,7 @@
 pub mod provenance;
 pub mod store;
 
-pub use provenance::{RouterSampler, TraceProvenance};
+pub use provenance::{RngVersion, RouterSampler, TraceProvenance};
 pub use store::{trace_key, TraceStore};
 
 use crate::json::{self, Value};
@@ -123,7 +123,14 @@ pub struct SharedRoutingTrace {
     /// The parallelism layout the per-rank statistics were computed
     /// under (EP width shapes `min_recv`/`max_recv`) — identity too.
     pub parallel: crate::config::ParallelConfig,
-    /// One record per (iteration, MoE layer), iteration-major.
+    /// First iteration covered. 0 for whole-cell traces (the only kind
+    /// the on-disk store holds); a range trace from
+    /// [`SharedRoutingTrace::generate_range`] starts here and covers
+    /// `[first_iteration, iterations)`. Because every draw stream
+    /// forks statelessly per (iteration, layer), a range trace's
+    /// records are bit-identical to the same rows of the full trace.
+    pub first_iteration: u64,
+    /// One record per covered (iteration, MoE layer), iteration-major.
     pub records: Vec<RoutingRecord>,
 }
 
@@ -132,15 +139,26 @@ impl SharedRoutingTrace {
     /// `gating` describes. The per-(iteration, layer) statistics are
     /// exactly what [`GatingSim::route`] + `summary()` produce.
     pub fn generate(gating: &GatingSim, iterations: u64) -> Self {
+        Self::generate_range(gating, 0, iterations)
+    }
+
+    /// Draw only iterations `[lo, hi)` of the trace — the intra-cell
+    /// split path. `route_stats` forks a fresh stream per (iteration,
+    /// layer), so the records here are bit-identical to the same rows
+    /// of [`SharedRoutingTrace::generate`]`(gating, hi)`: concatenating
+    /// adjacent range traces reproduces the full trace exactly, at any
+    /// split boundary, under either rng version.
+    pub fn generate_range(gating: &GatingSim, lo: u64, hi: u64) -> Self {
+        assert!(lo <= hi, "trace range {lo}..{hi} is inverted");
         let layers = gating.model.layers;
         let dense_layers = gating.model.dense_layers;
         let moe = (layers - dense_layers) as usize;
-        let mut records = Vec::with_capacity(moe * iterations as usize);
+        let mut records = Vec::with_capacity(moe * (hi - lo) as usize);
         // One set of probability/count buffers serves every draw of the
         // trace ([`GatingSim::route_stats`] is pinned bit-identical to
         // the allocating `route()` path).
         let mut scratch = crate::router::RouteScratch::new(&gating.model, &gating.parallel);
-        for iteration in 0..iterations {
+        for iteration in lo..hi {
             for layer in dense_layers..layers {
                 let (min_recv, mean_recv, max_recv) =
                     gating.route_stats(iteration, layer, &mut scratch);
@@ -155,9 +173,10 @@ impl SharedRoutingTrace {
         }
         SharedRoutingTrace {
             seed: gating.seed(),
-            iterations,
+            iterations: hi,
             model: gating.model.clone(),
             parallel: gating.parallel.clone(),
+            first_iteration: lo,
             records,
         }
     }
@@ -168,9 +187,17 @@ impl SharedRoutingTrace {
     }
 
     /// The records of one iteration, ordered by ascending MoE layer.
+    /// `it` is the absolute iteration number; a range trace indexes
+    /// relative to its `first_iteration`.
     pub fn iteration(&self, it: u64) -> &[RoutingRecord] {
+        debug_assert!(
+            it >= self.first_iteration && it < self.iterations,
+            "iteration {it} outside trace range {}..{}",
+            self.first_iteration,
+            self.iterations
+        );
         let stride = self.moe_layers();
-        let start = it as usize * stride;
+        let start = (it - self.first_iteration) as usize * stride;
         &self.records[start..start + stride]
     }
 

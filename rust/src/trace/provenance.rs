@@ -27,17 +27,87 @@
 use crate::error::{Error, Result};
 use crate::json::{self, Value};
 
-/// The RNG stack every trace stream is drawn from. Part of the
-/// recorded provenance: a different algorithm would be a different
-/// (equally valid) sample, exactly like a sampler change.
+/// The version-1 RNG stack (the default). Part of the recorded
+/// provenance: a different algorithm would be a different (equally
+/// valid) sample, exactly like a sampler change.
 pub const RNG_ALGORITHM: &str = "splitmix64+xoshiro256**";
 
-/// Version of the drawn bit-streams. Bump this when any sampler or
-/// generator change alters the drawn bits (the batched/vectorised
-/// kernels do **not** — they are pinned bit-identical to the scalar
-/// paths); version 1 hashes serialise exactly as the pre-provenance
-/// era did, so all historical checkpoints remain resumable.
+/// The version-2 RNG stack: the counter-based generator behind
+/// `--rng v2` ([`crate::util::rng::philox4x64`]).
+pub const RNG2_ALGORITHM: &str = "philox4x64-10";
+
+/// Version of the **default** drawn bit-streams. Bump this when any
+/// sampler or generator change alters the default drawn bits (the
+/// batched/vectorised kernels do **not** — they are pinned
+/// bit-identical to the scalar paths); version 1 hashes serialise
+/// exactly as the pre-provenance era did, so all historical
+/// checkpoints remain resumable. Version 2 (counter-based Philox) is
+/// opt-in via `--rng v2` and always perturbs hashes through
+/// [`TraceProvenance::hash_fields`].
 pub const RNG_VERSION: u64 = 1;
+
+/// Which generator draws the trace streams. v1 is the sequential
+/// xoshiro256** fork-per-(iteration, layer) stack — the default, and
+/// the version every historical artifact was drawn under. v2 is the
+/// counter-based Philox4x64-10 stack: every draw site is an O(1) pure
+/// function of its (key, iteration, layer, lane, word) coordinate,
+/// which is what makes intra-cell iteration splitting and
+/// lane-oblivious batch sampling possible.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum RngVersion {
+    #[default]
+    V1,
+    V2,
+}
+
+impl RngVersion {
+    /// The CLI / JSON tag ("v1" / "v2").
+    pub fn tag(&self) -> &'static str {
+        match self {
+            RngVersion::V1 => "v1",
+            RngVersion::V2 => "v2",
+        }
+    }
+
+    /// The numeric form recorded in provenance documents.
+    pub fn as_u64(&self) -> u64 {
+        match self {
+            RngVersion::V1 => 1,
+            RngVersion::V2 => 2,
+        }
+    }
+
+    /// Parse a CLI tag (`--rng v1|v2`; bare digits accepted).
+    pub fn parse(tag: &str) -> Result<Self> {
+        match tag.trim() {
+            "v1" | "1" => Ok(RngVersion::V1),
+            "v2" | "2" => Ok(RngVersion::V2),
+            other => Err(Error::config(format!(
+                "unknown rng version '{other}' (expected v1 or v2)"
+            ))),
+        }
+    }
+
+    /// Map a recorded `rng_version` number back to a generator this
+    /// build can execute (errors on versions from the future).
+    pub fn from_u64(v: u64) -> Result<Self> {
+        match v {
+            1 => Ok(RngVersion::V1),
+            2 => Ok(RngVersion::V2),
+            other => Err(Error::config(format!(
+                "recorded rng_version {other} is not supported by this build (knows 1, 2)"
+            ))),
+        }
+    }
+
+    /// Human name of the generator stack this version selects.
+    pub fn algorithm(&self) -> &'static str {
+        match self {
+            RngVersion::V1 => RNG_ALGORITHM,
+            RngVersion::V2 => RNG2_ALGORITHM,
+        }
+    }
+}
 
 /// Which multinomial consumes the routing stream. Both draw the same
 /// distribution over the same forked streams; they consume the raw
@@ -112,9 +182,23 @@ impl Default for TraceProvenance {
 }
 
 impl TraceProvenance {
-    /// Provenance of traces drawn by this build with the given sampler.
+    /// Provenance of traces drawn by this build with the given sampler
+    /// under the default generator.
     pub fn current(sampler: RouterSampler) -> Self {
         TraceProvenance { sampler, rng_version: RNG_VERSION }
+    }
+
+    /// Provenance of traces drawn with an explicit (sampler, rng
+    /// version) pair — the `--rng` form of [`TraceProvenance::current`]
+    /// (identical to it for [`RngVersion::V1`]).
+    pub fn with(sampler: RouterSampler, rng: RngVersion) -> Self {
+        TraceProvenance { sampler, rng_version: rng.as_u64() }
+    }
+
+    /// The recorded rng version as an executable generator selection
+    /// (errors on a version this build does not know).
+    pub fn rng(&self) -> Result<RngVersion> {
+        RngVersion::from_u64(self.rng_version)
     }
 
     /// Provenance of pre-flip default-path artifacts (sequential
@@ -142,11 +226,18 @@ impl TraceProvenance {
         self.sampler.tag()
     }
 
-    /// Full metadata form (checkpoint headers, report artifacts).
+    /// Full metadata form (checkpoint headers, report artifacts). The
+    /// algorithm name follows the recorded version (unknown future
+    /// versions are labelled by number only); version-1 output is
+    /// byte-identical to the historical form.
     pub fn to_json(&self) -> Value {
+        let algorithm = match RngVersion::from_u64(self.rng_version) {
+            Ok(v) => v.algorithm().to_string(),
+            Err(_) => format!("rng_version_{}", self.rng_version),
+        };
         json::obj(vec![
             ("router", json::s(self.tag().to_string())),
-            ("rng_algorithm", json::s(RNG_ALGORITHM.to_string())),
+            ("rng_algorithm", json::s(algorithm)),
             ("rng_version", json::num(self.rng_version as f64)),
         ])
     }
@@ -207,6 +298,40 @@ mod tests {
         assert!(json::obj(v2.hash_fields())
             .to_string_compact()
             .contains("rng_version"));
+    }
+
+    #[test]
+    fn rng_version_tags_parse_and_roundtrip() {
+        assert_eq!(RngVersion::default(), RngVersion::V1);
+        for v in [RngVersion::V1, RngVersion::V2] {
+            assert_eq!(RngVersion::parse(v.tag()).unwrap(), v);
+            assert_eq!(RngVersion::from_u64(v.as_u64()).unwrap(), v);
+        }
+        assert_eq!(RngVersion::parse("1").unwrap(), RngVersion::V1);
+        assert_eq!(RngVersion::parse("2").unwrap(), RngVersion::V2);
+        assert!(RngVersion::parse("v3").is_err());
+        assert!(RngVersion::from_u64(7).is_err());
+        assert_eq!(RngVersion::V1.algorithm(), RNG_ALGORITHM);
+        assert_eq!(RngVersion::V2.algorithm(), RNG2_ALGORITHM);
+    }
+
+    #[test]
+    fn with_rng_matches_current_for_v1_and_perturbs_for_v2() {
+        // the migration contract extended to --rng: v1 provenance is
+        // indistinguishable from the historical default...
+        let s = RouterSampler::Split;
+        assert_eq!(TraceProvenance::with(s, RngVersion::V1), TraceProvenance::current(s));
+        assert_eq!(
+            json::obj(TraceProvenance::with(s, RngVersion::V1).hash_fields())
+                .to_string_compact(),
+            "{\"router\":\"split\"}"
+        );
+        // ...while v2 adds the rng_version hash field and names its
+        // algorithm in the metadata form
+        let v2 = TraceProvenance::with(s, RngVersion::V2);
+        assert_eq!(v2.rng().unwrap(), RngVersion::V2);
+        assert!(json::obj(v2.hash_fields()).to_string_compact().contains("rng_version"));
+        assert!(v2.to_json().to_string_compact().contains(RNG2_ALGORITHM));
     }
 
     #[test]

@@ -139,6 +139,7 @@ impl TraceStore {
             iterations,
             model: model.clone(),
             parallel: parallel.clone(),
+            first_iteration: 0,
             records,
         })
     }
@@ -148,6 +149,9 @@ impl TraceStore {
     /// complete file and racing writers of the same key are harmless
     /// (identical content by determinism).
     pub fn save(&self, key: &str, trace: &SharedRoutingTrace) -> Result<()> {
+        // the on-disk format implies full coverage from iteration 0;
+        // range traces (intra-cell splits) are never cached
+        assert_eq!(trace.first_iteration, 0, "trace store only holds whole-cell traces");
         let moe_layers = trace.moe_layers() as u64;
         let key_u64 = u64::from_str_radix(key, 16)
             .map_err(|_| Error::config(format!("trace key '{key}' is not 16 hex chars")))?;

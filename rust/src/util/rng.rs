@@ -572,6 +572,375 @@ impl Rng {
     }
 }
 
+// ======================================================================
+// RNG v2: counter-based Philox streams
+// ======================================================================
+//
+// Version 2 replaces the sequential xoshiro stream with a counter-based
+// generator: every word is a pure function of a `(key, site, lane,
+// word-index)` coordinate, evaluated by [`philox4x64`]. Three
+// properties fall out, none of which the v1 stream can offer:
+//
+// * **O(1) random access** — any position in any stream is one block
+//   evaluation away ([`CounterRng::skip`] is integer arithmetic, not a
+//   replay), so a cell's iterations can be evaluated from any starting
+//   point without drawing the prefix. This is what makes intra-cell
+//   iteration splitting possible in the sweep engine.
+// * **Lane-oblivious wide sampling** — each element of a vector draw
+//   owns its own lane coordinate, so a rejection retry advances only
+//   that lane's counter. The v1 chunked kernels' snapshot-rewind-replay
+//   machinery (needed to keep batch == scalar on one shared stream)
+//   disappears: batch == scalar holds *by construction*, because both
+//   read the same pure function at the same coordinates.
+// * **Trivial parallel determinism** — no generator state is shared
+//   between lanes, sites or iterations, so any execution order of any
+//   partition of the work reads identical bits.
+//
+// v2 draws different bits than v1 (it is a different, equally valid
+// sample), so it is selected per run via `--rng v2` and recorded as
+// `rng_version: 2` in every scenario hash, checkpoint header and trace
+// key ([`crate::trace::provenance`]). v1 remains the default.
+
+/// Philox rounds. 10 is the Random123 recommendation for 4x64.
+pub const PHILOX_ROUNDS: u32 = 10;
+/// Philox4x64 multipliers and Weyl key increments (Random123).
+const PHILOX_M0: u64 = 0xD2E7_470E_E14C_6C93;
+const PHILOX_M1: u64 = 0xCA5A_8263_9512_1157;
+const PHILOX_W0: u64 = 0x9E37_79B9_7F4A_7C15;
+const PHILOX_W1: u64 = 0xBB67_AE85_84CA_A73B;
+
+/// High and low 64-bit halves of the 128-bit product `a · b`.
+#[inline]
+fn mulhilo(a: u64, b: u64) -> (u64, u64) {
+    let p = (a as u128) * (b as u128);
+    ((p >> 64) as u64, p as u64)
+}
+
+/// One Philox4x64-10 block: 256 counter bits + 128 key bits → 4 output
+/// words. Pure and stateless — the whole v2 design hangs off this
+/// being a plain function of its arguments.
+#[inline]
+pub fn philox4x64(key: [u64; 2], counter: [u64; 4]) -> [u64; 4] {
+    let mut c = counter;
+    let (mut k0, mut k1) = (key[0], key[1]);
+    for _ in 0..PHILOX_ROUNDS {
+        let (hi0, lo0) = mulhilo(PHILOX_M0, c[0]);
+        let (hi1, lo1) = mulhilo(PHILOX_M1, c[2]);
+        c = [hi1 ^ c[1] ^ k0, lo1, hi0 ^ c[3] ^ k1, lo0];
+        k0 = k0.wrapping_add(PHILOX_W0);
+        k1 = k1.wrapping_add(PHILOX_W1);
+    }
+    c
+}
+
+/// A v2 word stream: the lane `(key, site, lane)` of the counter
+/// space, read sequentially. Word `w` of the stream is word `w mod 4`
+/// of the Philox block at counter `[w / 4, lane, site[0], site[1]]` —
+/// a pure function, so two `CounterRng`s at the same coordinate always
+/// produce identical bits regardless of who read what before.
+///
+/// The scalar samplers here ([`CounterRng::normal`],
+/// [`CounterRng::gamma`], [`CounterRng::binomial`]) are the v2
+/// reference semantics; the wide kernels ([`gamma_many2`],
+/// [`normal_many2`], [`multinomial_split_into2`]) are pinned
+/// bit-identical to running these per lane.
+#[derive(Clone, Debug)]
+pub struct CounterRng {
+    key: [u64; 2],
+    site: [u64; 2],
+    lane: u64,
+    /// Words consumed so far (the stream position).
+    pos: u64,
+    buf: [u64; 4],
+    /// Block index held in `buf` (`u64::MAX` = none yet).
+    buf_block: u64,
+}
+
+impl CounterRng {
+    /// Open the stream at `(key, site, lane)`, position 0.
+    pub fn new(key: [u64; 2], site: [u64; 2], lane: u64) -> Self {
+        CounterRng { key, site, lane, pos: 0, buf: [0; 4], buf_block: u64::MAX }
+    }
+
+    /// Words consumed so far.
+    pub fn position(&self) -> u64 {
+        self.pos
+    }
+
+    /// Jump `words` ahead in O(1): counter arithmetic, no replay. A
+    /// stream skipped to position `p` produces exactly the words a
+    /// sequential reader sees from its `p`-th draw on.
+    pub fn skip(&mut self, words: u64) {
+        self.pos += words;
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let block = self.pos / 4;
+        if self.buf_block != block {
+            self.buf = philox4x64(self.key, [block, self.lane, self.site[0], self.site[1]]);
+            self.buf_block = block;
+        }
+        let w = self.buf[(self.pos % 4) as usize];
+        self.pos += 1;
+        w
+    }
+
+    /// Uniform in [0, 1) — same 53-bit mapping as the v1 stream.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        u64_to_f64(self.next_u64())
+    }
+
+    /// Standard normal via Box–Muller (same transform as
+    /// [`Rng::normal`], drawn from this lane's counter stream).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang — the same sampler as
+    /// [`Rng::gamma`] on this lane's stream. A rejection retries on
+    /// *this lane only*: the counter advances, nobody else notices.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0);
+        if shape < 1.0 {
+            let g = self.gamma(shape + 1.0);
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return g * u.powf(1.0 / shape);
+        }
+        let (d, c) = gamma_dc(shape);
+        self.gamma_core(d, c)
+    }
+
+    /// Marsaglia–Tsang accept-reject for precomputed `(d, c)` —
+    /// structurally identical to [`Rng::gamma_core`].
+    #[inline]
+    fn gamma_core(&mut self, d: f64, c: f64) -> f64 {
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Binomial(n, p) — the same algorithm tiers as [`Rng::binomial`]
+    /// (reflection, normal approximation, Bernoulli block, Poisson),
+    /// drawing from this lane's stream. The small-`n` Bernoulli block
+    /// needs no speculation here: one counter word per trial, read
+    /// straight out of the lane's 4-word Philox blocks.
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if p <= 0.0 || n == 0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        if p > 0.5 {
+            return n - self.binomial(n, 1.0 - p);
+        }
+        let nf = n as f64;
+        let var = nf * p * (1.0 - p);
+        if var > 30.0 {
+            let mean = nf * p;
+            let sd = var.sqrt();
+            let x = (mean + sd * self.normal() + 0.5).floor();
+            return x.clamp(0.0, nf) as u64;
+        }
+        if n <= 64 {
+            let mut k = 0u64;
+            for _ in 0..n {
+                k += u64::from(self.f64() < p);
+            }
+            return k;
+        }
+        let l = (-nf * p).exp();
+        let mut k = 0u64;
+        let mut prod = self.f64();
+        while prod > l && k < n {
+            k += 1;
+            prod *= self.f64();
+        }
+        k.min(n)
+    }
+}
+
+/// Fill `out` with independent Gamma(shape, 1) draws, element `e` from
+/// lane `e` of `(key, site)`. The lane-oblivious v2 counterpart of
+/// [`Rng::gamma_batch`]: the common case (first-attempt squeeze
+/// accept) runs as a straight-line fixed-lane loop over each lane's
+/// first Philox block, and a lane the scalar sampler would retry
+/// simply finishes on its own lane stream — **no snapshot, no rewind,
+/// no replay**, because no state is shared between lanes. Pinned
+/// bit-identical to `CounterRng::new(key, site, e).gamma(shape)` per
+/// element.
+pub fn gamma_many2(key: [u64; 2], site: [u64; 2], shape: f64, out: &mut [f64]) {
+    assert!(shape > 0.0);
+    let (boost, d, c, inv) = if shape < 1.0 {
+        let (d, c) = gamma_dc(shape + 1.0);
+        (true, d, c, 1.0 / shape)
+    } else {
+        let (d, c) = gamma_dc(shape);
+        (false, d, c, 0.0)
+    };
+    let mut raw = [[0u64; 4]; BATCH_LANES];
+    let mut i = 0;
+    while i < out.len() {
+        let k = BATCH_LANES.min(out.len() - i);
+        // Each lane's entire first attempt (u1, u2, squeeze u, boost u)
+        // is its block 0 — one Philox evaluation per lane, no ordering
+        // between lanes.
+        for (j, slot) in raw[..k].iter_mut().enumerate() {
+            *slot = philox4x64(key, [0, (i + j) as u64, site[0], site[1]]);
+        }
+        for j in 0..k {
+            let u1 = u64_to_f64(raw[j][0]);
+            let u2 = u64_to_f64(raw[j][1]);
+            let u = u64_to_f64(raw[j][2]);
+            let x = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            let v = 1.0 + c * x;
+            // first-attempt acceptance, exactly the scalar tests
+            let mut ok = u1 > 1e-300 && v > 0.0 && u < 1.0 - 0.0331 * x.powi(4);
+            let v = v * v * v;
+            let mut val = d * v;
+            if boost {
+                let bu = u64_to_f64(raw[j][3]);
+                ok = ok && bu > 0.0;
+                val *= bu.powf(inv);
+            }
+            out[i + j] = if ok {
+                val
+            } else {
+                // retries stay on lane (i + j); every other lane's bits
+                // are untouched by construction
+                CounterRng::new(key, site, (i + j) as u64).gamma(shape)
+            };
+        }
+        i += k;
+    }
+}
+
+/// Fill `out` with independent standard normals, element `e` from lane
+/// `e` — the lane-oblivious v2 [`Rng::normal_batch`]. Bit-identical to
+/// `CounterRng::new(key, site, e).normal()` per element.
+pub fn normal_many2(key: [u64; 2], site: [u64; 2], out: &mut [f64]) {
+    for (e, slot) in out.iter_mut().enumerate() {
+        let b = philox4x64(key, [0, e as u64, site[0], site[1]]);
+        let u1 = u64_to_f64(b[0]);
+        let u2 = u64_to_f64(b[1]);
+        *slot = if u1 > 1e-300 {
+            (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+        } else {
+            CounterRng::new(key, site, e as u64).normal()
+        };
+    }
+}
+
+/// Symmetric `Dirichlet(alpha·1)` under v2: lane-per-element gammas
+/// ([`gamma_many2`]) normalised in place, with the same
+/// underflow-to-uniform fallback as the v1 path.
+pub fn dirichlet_symmetric2(key: [u64; 2], site: [u64; 2], alpha: f64, out: &mut [f64]) {
+    gamma_many2(key, site, alpha, out);
+    Rng::normalize_simplex_in_place(out);
+}
+
+/// Left-to-right conditional-binomial multinomial under v2: category
+/// `i`'s binomial draws from lane `i`. Same decomposition as
+/// [`Rng::multinomial_into`], different (v2) bits.
+pub fn multinomial_into2(key: [u64; 2], site: [u64; 2], n: u64, probs: &[f64], out: &mut [u64]) {
+    assert_eq!(out.len(), probs.len(), "multinomial buffer shape");
+    out.fill(0);
+    let mut remaining = n;
+    let mut rest: f64 = 1.0;
+    for (i, &p) in probs.iter().enumerate() {
+        if remaining == 0 {
+            break;
+        }
+        if i + 1 == probs.len() || rest <= 0.0 {
+            out[i] = remaining;
+            remaining = 0;
+            break;
+        }
+        let q = (p / rest).clamp(0.0, 1.0);
+        let k = CounterRng::new(key, site, i as u64).binomial(remaining, q);
+        out[i] = k;
+        remaining -= k;
+        rest -= p;
+    }
+    if remaining > 0 {
+        let last = out.len() - 1;
+        out[last] += remaining;
+    }
+}
+
+/// Recursive binomial-splitting multinomial under v2: each split-tree
+/// node `[lo, hi)` draws its binomial from lane `(lo << 32) | hi`, a
+/// coordinate unique to the node. Because no node shares generator
+/// state with any other, the walk order of the tree is irrelevant to
+/// the drawn bits — the v1 sampler's carefully pinned
+/// node-then-left-subtree draw order ([`Rng::split_range`]) is a
+/// non-constraint here. Same decomposition, different (v2) bits.
+pub fn multinomial_split_into2(
+    key: [u64; 2],
+    site: [u64; 2],
+    n: u64,
+    probs: &[f64],
+    out: &mut [u64],
+) {
+    assert_eq!(out.len(), probs.len(), "multinomial buffer shape");
+    out.fill(0);
+    if probs.is_empty() {
+        debug_assert_eq!(n, 0, "multinomial_split: trials with no categories");
+        return;
+    }
+    debug_assert!(
+        probs.len() < (1usize << 32),
+        "split lane coordinates pack (lo, hi) into 32 bits each"
+    );
+    let mut stack: Vec<(std::ops::Range<usize>, (u64, f64))> =
+        Vec::with_capacity(2 * u64::BITS as usize);
+    stack.push((0..probs.len(), (n, 1.0)));
+    while let Some((range, (t, rest))) = stack.pop() {
+        let (lo, hi) = (range.start, range.end);
+        debug_assert!(lo < hi);
+        if t == 0 {
+            continue;
+        }
+        if hi - lo == 1 || rest <= 0.0 {
+            out[lo] = t;
+            continue;
+        }
+        let mid = lo + (hi - lo) / 2;
+        let p_left: f64 = probs[lo..mid].iter().sum();
+        let q = (p_left / rest).clamp(0.0, 1.0);
+        let lane = ((lo as u64) << 32) | hi as u64;
+        let k = CounterRng::new(key, site, lane).binomial(t, q);
+        stack.push((mid..hi, (t - k, rest - p_left)));
+        stack.push((lo..mid, (k, p_left)));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -895,5 +1264,198 @@ mod tests {
         let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
         let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
         assert_ne!(xs, ys);
+    }
+
+    // ---------------- RNG v2 (counter-based Philox) ----------------
+
+    #[test]
+    fn philox_is_pure_and_coordinate_sensitive() {
+        let key = [7u64, 11];
+        let ctr = [0u64, 1, 2, 3];
+        assert_eq!(philox4x64(key, ctr), philox4x64(key, ctr));
+        // every coordinate word perturbs the block
+        for i in 0..4 {
+            let mut c = ctr;
+            c[i] ^= 1;
+            assert_ne!(philox4x64(key, c), philox4x64(key, ctr), "counter word {i}");
+        }
+        assert_ne!(philox4x64([8, 11], ctr), philox4x64(key, ctr));
+        assert_ne!(philox4x64([7, 12], ctr), philox4x64(key, ctr));
+        // and the output is not the counter (the rounds did something)
+        assert_ne!(philox4x64(key, ctr), ctr);
+    }
+
+    #[test]
+    fn counter_rng_skip_is_jump_ahead() {
+        // O(1) random access: skipping to position p yields exactly the
+        // sequential reader's p-th word, across block boundaries.
+        let key = [3u64, 99];
+        let site = [5u64, 17];
+        let mut seq = CounterRng::new(key, site, 2);
+        let words: Vec<u64> = (0..64).map(|_| seq.next_u64()).collect();
+        for p in [0u64, 1, 3, 4, 5, 7, 8, 31, 63] {
+            let mut jumped = CounterRng::new(key, site, 2);
+            jumped.skip(p);
+            assert_eq!(jumped.next_u64(), words[p as usize], "offset {p}");
+            assert_eq!(jumped.position(), p + 1);
+        }
+    }
+
+    #[test]
+    fn counter_rng_lanes_and_sites_are_independent() {
+        let key = [1u64, 2];
+        let a: Vec<u64> = {
+            let mut r = CounterRng::new(key, [0, 0], 0);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = CounterRng::new(key, [0, 0], 1);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let c: Vec<u64> = {
+            let mut r = CounterRng::new(key, [0, 1], 0);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn counter_rng_normal_and_gamma_moments() {
+        let key = [13u64, 0];
+        let n = 20_000u64;
+        let mean_normal: f64 = (0..n)
+            .map(|lane| CounterRng::new(key, [0, 0], lane).normal())
+            .sum::<f64>()
+            / n as f64;
+        assert!(mean_normal.abs() < 0.03, "normal mean {mean_normal}");
+        for &shape in &[0.3, 1.0, 4.5] {
+            let mean = (0..n)
+                .map(|lane| CounterRng::new(key, [1, 0], lane).gamma(shape))
+                .sum::<f64>()
+                / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.1 * shape.max(1.0),
+                "shape {shape} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn gamma_many2_bit_identical_to_per_lane_scalar() {
+        // THE lane-oblivious pin: the wide kernel must equal running
+        // the scalar sampler independently on every lane — no rewind
+        // machinery exists to get wrong.
+        let key = [23u64, 5];
+        let site = [9u64, 4];
+        for &shape in &[0.02, 0.3, 0.999, 1.0, 4.5, 50.0] {
+            let mut wide = vec![0.0f64; 257];
+            gamma_many2(key, site, shape, &mut wide);
+            for (e, &w) in wide.iter().enumerate() {
+                let s = CounterRng::new(key, site, e as u64).gamma(shape);
+                assert_eq!(w.to_bits(), s.to_bits(), "shape {shape} lane {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn normal_many2_bit_identical_to_per_lane_scalar() {
+        let key = [31u64, 8];
+        let site = [2u64, 7];
+        for &n in &[0usize, 1, 7, 8, 9, 64, 257] {
+            let mut wide = vec![0.0f64; n];
+            normal_many2(key, site, &mut wide);
+            for (e, &w) in wide.iter().enumerate() {
+                let s = CounterRng::new(key, site, e as u64).normal();
+                assert_eq!(w.to_bits(), s.to_bits(), "n {n} lane {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn counter_rng_binomial_edges_and_moments() {
+        let mut r = CounterRng::new([5, 5], [0, 0], 0);
+        assert_eq!(r.binomial(100, 0.0), 0);
+        assert_eq!(r.binomial(100, 1.0), 100);
+        assert_eq!(r.binomial(0, 0.5), 0);
+        // mean over many lanes tracks n·p in every algorithm tier
+        for &(n, p) in &[(40u64, 0.3f64), (1000, 0.4), (100_000, 0.0001)] {
+            let trials = 2000u64;
+            let sum: u64 = (0..trials)
+                .map(|lane| CounterRng::new([5, 5], [1, 0], lane).binomial(n, p))
+                .sum();
+            let mean = sum as f64 / trials as f64;
+            let expect = n as f64 * p;
+            let sd = (n as f64 * p * (1.0 - p)).sqrt();
+            assert!(
+                (mean - expect).abs() < 6.0 * sd / (trials as f64).sqrt() + 0.5,
+                "n {n} p {p}: mean {mean} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn multinomial2_conserves_and_variants_differ() {
+        let key = [77u64, 3];
+        let site = [4u64, 9];
+        let probs = paper_scale_probs(5, 0.1);
+        let n = 1u64 << 20;
+        let mut seq = vec![0u64; probs.len()];
+        multinomial_into2(key, site, n, &probs, &mut seq);
+        let mut split = vec![0u64; probs.len()];
+        multinomial_split_into2(key, site, n, &probs, &mut split);
+        assert_eq!(seq.iter().sum::<u64>(), n);
+        assert_eq!(split.iter().sum::<u64>(), n);
+        // different decompositions, different (equally valid) samples
+        assert_ne!(seq, split);
+        // deterministic
+        let mut again = vec![0u64; probs.len()];
+        multinomial_split_into2(key, site, n, &probs, &mut again);
+        assert_eq!(split, again);
+        // and both track the distribution
+        for (i, (&c, &p)) in split.iter().zip(&probs).enumerate() {
+            let expect = n as f64 * p;
+            let slack = 6.0 * (expect.max(1.0)).sqrt() + 8.0;
+            assert!(
+                (c as f64 - expect).abs() < slack,
+                "split cat {i}: count {c} vs expect {expect:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn multinomial_split2_edges() {
+        let key = [1u64, 1];
+        let site = [0u64, 0];
+        let mut out = vec![0u64; 2];
+        multinomial_split_into2(key, site, 0, &[0.5, 0.5], &mut out);
+        assert_eq!(out, vec![0, 0]);
+        let mut one = vec![0u64; 1];
+        multinomial_split_into2(key, site, 100, &[1.0], &mut one);
+        assert_eq!(one, vec![100]);
+        let mut three = vec![0u64; 3];
+        multinomial_split_into2(key, site, 10_000, &[0.5, 0.0, 0.5], &mut three);
+        assert_eq!(three[1], 0);
+        assert_eq!(three.iter().sum::<u64>(), 10_000);
+        let mut empty: Vec<u64> = Vec::new();
+        multinomial_split_into2(key, site, 0, &[], &mut empty);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn dirichlet_symmetric2_sums_to_one_and_is_seed_sensitive() {
+        let mut p = vec![0.0f64; 256];
+        dirichlet_symmetric2([9, 1], [3, 7], 0.02, &mut p);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!(p.iter().all(|&x| x >= 0.0));
+        let mut q = vec![0.0f64; 256];
+        dirichlet_symmetric2([10, 1], [3, 7], 0.02, &mut q);
+        assert_ne!(p, q);
+        // a dirty buffer must not leak into the sample
+        let mut dirty = vec![123.456f64; 256];
+        dirichlet_symmetric2([9, 1], [3, 7], 0.02, &mut dirty);
+        assert_eq!(p, dirty);
     }
 }

@@ -409,6 +409,171 @@ fn cli_resume_adopts_the_checkpoints_recorded_sampler() {
     }
 }
 
+/// Like `sweep`, but returns the child's full output so tests can
+/// inspect stderr; still panics if the process fails.
+fn sweep_capture(extra: &[&str]) -> std::process::Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_memfine"));
+    cmd.args([
+        "sweep", "--models", "i", "--methods", "1,3", "--seeds", "2",
+        "--iters", "5", "--workers", "2",
+    ]);
+    cmd.args(extra);
+    let out = cmd.output().expect("spawn memfine");
+    assert!(
+        out.status.success(),
+        "memfine sweep {extra:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out
+}
+
+#[test]
+fn cli_rng_v2_artifacts_split_and_resume() {
+    // --rng v2 selects the counter-based generator: a different,
+    // deterministic sample that is byte-stable across worker counts
+    // and forced intra-cell split widths, resumes under its recorded
+    // provenance without the flag, and leaves the v1 default
+    // untouched (--rng v1 == no flag).
+    let plain = tmp("rng-plain.json");
+    let v1 = tmp("rng-v1.json");
+    let v2a = tmp("rng-v2-a.json");
+    let v2b = tmp("rng-v2-b.json");
+    let v2split = tmp("rng-v2-split.json");
+    let v2wide = tmp("rng-v2-wide.json");
+    let resumed = tmp("rng-v2-resumed.json");
+    let ck = tmp("rng-v2.jsonl");
+
+    sweep(&["--out", plain.to_str().unwrap()]);
+    sweep(&["--rng", "v1", "--out", v1.to_str().unwrap()]);
+    sweep(&["--rng", "v2", "--out", v2a.to_str().unwrap()]);
+    sweep(&["--rng", "v2", "--out", v2b.to_str().unwrap()]);
+    sweep(&["--rng", "v2", "--split-iters", "2", "--out", v2split.to_str().unwrap()]);
+    sweep(&["--rng", "v2", "--workers", "8", "--out", v2wide.to_str().unwrap()]);
+
+    let plain_bytes = std::fs::read(&plain).expect("plain artifact");
+    assert_eq!(
+        plain_bytes,
+        std::fs::read(&v1).expect("v1 artifact"),
+        "--rng v1 must be byte-identical to the default"
+    );
+    let v2_bytes = std::fs::read(&v2a).expect("v2 artifact");
+    assert_eq!(v2_bytes, std::fs::read(&v2b).expect("v2 artifact b"));
+    assert_ne!(v2_bytes, plain_bytes, "v2 must be a different sample");
+    assert_eq!(
+        v2_bytes,
+        std::fs::read(&v2split).expect("v2 split artifact"),
+        "forced intra-cell splitting changed the v2 artifact bytes"
+    );
+    assert_eq!(
+        v2_bytes,
+        std::fs::read(&v2wide).expect("v2 wide artifact"),
+        "worker count changed the v2 artifact bytes"
+    );
+
+    // resume WITHOUT --rng: the checkpoint's recorded v2 provenance
+    // decides, every row folds back, nothing re-runs
+    sweep(&["--rng", "v2", "--checkpoint", ck.to_str().unwrap(), "--out", "/dev/null"]);
+    sweep(&["--resume", "--checkpoint", ck.to_str().unwrap(), "--out", resumed.to_str().unwrap()]);
+    assert_eq!(
+        v2_bytes,
+        std::fs::read(&resumed).expect("resumed artifact"),
+        "resume did not adopt the checkpoint's recorded rng version"
+    );
+    assert_eq!(
+        std::fs::read_to_string(&ck).expect("checkpoint").lines().count(),
+        5, // header + 4 records: the resume folded, not re-ran
+    );
+
+    for p in [&plain, &v1, &v2a, &v2b, &v2split, &v2wide, &resumed, &ck] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn cli_launch_rng_v2_matches_direct_sweep() {
+    // --rng travels the whole orchestration path: launch forwards it
+    // to every shard child, and the merged artifact matches a direct
+    // single-process v2 sweep byte for byte.
+    let direct = tmp("launch-v2-direct.json");
+    let launch_out = tmp("launch-v2-out.json");
+    let dir = tmp("launch-v2-dir");
+    std::fs::remove_dir_all(&dir).ok();
+
+    sweep(&["--rng", "v2", "--out", direct.to_str().unwrap()]);
+    let out = Command::new(env!("CARGO_BIN_EXE_memfine"))
+        .args([
+            "launch",
+            "--models", "i", "--methods", "1,3", "--seeds", "2", "--iters", "5",
+            "--rng", "v2",
+            "--procs", "2", "--workers", "1", "--poll-ms", "20",
+            "--dir", dir.to_str().unwrap(),
+            "--out", launch_out.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn memfine");
+    assert!(
+        out.status.success(),
+        "memfine launch --rng v2 failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(
+        std::fs::read(&direct).expect("direct artifact"),
+        std::fs::read(&launch_out).expect("launch artifact"),
+        "launch --rng v2 diverged from the direct v2 sweep artifact"
+    );
+
+    std::fs::remove_file(&direct).ok();
+    std::fs::remove_file(&launch_out).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_provenance_mismatch_warns_once_with_shard_context() {
+    // A provenance mismatch between the checkpoint header and the
+    // running options is reported exactly once per process (not once
+    // per resumed row or per file) and names the shard doing the
+    // complaining.
+    let ck = tmp("mismatch.jsonl");
+    let out_json = tmp("mismatch-out.json");
+
+    sweep(&["--router", "seq", "--checkpoint", ck.to_str().unwrap(), "--out", "/dev/null"]);
+    // resume under the other sampler, explicitly: the engine must warn
+    let out = sweep_capture(&[
+        "--resume",
+        "--router", "split",
+        "--shard", "0/2",
+        "--checkpoint", ck.to_str().unwrap(),
+        "--out", out_json.to_str().unwrap(),
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        stderr.matches("checkpoint records router").count(),
+        1,
+        "expected exactly one provenance-mismatch warning, stderr:\n{stderr}"
+    );
+    assert!(
+        stderr.contains("shard 0/2"),
+        "warning lacks shard context, stderr:\n{stderr}"
+    );
+    // a matched resume stays quiet
+    let out = sweep_capture(&[
+        "--resume",
+        "--router", "seq",
+        "--checkpoint", ck.to_str().unwrap(),
+        "--out", "/dev/null",
+    ]);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        stderr.matches("checkpoint records router").count(),
+        0,
+        "matched provenance must not warn, stderr:\n{stderr}"
+    );
+
+    for p in [&ck, &out_json] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
 #[test]
 fn cli_rejects_bad_shard_and_bare_resume() {
     for args in [&["--shard", "2/2"][..], &["--resume"][..]] {

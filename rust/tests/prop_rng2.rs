@@ -1,0 +1,238 @@
+//! Property tests for the counter-based RNG v2 stack and the v1
+//! freeze it must never disturb:
+//!
+//! * [`CounterRng::skip`]'s O(1) jump-ahead must land on exactly the
+//!   words a sequential reader sees, at any offset;
+//! * the lane-oblivious wide kernels ([`gamma_many2`],
+//!   [`normal_many2`]) must match the scalar per-lane samplers bit
+//!   for bit — including rejection-heavy sub-one shapes;
+//! * a fused cell split at *any* iteration boundary must fold back
+//!   bit-identically to the whole-cell evaluation, under both rng
+//!   versions;
+//! * the v2 sweep engine must emit byte-identical artifacts at any
+//!   forced split width;
+//! * v1 provenance must keep serialising to the exact historical hash
+//!   documents — no `rng_version` field, `current == with(_, V1)` —
+//!   so every pre-existing checkpoint and trace key survives this PR.
+
+use memfine::config::{model_i, paper_run, Method, SweepConfig};
+use memfine::prop::{assert_prop, Gen, PairGen, U64Range};
+use memfine::router::GatingSim;
+use memfine::sim;
+use memfine::sweep::{run_sweep_with, SweepRunOptions};
+use memfine::trace::{
+    trace_key, RngVersion, RouterSampler, SharedRoutingTrace, TraceProvenance,
+};
+use memfine::util::rng::{gamma_many2, normal_many2, CounterRng, Rng};
+
+#[test]
+fn prop_counter_skip_matches_sequential_at_random_offsets() {
+    // A stream skipped to position p must read exactly what a
+    // sequential reader reads from its p-th word on — across block
+    // boundaries (offsets are word counts; blocks hold 4 words).
+    assert_prop(
+        241,
+        60,
+        &PairGen(U64Range(0, 1 << 20), U64Range(0, 4099)),
+        |&(seed, off): &(u64, u64)| {
+            let key = [seed, 0xC0FFEE];
+            let site = [seed ^ 5, seed % 3];
+            let lane = seed % 7;
+            let mut seq = CounterRng::new(key, site, lane);
+            for _ in 0..off {
+                seq.next_u64();
+            }
+            let mut jump = CounterRng::new(key, site, lane);
+            jump.skip(off);
+            if seq.position() != jump.position() {
+                return Err(format!(
+                    "offset {off}: positions diverge ({} vs {})",
+                    seq.position(),
+                    jump.position()
+                ));
+            }
+            for w in 0..16 {
+                let (a, b) = (seq.next_u64(), jump.next_u64());
+                if a != b {
+                    return Err(format!(
+                        "seed {seed} offset {off} word {w}: {a:#x} != {b:#x}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (seed, alpha, length) cases for the wide kernels; alpha spans
+/// (0.001, 2.0] so both the boost path (alpha < 1) and the plain
+/// Marsaglia–Tsang path get rejection-heavy coverage.
+#[derive(Clone, Debug)]
+struct KernelCase;
+
+impl Gen for KernelCase {
+    type Value = (u64, f64, usize);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let seed = rng.below(1 << 20);
+        let alpha = (1 + rng.below(2000)) as f64 / 1000.0;
+        let n = 1 + rng.below(97) as usize;
+        (seed, alpha, n)
+    }
+}
+
+#[test]
+fn prop_lane_oblivious_kernels_match_scalar_lanes() {
+    assert_prop(251, 40, &KernelCase, |&(seed, alpha, n): &(u64, f64, usize)| {
+        let key = [seed, 0xBEEF];
+        let site = [seed ^ 11, 2];
+        let mut wide = vec![0.0; n];
+        gamma_many2(key, site, alpha, &mut wide);
+        for (e, &w) in wide.iter().enumerate() {
+            let s = CounterRng::new(key, site, e as u64).gamma(alpha);
+            if w.to_bits() != s.to_bits() {
+                return Err(format!(
+                    "gamma alpha {alpha} seed {seed} lane {e}: {w} != {s}"
+                ));
+            }
+        }
+        normal_many2(key, site, &mut wide);
+        for (e, &w) in wide.iter().enumerate() {
+            let s = CounterRng::new(key, site, e as u64).normal();
+            if w.to_bits() != s.to_bits() {
+                return Err(format!("normal seed {seed} lane {e}: {w} != {s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cell_split_at_any_boundary_folds_bit_identical() {
+    // Whole-cell evaluation vs a split at a random interior boundary,
+    // under both rng versions: the fold must reproduce every
+    // aggregate bit (avg_tgs compared by to_bits via PartialEq).
+    assert_prop(
+        257,
+        24,
+        &PairGen(U64Range(0, 1 << 16), U64Range(0, 10)),
+        |&(seed, cut): &(u64, u64)| {
+            let mut base = paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8]));
+            base.iterations = 9;
+            base.seed = seed;
+            let methods = [
+                Method::FullRecompute,
+                Method::Mact(vec![1, 2, 4, 8]),
+            ];
+            let cut = cut.min(base.iterations);
+            for rng in [RngVersion::V1, RngVersion::V2] {
+                let gating =
+                    GatingSim::new(base.model.clone(), base.parallel.clone(), seed)
+                        .with_rng(rng);
+                let trace = SharedRoutingTrace::generate(&gating, base.iterations);
+                let whole = sim::evaluate_cell(&base, &methods, &trace)
+                    .map_err(|e| format!("whole: {e}"))?;
+                let a = sim::evaluate_cell_range(&base, &methods, &trace, 0, cut)
+                    .map_err(|e| format!("lo: {e}"))?;
+                let b = sim::evaluate_cell_range(
+                    &base,
+                    &methods,
+                    &trace,
+                    cut,
+                    base.iterations,
+                )
+                .map_err(|e| format!("hi: {e}"))?;
+                let folded = sim::fold_cell_partials(vec![a, b])
+                    .map_err(|e| format!("fold: {e}"))?;
+                if folded != whole {
+                    return Err(format!(
+                        "seed {seed} cut {cut} rng {}: split fold diverged",
+                        rng.tag()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The tiny grid the engine-level properties sweep.
+fn tiny_grid() -> SweepConfig {
+    SweepConfig {
+        models: vec!["i".into()],
+        methods: vec![Method::FullRecompute, Method::Mact(vec![1, 2, 4, 8])],
+        seeds: vec![7, 11],
+        iterations: 8,
+    }
+}
+
+#[test]
+fn prop_engine_v2_is_byte_identical_at_any_split_width() {
+    let cfg = tiny_grid();
+    let serial = run_sweep_with(
+        &cfg,
+        &SweepRunOptions { workers: 1, rng: RngVersion::V2, ..Default::default() },
+    )
+    .expect("serial v2 sweep");
+    let golden = serial.report.to_json().to_string_pretty();
+    assert_prop(263, 8, &U64Range(1, 13), |&width: &u64| {
+        let summary = run_sweep_with(
+            &cfg,
+            &SweepRunOptions {
+                workers: 3,
+                rng: RngVersion::V2,
+                split_iters: width,
+                ..Default::default()
+            },
+        )
+        .map_err(|e| format!("split sweep: {e}"))?;
+        if summary.report.to_json().to_string_pretty() != golden {
+            return Err(format!("split width {width} changed the artifact bytes"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn v1_provenance_hashes_stay_frozen() {
+    // The migration contract this PR must not break: v1 hash docs are
+    // byte-identical to the pre-rng era (no rng_version field), so
+    // `current` and `with(_, V1)` agree on every scenario hash and
+    // trace key; default engine options still mean v1.
+    for sampler in [RouterSampler::Sequential, RouterSampler::Split] {
+        let cur = TraceProvenance::current(sampler);
+        let v1 = TraceProvenance::with(sampler, RngVersion::V1);
+        assert_eq!(cur, v1);
+        let doc = memfine::json::obj(v1.hash_fields()).to_string_compact();
+        assert!(
+            !doc.contains("rng_version"),
+            "v1 hash doc grew a field: {doc}"
+        );
+        let run = paper_run(model_i(), Method::FullRecompute);
+        assert_eq!(
+            memfine::sweep::checkpoint::scenario_hash(&run, &cur),
+            memfine::sweep::checkpoint::scenario_hash(&run, &v1),
+        );
+        assert_eq!(
+            trace_key(&run.model, &run.parallel, run.seed, 8, &cur),
+            trace_key(&run.model, &run.parallel, run.seed, 8, &v1),
+        );
+    }
+
+    // default-options engine run == explicit-v1 run, byte for byte
+    let cfg = tiny_grid();
+    let default_run = run_sweep_with(
+        &cfg,
+        &SweepRunOptions { workers: 2, ..Default::default() },
+    )
+    .expect("default sweep");
+    let explicit_v1 = run_sweep_with(
+        &cfg,
+        &SweepRunOptions { workers: 2, rng: RngVersion::V1, ..Default::default() },
+    )
+    .expect("explicit v1 sweep");
+    assert_eq!(
+        default_run.report.to_json().to_string_pretty(),
+        explicit_v1.report.to_json().to_string_pretty(),
+        "default options no longer mean rng v1"
+    );
+}
