@@ -26,7 +26,11 @@
 //! isolation (fused vs unfused on pre-drawn traces), and the pool
 //! runtime in isolation (shared injector vs work-stealing on a
 //! heavy-tailed synthetic grid — `steal_*` and `tail_latency_*` rows
-//! per worker count), and re-asserts the determinism contract (every
+//! per worker count), exercises the sidecar telemetry plane (an
+//! instrumented cold+warm cached sweep with the event log on; the
+//! merged metrics registry is folded into the artifact as the
+//! `telemetry` object plus flat `telemetry_*` / `stage_*` rows),
+//! and re-asserts the determinism contract (every
 //! worker count, every mode, and every pool/channel/pinning knob must
 //! emit the serial legacy run's exact bytes).
 //!
@@ -349,6 +353,57 @@ fn rng2_stage_micro(cfg: &SweepConfig) -> (f64, f64, f64, f64) {
     (v2_serial_s, v2_8w_s, unsplit_s, split_s)
 }
 
+/// The sidecar telemetry plane through the bench: an instrumented
+/// cached sweep (cold, then warm) with the event log on, per-run
+/// registries merged into one exposition — cache traffic counters,
+/// backpressure, and the per-stage timing histograms' summary stats
+/// all land in the artifact. Returns the merged registry's JSON.
+fn telemetry_stage_micro(cfg: &SweepConfig, rows: &mut Vec<(String, Value)>) -> Value {
+    let mut dir = std::env::temp_dir();
+    dir.push(format!("memfine-bench-telemetry-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).expect("telemetry bench dir");
+    let events = dir.join("events.jsonl");
+    let opts = SweepRunOptions {
+        workers: 2,
+        trace_cache: Some(dir.join("trace-cache")),
+        events: Some(events.clone()),
+        ..Default::default()
+    };
+    let cold = sweep::run_sweep_with(cfg, &opts).expect("cold instrumented sweep");
+    let warm = sweep::run_sweep_with(cfg, &opts).expect("warm instrumented sweep");
+    let mut merged = cold.metrics.clone();
+    merged.merge(&warm.metrics);
+    let cells = cold.traces_generated as u64;
+    assert_eq!(merged.counter("trace.generated"), cells, "cold run draws every cell");
+    assert_eq!(merged.counter("trace.cached"), cells, "warm run reuses every cell");
+    let (evs, torn) = memfine::obs::read_events(&events).expect("read event log");
+    assert_eq!(torn, 0, "clean runs leave no torn event lines");
+    rows.push(("telemetry_trace_generated".into(), json::num(cells as f64)));
+    rows.push((
+        "telemetry_trace_degraded".into(),
+        json::num(merged.counter("trace.degraded") as f64),
+    ));
+    rows.push((
+        "telemetry_blocked_sends".into(),
+        json::num(merged.counter("pool.blocked_sends") as f64),
+    ));
+    rows.push((
+        "telemetry_events_dropped".into(),
+        json::num(merged.counter("events.dropped") as f64),
+    ));
+    rows.push(("telemetry_event_lines".into(), json::num(evs.len() as f64)));
+    for stage in ["stage.trace_ns", "stage.eval_ns"] {
+        if let Some(h) = merged.histogram(stage) {
+            let key = stage.replace('.', "_");
+            rows.push((format!("{key}_p50"), json::num(h.quantile(0.5) as f64)));
+            rows.push((format!("{key}_p99"), json::num(h.quantile(0.99) as f64)));
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    merged.to_json()
+}
+
 fn multinomial_micro() -> (f64, f64) {
     // paper-scale draw: 2^20 token copies over 256 experts with the
     // deep-layer chaos-peak popularity shape
@@ -538,6 +593,7 @@ fn main() {
         batch_sampler_micro();
     let (trace_cold_s, trace_warm_s) = trace_stage_micro(&cfg);
     let (eval_unfused_sps, eval_fused_sps) = eval_stage_micro(&cfg);
+    let telemetry_doc = telemetry_stage_micro(&cfg, &mut artifact_rows);
     let sharing_speedup = legacy_serial_s / unfused_serial_s;
     let fusion_speedup = unfused_serial_s / fused_serial_s;
     let eval_fusion_speedup = eval_fused_sps / eval_unfused_sps;
@@ -658,6 +714,9 @@ fn main() {
         ("determinism_fused_vs_unfused", Value::Bool(true)),
         ("determinism_orchestrated_vs_inprocess", Value::Bool(true)),
         ("determinism_warm_cache_vs_cold", Value::Bool(true)),
+        // the merged cold+warm registry exposition (counters, gauges,
+        // stage histograms) — the campaign-mergeable telemetry view
+        ("telemetry", telemetry_doc),
     ];
     fields.extend(artifact_rows.iter().map(|(k, v)| (k.as_str(), v.clone())));
     let doc = json::obj(fields);

@@ -796,6 +796,12 @@ pub struct LaunchConfig {
     /// forwarded to every child sweep). Execution-only: never part of
     /// any scenario identity, never perturbs artifact bytes.
     pub pin_cores: bool,
+    /// Write the sidecar campaign event log (`events.jsonl`, see
+    /// [`crate::obs`]) and forward `--events` to every child sweep.
+    /// On by default; `--no-telemetry` disables it. Execution-only:
+    /// never part of any scenario identity, never perturbs artifact
+    /// bytes.
+    pub telemetry: bool,
 }
 
 impl LaunchConfig {
@@ -813,6 +819,7 @@ impl LaunchConfig {
             sampler: RouterSampler::default(),
             rng: RngVersion::default(),
             pin_cores: false,
+            telemetry: true,
         }
     }
 
@@ -860,6 +867,7 @@ impl LaunchConfig {
             ("router", json::s(self.sampler.tag().to_string())),
             ("rng", json::s(self.rng.tag().to_string())),
             ("pin_cores", Value::Bool(self.pin_cores)),
+            ("telemetry", Value::Bool(self.telemetry)),
         ])
     }
 
@@ -899,6 +907,10 @@ impl LaunchConfig {
             },
             // absent in pre-pinning launch.json files — default off
             pin_cores: v.get("pin_cores").and_then(Value::as_bool).unwrap_or(false),
+            // absent in pre-telemetry launch.json files — default on
+            // (telemetry is sidecar, so enabling it retroactively
+            // cannot change what those campaigns compute)
+            telemetry: v.get("telemetry").and_then(Value::as_bool).unwrap_or(true),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1162,6 +1174,7 @@ mod tests {
         cfg.sampler = RouterSampler::Sequential;
         cfg.rng = RngVersion::V2;
         cfg.pin_cores = true;
+        cfg.telemetry = false;
         cfg.validate().unwrap();
         let back = LaunchConfig::from_json(
             &crate::json::parse(&cfg.to_json().to_string_pretty()).unwrap(),
@@ -1175,10 +1188,14 @@ mod tests {
         if let crate::json::Value::Obj(map) = &mut doc {
             map.remove("pin_cores");
             map.remove("rng");
+            // pre-telemetry files carry no "telemetry" — absent means
+            // on (sidecar, so retroactively harmless)
+            map.remove("telemetry");
         }
         let legacy = LaunchConfig::from_json(&doc).unwrap();
         assert!(!legacy.pin_cores);
         assert_eq!(legacy.rng, RngVersion::V1);
+        assert!(legacy.telemetry);
         // defaults are sane and validate; the sampler default is the
         // post-flip splitting multinomial, the RNG default is v1
         let d = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));

@@ -26,6 +26,10 @@ pub struct TrainReport {
     pub final_loss: f32,
     pub mean_tgs: f64,
     pub total_s: f64,
+    /// Execution telemetry: a `stage.step_ns` histogram over the
+    /// per-step wall times (mergeable across runs, see
+    /// [`crate::obs::Histogram`]).
+    pub metrics: crate::metrics::Registry,
 }
 
 impl TrainReport {
@@ -85,6 +89,7 @@ impl TrainDriver {
             data_seed,
         );
         let total = Timer::start();
+        let mut metrics = crate::metrics::Registry::new();
         let mut logs = Vec::with_capacity(steps as usize);
         let mut first_loss = f32::NAN;
         for step in 1..=steps {
@@ -101,6 +106,7 @@ impl TrainDriver {
                 ],
             )?;
             let step_s = t.elapsed_s();
+            metrics.observe("stage.step_ns", (step_s * 1e9) as u64);
             let mut it = outputs.into_iter();
             params = match it.next() {
                 Some(HostTensor::F32(p)) => p,
@@ -137,7 +143,14 @@ impl TrainDriver {
         } else {
             logs.iter().map(|l| l.tgs).sum::<f64>() / logs.len() as f64
         };
-        Ok(TrainReport { steps: logs, first_loss, final_loss, mean_tgs, total_s })
+        Ok(TrainReport {
+            steps: logs,
+            first_loss,
+            final_loss,
+            mean_tgs,
+            total_s,
+            metrics,
+        })
     }
 
     /// Evaluate the loss of the given parameters on a fixed batch.

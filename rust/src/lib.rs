@@ -27,7 +27,10 @@
 //!   stream, and checkpointing by scenario content hash for
 //!   resumable/sharded grids — a shard [`orchestrator`] that
 //!   launches, supervises, heals and auto-merges multi-process sweep
-//!   fleets (`memfine launch`), and a real-execution coordinator
+//!   fleets (`memfine launch`), a sidecar telemetry plane ([`obs`]:
+//!   per-campaign JSON-lines event log, mergeable log-bucketed
+//!   histograms, `memfine status`/`memfine events`), and a
+//!   real-execution coordinator
 //!   ([`coordinator`]) that drives the AOT artifacts through the PJRT
 //!   runtime ([`runtime`], behind the `pjrt` feature).
 //!
@@ -52,6 +55,7 @@ pub mod json;
 pub mod logging;
 pub mod memory;
 pub mod metrics;
+pub mod obs;
 pub mod orchestrator;
 pub mod perf;
 pub mod pipeline;

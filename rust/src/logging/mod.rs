@@ -6,7 +6,7 @@
 //! timestamp so example/bench output on stdout stays machine-parsable.
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Once, OnceLock};
 use std::time::Instant;
 
 /// Log severity, ordered so that `Error < Warn < … < Trace` and a
@@ -36,6 +36,7 @@ impl Level {
 
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 static START: OnceLock<Instant> = OnceLock::new();
+static INIT: Once = Once::new();
 
 /// Parse a level name, case-insensitive; unknown names yield None.
 pub fn parse_level(s: &str) -> Option<Level> {
@@ -50,14 +51,27 @@ pub fn parse_level(s: &str) -> Option<Level> {
     }
 }
 
-/// Install the logger (idempotent; later calls only adjust the level).
+/// Install the logger. Idempotent and thread-safe: the environment
+/// read and level store run exactly once (guarded by [`Once`]), so
+/// concurrent or repeated `init` calls cannot race a level change or
+/// re-read a mutated environment. The monotonic clock anchors on the
+/// first call (or the first log/`elapsed_ms`, whichever comes first).
 pub fn init() {
-    let level = std::env::var("MEMFINE_LOG")
-        .ok()
-        .and_then(|s| parse_level(&s))
-        .unwrap_or(Level::Info);
-    START.get_or_init(Instant::now);
-    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+    INIT.call_once(|| {
+        let level = std::env::var("MEMFINE_LOG")
+            .ok()
+            .and_then(|s| parse_level(&s))
+            .unwrap_or(Level::Info);
+        START.get_or_init(Instant::now);
+        MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+    });
+}
+
+/// Milliseconds elapsed on the shared monotonic clock — the same
+/// anchor the log timestamps use, so event-log `t_ms` stamps
+/// ([`crate::obs`]) and stderr lines are directly comparable.
+pub fn elapsed_ms() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e3
 }
 
 /// Current maximum level.
@@ -124,9 +138,23 @@ mod tests {
     }
 
     #[test]
-    fn init_is_idempotent() {
+    fn init_is_idempotent_and_thread_safe() {
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(init);
+            }
+        });
+        let level = max_level();
         init();
-        init();
+        assert_eq!(max_level(), level);
         info("logging::tests", "logger smoke test");
+    }
+
+    #[test]
+    fn elapsed_ms_is_monotonic() {
+        let a = elapsed_ms();
+        let b = elapsed_ms();
+        assert!(b >= a);
+        assert!(a >= 0.0);
     }
 }

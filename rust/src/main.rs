@@ -9,15 +9,19 @@
 //!                 [--workers N] [--out FILE] [--checkpoint F[,F...]]
 //!                 [--resume] [--shard i/n] [--limit N] [--router seq|split]
 //!                 [--rng v1|v2] [--split-iters N] [--trace-cache DIR]
-//!                 [--unfused] [--config FILE]
+//!                 [--unfused] [--config FILE] [--events FILE]
 //!                 [--pool stealing|injector] [--channel bounded|std]
 //!                 [--pin-cores] [--pool-stats]
 //!                 parallel scenario grid, resumable/shardable
 //! memfine launch  [grid flags | --config FILE] [--procs N] [--dir DIR]
 //!                 [--stall-timeout-ms N] [--poll-ms N] [--retries N]
-//!                 [--chaos-kill] [--out FILE]
+//!                 [--chaos-kill] [--no-telemetry] [--out FILE]
 //!                 orchestrated multi-process sweep: spawn, supervise,
 //!                 heal, auto-merge
+//! memfine status  [DIR]                     campaign status: shard table,
+//!                 coverage, cache hit rate, ETA (heartbeats + event log)
+//! memfine events  [DIR|FILE] [--type T] [--shard N] [--hash H] [--summary]
+//!                 filter or summarise a campaign's events.jsonl
 //! memfine checkpoint compact FILE... [--out FILE]
 //! memfine checkpoint audit FILE... --config FILE [--router seq|split] [--rng v1|v2]
 //! memfine repro   table4|fig2|fig4|fig5      regenerate a paper artifact
@@ -44,7 +48,7 @@ const VALUE_OPTS: &[&str] = &[
     "budget-mb", "bins", "chunk", "models", "methods", "seeds", "workers",
     "out", "checkpoint", "shard", "limit", "config", "procs", "dir",
     "stall-timeout-ms", "poll-ms", "retries", "router", "trace-cache",
-    "pool", "channel", "rng", "split-iters",
+    "pool", "channel", "rng", "split-iters", "events", "type", "hash",
 ];
 
 fn main() {
@@ -67,6 +71,8 @@ fn main() {
         "simulate" => cmd_simulate(&parsed),
         "sweep" => cmd_sweep(&parsed),
         "launch" => cmd_launch(&parsed),
+        "status" => cmd_status(&parsed),
+        "events" => cmd_events(&parsed),
         "checkpoint" => cmd_checkpoint(&parsed),
         "repro" => cmd_repro(&parsed),
         "train" => cmd_train(&parsed),
@@ -94,6 +100,8 @@ fn print_usage() {
                 ("simulate", "simulate a training run (methods 1/2/3)"),
                 ("sweep", "parallel scenario grid: models x methods x seeds"),
                 ("launch", "orchestrated multi-process sweep: spawn, supervise, heal, merge"),
+                ("status", "campaign status: shard table, coverage, cache hit rate, ETA"),
+                ("events", "filter/summarise a campaign event log (events.jsonl)"),
                 ("checkpoint", "checkpoint tools: compact FILE... | audit FILE... --config F"),
                 ("repro", "regenerate a paper artifact: table4|fig2|fig4|fig5"),
                 ("train", "end-to-end mini-model training via PJRT"),
@@ -132,6 +140,11 @@ fn print_usage() {
                 OptSpec { name: "poll-ms", help: "launch: supervisor poll interval", takes_value: true, default: Some("100") },
                 OptSpec { name: "retries", help: "launch: relaunches allowed per shard", takes_value: true, default: Some("2") },
                 OptSpec { name: "chaos-kill", help: "launch: kill one progressing child once (recovery drill)", takes_value: false, default: None },
+                OptSpec { name: "no-telemetry", help: "launch: skip the sidecar event log (artifact bytes are identical either way)", takes_value: false, default: None },
+                OptSpec { name: "events", help: "sweep: append engine events to this sidecar JSON-lines log (launch manages its own under --dir)", takes_value: true, default: None },
+                OptSpec { name: "type", help: "events: keep only this event type", takes_value: true, default: None },
+                OptSpec { name: "hash", help: "events: keep only events whose scenario hash starts with this prefix", takes_value: true, default: None },
+                OptSpec { name: "summary", help: "events: print per-type counts instead of event lines", takes_value: false, default: None },
                 OptSpec { name: "artifacts", help: "artifact directory", takes_value: true, default: Some("artifacts") },
                 OptSpec { name: "policy", help: "coord policy: mact or fixed", takes_value: true, default: Some("mact") },
                 OptSpec { name: "budget-mb", help: "coord per-rank memory budget", takes_value: true, default: Some("48") },
@@ -375,6 +388,7 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         pool: memfine::sweep::Schedule::parse(&args.get_or("pool", "stealing"))?,
         channel: memfine::sweep::ChannelKind::parse(&args.get_or("channel", "bounded"))?,
         pin_cores: args.has_flag("pin-cores"),
+        events: args.get("events").map(std::path::PathBuf::from),
     };
     eprintln!(
         "sweep: {} scenarios{}{}",
@@ -402,8 +416,20 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
     );
     if opts.trace_cache.is_some() {
         eprintln!(
-            "sweep: trace cache: {} cell(s) reused, {} generated",
-            summary.traces_cached, summary.traces_generated
+            "sweep: trace cache: {} cell(s) reused, {} generated, {} write(s) degraded",
+            summary.traces_cached, summary.traces_generated, summary.traces_degraded
+        );
+    }
+    if let Some(path) = &opts.events {
+        let dropped = summary.metrics.counter("events.dropped");
+        eprintln!(
+            "sweep: event log: {}{}",
+            path.display(),
+            if dropped > 0 {
+                format!(" ({dropped} event(s) dropped)")
+            } else {
+                String::new()
+            },
         );
     }
     // Execution facts only — PoolStats never enter the JSON artifact.
@@ -411,12 +437,14 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         eprint!("{}", memfine::sweep::report::render_pool_stats(&summary.pool));
     } else {
         eprintln!(
-            "sweep: pool {}/{}: {} worker(s), {}/{} steals, tail latency {:.1} ms",
+            "sweep: pool {}/{}: {} worker(s), {}/{} steals, {} blocked send(s), \
+             tail latency {:.1} ms",
             summary.pool.schedule.tag(),
             summary.pool.channel.tag(),
             summary.pool.workers.len(),
             summary.pool.steals_succeeded(),
             summary.pool.steals_attempted(),
+            summary.pool.blocked_sends,
             summary.pool.tail_latency_ns() as f64 / 1e6,
         );
     }
@@ -476,6 +504,9 @@ fn cmd_launch(args: &Args) -> memfine::Result<()> {
     if args.has_flag("pin-cores") {
         cfg.pin_cores = true;
     }
+    if args.has_flag("no-telemetry") {
+        cfg.telemetry = false;
+    }
 
     let opts = LaunchOptions {
         dir: std::path::PathBuf::from(args.get_or("dir", "launch-run")),
@@ -530,6 +561,289 @@ fn cmd_launch(args: &Args) -> memfine::Result<()> {
             std::fs::write(path, format!("{json}\n"))?;
             eprintln!("report written to {path}");
         }
+    }
+    Ok(())
+}
+
+/// The campaign dir a status/events invocation points at: the first
+/// positional argument, falling back to `--dir` and its default.
+fn campaign_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        args.positional
+            .first()
+            .cloned()
+            .unwrap_or_else(|| args.get_or("dir", "launch-run")),
+    )
+}
+
+/// Same-campaign checkpoint files currently in the dir (the shard
+/// files mid-run, `merged.jsonl` afterwards) — `events.jsonl` is the
+/// sidecar log, never checkpoint state.
+fn campaign_checkpoints(
+    dir: &std::path::Path,
+) -> memfine::Result<Vec<std::path::PathBuf>> {
+    let mut state: Vec<std::path::PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|entry| entry.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.extension().and_then(|e| e.to_str()) == Some("jsonl")
+                && p.file_name().and_then(|n| n.to_str()) != Some("events.jsonl")
+        })
+        .collect();
+    state.sort();
+    Ok(state)
+}
+
+fn cmd_status(args: &Args) -> memfine::Result<()> {
+    let dir = campaign_dir(args);
+    let launch_json = dir.join("launch.json");
+    let text = std::fs::read_to_string(&launch_json).map_err(|e| {
+        memfine::Error::Io(std::io::Error::new(
+            e.kind(),
+            format!("{}: {e} (not a campaign dir?)", launch_json.display()),
+        ))
+    })?;
+    let cfg = LaunchConfig::from_json(&memfine::json::parse(&text)?)?;
+    let plan = memfine::orchestrator::plan_shards(&cfg, &dir)?;
+
+    // Scenario coverage straight from checkpoint state — the same
+    // torn-tolerant reader and planned-hash audit the merge step uses.
+    let state = campaign_checkpoints(&dir)?;
+    let set = memfine::sweep::checkpoint::CheckpointSet::load(&state)?;
+    let audit = memfine::sweep::checkpoint::audit_planned(&plan.planned, &set);
+
+    let events_path = dir.join("events.jsonl");
+    let (events, skipped) = if events_path.exists() {
+        memfine::obs::read_events(&events_path)?
+    } else {
+        (Vec::new(), 0)
+    };
+
+    // Fold the event log into campaign aggregates. Cells are counted
+    // by distinct scenario hash (relaunches and the merge catch-up may
+    // re-log a cell); the throughput estimate uses only within-process
+    // time deltas, since each process stamps its own monotonic clock.
+    let mut cells_done: std::collections::BTreeSet<&str> =
+        std::collections::BTreeSet::new();
+    let (mut hits, mut misses, mut degrades) = (0u64, 0u64, 0u64);
+    let (mut steals, mut blocked) = (0u64, 0u64);
+    let mut merged_records: Option<u64> = None;
+    let mut last_shard_event: std::collections::BTreeMap<u64, &str> =
+        std::collections::BTreeMap::new();
+    let mut per_pid: std::collections::BTreeMap<u64, (u64, f64)> =
+        std::collections::BTreeMap::new();
+    for ev in &events {
+        match ev.kind.as_str() {
+            "cell_eval" | "cell_assembled" => {
+                if let Some(h) = ev.field_str("hash") {
+                    cells_done.insert(h);
+                }
+                if ev.kind == "cell_eval" {
+                    match ev.field_str("cache") {
+                        Some("hit") => hits += 1,
+                        Some("miss") => misses += 1,
+                        Some("degrade") => degrades += 1,
+                        _ => {}
+                    }
+                    let slot = per_pid.entry(ev.pid).or_insert((0, 0.0));
+                    slot.0 += 1;
+                    slot.1 = slot.1.max(ev.t_ms);
+                }
+            }
+            "sweep_done" => {
+                steals += ev.field_u64("steals").unwrap_or(0);
+                blocked += ev.field_u64("blocked_sends").unwrap_or(0);
+            }
+            "merge_done" => merged_records = ev.field_u64("records"),
+            kind if kind.starts_with("shard_") => {
+                if let Some(s) = ev.field_u64("shard") {
+                    last_shard_event.insert(s, ev.kind.as_str());
+                }
+            }
+            _ => {}
+        }
+    }
+    let counts = memfine::obs::summarize(&events);
+    let count_of = |k: &str| counts.get(k).copied().unwrap_or(0);
+
+    println!(
+        "campaign {}: {} scenario(s) in {} trace cell(s) over {} shard proc(s)",
+        dir.display(),
+        plan.total_scenarios,
+        plan.total_cells,
+        plan.procs
+    );
+    println!(
+        "scenarios: {}/{} checkpointed ({:.1}%)",
+        audit.present,
+        audit.planned,
+        100.0 * audit.present as f64 / audit.planned.max(1) as f64
+    );
+    if !events.is_empty() {
+        println!(
+            "cells:     {}/{} logged done; cache {} hit / {} miss / {} degraded{}",
+            cells_done.len(),
+            plan.total_cells,
+            hits,
+            misses,
+            degrades,
+            if hits + misses + degrades > 0 {
+                format!(
+                    " ({:.0}% hit)",
+                    100.0 * hits as f64 / (hits + misses + degrades) as f64
+                )
+            } else {
+                String::new()
+            },
+        );
+        println!(
+            "fleet:     {} spawn(s), {} relaunch(es), {} stall(s), {} crash(es), \
+             {} chaos kill(s), {} gave up; {} steal(s), {} backpressure stall(s)",
+            count_of("shard_spawned"),
+            events
+                .iter()
+                .filter(|ev| ev.kind == "shard_spawned"
+                    && ev.field_u64("attempt").unwrap_or(1) > 1)
+                .count(),
+            count_of("shard_stalled"),
+            count_of("shard_crashed"),
+            count_of("shard_chaos_killed"),
+            count_of("shard_gave_up"),
+            steals,
+            blocked,
+        );
+    }
+
+    println!();
+    println!(
+        "{:>5} {:>9} {:>9} {:>12} {:>10}  {}",
+        "shard", "cells", "scenarios", "checkpoint", "heartbeat", "last event"
+    );
+    for shard in &plan.shards {
+        let len = memfine::orchestrator::probe_len(&shard.checkpoint);
+        let age = memfine::orchestrator::probe_mtime_age(&shard.checkpoint);
+        println!(
+            "{:>5} {:>9} {:>9} {:>12} {:>10}  {}",
+            shard.index,
+            shard.cells,
+            shard.scenarios,
+            match len {
+                Some(b) => fmt_bytes(b),
+                None => "-".into(),
+            },
+            match age {
+                Some(a) => format!("{:.0}s ago", a.as_secs_f64()),
+                None => "-".into(),
+            },
+            last_shard_event
+                .get(&(shard.index as u64))
+                .copied()
+                .unwrap_or("-"),
+        );
+    }
+    println!();
+
+    if audit.complete() || merged_records.is_some() {
+        println!(
+            "status: COMPLETE{}",
+            match merged_records {
+                Some(n) => format!(" — merged.jsonl holds {n} record(s)"),
+                None => String::new(),
+            }
+        );
+    } else {
+        // Fleet throughput from within-process cell rates; a rough
+        // figure (order of magnitude), but it needs no shared clock.
+        let rate: f64 = per_pid
+            .values()
+            .filter(|(_, t_ms)| *t_ms > 0.0)
+            .map(|(cells, t_ms)| *cells as f64 / (t_ms / 1e3))
+            .sum();
+        let remaining = plan.total_cells.saturating_sub(cells_done.len());
+        match (remaining, rate > 0.0) {
+            (0, _) => println!("status: in progress (merge pending)"),
+            (_, true) => println!(
+                "status: in progress — {} cell(s) remaining, ETA ~{:.0}s",
+                remaining,
+                remaining as f64 / rate
+            ),
+            (_, false) => {
+                println!("status: in progress — {remaining} cell(s) remaining")
+            }
+        }
+    }
+    if skipped > 0 {
+        eprintln!("status: {skipped} unreadable event line(s) skipped (torn tails)");
+    }
+    Ok(())
+}
+
+/// One event as a human line: monotonic stamp, emitting pid, type,
+/// then the domain fields (everything but the three envelope keys).
+fn render_event(ev: &memfine::obs::EventRecord) -> String {
+    let mut out = format!("[{:>10.1} ms  pid {:>7}] {}", ev.t_ms, ev.pid, ev.kind);
+    if let Some(map) = ev.fields.as_obj() {
+        for (k, v) in map {
+            if k == "t_ms" || k == "pid" || k == "type" {
+                continue;
+            }
+            out.push(' ');
+            out.push_str(k);
+            out.push('=');
+            match v {
+                memfine::json::Value::Str(s) => out.push_str(s),
+                other => out.push_str(&other.to_string_compact()),
+            }
+        }
+    }
+    out
+}
+
+fn cmd_events(args: &Args) -> memfine::Result<()> {
+    let target = campaign_dir(args);
+    let path = if target.extension().and_then(|e| e.to_str()) == Some("jsonl") {
+        target
+    } else {
+        target.join("events.jsonl")
+    };
+    let (events, skipped) = memfine::obs::read_events(&path)?;
+    let type_filter = args.get("type");
+    // accept both `--shard 1` and the sweep spelling `--shard 1/4`
+    let shard_filter = args
+        .get("shard")
+        .map(|s| {
+            s.split('/').next().unwrap_or(s).trim().parse::<u64>().map_err(|_| {
+                memfine::Error::Cli(format!("--shard expects an index, got '{s}'"))
+            })
+        })
+        .transpose()?;
+    let hash_filter = args.get("hash");
+    let filtered: Vec<&memfine::obs::EventRecord> = events
+        .iter()
+        .filter(|ev| {
+            type_filter.map_or(true, |t| ev.kind == t)
+                && shard_filter.map_or(true, |s| ev.field_u64("shard") == Some(s))
+                && hash_filter.map_or(true, |h| {
+                    ev.field_str("hash").is_some_and(|eh| eh.starts_with(h))
+                })
+        })
+        .collect();
+    if args.has_flag("summary") {
+        let mut counts: std::collections::BTreeMap<&str, u64> =
+            std::collections::BTreeMap::new();
+        for ev in &filtered {
+            *counts.entry(ev.kind.as_str()).or_insert(0) += 1;
+        }
+        for (kind, n) in &counts {
+            println!("{n:>8}  {kind}");
+        }
+        println!("{:>8}  total", filtered.len());
+    } else {
+        for ev in &filtered {
+            println!("{}", render_event(ev));
+        }
+    }
+    if skipped > 0 {
+        eprintln!("events: {skipped} unreadable line(s) skipped (torn tails)");
     }
     Ok(())
 }

@@ -1,14 +1,18 @@
-//! Metrics: counters, timers, and CSV emission for traces and benches.
+//! Metrics: counters, gauges, histograms, timers, and CSV emission.
 //!
-//! Deliberately simple — a `Registry` of named counters/gauges plus a
-//! `CsvWriter` with schema checking. Everything the benches print comes
-//! through here so output formats stay consistent across tables.
+//! Deliberately simple — a `Registry` of named counters/gauges/
+//! log-bucketed histograms ([`crate::obs::Histogram`]) plus a
+//! `CsvWriter` with schema checking. Registries merge (sum counters,
+//! add histogram buckets, last-writer gauges), so each shard/worker
+//! owns one and the coordinator folds them; everything the benches
+//! print comes through here so output formats stay consistent.
 
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::obs::Histogram;
 
 /// A monotonically increasing counter.
 #[derive(Clone, Debug, Default)]
@@ -32,6 +36,7 @@ impl Counter {
 pub struct Registry {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
 }
 
 impl Registry {
@@ -47,6 +52,16 @@ impl Registry {
         self.gauges.insert(name.to_string(), v);
     }
 
+    /// Record one observation in the named log-bucketed histogram.
+    pub fn observe(&mut self, name: &str, v: u64) {
+        self.histograms.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Fold a pre-built histogram into the named one (bucketwise add).
+    pub fn observe_histogram(&mut self, name: &str, h: &Histogram) {
+        self.histograms.entry(name.to_string()).or_default().merge(h);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
@@ -55,7 +70,12 @@ impl Registry {
         self.gauges.get(name).copied()
     }
 
-    /// Merge another registry (summing counters, last-writer gauges).
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Merge another registry (summing counters and histogram
+    /// buckets, last-writer gauges).
     pub fn merge(&mut self, other: &Registry) {
         for (k, v) in &other.counters {
             *self.counters.entry(k.clone()).or_insert(0) += v;
@@ -63,9 +83,13 @@ impl Registry {
         for (k, v) in &other.gauges {
             self.gauges.insert(k.clone(), *v);
         }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
     }
 
     /// Render as a JSON object (sorted keys — stable for goldens).
+    /// Histograms flatten to `hist.<name>.{count,sum,mean,p50,p99}`.
     pub fn to_json(&self) -> crate::json::Value {
         use crate::json::{num, Value};
         let mut obj = std::collections::BTreeMap::new();
@@ -75,8 +99,26 @@ impl Registry {
         for (k, v) in &self.gauges {
             obj.insert(format!("gauge.{k}"), num(*v));
         }
+        for (k, h) in &self.histograms {
+            obj.insert(format!("hist.{k}.count"), num(h.count() as f64));
+            obj.insert(format!("hist.{k}.sum"), num(h.sum() as f64));
+            obj.insert(format!("hist.{k}.mean"), num(h.mean()));
+            obj.insert(format!("hist.{k}.p50"), num(h.quantile(0.5) as f64));
+            obj.insert(format!("hist.{k}.p99"), num(h.quantile(0.99) as f64));
+        }
         Value::Obj(obj)
     }
+}
+
+/// Canonical `name{k=v,...}` key for a labelled metric — labels are
+/// rendered in the given order, so callers keep them sorted when
+/// stability matters.
+pub fn labeled(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> = labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!("{name}{{{}}}", body.join(","))
 }
 
 /// Scoped wall-clock timer.
@@ -156,6 +198,32 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.counter("x"), 3);
         assert_eq!(a.gauge_value("g"), Some(2.0));
+    }
+
+    #[test]
+    fn registry_histograms_observe_and_merge() {
+        let mut a = Registry::new();
+        a.observe("stage.eval_ns", 100);
+        a.observe("stage.eval_ns", 1000);
+        let mut b = Registry::new();
+        b.observe("stage.eval_ns", 10);
+        a.merge(&b);
+        let h = a.histogram("stage.eval_ns").unwrap();
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 1110);
+        assert!(a.histogram("missing").is_none());
+        let j = a.to_json().to_string_compact();
+        assert!(j.contains("\"hist.stage.eval_ns.count\":3"));
+        assert!(j.contains("\"hist.stage.eval_ns.sum\":1110"));
+    }
+
+    #[test]
+    fn labeled_keys_render_canonically() {
+        assert_eq!(labeled("cache", &[]), "cache");
+        assert_eq!(
+            labeled("cache", &[("kind", "hit"), ("shard", "2")]),
+            "cache{kind=hit,shard=2}"
+        );
     }
 
     #[test]

@@ -1,0 +1,429 @@
+//! Sidecar observability: log-bucketed timing histograms and a
+//! best-effort, append-only JSON-lines campaign event log.
+//!
+//! Everything in this module is **strictly sidecar** to the sweep
+//! engine's determinism contract: telemetry never participates in
+//! scenario hashing or campaign identity, never perturbs artifact
+//! bytes, and never fails a sweep. Event emission degrades to counting
+//! dropped events on any I/O failure; opening an event log on an
+//! unwritable path degrades to a disabled log plus one warning.
+//!
+//! The event log is one JSON object per line, appended with a single
+//! `write_all` to an `O_APPEND` handle so concurrent shard processes
+//! sharing `<dir>/events.jsonl` interleave whole lines. Every event
+//! carries a monotonic `t_ms` stamp (the shared [`crate::logging`]
+//! clock), the emitting `pid`, and a `type` tag; domain fields (shard
+//! index, scenario hash, durations) ride alongside, so events join
+//! against checkpoint rows and artifacts by hash. The reader applies
+//! the checkpoint reader's torn-tail contract: lines that fail to
+//! parse (the kill-mid-write case) are skipped and counted, never
+//! fatal.
+//!
+//! [`Histogram`] is the mergeable replacement for ad-hoc
+//! [`crate::metrics::Timer`] aggregation: 65 log-spaced buckets (one
+//! per power of two of a `u64` observation, bucket 0 for zero), so
+//! merge is elementwise addition — associative and commutative, which
+//! is what lets per-shard histograms fold into one campaign view in
+//! any order.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::json::{self, Value};
+
+/// Number of histogram buckets: one for zero plus one per power of
+/// two representable in a `u64`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Log-bucketed histogram of `u64` observations (typically
+/// nanoseconds). Bucket 0 holds exact zeros; bucket `i >= 1` holds
+/// `[2^(i-1), 2^i)`. Merging is elementwise addition, so shard
+/// histograms combine associatively into campaign totals.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; HIST_BUCKETS], total: 0, sum: 0 }
+    }
+
+    /// Bucket index of a value: 0 for 0, else `floor(log2(v)) + 1`.
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Inclusive upper bound of a bucket (saturating at `u64::MAX`).
+    pub fn bucket_hi(index: usize) -> u64 {
+        if index == 0 {
+            0
+        } else if index >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << index) - 1
+        }
+    }
+
+    pub fn observe(&mut self, v: u64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.total += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Fold another histogram in: elementwise bucket addition.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Approximate quantile: the inclusive upper bound of the bucket
+    /// where the cumulative count first reaches `q * total` (so the
+    /// true value is within 2x below the returned bound). `q` is
+    /// clamped to `[0, 1]`; an empty histogram reports 0.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_hi(i);
+            }
+        }
+        Self::bucket_hi(HIST_BUCKETS - 1)
+    }
+
+    /// Raw bucket counts (length [`HIST_BUCKETS`]).
+    pub fn buckets(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Summary object: `{count, sum, mean, p50, p99}` — the flat form
+    /// folded into metric expositions and bench artifacts.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("count", json::num(self.total as f64)),
+            ("sum", json::num(self.sum as f64)),
+            ("mean", json::num(self.mean())),
+            ("p50", json::num(self.quantile(0.5) as f64)),
+            ("p99", json::num(self.quantile(0.99) as f64)),
+        ])
+    }
+}
+
+/// Best-effort append-only JSON-lines event sink.
+///
+/// A disabled log (no path configured, or the open failed) accepts
+/// `emit` calls as no-ops; write failures on an open log increment
+/// [`EventLog::dropped`] and are otherwise swallowed — telemetry never
+/// fails the work it observes.
+pub struct EventLog {
+    inner: Option<Mutex<std::fs::File>>,
+    dropped: AtomicU64,
+    pid: u32,
+}
+
+impl EventLog {
+    /// A log that drops everything (telemetry off).
+    pub fn disabled() -> Self {
+        EventLog { inner: None, dropped: AtomicU64::new(0), pid: std::process::id() }
+    }
+
+    /// Open (create + append) the event log at `path`. Failure warns
+    /// once and returns a disabled log — never an error.
+    pub fn open(path: &Path) -> Self {
+        match std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            Ok(f) => EventLog {
+                inner: Some(Mutex::new(f)),
+                dropped: AtomicU64::new(0),
+                pid: std::process::id(),
+            },
+            Err(e) => {
+                crate::logging::warn(
+                    "obs",
+                    format!("event log disabled ({}: {e})", path.display()),
+                );
+                EventLog::disabled()
+            }
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Events dropped by write failures since open.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Append one event line: `t_ms` (monotonic, shared logging
+    /// clock), `pid`, `type`, plus the caller's fields. One
+    /// `write_all` per line so concurrent appenders interleave whole
+    /// lines on `O_APPEND` handles.
+    pub fn emit(&self, kind: &str, fields: Vec<(&str, Value)>) {
+        let Some(inner) = &self.inner else {
+            return;
+        };
+        let mut rows = vec![
+            ("t_ms", json::num(crate::logging::elapsed_ms())),
+            ("pid", json::num(self.pid as f64)),
+            ("type", json::s(kind)),
+        ];
+        rows.extend(fields);
+        let mut line = json::obj(rows).to_string_compact();
+        line.push('\n');
+        let mut f = match inner.lock() {
+            Ok(f) => f,
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        if f.write_all(line.as_bytes()).is_err() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One parsed event line.
+#[derive(Clone, Debug)]
+pub struct EventRecord {
+    /// The `type` tag.
+    pub kind: String,
+    /// Monotonic emit time (ms since the emitting process's start).
+    pub t_ms: f64,
+    /// Emitting process id.
+    pub pid: u64,
+    /// The full parsed line (all fields, including the three above).
+    pub fields: Value,
+}
+
+impl EventRecord {
+    /// A `u64` field of the event, if present.
+    pub fn field_u64(&self, key: &str) -> Option<u64> {
+        self.fields.get(key).and_then(Value::as_u64)
+    }
+
+    /// A string field of the event, if present.
+    pub fn field_str(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).and_then(Value::as_str)
+    }
+}
+
+/// Read an event log, skipping (and counting) lines that fail to
+/// parse or carry no `type` — the same torn-tail tolerance as the
+/// checkpoint reader, since a killed shard may die mid-append.
+pub fn read_events(path: &Path) -> Result<(Vec<EventRecord>, usize)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut events = Vec::new();
+    let mut skipped = 0usize;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = match json::parse(line) {
+            Ok(v) => v,
+            Err(_) => {
+                skipped += 1;
+                continue;
+            }
+        };
+        let Some(kind) = parsed.get("type").and_then(Value::as_str).map(String::from) else {
+            skipped += 1;
+            continue;
+        };
+        events.push(EventRecord {
+            kind,
+            t_ms: parsed.get("t_ms").and_then(Value::as_f64).unwrap_or(0.0),
+            pid: parsed.get("pid").and_then(Value::as_u64).unwrap_or(0),
+            fields: parsed,
+        });
+    }
+    Ok((events, skipped))
+}
+
+/// Per-type event counts — the `memfine events --summary` view.
+pub fn summarize(events: &[EventRecord]) -> BTreeMap<String, u64> {
+    let mut counts = BTreeMap::new();
+    for ev in events {
+        *counts.entry(ev.kind.clone()).or_insert(0u64) += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_covers_u64_range() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(u64::MAX), 64);
+        for v in [0u64, 1, 7, 1 << 20, u64::MAX] {
+            assert!(Histogram::bucket_index(v) < HIST_BUCKETS);
+            assert!(v <= Histogram::bucket_hi(Histogram::bucket_index(v)));
+        }
+    }
+
+    #[test]
+    fn histogram_observe_and_stats() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 100, 1000] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.sum(), 1106);
+        assert!((h.mean() - 1106.0 / 6.0).abs() < 1e-9);
+        assert_eq!(h.quantile(0.0), 0);
+        assert!(h.quantile(1.0) >= 1000);
+        assert_eq!(Histogram::new().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_commutative() {
+        let mk = |vals: &[u64]| {
+            let mut h = Histogram::new();
+            for &v in vals {
+                h.observe(v);
+            }
+            h
+        };
+        let a = mk(&[1, 5, 9]);
+        let b = mk(&[0, 2, 1 << 40]);
+        let c = mk(&[7, 7, 7, u64::MAX]);
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        // b + a == a + b
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        // merge equals observing the concatenation
+        let all = mk(&[1, 5, 9, 0, 2, 1 << 40, 7, 7, 7, u64::MAX]);
+        assert_eq!(left, all);
+    }
+
+    #[test]
+    fn event_log_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("memfine-obs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip-events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = EventLog::open(&path);
+        assert!(log.enabled());
+        log.emit("cell_eval", vec![
+            ("hash", json::s("94fd0a31c7e02b44")),
+            ("eval_ns", json::num(1234.0)),
+        ]);
+        log.emit("shard_spawned", vec![("shard", json::num(1.0))]);
+        let (events, skipped) = read_events(&path).unwrap();
+        assert_eq!(skipped, 0);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, "cell_eval");
+        assert_eq!(events[0].field_str("hash"), Some("94fd0a31c7e02b44"));
+        assert_eq!(events[0].field_u64("eval_ns"), Some(1234));
+        assert_eq!(events[1].kind, "shard_spawned");
+        assert_eq!(events[1].pid, u64::from(std::process::id()));
+        assert!(events[1].t_ms >= events[0].t_ms);
+        assert_eq!(log.dropped(), 0);
+        let counts = summarize(&events);
+        assert_eq!(counts.get("cell_eval"), Some(&1));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn reader_skips_torn_tail_like_checkpoints() {
+        let dir = std::env::temp_dir().join(format!("memfine-obs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn-events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = EventLog::open(&path);
+        log.emit("a", vec![]);
+        log.emit("b", vec![]);
+        // Simulate a kill mid-append: a torn, unterminated final line.
+        {
+            use std::io::Write as _;
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"t_ms\":9,\"pid\":1,\"ty").unwrap();
+        }
+        let (events, skipped) = read_events(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(skipped, 1);
+        assert_eq!(events[0].kind, "a");
+        assert_eq!(events[1].kind, "b");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn disabled_log_is_a_noop() {
+        let log = EventLog::disabled();
+        assert!(!log.enabled());
+        log.emit("anything", vec![("k", json::s("v"))]);
+        assert_eq!(log.dropped(), 0);
+    }
+
+    #[test]
+    fn open_failure_degrades_to_disabled() {
+        let log = EventLog::open(Path::new("/definitely/not/a/dir/events.jsonl"));
+        assert!(!log.enabled());
+        log.emit("anything", vec![]);
+        assert_eq!(log.dropped(), 0);
+    }
+}

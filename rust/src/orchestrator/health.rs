@@ -19,6 +19,13 @@ pub fn probe_len(path: &Path) -> Option<u64> {
     std::fs::metadata(path).ok().map(|m| m.len())
 }
 
+/// Time since the file was last modified — `memfine status` renders it
+/// as heartbeat freshness. `None` when the file does not exist, the
+/// filesystem has no mtimes, or the clock reads before the mtime.
+pub fn probe_mtime_age(path: &Path) -> Option<Duration> {
+    std::fs::metadata(path).ok()?.modified().ok()?.elapsed().ok()
+}
+
 /// Progress tracker for one shard's checkpoint file.
 #[derive(Clone, Debug)]
 pub struct HeartbeatMonitor {
@@ -127,6 +134,18 @@ mod tests {
         assert_eq!(probe_len(&p), None);
         std::fs::write(&p, b"12345").unwrap();
         assert_eq!(probe_len(&p), Some(5));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn probe_mtime_age_tracks_fresh_writes() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("memfine-health-mtime-{}", std::process::id()));
+        std::fs::remove_file(&p).ok();
+        assert_eq!(probe_mtime_age(&p), None);
+        std::fs::write(&p, b"x").unwrap();
+        let age = probe_mtime_age(&p).expect("file exists");
+        assert!(age < Duration::from_secs(60));
         std::fs::remove_file(&p).ok();
     }
 }

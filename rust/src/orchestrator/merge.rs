@@ -78,6 +78,9 @@ pub fn merge_and_finish(
         rng: cfg.rng,
         trace_cache: Some(dir.join("trace-cache")),
         pin_cores: cfg.pin_cores,
+        // the catch-up pass logs into the same campaign event log the
+        // shards appended to (sidecar: never affects merged bytes)
+        events: cfg.telemetry.then(|| dir.join("events.jsonl")),
         ..Default::default()
     };
     let summary = sweep::run_sweep_with(&cfg.sweep, &opts)?;

@@ -35,7 +35,7 @@ pub mod merge;
 pub mod plan;
 pub mod supervise;
 
-pub use health::{probe_len, HeartbeatMonitor};
+pub use health::{probe_len, probe_mtime_age, HeartbeatMonitor};
 pub use merge::{merge_and_finish, MergeOutcome};
 pub use plan::{plan_shards, LaunchPlan, ShardPlan};
 pub use supervise::{
@@ -48,6 +48,8 @@ use std::time::Duration;
 
 use crate::config::LaunchConfig;
 use crate::error::{Error, Result};
+use crate::json::{self, Value};
+use crate::obs::EventLog;
 
 /// Execution parameters of one launch invocation — everything that
 /// decides *where and how* the fleet runs but can never reach the
@@ -119,6 +121,42 @@ fn describe(ev: &ShardEvent) -> String {
     }
 }
 
+/// The campaign event log's view of one supervision event: shard
+/// index plus the kind-specific payload, under stable field names so
+/// `memfine events` filters stay meaningful across versions.
+fn shard_event_fields(ev: &ShardEvent) -> Vec<(&'static str, Value)> {
+    let mut fields = vec![("shard", json::num(ev.shard as f64))];
+    match &ev.kind {
+        ShardEventKind::Spawned { pid, attempt } => {
+            fields.push(("child_pid", json::num(*pid as f64)));
+            fields.push(("attempt", json::num(*attempt as f64)));
+        }
+        ShardEventKind::Progress { checkpoint_bytes } => {
+            fields.push(("checkpoint_bytes", json::num(*checkpoint_bytes as f64)));
+        }
+        ShardEventKind::ChaosKilled { pid } => {
+            fields.push(("child_pid", json::num(*pid as f64)));
+        }
+        ShardEventKind::Stalled { idle_ms } => {
+            fields.push(("idle_ms", json::num(*idle_ms as f64)));
+        }
+        ShardEventKind::Crashed { exit_code } => {
+            fields.push((
+                "exit_code",
+                match exit_code {
+                    Some(c) => json::num(*c as f64),
+                    None => Value::Null,
+                },
+            ));
+        }
+        ShardEventKind::Completed => {}
+        ShardEventKind::GaveUp { reason } => {
+            fields.push(("reason", json::s(reason.clone())));
+        }
+    }
+    fields
+}
+
 /// Run a full orchestrated launch: plan the fleet, capture the specs
 /// into the launch dir, spawn and supervise the shard processes, then
 /// merge / heal / audit / compact into the final report. A shard that
@@ -148,9 +186,17 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
         )));
     }
     let launch_json = opts.dir.join("launch.json");
+    // events.jsonl is the sidecar telemetry log, never checkpoint
+    // state: it must not block a fresh campaign nor be folded into
+    // merged.jsonl.
+    let is_event_log = |p: &std::path::Path| {
+        p.file_name().and_then(|n| n.to_str()) == Some("events.jsonl")
+    };
     let dir_has_jsonl = || -> Result<bool> {
         Ok(std::fs::read_dir(&opts.dir)?.filter_map(|e| e.ok()).any(|e| {
-            e.path().extension().and_then(|x| x.to_str()) == Some("jsonl")
+            let p = e.path();
+            p.extension().and_then(|x| x.to_str()) == Some("jsonl")
+                && !is_event_log(&p)
         }))
     };
     match std::fs::read_to_string(&launch_json) {
@@ -213,7 +259,10 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
     // reuses every completed scenario instead of re-executing it.
     let mut prior_state: Vec<PathBuf> = std::fs::read_dir(&opts.dir)?
         .filter_map(|entry| entry.ok().map(|e| e.path()))
-        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("jsonl"))
+        .filter(|p| {
+            p.extension().and_then(|e| e.to_str()) == Some("jsonl")
+                && !is_event_log(p)
+        })
         .collect();
     prior_state.sort();
 
@@ -221,6 +270,25 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
     let sampler = cfg.sampler;
     let rng = cfg.rng;
     let pin_cores = cfg.pin_cores;
+    // One campaign event log, shared by appending: the supervisor and
+    // every shard child write whole lines O_APPEND to the same file.
+    // Strictly sidecar — open failure degrades to a disabled log.
+    let events_path = opts.dir.join("events.jsonl");
+    let elog = if cfg.telemetry {
+        EventLog::open(&events_path)
+    } else {
+        EventLog::disabled()
+    };
+    elog.emit(
+        "launch_start",
+        vec![
+            ("procs", json::num(plan.procs as f64)),
+            ("shards", json::num(plan.shards.len() as f64)),
+            ("cells", json::num(plan.total_cells as f64)),
+            ("scenarios", json::num(plan.total_scenarios as f64)),
+            ("chaos", Value::Bool(opts.chaos_kill_one)),
+        ],
+    );
     // One trace cache per campaign dir: every shard process (and the
     // merge catch-up) shares it, so a cell's routed stream is drawn at
     // most once per campaign — and relaunches/topology changes reuse
@@ -268,6 +336,11 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
             // same checkpoint bytes, this just steadies throughput
             cmd.arg("--pin-cores");
         }
+        if elog.enabled() {
+            // children append their engine events (cell_eval, cache
+            // hit/miss, checkpoint appends) to the same campaign log
+            cmd.arg("--events").arg(&events_path);
+        }
         cmd.stdin(Stdio::null())
             .stdout(Stdio::null())
             .stderr(Stdio::from(log));
@@ -291,6 +364,7 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
         if !quiet {
             crate::logging::info("orchestrator", describe(ev));
         }
+        elog.emit(ev.kind.tag(), shard_event_fields(ev));
         events.push(ev.clone());
     })?;
     if opts.chaos_kill_one
@@ -305,6 +379,16 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
     }
 
     let merge = merge::merge_and_finish(cfg, &plan, &opts.dir, &prior_state)?;
+    elog.emit(
+        "merge_done",
+        vec![
+            ("resumed", json::num(merge.resumed as f64)),
+            ("healed", json::num(merge.healed as f64)),
+            ("covered", json::num(merge.audit.present as f64)),
+            ("planned", json::num(merge.audit.planned as f64)),
+            ("records", json::num(merge.compact_stats.records_out as f64)),
+        ],
+    );
     if !quiet {
         crate::logging::info(
             "orchestrator",

@@ -69,6 +69,23 @@ pub enum ShardEventKind {
     GaveUp { reason: String },
 }
 
+impl ShardEventKind {
+    /// Stable event-type tag for the campaign event log
+    /// ([`crate::obs`]) — `memfine events --type shard_crashed` and
+    /// friends filter on these names.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ShardEventKind::Spawned { .. } => "shard_spawned",
+            ShardEventKind::Progress { .. } => "shard_progress",
+            ShardEventKind::ChaosKilled { .. } => "shard_chaos_killed",
+            ShardEventKind::Stalled { .. } => "shard_stalled",
+            ShardEventKind::Crashed { .. } => "shard_crashed",
+            ShardEventKind::Completed => "shard_completed",
+            ShardEventKind::GaveUp { .. } => "shard_gave_up",
+        }
+    }
+}
+
 /// One supervision event, tagged by shard index.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardEvent {
@@ -385,6 +402,23 @@ mod tests {
             max_retries: 2,
             chaos_kill_one: false,
         }
+    }
+
+    #[test]
+    fn event_kind_tags_are_distinct_shard_names() {
+        let kinds = [
+            ShardEventKind::Spawned { pid: 1, attempt: 1 },
+            ShardEventKind::Progress { checkpoint_bytes: 0 },
+            ShardEventKind::ChaosKilled { pid: 1 },
+            ShardEventKind::Stalled { idle_ms: 0 },
+            ShardEventKind::Crashed { exit_code: None },
+            ShardEventKind::Completed,
+            ShardEventKind::GaveUp { reason: String::new() },
+        ];
+        let tags: std::collections::BTreeSet<_> =
+            kinds.iter().map(|k| k.tag()).collect();
+        assert_eq!(tags.len(), kinds.len());
+        assert!(tags.iter().all(|t| t.starts_with("shard_")));
     }
 
     #[test]

@@ -24,6 +24,13 @@
 //! method of the cell simultaneously, memoising the method-dependent
 //! kernels and emitting only [`RunSummary`] aggregates — pinned
 //! bit-identical to per-method [`run_scenario_on_trace`] calls.
+//!
+//! The phase boundary is also the telemetry boundary: the sweep
+//! engine's `stage.trace_ns` / `stage.eval_ns` histograms
+//! ([`crate::obs`]) bracket phases 1 and 2 from *outside* these entry
+//! points. No clock is ever read inside the simulator — evaluation
+//! stays a pure function of its inputs, so instrumentation can never
+//! perturb artifact bytes.
 
 use std::collections::HashMap;
 

@@ -487,7 +487,7 @@ pub fn warn_provenance_mismatch(
         None => String::new(),
     };
     crate::logging::warn(
-        "sweep",
+        "sweep::checkpoint",
         format!(
             "{ctx}checkpoint records router '{}' rng v{} but this run uses router '{}' \
              rng v{}; recorded rows will not resume under this run's hashes (pass \
@@ -506,11 +506,23 @@ pub fn warn_provenance_mismatch(
 #[derive(Debug)]
 pub struct CheckpointWriter {
     out: Option<std::fs::File>,
+    records_written: u64,
 }
 
 impl CheckpointWriter {
     pub fn disabled() -> Self {
-        CheckpointWriter { out: None }
+        CheckpointWriter { out: None, records_written: 0 }
+    }
+
+    /// Whether this writer actually appends (a `--checkpoint` path was
+    /// configured).
+    pub fn enabled(&self) -> bool {
+        self.out.is_some()
+    }
+
+    /// Scenario records written by this writer (header excluded).
+    pub fn records_written(&self) -> u64 {
+        self.records_written
     }
 
     /// Start a fresh checkpoint (truncates an existing file — the
@@ -523,7 +535,7 @@ impl CheckpointWriter {
                 format!("create checkpoint {}: {e}", path.display()),
             ))
         })?;
-        let mut w = CheckpointWriter { out: Some(f) };
+        let mut w = CheckpointWriter { out: Some(f), records_written: 0 };
         if let Some(prov) = header {
             w.write_header(prov)?;
         }
@@ -562,7 +574,7 @@ impl CheckpointWriter {
                 f.write_all(b"\n").map_err(Error::Io)?;
             }
         }
-        let mut w = CheckpointWriter { out: Some(f) };
+        let mut w = CheckpointWriter { out: Some(f), records_written: 0 };
         if len == 0 {
             if let Some(prov) = header {
                 w.write_header(prov)?;
@@ -598,7 +610,9 @@ impl CheckpointWriter {
         f.write_all(line.as_bytes())
             .and_then(|_| f.write_all(b"\n"))
             .and_then(|_| f.flush())
-            .map_err(Error::Io)
+            .map_err(Error::Io)?;
+        self.records_written += 1;
+        Ok(())
     }
 }
 

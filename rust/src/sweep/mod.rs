@@ -90,6 +90,8 @@ use std::sync::Arc;
 
 use crate::config::{ShardSpec, SweepConfig};
 use crate::error::{Error, Result};
+use crate::json;
+use crate::obs::EventLog;
 use crate::router::GatingSim;
 use crate::sim;
 use crate::trace::provenance::{RngVersion, RouterSampler, TraceProvenance};
@@ -173,6 +175,12 @@ pub struct SweepRunOptions {
     /// per-cell partials fold in iteration order, so artifacts are
     /// byte-identical at every width and worker count.
     pub split_iters: u64,
+    /// Append structured telemetry events to this JSON-lines file
+    /// ([`crate::obs::EventLog`]; `memfine launch` points every shard
+    /// at the campaign's shared `events.jsonl`). Strictly sidecar:
+    /// best-effort emission, never part of scenario hashes or campaign
+    /// identity, and pinned to never perturb artifact bytes.
+    pub events: Option<PathBuf>,
 }
 
 /// What a sweep invocation did, plus the report it produced.
@@ -196,9 +204,19 @@ pub struct SweepRunSummary {
     pub traces_generated: usize,
     /// Trace cells satisfied from the on-disk trace cache.
     pub traces_cached: usize,
+    /// Trace cells whose cache write failed (disk full, permissions):
+    /// the trace generated fine and the sweep continued uncached.
+    pub traces_degraded: usize,
     /// What the worker pool did (jobs/steals/queue depths per worker).
     /// Execution facts only — never folded into the report artifact.
     pub pool: pool::PoolStats,
+    /// Execution metrics of this invocation: cache hit/miss/degrade
+    /// counters, stage timing histograms (`stage.trace_ns`,
+    /// `stage.eval_ns`, `stage.slice_eval_ns`), pool steal and
+    /// backpressure counters. Mergeable across shards
+    /// ([`crate::metrics::Registry::merge`]); execution facts only —
+    /// never folded into the report artifact.
+    pub metrics: crate::metrics::Registry,
 }
 
 /// One worker job: the still-to-run scenarios of a trace cell, with
@@ -226,13 +244,33 @@ enum SweepJob {
     Slice { plan: Arc<CellPlan>, slice: usize, lo: u64, hi: u64 },
 }
 
+/// A finished whole-cell job: its rows plus the execution facts the
+/// consumer turns into telemetry (worker-side timing rides back with
+/// the result, so event emission stays on the single consumer thread).
+struct CellOutcome {
+    rows: Vec<(String, ScenarioResult)>,
+    /// Trace came from the on-disk cache.
+    cache_hit: bool,
+    /// Trace generated fine but its cache write failed (degraded to
+    /// uncached — never an error).
+    cache_degraded: bool,
+    /// Nanoseconds acquiring the trace (cache load or generation).
+    trace_ns: u64,
+    /// Nanoseconds evaluating the cell's methods against the trace.
+    eval_ns: u64,
+}
+
 /// What one pool job sends back to the consumer thread.
 enum JobOutput {
-    /// A whole cell's finished rows (+ whether its trace came from the
-    /// cache).
-    Cell(Vec<(String, ScenarioResult)>, bool),
+    /// A whole cell's finished rows + execution facts.
+    Cell(CellOutcome),
     /// One slice's per-method partials, awaiting cell reassembly.
-    Slice { plan: Arc<CellPlan>, slice: usize, parts: Vec<sim::CellMethodPartial> },
+    Slice {
+        plan: Arc<CellPlan>,
+        slice: usize,
+        parts: Vec<sim::CellMethodPartial>,
+        eval_ns: u64,
+    },
 }
 
 fn run_cell(
@@ -241,7 +279,7 @@ fn run_cell(
     rng: RngVersion,
     unfused: bool,
     store: Option<&TraceStore>,
-) -> Result<(Vec<(String, ScenarioResult)>, bool)> {
+) -> Result<CellOutcome> {
     let first = &work.todo[0].1;
     // One trace per (model, seed) cell; every method below evaluates
     // against it. The trace identity is (model, parallel, seed,
@@ -258,6 +296,8 @@ fn run_cell(
         SharedRoutingTrace::generate(&gating, first.run.iterations)
     };
     let mut cache_hit = false;
+    let mut cache_degraded = false;
+    let trace_t0 = std::time::Instant::now();
     let trace = match store {
         Some(st) => {
             let key = trace_key(
@@ -284,6 +324,7 @@ fn run_cell(
                     // (disk full, permissions) must not kill a sweep
                     // whose trace generated fine — degrade to uncached.
                     if let Err(e) = st.save(&key, &t) {
+                        cache_degraded = true;
                         crate::logging::warn(
                             "sweep",
                             format!("trace cache write failed ({key}): {e}"),
@@ -295,36 +336,42 @@ fn run_cell(
         }
         None => draw(),
     };
-    if unfused {
+    let trace_ns = trace_t0.elapsed().as_nanos() as u64;
+    let eval_t0 = std::time::Instant::now();
+    let rows = if unfused {
         // Pre-fusion A/B path: one full evaluation pass per method.
-        let rows = work
-            .todo
+        work.todo
             .into_iter()
             .map(|(hash, sc)| {
                 debug_assert!(sc.run.method == sc.method && sc.run.seed == sc.seed);
                 let out = sim::run_scenario_on_trace(&sc.run, sc.method.clone(), &trace)?;
                 Ok((hash, ScenarioResult::new(&sc, &out)))
             })
-            .collect::<Result<Vec<_>>>()?;
-        return Ok((rows, cache_hit));
-    }
-    // Fused default: one trace walk evaluates every still-to-run
-    // method of the cell simultaneously (sim::evaluate_cell), returning
-    // lightweight RunSummary aggregates — pinned byte-identical to the
-    // per-method path above.
-    let methods: Vec<_> = work.todo.iter().map(|(_, sc)| sc.method.clone()).collect();
-    let outcomes = sim::evaluate_cell(&first.run, &methods, &trace)?;
-    debug_assert_eq!(outcomes.len(), work.todo.len());
-    let rows = work
-        .todo
-        .into_iter()
-        .zip(outcomes)
-        .map(|((hash, sc), out)| {
-            debug_assert!(out.method == sc.method && sc.run.seed == sc.seed);
-            (hash, ScenarioResult::from_summary(&sc, &out.summary))
-        })
-        .collect();
-    Ok((rows, cache_hit))
+            .collect::<Result<Vec<_>>>()?
+    } else {
+        // Fused default: one trace walk evaluates every still-to-run
+        // method of the cell simultaneously (sim::evaluate_cell),
+        // returning lightweight RunSummary aggregates — pinned
+        // byte-identical to the per-method path above.
+        let methods: Vec<_> = work.todo.iter().map(|(_, sc)| sc.method.clone()).collect();
+        let outcomes = sim::evaluate_cell(&first.run, &methods, &trace)?;
+        debug_assert_eq!(outcomes.len(), work.todo.len());
+        work.todo
+            .into_iter()
+            .zip(outcomes)
+            .map(|((hash, sc), out)| {
+                debug_assert!(out.method == sc.method && sc.run.seed == sc.seed);
+                (hash, ScenarioResult::from_summary(&sc, &out.summary))
+            })
+            .collect()
+    };
+    Ok(CellOutcome {
+        rows,
+        cache_hit,
+        cache_degraded,
+        trace_ns,
+        eval_ns: eval_t0.elapsed().as_nanos() as u64,
+    })
 }
 
 /// Evaluate one iteration-range slice of a split cell: draw exactly
@@ -495,6 +542,28 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
         }
     }
 
+    // Sidecar telemetry: a disabled log when no events path is set,
+    // best-effort always. Workers never touch it — timing facts ride
+    // back inside JobOutput and the single consumer thread emits, so
+    // telemetry adds no synchronisation to the pool.
+    let events = match opts.events.as_deref() {
+        Some(p) => EventLog::open(p),
+        None => EventLog::disabled(),
+    };
+    let shard_tag = opts.shard.as_ref().map(|s| format!("{}/{}", s.index, s.count));
+    let mut metrics = crate::metrics::Registry::new();
+    events.emit(
+        "sweep_start",
+        vec![
+            ("total", json::num(total as f64)),
+            ("resumed", json::num(resumed as f64)),
+            ("planned", json::num(executed as f64)),
+            ("jobs", json::num(jobs.len() as f64)),
+            ("workers", json::num(workers as f64)),
+            ("shard", json::s(shard_tag.as_deref().unwrap_or("-"))),
+        ],
+    );
+
     // Stream: each finished job delivers on this thread — whole cells
     // emit their rows directly (checkpoint line out first for
     // kill-safety, then fold); slices park in the assembly map until
@@ -505,8 +574,10 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
     let rng = opts.rng;
     let unfused = opts.unfused;
     let store_ref = store.as_ref();
+    let cache_on = store_ref.is_some();
     let mut traces_generated = 0usize;
     let mut traces_cached = 0usize;
+    let mut traces_degraded = 0usize;
     let mut pending: HashMap<usize, Vec<Option<Vec<sim::CellMethodPartial>>>> =
         HashMap::new();
     let pool_cfg = pool::PoolConfig {
@@ -521,19 +592,49 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
         &pool_cfg,
         |_, job| match job {
             SweepJob::Whole(w) => {
-                run_cell(w, sampler, rng, unfused, store_ref).map(|(rows, hit)| JobOutput::Cell(rows, hit))
+                run_cell(w, sampler, rng, unfused, store_ref).map(JobOutput::Cell)
             }
-            SweepJob::Slice { plan, slice, lo, hi } => run_slice(&plan, sampler, rng, lo, hi)
-                .map(|parts| JobOutput::Slice { plan, slice, parts }),
+            SweepJob::Slice { plan, slice, lo, hi } => {
+                let t0 = std::time::Instant::now();
+                run_slice(&plan, sampler, rng, lo, hi).map(|parts| JobOutput::Slice {
+                    plan,
+                    slice,
+                    parts,
+                    eval_ns: t0.elapsed().as_nanos() as u64,
+                })
+            }
         },
         |_, res| match res {
-            Ok(JobOutput::Cell(rows, cache_hit)) => {
-                if cache_hit {
+            Ok(JobOutput::Cell(cell)) => {
+                if cell.cache_hit {
                     traces_cached += 1;
                 } else {
                     traces_generated += 1;
                 }
-                for (hash, row) in rows {
+                if cell.cache_degraded {
+                    traces_degraded += 1;
+                }
+                metrics.observe("stage.trace_ns", cell.trace_ns);
+                metrics.observe("stage.eval_ns", cell.eval_ns);
+                let mut fields = vec![
+                    ("hash", json::s(cell.rows.first().map(|(h, _)| h.as_str()).unwrap_or(""))),
+                    ("scenarios", json::num(cell.rows.len() as f64)),
+                    ("trace_ns", json::num(cell.trace_ns as f64)),
+                    ("eval_ns", json::num(cell.eval_ns as f64)),
+                ];
+                if cache_on {
+                    let cache = if cell.cache_hit {
+                        "hit"
+                    } else if cell.cache_degraded {
+                        "degrade"
+                    } else {
+                        "miss"
+                    };
+                    fields.push(("cache", json::s(cache)));
+                }
+                events.emit("cell_eval", fields);
+                let n_rows = cell.rows.len();
+                for (hash, row) in cell.rows {
                     if let Err(e) = writer.record(&hash, &row) {
                         if first_err.is_none() {
                             first_err = Some(e);
@@ -541,8 +642,27 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
                     }
                     reducer.push(row);
                 }
+                if writer.enabled() {
+                    events.emit(
+                        "checkpoint_append",
+                        vec![
+                            ("rows", json::num(n_rows as f64)),
+                            ("records", json::num(writer.records_written() as f64)),
+                        ],
+                    );
+                }
             }
-            Ok(JobOutput::Slice { plan, slice, parts }) => {
+            Ok(JobOutput::Slice { plan, slice, parts, eval_ns }) => {
+                metrics.observe("stage.slice_eval_ns", eval_ns);
+                events.emit(
+                    "slice_eval",
+                    vec![
+                        ("hash", json::s(plan.todo[0].0.as_str())),
+                        ("slice", json::num(slice as f64)),
+                        ("slices", json::num(plan.n_slices as f64)),
+                        ("eval_ns", json::num(eval_ns as f64)),
+                    ],
+                );
                 let slots = pending
                     .entry(plan.cell_seq)
                     .or_insert_with(|| vec![None; plan.n_slices]);
@@ -557,6 +677,14 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
                 match sim::fold_cell_partials(in_order) {
                     Ok(outcomes) => {
                         traces_generated += 1;
+                        events.emit(
+                            "cell_assembled",
+                            vec![
+                                ("hash", json::s(plan.todo[0].0.as_str())),
+                                ("scenarios", json::num(plan.todo.len() as f64)),
+                                ("slices", json::num(plan.n_slices as f64)),
+                            ],
+                        );
                         debug_assert_eq!(outcomes.len(), plan.todo.len());
                         for ((hash, sc), out) in plan.todo.iter().zip(outcomes) {
                             debug_assert!(
@@ -589,6 +717,37 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
         return Err(e);
     }
 
+    // Fold the run's execution facts into the mergeable registry.
+    // Execution-only, like PoolStats: never part of the report.
+    metrics.count("trace.generated", traces_generated as u64);
+    metrics.count("trace.cached", traces_cached as u64);
+    metrics.count("trace.degraded", traces_degraded as u64);
+    metrics.count("sweep.executed", executed as u64);
+    metrics.count("sweep.resumed", resumed as u64);
+    metrics.count("sweep.skipped", skipped as u64);
+    metrics.count("checkpoint.records_written", writer.records_written());
+    metrics.count("checkpoint.skipped_lines", done.skipped_lines as u64);
+    metrics.count("pool.jobs", pool_stats.jobs_total());
+    metrics.count("pool.steals_attempted", pool_stats.steals_attempted());
+    metrics.count("pool.steals_succeeded", pool_stats.steals_succeeded());
+    metrics.count("pool.blocked_sends", pool_stats.blocked_sends);
+    metrics.gauge("pool.workers", pool_stats.workers.len() as f64);
+    metrics.count("events.dropped", events.dropped());
+    events.emit(
+        "sweep_done",
+        vec![
+            ("executed", json::num(executed as f64)),
+            ("resumed", json::num(resumed as f64)),
+            ("cached", json::num(traces_cached as f64)),
+            ("generated", json::num(traces_generated as f64)),
+            ("degraded", json::num(traces_degraded as f64)),
+            ("blocked_sends", json::num(pool_stats.blocked_sends as f64)),
+            ("steals", json::num(pool_stats.steals_succeeded() as f64)),
+            ("wall_ns", json::num(pool_stats.wall_ns as f64)),
+            ("shard", json::s(shard_tag.as_deref().unwrap_or("-"))),
+        ],
+    );
+
     Ok(SweepRunSummary {
         report: reducer.finish(),
         total,
@@ -598,7 +757,9 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
         skipped_checkpoint_lines: done.skipped_lines,
         traces_generated,
         traces_cached,
+        traces_degraded,
         pool: pool_stats,
+        metrics,
     })
 }
 
@@ -1064,6 +1225,92 @@ mod tests {
             second.report.to_json().to_string_pretty()
         );
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn telemetry_never_perturbs_artifact_bytes_and_records_events() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("memfine-sweep-events-{}.jsonl", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let cfg = tiny_grid();
+        let off =
+            run_sweep_with(&cfg, &SweepRunOptions { workers: 2, ..Default::default() })
+                .unwrap();
+        let on = run_sweep_with(
+            &cfg,
+            &SweepRunOptions { workers: 2, events: Some(path.clone()), ..Default::default() },
+        )
+        .unwrap();
+        // THE sidecar invariant: telemetry on vs off, identical bytes.
+        assert_eq!(
+            off.report.to_json().to_string_pretty(),
+            on.report.to_json().to_string_pretty()
+        );
+        let (evs, skipped) = crate::obs::read_events(&path).unwrap();
+        assert_eq!(skipped, 0);
+        assert!(evs.iter().any(|e| e.kind == "sweep_start"));
+        assert_eq!(evs.iter().filter(|e| e.kind == "cell_eval").count(), 2);
+        assert!(evs.iter().any(|e| e.kind == "sweep_done"));
+        // stage histograms + counters land in the mergeable registry
+        assert_eq!(on.metrics.histogram("stage.eval_ns").unwrap().count(), 2);
+        assert_eq!(on.metrics.histogram("stage.trace_ns").unwrap().count(), 2);
+        assert_eq!(on.metrics.counter("trace.generated"), 2);
+        assert_eq!(on.metrics.counter("sweep.executed"), 4);
+        assert_eq!(on.metrics.counter("events.dropped"), 0);
+        // a v2 split run additionally emits slice + assembly events and
+        // still matches its own telemetry-off bytes
+        let v2 = |events| SweepRunOptions {
+            workers: 2,
+            rng: RngVersion::V2,
+            split_iters: 3,
+            events,
+            ..Default::default()
+        };
+        std::fs::remove_file(&path).ok();
+        let v2_on = run_sweep_with(&cfg, &v2(Some(path.clone()))).unwrap();
+        let v2_off = run_sweep_with(&cfg, &v2(None)).unwrap();
+        assert_eq!(
+            v2_on.report.to_json().to_string_pretty(),
+            v2_off.report.to_json().to_string_pretty()
+        );
+        let (evs, _) = crate::obs::read_events(&path).unwrap();
+        assert_eq!(evs.iter().filter(|e| e.kind == "slice_eval").count(), 8);
+        assert_eq!(evs.iter().filter(|e| e.kind == "cell_assembled").count(), 2);
+        assert_eq!(v2_on.metrics.histogram("stage.slice_eval_ns").unwrap().count(), 8);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trace_cache_write_failure_degrades_and_is_counted() {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("memfine-sweep-cache-degrade-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = tiny_grid();
+        let opts = SweepRunOptions {
+            workers: 1,
+            trace_cache: Some(dir.clone()),
+            ..Default::default()
+        };
+        let cold = run_sweep_with(&cfg, &opts).unwrap();
+        assert_eq!(cold.traces_degraded, 0);
+        let baseline = cold.report.to_json().to_string_pretty();
+        // Replace every cached trace file with a *directory* of the
+        // same name: loads fail (→ miss), and the save's tmp+rename
+        // cannot land on a directory (→ write degrade) — even running
+        // as root, unlike permission tricks.
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            std::fs::remove_file(&path).unwrap();
+            std::fs::create_dir(&path).unwrap();
+        }
+        let degraded = run_sweep_with(&cfg, &opts).unwrap();
+        assert_eq!(degraded.traces_cached, 0);
+        assert_eq!(degraded.traces_generated, 2);
+        assert_eq!(degraded.traces_degraded, 2);
+        assert_eq!(degraded.metrics.counter("trace.degraded"), 2);
+        // degraded-to-uncached still emits identical bytes
+        assert_eq!(baseline, degraded.report.to_json().to_string_pretty());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

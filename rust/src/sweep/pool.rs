@@ -36,7 +36,7 @@
 //! are execution facts and must NEVER be folded into sweep artifacts.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -165,6 +165,10 @@ pub struct PoolStats {
     pub workers: Vec<WorkerStats>,
     /// Wall-clock nanoseconds of the whole pool run.
     pub wall_ns: u64,
+    /// Sends that had to wait for channel capacity — the backpressure
+    /// stalls a slow consumer inflicted on the workers (bounded
+    /// channel only; 0 for serial runs and the unbounded backend).
+    pub blocked_sends: u64,
 }
 
 impl PoolStats {
@@ -224,6 +228,11 @@ pub trait ResultChannel<R>: Sync {
     /// sends no-ops, so an unwinding consumer can never deadlock the
     /// pool.
     fn close(&self);
+    /// Sends that had to wait for capacity (backpressure stalls).
+    /// Backends without backpressure report 0.
+    fn blocked_sends(&self) -> u64 {
+        0
+    }
 }
 
 /// Bounded MPSC built on a `Mutex<VecDeque>` and two condvars. `send`
@@ -234,6 +243,7 @@ pub struct BoundedChannel<R> {
     not_full: Condvar,
     not_empty: Condvar,
     capacity: usize,
+    blocked: AtomicU64,
 }
 
 struct BoundedState<R> {
@@ -254,6 +264,7 @@ impl<R> BoundedChannel<R> {
             not_full: Condvar::new(),
             not_empty: Condvar::new(),
             capacity,
+            blocked: AtomicU64::new(0),
         }
     }
 }
@@ -261,8 +272,14 @@ impl<R> BoundedChannel<R> {
 impl<R: Send> ResultChannel<R> for BoundedChannel<R> {
     fn send(&self, item: R) {
         let mut st = self.state.lock().unwrap();
-        while st.queue.len() >= self.capacity && !st.closed {
-            st = self.not_full.wait(st).unwrap();
+        if st.queue.len() >= self.capacity && !st.closed {
+            // Counted once per send that waits, however many wakeups
+            // it takes — "how often did backpressure bite", not "how
+            // many condvar spins".
+            self.blocked.fetch_add(1, Ordering::Relaxed);
+            while st.queue.len() >= self.capacity && !st.closed {
+                st = self.not_full.wait(st).unwrap();
+            }
         }
         if st.closed {
             return;
@@ -302,6 +319,10 @@ impl<R: Send> ResultChannel<R> for BoundedChannel<R> {
         st.closed = true;
         drop(st);
         self.not_full.notify_all();
+    }
+
+    fn blocked_sends(&self) -> u64 {
+        self.blocked.load(Ordering::Relaxed)
     }
 }
 
@@ -440,6 +461,7 @@ where
         channel: cfg.channel,
         workers: Vec::new(),
         wall_ns: 0,
+        blocked_sends: 0,
     };
     if n == 0 {
         return stats;
@@ -488,6 +510,7 @@ where
         Schedule::Injector => run_injector(items, workers, cfg.pin_cores, chan, &f, &mut consume),
     };
     stats.wall_ns = t0.elapsed().as_nanos() as u64;
+    stats.blocked_sends = chan.blocked_sends();
     stats
 }
 
@@ -939,6 +962,7 @@ mod tests {
         assert_eq!(stats.jobs_total(), 10);
         assert_eq!(stats.steals_attempted(), 0);
         assert_eq!(stats.pinned_workers(), 0);
+        assert_eq!(stats.blocked_sends, 0);
     }
 
     #[test]
@@ -948,7 +972,7 @@ mod tests {
         let items: Vec<u64> = (0..64).collect();
         let cfg = PoolConfig { workers: 4, channel_capacity: 1, ..PoolConfig::default() };
         let mut seen = vec![0u32; 64];
-        parallel_for_each_indexed_with(items, &cfg, |_, x| x, |i, r| {
+        let stats = parallel_for_each_indexed_with(items, &cfg, |_, x| x, |i, r| {
             if i % 8 == 0 {
                 std::thread::sleep(Duration::from_millis(1));
             }
@@ -956,6 +980,9 @@ mod tests {
             seen[i] += 1;
         });
         assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+        // capacity 1 against a sleeping consumer: backpressure must
+        // actually have stalled some producer sends
+        assert!(stats.blocked_sends > 0, "no backpressure recorded");
     }
 
     #[test]

@@ -88,6 +88,21 @@ impl TraceStore {
         self.dir.join(format!("{key}.trace"))
     }
 
+    /// Complete `.trace` entries currently on disk (tmp files and
+    /// foreign names excluded) — an observability read for `memfine
+    /// status`; 0 on an unreadable directory, never an error.
+    pub fn entry_count(&self) -> usize {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return 0;
+        };
+        entries
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.path().extension().and_then(|x| x.to_str()) == Some("trace")
+            })
+            .count()
+    }
+
     /// Load the trace cached under `key`, reconstructing it against
     /// the caller's (model, parallel) identity. Returns `None` — a
     /// cache miss — on a missing, torn, corrupt, or mismatched file;
@@ -260,6 +275,25 @@ mod tests {
             // means to the bit — warm-cache byte-identity rests on it
             assert_eq!(a.mean_recv.to_bits(), b.mean_recv.to_bits());
         }
+        std::fs::remove_dir_all(store.dir).ok();
+    }
+
+    #[test]
+    fn entry_count_sees_only_complete_entries() {
+        let store = tmp_store("entry-count");
+        assert_eq!(store.entry_count(), 0);
+        let trace = sample_trace(7, 2);
+        let key = trace_key(
+            &trace.model,
+            &trace.parallel,
+            7,
+            2,
+            &TraceProvenance::default(),
+        );
+        store.save(&key, &trace).unwrap();
+        // a stray tmp file (an in-flight writer) must not be counted
+        std::fs::write(store.dir.join("deadbeef.tmp.1"), b"x").unwrap();
+        assert_eq!(store.entry_count(), 1);
         std::fs::remove_dir_all(store.dir).ok();
     }
 

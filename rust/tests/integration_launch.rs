@@ -151,6 +151,21 @@ fn chaos_killed_child_is_healed_to_identical_bytes() {
         "chaos-healed artifact diverged from the single-process run"
     );
     assert!(launched.merge.audit.complete());
+
+    // the campaign narrated itself: telemetry is on by default, and the
+    // event log records the kill, the relaunch, and the merge
+    let (events, torn) =
+        memfine::obs::read_events(&dir.join("events.jsonl")).expect("read event log");
+    assert_eq!(torn, 0, "a finished campaign leaves no torn event lines");
+    let kinds = memfine::obs::summarize(&events);
+    assert_eq!(kinds.get("launch_start"), Some(&1));
+    assert_eq!(kinds.get("shard_chaos_killed"), Some(&1));
+    assert!(
+        kinds.get("shard_spawned").copied().unwrap_or(0) >= 4,
+        "3 shards + 1 relaunch must all be recorded: {kinds:?}"
+    );
+    assert!(kinds.get("cell_eval").copied().unwrap_or(0) >= 1, "{kinds:?}");
+    assert_eq!(kinds.get("merge_done"), Some(&1));
     std::fs::remove_dir_all(&dir).ok();
 }
 
