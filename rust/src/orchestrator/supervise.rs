@@ -466,6 +466,46 @@ mod tests {
     }
 
     #[test]
+    fn retry_budget_is_lifetime_even_when_episodes_heal() {
+        // Pins the current retry shape: `retries_used` never resets,
+        // so a shard that shows fresh checkpoint progress before every
+        // crash still exhausts its lifetime budget and gives up — even
+        // though each episode healed. A long campaign with occasional
+        // independent failures therefore dies by attrition.
+        let shards = one_shard("lifetime");
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+        let mut events = Vec::new();
+        let outcomes = supervise(
+            &shards,
+            |plan, _| {
+                // every attempt appends (observable progress), lingers
+                // long enough for the supervisor to see it, then dies
+                sh(format!(
+                    "printf line >> {}; sleep 0.3; exit 1",
+                    plan.checkpoint.display()
+                ))
+            },
+            &fast_opts(),
+            |ev| events.push(ev.clone()),
+        )
+        .unwrap();
+        assert!(
+            events
+                .iter()
+                .any(|e| matches!(e.kind, ShardEventKind::Progress { .. })),
+            "progress must have been observed between crashes"
+        );
+        assert!(!outcomes[0].completed);
+        // initial spawn + max_retries relaunches, healing notwithstanding
+        assert_eq!(outcomes[0].spawns, 3);
+        assert!(events
+            .iter()
+            .any(|e| matches!(&e.kind, ShardEventKind::GaveUp { reason }
+                if reason.contains("retry budget exhausted"))));
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+    }
+
+    #[test]
     fn crash_then_success_heals_within_budget() {
         let shards = one_shard("flaky");
         let outcomes = supervise(
