@@ -779,9 +779,24 @@ pub struct LaunchConfig {
     pub stall_timeout_ms: u64,
     /// Supervisor poll interval for child exits and heartbeats.
     pub poll_ms: u64,
-    /// Relaunches allowed per shard (beyond the initial spawn) before
-    /// the supervisor gives up on it.
+    /// Relaunches allowed per shard *failure episode* (beyond the
+    /// initial spawn) before the supervisor gives up on it. An episode
+    /// ends — and this budget resets — whenever the shard shows fresh
+    /// checkpoint progress.
     pub max_retries: u64,
+    /// Fleet-wide relaunch budget for the whole campaign (0 =
+    /// unlimited). The backstop against a shard that crashes in a loop
+    /// while still appending bytes each attempt: every append resets
+    /// its episode budget, so only this bound can stop it.
+    pub campaign_retries: u64,
+    /// Base backoff before the first relaunch of an episode, doubling
+    /// per relaunch (capped at 10 s) with deterministic jitter; 0
+    /// disables backoff.
+    pub backoff_ms: u64,
+    /// Quarantine a persistently-failing shard's checkpoint (rename it
+    /// aside) when it gives up without progress, so the merge
+    /// catch-up redistributes its cells. On by default.
+    pub quarantine: bool,
     /// Router sampler the campaign draws with (part of every scenario
     /// hash and trace-cache key). Defaults to the splitting
     /// multinomial; `--router seq` reproduces pre-flip campaigns.
@@ -807,7 +822,8 @@ pub struct LaunchConfig {
 impl LaunchConfig {
     /// Defaults tuned for one multi-core host: auto process count,
     /// single-threaded shards, 30 s stall timeout, 100 ms poll, two
-    /// relaunches per shard.
+    /// relaunches per failure episode under a 16-relaunch campaign
+    /// budget, 100 ms base backoff, quarantine on.
     pub fn new(sweep: SweepConfig) -> Self {
         LaunchConfig {
             sweep,
@@ -816,6 +832,9 @@ impl LaunchConfig {
             stall_timeout_ms: 30_000,
             poll_ms: 100,
             max_retries: 2,
+            campaign_retries: 16,
+            backoff_ms: 100,
+            quarantine: true,
             sampler: RouterSampler::default(),
             rng: RngVersion::default(),
             pin_cores: false,
@@ -864,6 +883,9 @@ impl LaunchConfig {
             ("stall_timeout_ms", json::num(self.stall_timeout_ms as f64)),
             ("poll_ms", json::num(self.poll_ms as f64)),
             ("max_retries", json::num(self.max_retries as f64)),
+            ("campaign_retries", json::num(self.campaign_retries as f64)),
+            ("backoff_ms", json::num(self.backoff_ms as f64)),
+            ("quarantine", Value::Bool(self.quarantine)),
             ("router", json::s(self.sampler.tag().to_string())),
             ("rng", json::s(self.rng.tag().to_string())),
             ("pin_cores", Value::Bool(self.pin_cores)),
@@ -895,6 +917,14 @@ impl LaunchConfig {
             stall_timeout_ms: v.req_u64("stall_timeout_ms")?,
             poll_ms: v.req_u64("poll_ms")?,
             max_retries: v.req_u64("max_retries")?,
+            // absent in pre-fault-plane launch.json files — the
+            // defaults reproduce (and bound) the old retry shape
+            campaign_retries: v
+                .get("campaign_retries")
+                .and_then(Value::as_u64)
+                .unwrap_or(16),
+            backoff_ms: v.get("backoff_ms").and_then(Value::as_u64).unwrap_or(100),
+            quarantine: v.get("quarantine").and_then(Value::as_bool).unwrap_or(true),
             sampler,
             // absent in pre-counter-RNG launch.json files — those
             // campaigns were drawn under (and stay on) the v1 streams

@@ -1,0 +1,199 @@
+//! Injectable IO-fault seam for chaos drills.
+//!
+//! Writers that participate in the degradation ladder (the checkpoint
+//! record stream, the trace store, the event log) call
+//! [`check`] with their site tag immediately before touching the
+//! filesystem. In production the seam is a single relaxed atomic load
+//! and nothing else. Under a chaos drill the seam is armed — either
+//! in-process via [`inject`] (supervisor scope) or through the
+//! `MEMFINE_FAULT_INJECT` environment variable that `memfine launch`
+//! sets on shard children (children scope) — and the next `count`
+//! calls for that site fail with a real `std::io::Error` carrying the
+//! requested errno (ENOSPC / EIO), exactly as a full disk or a dying
+//! device would surface it.
+//!
+//! The env format is `site:kind:count[,site:kind:count...]`, e.g.
+//! `checkpoint:enospc:1,trace-store:eio:2`. Unknown entries are
+//! ignored with a warning so a newer launcher can drill an older
+//! binary.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+use crate::logging;
+
+/// Environment variable `memfine launch` uses to arm faults in shard
+/// child processes.
+pub const FAULT_ENV: &str = "MEMFINE_FAULT_INJECT";
+
+/// Site tag for the streaming checkpoint record writer.
+pub const SITE_CHECKPOINT: &str = "checkpoint";
+/// Site tag for the on-disk trace store.
+pub const SITE_TRACE_STORE: &str = "trace-store";
+/// Site tag for the sidecar event log.
+pub const SITE_EVENT_LOG: &str = "event-log";
+
+/// The errno an armed fault surfaces as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `ENOSPC` — no space left on device.
+    Enospc,
+    /// `EIO` — low-level IO error.
+    Eio,
+}
+
+impl FaultKind {
+    /// Parse the plan/env spelling (`enospc` / `eio`).
+    pub fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "enospc" => Some(FaultKind::Enospc),
+            "eio" => Some(FaultKind::Eio),
+            _ => None,
+        }
+    }
+
+    /// The plan/env spelling.
+    pub fn tag(self) -> &'static str {
+        match self {
+            FaultKind::Enospc => "enospc",
+            FaultKind::Eio => "eio",
+        }
+    }
+
+    fn to_io_error(self) -> std::io::Error {
+        // Raw POSIX errnos so callers see the same ErrorKind a real
+        // full disk / failing device would produce.
+        let errno = match self {
+            FaultKind::Enospc => 28, // ENOSPC
+            FaultKind::Eio => 5,     // EIO
+        };
+        std::io::Error::from_raw_os_error(errno)
+    }
+}
+
+struct Armed {
+    site: String,
+    kind: FaultKind,
+    remaining: u64,
+}
+
+/// Fast-path flag: false means `check` is a single relaxed load.
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_PARSED: Once = Once::new();
+
+fn table() -> &'static Mutex<Vec<Armed>> {
+    static TABLE: OnceLock<Mutex<Vec<Armed>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn parse_env_once() {
+    ENV_PARSED.call_once(|| {
+        let Ok(spec) = std::env::var(FAULT_ENV) else {
+            return;
+        };
+        for entry in spec.split(',').filter(|e| !e.is_empty()) {
+            let parts: Vec<&str> = entry.split(':').collect();
+            let parsed = match parts.as_slice() {
+                [site, kind, count] => FaultKind::parse(kind)
+                    .zip(count.parse::<u64>().ok())
+                    .map(|(k, c)| (site.to_string(), k, c)),
+                _ => None,
+            };
+            match parsed {
+                Some((site, kind, count)) => inject(&site, kind, count),
+                None => logging::warn(
+                    "faultfs",
+                    &format!("ignoring malformed {FAULT_ENV} entry {entry:?}"),
+                ),
+            }
+        }
+    });
+}
+
+/// Arm `count` faults of `kind` against `site`. Counts accumulate if
+/// the same (site, kind) pair is armed twice.
+pub fn inject(site: &str, kind: FaultKind, count: u64) {
+    if count == 0 {
+        return;
+    }
+    let mut t = table().lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(a) = t.iter_mut().find(|a| a.site == site && a.kind == kind) {
+        a.remaining = a.remaining.saturating_add(count);
+    } else {
+        t.push(Armed {
+            site: site.to_string(),
+            kind,
+            remaining: count,
+        });
+    }
+    ANY_ARMED.store(true, Ordering::Release);
+    logging::warn(
+        "faultfs",
+        &format!("armed {count} injected {} fault(s) on site {site:?}", kind.tag()),
+    );
+}
+
+/// Disarm everything (test hygiene).
+pub fn clear() {
+    let mut t = table().lock().unwrap_or_else(|p| p.into_inner());
+    t.clear();
+    ANY_ARMED.store(false, Ordering::Release);
+}
+
+/// The seam. Returns `Err` with the armed errno if a fault for `site`
+/// is pending, consuming one charge; `Ok(())` otherwise. Disarmed
+/// cost: one relaxed atomic load.
+pub fn check(site: &str) -> std::io::Result<()> {
+    parse_env_once();
+    if !ANY_ARMED.load(Ordering::Acquire) {
+        return Ok(());
+    }
+    let mut t = table().lock().unwrap_or_else(|p| p.into_inner());
+    let Some(a) = t
+        .iter_mut()
+        .find(|a| a.site == site && a.remaining > 0)
+    else {
+        return Ok(());
+    };
+    a.remaining -= 1;
+    let kind = a.kind;
+    if t.iter().all(|a| a.remaining == 0) {
+        ANY_ARMED.store(false, Ordering::Release);
+    }
+    Err(kind.to_io_error())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The armed table is process-global, so every assertion about it
+    // lives in this one test: cargo runs tests in the same process and
+    // parallel tests would otherwise race each other's charges.
+    #[test]
+    fn seam_is_quiet_then_fails_exactly_count_times_per_site() {
+        clear();
+        assert!(check(SITE_CHECKPOINT).is_ok());
+        inject(SITE_CHECKPOINT, FaultKind::Enospc, 2);
+        inject(SITE_TRACE_STORE, FaultKind::Eio, 1);
+        // other sites unaffected
+        assert!(check(SITE_EVENT_LOG).is_ok());
+        let e1 = check(SITE_CHECKPOINT).unwrap_err();
+        assert_eq!(e1.raw_os_error(), Some(28));
+        let e2 = check(SITE_TRACE_STORE).unwrap_err();
+        assert_eq!(e2.raw_os_error(), Some(5));
+        assert!(check(SITE_TRACE_STORE).is_ok(), "charge consumed");
+        assert!(check(SITE_CHECKPOINT).is_err());
+        assert!(check(SITE_CHECKPOINT).is_ok(), "both charges consumed");
+        clear();
+        assert!(check(SITE_CHECKPOINT).is_ok());
+    }
+
+    #[test]
+    fn fault_kind_round_trips_its_tag() {
+        for k in [FaultKind::Enospc, FaultKind::Eio] {
+            assert_eq!(FaultKind::parse(k.tag()), Some(k));
+        }
+        assert_eq!(FaultKind::parse("enoent"), None);
+    }
+}

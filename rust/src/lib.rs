@@ -29,7 +29,11 @@
 //!   launches, supervises, heals and auto-merges multi-process sweep
 //!   fleets (`memfine launch`), a sidecar telemetry plane ([`obs`]:
 //!   per-campaign JSON-lines event log, mergeable log-bucketed
-//!   histograms, `memfine status`/`memfine events`), and a
+//!   histograms, `memfine status`/`memfine events`), a fault plane
+//!   (seeded scripted chaos drills via [`orchestrator`]`::chaos`, an
+//!   injectable IO-fault seam [`faultfs`], a policy-driven supervisor
+//!   with episode-scoped retry budgets and quarantine, and an acting
+//!   watchdog [`obs`]`::watch` that raises alert events), and a
 //!   real-execution coordinator
 //!   ([`coordinator`]) that drives the AOT artifacts through the PJRT
 //!   runtime ([`runtime`], behind the `pjrt` feature).
@@ -51,6 +55,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dispatch;
 pub mod error;
+pub mod faultfs;
 pub mod json;
 pub mod logging;
 pub mod memory;

@@ -47,7 +47,8 @@ const VALUE_OPTS: &[&str] = &[
     "model", "method", "iters", "seed", "steps", "artifacts", "policy",
     "budget-mb", "bins", "chunk", "models", "methods", "seeds", "workers",
     "out", "checkpoint", "shard", "limit", "config", "procs", "dir",
-    "stall-timeout-ms", "poll-ms", "retries", "router", "trace-cache",
+    "stall-timeout-ms", "poll-ms", "retries", "campaign-retries",
+    "backoff-ms", "chaos-plan", "chaos-seed", "router", "trace-cache",
     "pool", "channel", "rng", "split-iters", "events", "type", "hash",
 ];
 
@@ -138,8 +139,13 @@ fn print_usage() {
                 OptSpec { name: "dir", help: "launch working dir (checkpoints, logs, merged.jsonl)", takes_value: true, default: Some("launch-run") },
                 OptSpec { name: "stall-timeout-ms", help: "launch: kill a shard whose checkpoint stalls this long", takes_value: true, default: Some("30000") },
                 OptSpec { name: "poll-ms", help: "launch: supervisor poll interval", takes_value: true, default: Some("100") },
-                OptSpec { name: "retries", help: "launch: relaunches allowed per shard", takes_value: true, default: Some("2") },
+                OptSpec { name: "retries", help: "launch: relaunches allowed per shard failure episode (resets on checkpoint progress)", takes_value: true, default: Some("2") },
+                OptSpec { name: "campaign-retries", help: "launch: fleet-wide relaunch budget for the campaign (0 = unlimited)", takes_value: true, default: Some("16") },
+                OptSpec { name: "backoff-ms", help: "launch: base relaunch backoff, doubling per relaunch with deterministic jitter (0 = none)", takes_value: true, default: Some("100") },
+                OptSpec { name: "no-quarantine", help: "launch: keep a given-up shard's checkpoint in place instead of renaming it aside", takes_value: false, default: None },
                 OptSpec { name: "chaos-kill", help: "launch: kill one progressing child once (recovery drill)", takes_value: false, default: None },
+                OptSpec { name: "chaos-seed", help: "launch: run the seeded chaos drill (kill storm + checkpoint corruption + child ENOSPC), deterministic in seed+dir", takes_value: true, default: None },
+                OptSpec { name: "chaos-plan", help: "launch: run the scripted chaos drill from a JSON fault-plan file", takes_value: true, default: None },
                 OptSpec { name: "no-telemetry", help: "launch: skip the sidecar event log (artifact bytes are identical either way)", takes_value: false, default: None },
                 OptSpec { name: "events", help: "sweep: append engine events to this sidecar JSON-lines log (launch manages its own under --dir)", takes_value: true, default: None },
                 OptSpec { name: "type", help: "events: keep only this event type", takes_value: true, default: None },
@@ -495,6 +501,15 @@ fn cmd_launch(args: &Args) -> memfine::Result<()> {
     if args.get("retries").is_some() {
         cfg.max_retries = args.get_u64("retries", 2)?;
     }
+    if args.get("campaign-retries").is_some() {
+        cfg.campaign_retries = args.get_u64("campaign-retries", 16)?;
+    }
+    if args.get("backoff-ms").is_some() {
+        cfg.backoff_ms = args.get_u64("backoff-ms", 100)?;
+    }
+    if args.has_flag("no-quarantine") {
+        cfg.quarantine = false;
+    }
     if let Some(sampler) = sampler_flag(args)? {
         cfg.sampler = sampler;
     }
@@ -508,10 +523,34 @@ fn cmd_launch(args: &Args) -> memfine::Result<()> {
         cfg.telemetry = false;
     }
 
+    let dir = std::path::PathBuf::from(args.get_or("dir", "launch-run"));
+    // Chaos drill sources, in precedence order: an explicit plan file,
+    // a seed (expanded against the campaign dir), the legacy one-shot
+    // kill flag.
+    let fault_plan = if let Some(path) = args.get("chaos-plan") {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            memfine::Error::Io(std::io::Error::new(
+                e.kind(),
+                format!("chaos plan {path}: {e}"),
+            ))
+        })?;
+        Some(memfine::orchestrator::FaultPlan::from_json(
+            &memfine::json::parse(&text)?,
+        )?)
+    } else if args.get("chaos-seed").is_some() {
+        Some(memfine::orchestrator::FaultPlan::from_seed(
+            args.get_u64("chaos-seed", 0)?,
+            &dir,
+        ))
+    } else if args.has_flag("chaos-kill") {
+        Some(memfine::orchestrator::FaultPlan::kill_one())
+    } else {
+        None
+    };
     let opts = LaunchOptions {
-        dir: std::path::PathBuf::from(args.get_or("dir", "launch-run")),
+        dir,
         binary: None,
-        chaos_kill_one: args.has_flag("chaos-kill"),
+        fault_plan,
         quiet: false,
     };
     let launched = memfine::orchestrator::launch(&cfg, &opts)?;
@@ -536,7 +575,13 @@ fn cmd_launch(args: &Args) -> memfine::Result<()> {
             o.stalls.to_string(),
             o.crashes.to_string(),
             o.chaos_kills.to_string(),
-            if o.completed { "completed".into() } else { "gave up (healed in merge)".into() },
+            if o.completed {
+                "completed".into()
+            } else if o.quarantined {
+                "quarantined (healed in merge)".into()
+            } else {
+                "gave up (healed in merge)".into()
+            },
         ]);
     }
     eprint!("{}", table.render());
@@ -711,6 +756,26 @@ fn cmd_status(args: &Args) -> memfine::Result<()> {
             steals,
             blocked,
         );
+        // Watchdog health: quarantined shard checkpoints and raised
+        // alert_* events (each kind is raised at most once per
+        // campaign, so these are presence flags more than counts).
+        let quarantined = count_of("shard_quarantined");
+        let alerts: Vec<&str> = counts
+            .keys()
+            .filter(|k| k.starts_with("alert_"))
+            .map(|k| k.as_str())
+            .collect();
+        if quarantined > 0 || !alerts.is_empty() {
+            println!(
+                "health:    {} quarantined checkpoint(s); alerts: {}",
+                quarantined,
+                if alerts.is_empty() {
+                    "none".to_string()
+                } else {
+                    alerts.join(", ")
+                },
+            );
+        }
     }
 
     println!();
@@ -728,6 +793,12 @@ fn cmd_status(args: &Args) -> memfine::Result<()> {
             shard.scenarios,
             match len {
                 Some(b) => fmt_bytes(b),
+                None
+                    if memfine::orchestrator::supervise::quarantine_path(
+                        &shard.checkpoint,
+                    )
+                    .exists() =>
+                    "quarantined".into(),
                 None => "-".into(),
             },
             match age {

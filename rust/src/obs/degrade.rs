@@ -1,0 +1,182 @@
+//! The unified IO degradation ladder: bounded retry →
+//! degrade-with-counter → quarantine.
+//!
+//! Every best-effort writer in the crate (the streaming checkpoint
+//! record path, the trace store, the event log) used to improvise its
+//! own failure shape; [`DegradeLadder`] replaces that with one
+//! explicit, observable policy. An operation is retried in place up to
+//! `retries` extra times; a failed operation degrades (the caller
+//! keeps its in-memory result and a counter records the loss); after
+//! `quarantine_after` *consecutive* degraded operations the ladder
+//! quarantines itself and skips the writer entirely, so a dead disk
+//! costs one syscall's worth of failures, not one per record.
+//!
+//! The ladder is deliberately sidecar-shaped: it never turns a failure
+//! into a panic or an error for the caller — the caller decides what a
+//! degraded write means (for checkpoints: the scenario stays
+//! in-memory and is re-executed by merge catch-up, keeping campaign
+//! artifacts byte-identical).
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+
+use crate::error::Result;
+use crate::logging;
+
+/// What the ladder did with one operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LadderVerdict {
+    /// The operation succeeded (possibly after retries).
+    Ok,
+    /// All attempts failed; the loss was counted.
+    Degraded,
+    /// This failure tripped the quarantine threshold — the ladder is
+    /// now disabled and this is the transition report.
+    Quarantined,
+    /// The ladder was already quarantined; the operation was skipped
+    /// without touching the writer.
+    Skipped,
+}
+
+/// Thread-safe degradation ladder shared by all callers of one writer.
+#[derive(Debug)]
+pub struct DegradeLadder {
+    site: &'static str,
+    retries: u32,
+    quarantine_after: u32,
+    consecutive: AtomicU32,
+    degraded: AtomicU64,
+    quarantined: AtomicBool,
+}
+
+impl DegradeLadder {
+    /// `retries` extra in-place attempts per operation;
+    /// `quarantine_after` consecutive degraded operations disable the
+    /// writer (0 = never quarantine).
+    pub fn new(site: &'static str, retries: u32, quarantine_after: u32) -> Self {
+        DegradeLadder {
+            site,
+            retries,
+            quarantine_after,
+            consecutive: AtomicU32::new(0),
+            degraded: AtomicU64::new(0),
+            quarantined: AtomicBool::new(false),
+        }
+    }
+
+    /// Operations that ended degraded (all attempts failed).
+    pub fn degraded(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Whether the writer has been quarantined.
+    pub fn is_quarantined(&self) -> bool {
+        self.quarantined.load(Ordering::Acquire)
+    }
+
+    /// Run one operation through the ladder.
+    pub fn run<T>(&self, mut op: impl FnMut() -> Result<T>) -> (Option<T>, LadderVerdict) {
+        if self.is_quarantined() {
+            return (None, LadderVerdict::Skipped);
+        }
+        let mut last_err = None;
+        for _ in 0..=self.retries {
+            match op() {
+                Ok(v) => {
+                    self.consecutive.store(0, Ordering::Relaxed);
+                    return (Some(v), LadderVerdict::Ok);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+        let consecutive = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        let err = last_err.expect("at least one attempt ran");
+        if self.quarantine_after > 0
+            && consecutive >= self.quarantine_after
+            && !self.quarantined.swap(true, Ordering::AcqRel)
+        {
+            logging::warn(
+                self.site,
+                &format!(
+                    "writer quarantined after {consecutive} consecutive degraded \
+                     writes (last error: {err}); further writes are skipped"
+                ),
+            );
+            return (None, LadderVerdict::Quarantined);
+        }
+        logging::warn(
+            self.site,
+            &format!("write degraded ({err}); result kept in memory only"),
+        );
+        (None, LadderVerdict::Degraded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    fn io_fail() -> Result<()> {
+        Err(Error::Io(std::io::Error::from_raw_os_error(28)))
+    }
+
+    #[test]
+    fn success_passes_through_and_resets_consecutive() {
+        let ladder = DegradeLadder::new("test", 0, 2);
+        let (v, verdict) = ladder.run(|| Ok(7u32));
+        assert_eq!(v, Some(7));
+        assert_eq!(verdict, LadderVerdict::Ok);
+        assert_eq!(ladder.degraded(), 0);
+        // one failure, then a success, then a failure: never 2 consecutive
+        assert_eq!(ladder.run(io_fail).1, LadderVerdict::Degraded);
+        assert_eq!(ladder.run(|| Ok(())).1, LadderVerdict::Ok);
+        assert_eq!(ladder.run(io_fail).1, LadderVerdict::Degraded);
+        assert!(!ladder.is_quarantined());
+        assert_eq!(ladder.degraded(), 2);
+    }
+
+    #[test]
+    fn bounded_retry_masks_transient_failures() {
+        let ladder = DegradeLadder::new("test", 2, 2);
+        let mut calls = 0;
+        let (v, verdict) = ladder.run(|| {
+            calls += 1;
+            if calls < 3 {
+                io_fail().map(|_| 0u32)
+            } else {
+                Ok(9)
+            }
+        });
+        assert_eq!(calls, 3, "two retries after the first failure");
+        assert_eq!(v, Some(9));
+        assert_eq!(verdict, LadderVerdict::Ok);
+        assert_eq!(ladder.degraded(), 0);
+    }
+
+    #[test]
+    fn consecutive_failures_quarantine_then_skip() {
+        let ladder = DegradeLadder::new("test", 0, 2);
+        assert_eq!(ladder.run(io_fail).1, LadderVerdict::Degraded);
+        assert_eq!(ladder.run(io_fail).1, LadderVerdict::Quarantined);
+        assert!(ladder.is_quarantined());
+        let mut called = false;
+        let (_, verdict) = ladder.run(|| {
+            called = true;
+            Ok(())
+        });
+        assert_eq!(verdict, LadderVerdict::Skipped);
+        assert!(!called, "quarantined ladder must not touch the writer");
+        assert_eq!(ladder.degraded(), 2, "skips are not degrades");
+    }
+
+    #[test]
+    fn zero_quarantine_threshold_never_quarantines() {
+        let ladder = DegradeLadder::new("test", 0, 0);
+        for _ in 0..10 {
+            assert_eq!(ladder.run(io_fail).1, LadderVerdict::Degraded);
+        }
+        assert!(!ladder.is_quarantined());
+        assert_eq!(ladder.degraded(), 10);
+    }
+}

@@ -27,13 +27,28 @@
 //! any order.
 
 use std::collections::BTreeMap;
-use std::io::Write;
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::error::Result;
 use crate::json::{self, Value};
+
+pub mod degrade;
+pub mod watch;
+
+pub use degrade::{DegradeLadder, LadderVerdict};
+pub use watch::{Alert, WatchConfig, Watchdog};
+
+/// Longest single event line either reader will buffer. Longer lines
+/// are drained in bounded chunks and dropped with a counted skip, so
+/// a corrupt log cannot balloon the reader's memory.
+pub const MAX_EVENT_LINE_BYTES: usize = 1 << 20;
+
+/// Consecutive failed appends before the event log quarantines itself
+/// (it keeps counting drops, but stops issuing syscalls).
+const EVENT_LOG_QUARANTINE_AFTER: u32 = 8;
 
 /// Number of histogram buckets: one for zero plus one per power of
 /// two representable in a `u64`.
@@ -162,13 +177,27 @@ impl Histogram {
 pub struct EventLog {
     inner: Option<Mutex<std::fs::File>>,
     dropped: AtomicU64,
+    ladder: DegradeLadder,
     pid: u32,
+}
+
+fn event_log_ladder() -> DegradeLadder {
+    DegradeLadder::new(
+        crate::faultfs::SITE_EVENT_LOG,
+        0,
+        EVENT_LOG_QUARANTINE_AFTER,
+    )
 }
 
 impl EventLog {
     /// A log that drops everything (telemetry off).
     pub fn disabled() -> Self {
-        EventLog { inner: None, dropped: AtomicU64::new(0), pid: std::process::id() }
+        EventLog {
+            inner: None,
+            dropped: AtomicU64::new(0),
+            ladder: event_log_ladder(),
+            pid: std::process::id(),
+        }
     }
 
     /// Open (create + append) the event log at `path`. Failure warns
@@ -178,6 +207,7 @@ impl EventLog {
             Ok(f) => EventLog {
                 inner: Some(Mutex::new(f)),
                 dropped: AtomicU64::new(0),
+                ladder: event_log_ladder(),
                 pid: std::process::id(),
             },
             Err(e) => {
@@ -199,14 +229,27 @@ impl EventLog {
         self.dropped.load(Ordering::Relaxed)
     }
 
+    /// Whether the append path quarantined itself after
+    /// [`EVENT_LOG_QUARANTINE_AFTER`] consecutive write failures.
+    pub fn quarantined(&self) -> bool {
+        self.ladder.is_quarantined()
+    }
+
     /// Append one event line: `t_ms` (monotonic, shared logging
     /// clock), `pid`, `type`, plus the caller's fields. One
     /// `write_all` per line so concurrent appenders interleave whole
-    /// lines on `O_APPEND` handles.
+    /// lines on `O_APPEND` handles. Failures climb the degradation
+    /// ladder: each failed append is a counted drop, and persistent
+    /// failure quarantines the log (drops keep counting, syscalls
+    /// stop).
     pub fn emit(&self, kind: &str, fields: Vec<(&str, Value)>) {
         let Some(inner) = &self.inner else {
             return;
         };
+        if self.ladder.is_quarantined() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
         let mut rows = vec![
             ("t_ms", json::num(crate::logging::elapsed_ms())),
             ("pid", json::num(self.pid as f64)),
@@ -222,7 +265,11 @@ impl EventLog {
                 return;
             }
         };
-        if f.write_all(line.as_bytes()).is_err() {
+        let (_, verdict) = self.ladder.run(|| {
+            crate::faultfs::check(crate::faultfs::SITE_EVENT_LOG)?;
+            f.write_all(line.as_bytes()).map_err(crate::Error::Io)
+        });
+        if verdict != LadderVerdict::Ok {
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -254,17 +301,81 @@ impl EventRecord {
 }
 
 /// Read an event log, skipping (and counting) lines that fail to
-/// parse or carry no `type` — the same torn-tail tolerance as the
-/// checkpoint reader, since a killed shard may die mid-append.
+/// parse, carry no `type`, are not UTF-8, or exceed
+/// [`MAX_EVENT_LINE_BYTES`] — the same torn-tail tolerance as the
+/// checkpoint reader (a killed shard may die mid-append), hardened so
+/// one corrupt line can neither abort the read nor buffer unbounded
+/// bytes into memory.
 pub fn read_events(path: &Path) -> Result<(Vec<EventRecord>, usize)> {
-    let text = std::fs::read_to_string(path)?;
+    let (events, skipped, _) = read_events_from(path, 0)?;
+    Ok((events, skipped))
+}
+
+/// Incremental form of [`read_events`]: read from byte offset `start`
+/// and additionally return the offset one past the last
+/// newline-terminated line consumed — the watchdog's tailing
+/// primitive. An unterminated final line (a shard mid-append) is
+/// parsed or counted like any other, but the returned offset stops
+/// before it so a later scan re-reads it once completed (oversized
+/// lines are the exception: always drained, consumed, and counted).
+pub fn read_events_from(path: &Path, start: u64) -> Result<(Vec<EventRecord>, usize, u64)> {
+    let mut file = std::fs::File::open(path)?;
+    if start > 0 {
+        file.seek(SeekFrom::Start(start))?;
+    }
+    let mut reader = BufReader::new(file);
     let mut events = Vec::new();
     let mut skipped = 0usize;
-    for line in text.lines() {
-        if line.trim().is_empty() {
+    let mut offset = start;
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        let n = (&mut reader)
+            .take(MAX_EVENT_LINE_BYTES as u64 + 1)
+            .read_until(b'\n', &mut buf)?;
+        if n == 0 {
+            break;
+        }
+        let terminated = buf.last() == Some(&b'\n');
+        if n > MAX_EVENT_LINE_BYTES {
+            // Oversized: one counted drop, then drain to the next
+            // newline in bounded chunks without buffering the line.
+            skipped += 1;
+            let mut consumed = n as u64;
+            let mut done = terminated;
+            while !done {
+                let avail = reader.fill_buf()?;
+                if avail.is_empty() {
+                    break;
+                }
+                match avail.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        reader.consume(pos + 1);
+                        consumed += (pos + 1) as u64;
+                        done = true;
+                    }
+                    None => {
+                        let len = avail.len();
+                        reader.consume(len);
+                        consumed += len as u64;
+                    }
+                }
+            }
+            offset += consumed;
             continue;
         }
-        let parsed = match json::parse(line) {
+        let content = if terminated { &buf[..n - 1] } else { &buf[..] };
+        if terminated {
+            offset += n as u64;
+        }
+        let Ok(text) = std::str::from_utf8(content) else {
+            skipped += 1;
+            continue;
+        };
+        if text.trim().is_empty() {
+            continue;
+        }
+        let parsed = match json::parse(text) {
             Ok(v) => v,
             Err(_) => {
                 skipped += 1;
@@ -282,7 +393,7 @@ pub fn read_events(path: &Path) -> Result<(Vec<EventRecord>, usize)> {
             fields: parsed,
         });
     }
-    Ok((events, skipped))
+    Ok((events, skipped, offset))
 }
 
 /// Per-type event counts — the `memfine events --summary` view.
@@ -408,6 +519,92 @@ mod tests {
         assert_eq!(skipped, 1);
         assert_eq!(events[0].kind, "a");
         assert_eq!(events[1].kind, "b");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn oversized_line_is_dropped_without_buffering() {
+        let dir = std::env::temp_dir().join(format!("memfine-obs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("oversized-events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = EventLog::open(&path);
+        log.emit("a", vec![]);
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            let chunk = vec![b'x'; 64 * 1024];
+            let mut written = 0usize;
+            while written <= MAX_EVENT_LINE_BYTES {
+                f.write_all(&chunk).unwrap();
+                written += chunk.len();
+            }
+            f.write_all(b"\n").unwrap();
+        }
+        log.emit("b", vec![]);
+        let (events, skipped) = read_events(&path).unwrap();
+        assert_eq!(skipped, 1, "one counted drop for the oversized line");
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, "a");
+        assert_eq!(events[1].kind, "b");
+        // non-UTF-8 garbage is a counted drop, not an abort
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[0xff, 0xfe, 0x80, b'\n']).unwrap();
+        }
+        let (events, skipped) = read_events(&path).unwrap();
+        assert_eq!((events.len(), skipped), (2, 2));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn incremental_reader_resumes_at_the_returned_offset() {
+        let dir = std::env::temp_dir().join(format!("memfine-obs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("incremental-events.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let log = EventLog::open(&path);
+        log.emit("a", vec![]);
+        log.emit("b", vec![]);
+        let (events, _, offset) = read_events_from(&path, 0).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(offset, std::fs::metadata(&path).unwrap().len());
+        log.emit("c", vec![]);
+        let (events, skipped, next) = read_events_from(&path, offset).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, "c");
+        assert_eq!(skipped, 0);
+        assert_eq!(next, std::fs::metadata(&path).unwrap().len());
+        // a torn (unterminated) tail is reported but not consumed
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"t_ms\":9,\"pid\":1,\"ty").unwrap();
+        }
+        let (events, skipped, after) = read_events_from(&path, next).unwrap();
+        assert_eq!((events.len(), skipped), (0, 1));
+        assert_eq!(after, next, "torn tail must not advance the cursor");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn persistent_write_failure_quarantines_the_log() {
+        let dir = std::env::temp_dir().join(format!("memfine-obs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("quarantine-events.jsonl");
+        std::fs::write(&path, b"").unwrap();
+        // a read-only handle makes every append fail like a dying disk
+        let log = EventLog {
+            inner: Some(Mutex::new(std::fs::File::open(&path).unwrap())),
+            dropped: AtomicU64::new(0),
+            ladder: event_log_ladder(),
+            pid: std::process::id(),
+        };
+        let n = u64::from(EVENT_LOG_QUARANTINE_AFTER) + 3;
+        for _ in 0..n {
+            log.emit("doomed", vec![]);
+        }
+        assert_eq!(log.dropped(), n, "every failed emit is a counted drop");
+        assert!(log.quarantined());
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -1,0 +1,296 @@
+//! `obs::watch` — a watchdog that *acts* on the campaign event
+//! stream instead of only recording it.
+//!
+//! [`Watchdog`] tails `events.jsonl` incrementally (a byte cursor, the
+//! capped line reader from [`super::read_events_from`]) and folds the
+//! new events into a handful of campaign-health counters. When a
+//! counter crosses its [`WatchConfig`] threshold the watchdog raises a
+//! structured [`Alert`] — raised at most once per alert kind per
+//! campaign — which the launch orchestrator appends back into the
+//! event log as an `alert_*` event and `memfine status` renders.
+//! Chaos drills assert on exactly these events.
+//!
+//! Like everything in [`crate::obs`], the watchdog is strictly
+//! sidecar: scan failures are swallowed (the next scan retries from
+//! the same cursor), alerts never interrupt supervision, and nothing
+//! here participates in campaign identity or artifact bytes.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use crate::json::{self, Value};
+
+/// Alert kind tag: one shard relaunched `flap_attempts`+ times.
+pub const ALERT_SHARD_FLAPPING: &str = "alert_shard_flapping";
+/// Alert kind tag: the fleet accumulated `stall_burst`+ stall kills.
+pub const ALERT_STALL_BURST: &str = "alert_stall_burst";
+/// Alert kind tag: the pool reported `steal_storm`+ steals.
+pub const ALERT_STEAL_STORM: &str = "alert_steal_storm";
+/// Alert kind tag: `degrade_burst`+ degraded IO writes (checkpoint
+/// records lost to the ladder, or cells that fell back to uncached
+/// trace generation after a store failure).
+pub const ALERT_IO_DEGRADE_BURST: &str = "alert_io_degrade_burst";
+
+/// Thresholds for raising alerts. All are inclusive (`count >=
+/// threshold` raises); a threshold of 0 disables that alert.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WatchConfig {
+    /// Spawn attempts on one shard before it counts as flapping.
+    pub flap_attempts: u64,
+    /// Fleet-wide stall kills before a stall burst.
+    pub stall_burst: u64,
+    /// Fleet-wide pool steals before a steal storm.
+    pub steal_storm: u64,
+    /// Degraded IO writes before an IO degrade burst.
+    pub degrade_burst: u64,
+}
+
+impl Default for WatchConfig {
+    fn default() -> Self {
+        WatchConfig {
+            flap_attempts: 3,
+            stall_burst: 3,
+            steal_storm: 100_000,
+            degrade_burst: 1,
+        }
+    }
+}
+
+/// One raised alert: the `alert_*` event tag, a human line for the
+/// launch log, and the structured fields for the event log.
+#[derive(Debug, Clone)]
+pub struct Alert {
+    pub kind: &'static str,
+    pub message: String,
+    pub fields: Vec<(&'static str, Value)>,
+}
+
+/// Incremental event-stream watcher. Create once per campaign, call
+/// [`Watchdog::scan`] whenever supervision observes activity and once
+/// after the merge; each scan reads only bytes appended since the
+/// last one.
+#[derive(Debug)]
+pub struct Watchdog {
+    cfg: WatchConfig,
+    cursor: u64,
+    stalls: u64,
+    steals: u64,
+    degrades: u64,
+    max_attempt: BTreeMap<u64, u64>,
+    skipped: usize,
+    raised: BTreeSet<&'static str>,
+}
+
+impl Watchdog {
+    pub fn new(cfg: WatchConfig) -> Self {
+        Watchdog {
+            cfg,
+            cursor: 0,
+            stalls: 0,
+            steals: 0,
+            degrades: 0,
+            max_attempt: BTreeMap::new(),
+            skipped: 0,
+            raised: BTreeSet::new(),
+        }
+    }
+
+    /// Lines the capped reader dropped across all scans so far.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// Tail `path` from the cursor, fold new events, and return any
+    /// newly raised alerts. Missing files and read errors are quietly
+    /// treated as "nothing new" — the next scan retries.
+    pub fn scan(&mut self, path: &Path) -> Vec<Alert> {
+        let Ok((events, skipped, next)) = super::read_events_from(path, self.cursor) else {
+            return Vec::new();
+        };
+        self.cursor = next;
+        self.skipped += skipped;
+        for ev in &events {
+            match ev.kind.as_str() {
+                "shard_spawned" => {
+                    let shard = ev.field_u64("shard").unwrap_or(0);
+                    let attempt = ev.field_u64("attempt").unwrap_or(1);
+                    let slot = self.max_attempt.entry(shard).or_insert(0);
+                    *slot = (*slot).max(attempt);
+                }
+                "shard_stalled" => self.stalls += 1,
+                "sweep_done" => {
+                    self.steals = self
+                        .steals
+                        .saturating_add(ev.field_u64("steals").unwrap_or(0));
+                }
+                "checkpoint_degraded" => self.degrades += 1,
+                "cell_eval" => {
+                    if ev.field_str("cache") == Some("degrade") {
+                        self.degrades += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        self.collect_alerts()
+    }
+
+    fn collect_alerts(&mut self) -> Vec<Alert> {
+        let mut alerts = Vec::new();
+        if self.cfg.flap_attempts > 0 && !self.raised.contains(ALERT_SHARD_FLAPPING) {
+            if let Some((&shard, &attempts)) = self
+                .max_attempt
+                .iter()
+                .find(|(_, &a)| a >= self.cfg.flap_attempts)
+            {
+                self.raised.insert(ALERT_SHARD_FLAPPING);
+                alerts.push(Alert {
+                    kind: ALERT_SHARD_FLAPPING,
+                    message: format!("shard {shard} is flapping ({attempts} spawn attempts)"),
+                    fields: vec![
+                        ("shard", json::num(shard as f64)),
+                        ("attempts", json::num(attempts as f64)),
+                    ],
+                });
+            }
+        }
+        if self.cfg.stall_burst > 0
+            && self.stalls >= self.cfg.stall_burst
+            && self.raised.insert(ALERT_STALL_BURST)
+        {
+            alerts.push(Alert {
+                kind: ALERT_STALL_BURST,
+                message: format!("stall burst: {} stall kills across the fleet", self.stalls),
+                fields: vec![("stalls", json::num(self.stalls as f64))],
+            });
+        }
+        if self.cfg.steal_storm > 0
+            && self.steals >= self.cfg.steal_storm
+            && self.raised.insert(ALERT_STEAL_STORM)
+        {
+            alerts.push(Alert {
+                kind: ALERT_STEAL_STORM,
+                message: format!("steal storm: {} pool steals reported", self.steals),
+                fields: vec![("steals", json::num(self.steals as f64))],
+            });
+        }
+        if self.cfg.degrade_burst > 0
+            && self.degrades >= self.cfg.degrade_burst
+            && self.raised.insert(ALERT_IO_DEGRADE_BURST)
+        {
+            alerts.push(Alert {
+                kind: ALERT_IO_DEGRADE_BURST,
+                message: format!("IO degrade burst: {} degraded writes", self.degrades),
+                fields: vec![("degraded", json::num(self.degrades as f64))],
+            });
+        }
+        alerts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::EventLog;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("memfine-watch-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn stall_burst_raises_once_across_incremental_scans() {
+        let path = tmp("stalls.jsonl");
+        let log = EventLog::open(&path);
+        let mut dog = Watchdog::new(WatchConfig::default());
+        log.emit("shard_stalled", vec![("shard", json::num(0.0))]);
+        log.emit("shard_stalled", vec![("shard", json::num(1.0))]);
+        assert!(dog.scan(&path).is_empty(), "2 stalls < burst of 3");
+        // the third stall arrives later; the cursor makes the second
+        // scan read only the new line, yet the counter is cumulative
+        log.emit("shard_stalled", vec![("shard", json::num(0.0))]);
+        let alerts = dog.scan(&path);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].kind, ALERT_STALL_BURST);
+        log.emit("shard_stalled", vec![("shard", json::num(2.0))]);
+        assert!(dog.scan(&path).is_empty(), "raised at most once");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn flapping_shard_is_named_in_the_alert() {
+        let path = tmp("flap.jsonl");
+        let log = EventLog::open(&path);
+        let mut dog = Watchdog::new(WatchConfig::default());
+        for attempt in 1..=3u32 {
+            log.emit(
+                "shard_spawned",
+                vec![
+                    ("shard", json::num(2.0)),
+                    ("attempt", json::num(f64::from(attempt))),
+                ],
+            );
+        }
+        let alerts = dog.scan(&path);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].kind, ALERT_SHARD_FLAPPING);
+        assert!(alerts[0].message.contains("shard 2"));
+        assert!(alerts[0]
+            .fields
+            .iter()
+            .any(|(k, v)| *k == "shard" && v.as_u64() == Some(2)));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn steal_storm_and_degrade_burst_thresholds() {
+        let path = tmp("storm.jsonl");
+        let log = EventLog::open(&path);
+        let cfg = WatchConfig {
+            steal_storm: 100,
+            ..WatchConfig::default()
+        };
+        let mut dog = Watchdog::new(cfg);
+        log.emit("sweep_done", vec![("steals", json::num(60.0))]);
+        log.emit("sweep_done", vec![("steals", json::num(60.0))]);
+        log.emit("checkpoint_degraded", vec![("shard", json::num(0.0))]);
+        log.emit("cell_eval", vec![("cache", json::s("degrade"))]);
+        log.emit("cell_eval", vec![("cache", json::s("hit"))]);
+        let alerts = dog.scan(&path);
+        let kinds: Vec<&str> = alerts.iter().map(|a| a.kind).collect();
+        assert!(kinds.contains(&ALERT_STEAL_STORM), "{kinds:?}");
+        assert!(kinds.contains(&ALERT_IO_DEGRADE_BURST), "{kinds:?}");
+        assert!(!kinds.contains(&ALERT_STALL_BURST), "{kinds:?}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_and_alert_events_are_ignored() {
+        let mut dog = Watchdog::new(WatchConfig::default());
+        assert!(dog.scan(Path::new("/definitely/not/here.jsonl")).is_empty());
+        // alert events already in the log must not feed the counters
+        let path = tmp("selffeed.jsonl");
+        let log = EventLog::open(&path);
+        log.emit(ALERT_STALL_BURST, vec![("stalls", json::num(99.0))]);
+        assert!(dog.scan(&path).is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn zero_threshold_disables_an_alert() {
+        let path = tmp("disabled.jsonl");
+        let log = EventLog::open(&path);
+        let mut dog = Watchdog::new(WatchConfig {
+            stall_burst: 0,
+            ..WatchConfig::default()
+        });
+        for _ in 0..10 {
+            log.emit("shard_stalled", vec![]);
+        }
+        assert!(dog.scan(&path).is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,531 @@
+//! Scripted, seeded fault injection for launch campaigns.
+//!
+//! A [`FaultPlan`] is a deterministic drill script: kill storms at
+//! chosen supervision ticks, mid-file checkpoint corruption (overwrite
+//! a middle record, or truncate the tail), injected IO errors through
+//! the [`crate::faultfs`] seam (scoped to shard children or to the
+//! supervisor process), and artificially slow shard startups. Plans
+//! come from three places, in precedence order: an explicit JSON plan
+//! file (`memfine launch --chaos-plan drill.json`), a seed
+//! (`--chaos-seed N`, expanded deterministically from the seed and the
+//! campaign directory by [`FaultPlan::from_seed`]), or the legacy
+//! one-shot `--chaos-kill` flag ([`FaultPlan::kill_one`]).
+//!
+//! The plan only *schedules* faults; the supervisor's poll loop
+//! executes kill and corruption specs (see
+//! [`super::supervise`]), and `launch` arms the IO specs. Every drill
+//! must end with a merged artifact byte-identical to the undisturbed
+//! single-process sweep — that is the invariant the chaos matrix in CI
+//! asserts.
+//!
+//! Plan-file format (all fields optional):
+//!
+//! ```json
+//! {
+//!   "seed": 7,
+//!   "kills":   [{"at_poll": 2}, {"at_poll": 6, "shard": 1}],
+//!   "corrupt": [{"at_poll": 4, "shard": 0, "mode": "middle"},
+//!               {"at_poll": 9, "shard": 2, "mode": "truncate", "bytes": 17}],
+//!   "slow":    [{"shard": 1, "delay_ms": 50}],
+//!   "io":      [{"site": "checkpoint", "kind": "enospc", "count": 1,
+//!                "scope": "children"}]
+//! }
+//! ```
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::faultfs::FaultKind;
+use crate::json::{self, Value};
+use crate::util;
+
+/// Kill one shard child at (or after) a supervision poll tick. With
+/// `shard: None` the victim is chosen by the legacy chaos heuristic:
+/// the first child with observed checkpoint progress, falling back to
+/// any running child once at least three polls have elapsed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KillSpec {
+    pub at_poll: u64,
+    pub shard: Option<usize>,
+}
+
+/// How to damage a checkpoint file in flight.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CorruptMode {
+    /// Overwrite a complete middle record line (never the header,
+    /// never the last line) with same-length garbage — the
+    /// skip-and-count path of the checkpoint reader must absorb it.
+    MiddleRecord,
+    /// Truncate the file by `bytes` from the end — the torn-tail path.
+    TruncateTail { bytes: u64 },
+}
+
+impl CorruptMode {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            CorruptMode::MiddleRecord => "middle",
+            CorruptMode::TruncateTail { .. } => "truncate",
+        }
+    }
+}
+
+/// Damage `shard`'s checkpoint at (or after) a poll tick. The spec
+/// stays pending until the file has enough content to damage; shard
+/// indices are taken modulo the fleet size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CorruptSpec {
+    pub at_poll: u64,
+    pub shard: usize,
+    pub mode: CorruptMode,
+}
+
+/// Delay `shard`'s first spawn by `delay_ms` — a slow host.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlowSpec {
+    pub shard: usize,
+    pub delay_ms: u64,
+}
+
+/// Which process(es) an IO fault spec arms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoScope {
+    /// Armed (via [`crate::faultfs::FAULT_ENV`]) in every shard
+    /// child's *first* spawn; relaunches run clean.
+    Children,
+    /// Armed in the launching process itself (the merge catch-up
+    /// path runs here — expect loud failures, not silent healing).
+    Supervisor,
+}
+
+impl IoScope {
+    pub fn tag(self) -> &'static str {
+        match self {
+            IoScope::Children => "children",
+            IoScope::Supervisor => "supervisor",
+        }
+    }
+}
+
+/// Arm `count` IO faults of `kind` on a [`crate::faultfs`] site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IoFaultSpec {
+    pub site: String,
+    pub kind: FaultKind,
+    pub count: u64,
+    pub scope: IoScope,
+}
+
+/// A complete drill script. See the module docs for the file format.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub kills: Vec<KillSpec>,
+    pub corrupt: Vec<CorruptSpec>,
+    pub slow: Vec<SlowSpec>,
+    pub io: Vec<IoFaultSpec>,
+}
+
+/// splitmix64 finalizer — the plan generator's only mixing primitive.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// The legacy `--chaos-kill` drill: one heuristic kill, armed from
+    /// the first poll.
+    pub fn kill_one() -> FaultPlan {
+        FaultPlan {
+            kills: vec![KillSpec {
+                at_poll: 0,
+                shard: None,
+            }],
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Expand a seed into a full drill, deterministically in (seed,
+    /// campaign dir): a two-kill storm early in supervision, one
+    /// mid-file record corruption, and two ENOSPC charges on every
+    /// child's streaming checkpoint writer — two because the
+    /// degradation ladder retries a record write once in place, so a
+    /// single charge is masked as a transient and never degrades.
+    /// Same seed + same dir = same drill, so a failed drill replays
+    /// exactly.
+    pub fn from_seed(seed: u64, dir: &Path) -> FaultPlan {
+        let h0 = util::fnv1a_64_update(
+            util::fnv1a_64(dir.to_string_lossy().as_bytes()),
+            &seed.to_le_bytes(),
+        );
+        let r1 = mix64(h0);
+        let r2 = mix64(r1);
+        let r3 = mix64(r2);
+        let r4 = mix64(r3);
+        FaultPlan {
+            seed,
+            kills: vec![
+                KillSpec {
+                    at_poll: 1 + r1 % 3,
+                    shard: None,
+                },
+                KillSpec {
+                    at_poll: 5 + r2 % 4,
+                    shard: None,
+                },
+            ],
+            corrupt: vec![CorruptSpec {
+                at_poll: 2 + r3 % 3,
+                shard: (r4 % 64) as usize,
+                mode: CorruptMode::MiddleRecord,
+            }],
+            slow: Vec::new(),
+            io: vec![IoFaultSpec {
+                site: crate::faultfs::SITE_CHECKPOINT.to_string(),
+                kind: FaultKind::Enospc,
+                count: 2,
+                scope: IoScope::Children,
+            }],
+        }
+    }
+
+    /// Whether the plan schedules anything at all.
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty() && self.corrupt.is_empty() && self.slow.is_empty() && self.io.is_empty()
+    }
+
+    /// The env-var value arming this plan's children-scoped IO specs
+    /// (None if there are none). Format: `site:kind:count[,...]`.
+    pub fn child_fault_env(&self) -> Option<String> {
+        let entries: Vec<String> = self
+            .io
+            .iter()
+            .filter(|s| s.scope == IoScope::Children)
+            .map(|s| format!("{}:{}:{}", s.site, s.kind.tag(), s.count))
+            .collect();
+        if entries.is_empty() {
+            None
+        } else {
+            Some(entries.join(","))
+        }
+    }
+
+    /// Arm this plan's supervisor-scoped IO specs in-process.
+    pub fn arm_supervisor_faults(&self) {
+        for s in self.io.iter().filter(|s| s.scope == IoScope::Supervisor) {
+            crate::faultfs::inject(&s.site, s.kind, s.count);
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let kills = self
+            .kills
+            .iter()
+            .map(|k| {
+                let mut rows = vec![("at_poll", json::num(k.at_poll as f64))];
+                if let Some(s) = k.shard {
+                    rows.push(("shard", json::num(s as f64)));
+                }
+                json::obj(rows)
+            })
+            .collect();
+        let corrupt = self
+            .corrupt
+            .iter()
+            .map(|c| {
+                let mut rows = vec![
+                    ("at_poll", json::num(c.at_poll as f64)),
+                    ("shard", json::num(c.shard as f64)),
+                    ("mode", json::s(c.mode.tag())),
+                ];
+                if let CorruptMode::TruncateTail { bytes } = c.mode {
+                    rows.push(("bytes", json::num(bytes as f64)));
+                }
+                json::obj(rows)
+            })
+            .collect();
+        let slow = self
+            .slow
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("shard", json::num(s.shard as f64)),
+                    ("delay_ms", json::num(s.delay_ms as f64)),
+                ])
+            })
+            .collect();
+        let io = self
+            .io
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("site", json::s(&s.site)),
+                    ("kind", json::s(s.kind.tag())),
+                    ("count", json::num(s.count as f64)),
+                    ("scope", json::s(s.scope.tag())),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("seed", json::num(self.seed as f64)),
+            ("kills", json::arr(kills)),
+            ("corrupt", json::arr(corrupt)),
+            ("slow", json::arr(slow)),
+            ("io", json::arr(io)),
+        ])
+    }
+
+    /// Parse a plan file value. Every section is optional; unknown
+    /// modes/kinds/scopes are config errors (a drill that silently
+    /// drops a fault proves nothing).
+    pub fn from_json(v: &Value) -> Result<FaultPlan> {
+        let section = |key: &str| -> &[Value] {
+            v.get(key).and_then(Value::as_arr).unwrap_or(&[])
+        };
+        let mut plan = FaultPlan {
+            seed: v.get("seed").and_then(Value::as_u64).unwrap_or(0),
+            ..FaultPlan::default()
+        };
+        for k in section("kills") {
+            plan.kills.push(KillSpec {
+                at_poll: k.req_u64("at_poll")?,
+                shard: k.get("shard").and_then(Value::as_u64).map(|s| s as usize),
+            });
+        }
+        for c in section("corrupt") {
+            let mode = match c.req_str("mode")? {
+                "middle" => CorruptMode::MiddleRecord,
+                "truncate" => CorruptMode::TruncateTail {
+                    bytes: c.get("bytes").and_then(Value::as_u64).unwrap_or(16),
+                },
+                other => {
+                    return Err(Error::config(format!(
+                        "unknown corrupt mode {other:?} (expected middle|truncate)"
+                    )))
+                }
+            };
+            plan.corrupt.push(CorruptSpec {
+                at_poll: c.req_u64("at_poll")?,
+                shard: c.req_u64("shard")? as usize,
+                mode,
+            });
+        }
+        for s in section("slow") {
+            plan.slow.push(SlowSpec {
+                shard: s.req_u64("shard")? as usize,
+                delay_ms: s.req_u64("delay_ms")?,
+            });
+        }
+        for s in section("io") {
+            let kind_tag = s.req_str("kind")?;
+            let kind = FaultKind::parse(kind_tag).ok_or_else(|| {
+                Error::config(format!(
+                    "unknown io fault kind {kind_tag:?} (expected enospc|eio)"
+                ))
+            })?;
+            let scope = match s.get("scope").and_then(Value::as_str).unwrap_or("children") {
+                "children" => IoScope::Children,
+                "supervisor" => IoScope::Supervisor,
+                other => {
+                    return Err(Error::config(format!(
+                        "unknown io fault scope {other:?} (expected children|supervisor)"
+                    )))
+                }
+            };
+            plan.io.push(IoFaultSpec {
+                site: s.req_str("site")?.to_string(),
+                kind,
+                count: s.get("count").and_then(Value::as_u64).unwrap_or(1),
+                scope,
+            });
+        }
+        Ok(plan)
+    }
+}
+
+/// Overwrite a complete middle record line of a JSON-lines checkpoint
+/// with same-length garbage. Returns the damaged byte count, or
+/// `None` if the file does not yet hold two complete non-header lines
+/// (the caller keeps the spec pending). In-place same-length
+/// overwrites are safe against a child still appending with
+/// `O_APPEND`.
+pub fn corrupt_middle_record(path: &Path) -> std::io::Result<Option<u64>> {
+    use std::io::{Seek, SeekFrom, Write};
+    let data = std::fs::read(path)?;
+    let mut lines = Vec::new();
+    let mut start = 0usize;
+    for (i, &b) in data.iter().enumerate() {
+        if b == b'\n' {
+            lines.push((start, i));
+            start = i + 1;
+        }
+    }
+    let header = lines
+        .first()
+        .is_some_and(|&(s, e)| data[s..e].starts_with(b"{\"header\""));
+    let records: &[(usize, usize)] = if header { &lines[1..] } else { &lines };
+    if records.len() < 2 {
+        return Ok(None);
+    }
+    // middle-most, and with >= 2 records never the last line
+    let (s, e) = records[(records.len() - 1) / 2];
+    if e <= s {
+        return Ok(None);
+    }
+    let mut f = std::fs::OpenOptions::new().write(true).open(path)?;
+    f.seek(SeekFrom::Start(s as u64))?;
+    f.write_all(&vec![b'x'; e - s])?;
+    f.flush()?;
+    Ok(Some((e - s) as u64))
+}
+
+/// Truncate `bytes` off the end of a checkpoint (a torn tail).
+/// Returns the bytes removed, or `None` if the file is still empty.
+pub fn truncate_tail(path: &Path, bytes: u64) -> std::io::Result<Option<u64>> {
+    let len = std::fs::metadata(path)?.len();
+    if len == 0 {
+        return Ok(None);
+    }
+    let cut = bytes.max(1).min(len);
+    let f = std::fs::OpenOptions::new().write(true).open(path)?;
+    f.set_len(len - cut)?;
+    Ok(Some(cut))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("memfine-chaos-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_in_seed_and_dir() {
+        let a = FaultPlan::from_seed(7, Path::new("campaign-a"));
+        let b = FaultPlan::from_seed(7, Path::new("campaign-a"));
+        assert_eq!(a, b);
+        assert_ne!(a, FaultPlan::from_seed(8, Path::new("campaign-a")));
+        assert_ne!(a, FaultPlan::from_seed(7, Path::new("campaign-b")));
+        // fixed drill shape: kill storm + middle corruption + child ENOSPC
+        assert_eq!(a.kills.len(), 2);
+        assert!(a.kills.iter().all(|k| k.shard.is_none()));
+        assert!(a.kills[0].at_poll < a.kills[1].at_poll);
+        assert_eq!(a.corrupt.len(), 1);
+        assert_eq!(a.corrupt[0].mode, CorruptMode::MiddleRecord);
+        assert_eq!(a.io.len(), 1);
+        assert_eq!(a.io[0].scope, IoScope::Children);
+        assert_eq!(
+            a.child_fault_env().as_deref(),
+            Some("checkpoint:enospc:1")
+        );
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan = FaultPlan {
+            seed: 3,
+            kills: vec![
+                KillSpec { at_poll: 2, shard: None },
+                KillSpec { at_poll: 6, shard: Some(1) },
+            ],
+            corrupt: vec![
+                CorruptSpec { at_poll: 4, shard: 0, mode: CorruptMode::MiddleRecord },
+                CorruptSpec {
+                    at_poll: 9,
+                    shard: 2,
+                    mode: CorruptMode::TruncateTail { bytes: 17 },
+                },
+            ],
+            slow: vec![SlowSpec { shard: 1, delay_ms: 50 }],
+            io: vec![IoFaultSpec {
+                site: "trace-store".to_string(),
+                kind: FaultKind::Eio,
+                count: 2,
+                scope: IoScope::Supervisor,
+            }],
+        };
+        let round = FaultPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(round, plan);
+        // every section optional
+        let empty = FaultPlan::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(empty, FaultPlan::default());
+        // unknown tags are loud config errors
+        for bad in [
+            r#"{"corrupt": [{"at_poll": 1, "shard": 0, "mode": "bitflip"}]}"#,
+            r#"{"io": [{"site": "checkpoint", "kind": "enoent"}]}"#,
+            r#"{"io": [{"site": "checkpoint", "kind": "eio", "scope": "host"}]}"#,
+        ] {
+            assert!(FaultPlan::from_json(&crate::json::parse(bad).unwrap()).is_err());
+        }
+    }
+
+    #[test]
+    fn kill_one_matches_the_legacy_drill() {
+        let plan = FaultPlan::kill_one();
+        assert_eq!(
+            plan.kills,
+            vec![KillSpec { at_poll: 0, shard: None }]
+        );
+        assert!(plan.corrupt.is_empty() && plan.io.is_empty() && plan.slow.is_empty());
+        assert!(plan.child_fault_env().is_none());
+    }
+
+    #[test]
+    fn corrupt_middle_record_spares_header_and_tail() {
+        let path = tmp("corrupt.jsonl");
+        std::fs::write(
+            &path,
+            b"{\"header\":{\"p\":1}}\n{\"hash\":\"a\",\"result\":1}\n{\"hash\":\"b\",\"result\":2}\n{\"hash\":\"c\",\"result\":3}\n",
+        )
+        .unwrap();
+        let before = std::fs::read(&path).unwrap();
+        let damaged = corrupt_middle_record(&path).unwrap().unwrap();
+        let after = std::fs::read(&path).unwrap();
+        assert_eq!(after.len(), before.len(), "in-place, same length");
+        let lines: Vec<&[u8]> = after.split(|&b| b == b'\n').collect();
+        assert!(lines[0].starts_with(b"{\"header\""), "header intact");
+        assert_eq!(lines[3], &before[before.len() - lines[3].len() - 1..before.len() - 1],
+            "last record intact");
+        assert!(lines[2].iter().all(|&b| b == b'x'), "middle record damaged");
+        assert_eq!(damaged as usize, lines[2].len());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_middle_record_waits_for_enough_content() {
+        let path = tmp("pending.jsonl");
+        std::fs::write(&path, b"").unwrap();
+        assert_eq!(corrupt_middle_record(&path).unwrap(), None);
+        std::fs::write(&path, b"{\"header\":{}}\n{\"hash\":\"a\"}\n").unwrap();
+        assert_eq!(
+            corrupt_middle_record(&path).unwrap(),
+            None,
+            "one record is not enough: the last line is never damaged"
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn truncate_tail_tears_the_file() {
+        let path = tmp("truncate.jsonl");
+        std::fs::write(&path, b"").unwrap();
+        assert_eq!(truncate_tail(&path, 5).unwrap(), None);
+        std::fs::write(&path, b"{\"hash\":\"a\"}\n{\"hash\":\"b\"}\n").unwrap();
+        let len = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(truncate_tail(&path, 5).unwrap(), Some(5));
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), len - 5);
+        // over-long cuts stop at empty, never error
+        assert_eq!(truncate_tail(&path, 10_000).unwrap(), Some(len - 5));
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

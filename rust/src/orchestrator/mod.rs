@@ -30,16 +30,19 @@
 //! single-process `memfine sweep` of the same `SweepConfig` —
 //! `tests/integration_launch.rs` pins exactly that, kills included.
 
+pub mod chaos;
 pub mod health;
 pub mod merge;
 pub mod plan;
 pub mod supervise;
 
+pub use chaos::FaultPlan;
 pub use health::{probe_len, probe_mtime_age, HeartbeatMonitor};
 pub use merge::{merge_and_finish, MergeOutcome};
 pub use plan::{plan_shards, LaunchPlan, ShardPlan};
 pub use supervise::{
-    supervise, ShardEvent, ShardEventKind, ShardOutcome, SuperviseOptions,
+    supervise, RetryPolicy, ShardEvent, ShardEventKind, ShardOutcome,
+    SuperviseOptions, QUARANTINE_SUFFIX,
 };
 
 use std::path::PathBuf;
@@ -49,7 +52,8 @@ use std::time::Duration;
 use crate::config::LaunchConfig;
 use crate::error::{Error, Result};
 use crate::json::{self, Value};
-use crate::obs::EventLog;
+use crate::obs::{EventLog, WatchConfig, Watchdog};
+use crate::util;
 
 /// Execution parameters of one launch invocation — everything that
 /// decides *where and how* the fleet runs but can never reach the
@@ -65,10 +69,11 @@ pub struct LaunchOptions {
     /// current executable (correct for `memfine launch`; tests and
     /// benches pass `CARGO_BIN_EXE_memfine`).
     pub binary: Option<PathBuf>,
-    /// Run the chaos drill: kill the first progressing child once and
-    /// let supervision heal it (see
-    /// [`SuperviseOptions::chaos_kill_one`]).
-    pub chaos_kill_one: bool,
+    /// Run a chaos drill against the fleet: scripted kills, checkpoint
+    /// corruption, slow shards, and injected IO faults (see
+    /// [`chaos::FaultPlan`]). `FaultPlan::kill_one()` reproduces the
+    /// legacy `--chaos-kill` drill.
+    pub fault_plan: Option<chaos::FaultPlan>,
     /// Suppress the per-event log lines (library/bench use).
     pub quiet: bool,
 }
@@ -78,7 +83,7 @@ impl LaunchOptions {
         LaunchOptions {
             dir: dir.into(),
             binary: None,
-            chaos_kill_one: false,
+            fault_plan: None,
             quiet: false,
         }
     }
@@ -114,9 +119,18 @@ fn describe(ev: &ShardEvent) -> String {
             Some(c) => format!("shard {s}: exited with code {c}"),
             None => format!("shard {s}: killed by signal"),
         },
+        ShardEventKind::Backoff { delay_ms } => {
+            format!("shard {s}: backing off {delay_ms} ms before relaunch")
+        }
         ShardEventKind::Completed => format!("shard {s}: completed"),
         ShardEventKind::GaveUp { reason } => {
             format!("shard {s}: giving up ({reason})")
+        }
+        ShardEventKind::Quarantined { reason } => {
+            format!("shard {s}: checkpoint quarantined ({reason})")
+        }
+        ShardEventKind::ChaosCorrupted { mode, bytes } => {
+            format!("shard {s}: CHAOS corrupted checkpoint ({mode}, {bytes} B)")
         }
     }
 }
@@ -149,9 +163,19 @@ fn shard_event_fields(ev: &ShardEvent) -> Vec<(&'static str, Value)> {
                 },
             ));
         }
+        ShardEventKind::Backoff { delay_ms } => {
+            fields.push(("delay_ms", json::num(*delay_ms as f64)));
+        }
         ShardEventKind::Completed => {}
         ShardEventKind::GaveUp { reason } => {
             fields.push(("reason", json::s(reason.clone())));
+        }
+        ShardEventKind::Quarantined { reason } => {
+            fields.push(("reason", json::s(reason.clone())));
+        }
+        ShardEventKind::ChaosCorrupted { mode, bytes } => {
+            fields.push(("mode", json::s(mode.clone())));
+            fields.push(("bytes", json::num(*bytes as f64)));
         }
     }
     fields
@@ -286,16 +310,25 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
             ("shards", json::num(plan.shards.len() as f64)),
             ("cells", json::num(plan.total_cells as f64)),
             ("scenarios", json::num(plan.total_scenarios as f64)),
-            ("chaos", Value::Bool(opts.chaos_kill_one)),
+            ("chaos", Value::Bool(opts.fault_plan.is_some())),
         ],
     );
+    // Scripted IO faults: supervisor-scope specs arm this process's
+    // fault seam directly; children-scope specs travel by env var and
+    // only to each shard's FIRST attempt, so relaunches (and the
+    // in-process merge catch-up) always run clean and the campaign
+    // still converges.
+    if let Some(p) = &opts.fault_plan {
+        p.arm_supervisor_faults();
+    }
+    let child_fault_env = opts.fault_plan.as_ref().and_then(|p| p.child_fault_env());
     // One trace cache per campaign dir: every shard process (and the
     // merge catch-up) shares it, so a cell's routed stream is drawn at
     // most once per campaign — and relaunches/topology changes reuse
     // it across runs.
     let trace_cache = opts.dir.join("trace-cache");
     let prior = &prior_state;
-    let spawner = |shard: &ShardPlan, _attempt: u32| -> Result<std::process::Child> {
+    let spawner = |shard: &ShardPlan, attempt: u32| -> Result<std::process::Child> {
         let log = std::fs::File::options()
             .create(true)
             .append(true)
@@ -341,6 +374,11 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
             // hit/miss, checkpoint appends) to the same campaign log
             cmd.arg("--events").arg(&events_path);
         }
+        if attempt == 1 {
+            if let Some(env) = &child_fault_env {
+                cmd.env(crate::faultfs::FAULT_ENV, env);
+            }
+        }
         cmd.stdin(Stdio::null())
             .stdout(Stdio::null())
             .stderr(Stdio::from(log));
@@ -355,26 +393,51 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
     let sup_opts = SuperviseOptions {
         stall_timeout: Duration::from_millis(cfg.stall_timeout_ms),
         poll_interval: Duration::from_millis(cfg.poll_ms),
-        max_retries: cfg.max_retries.min(u32::MAX as u64) as u32,
-        chaos_kill_one: opts.chaos_kill_one,
+        policy: RetryPolicy {
+            episode_retries: cfg.max_retries.min(u32::MAX as u64) as u32,
+            campaign_retries: cfg.campaign_retries.min(u32::MAX as u64) as u32,
+            backoff_base: Duration::from_millis(cfg.backoff_ms),
+            backoff_cap: Duration::from_secs(10),
+            // keyed on the campaign dir so a replayed drill backs off
+            // identically, but two campaigns don't sync their retries
+            jitter_seed: util::fnv1a_64(opts.dir.display().to_string().as_bytes()),
+            quarantine: cfg.quarantine,
+        },
+        fault_plan: opts.fault_plan.clone(),
     };
     let quiet = opts.quiet;
+    // The watchdog tails the same events.jsonl everyone appends to and
+    // raises each alert_* kind at most once; alerts land back in the
+    // event log so `memfine status` and chaos drills can assert on
+    // them.
+    let mut watchdog = Watchdog::new(WatchConfig::default());
     let mut events: Vec<ShardEvent> = Vec::new();
+    let watch_enabled = elog.enabled();
     let outcomes = supervise::supervise(&plan.shards, spawner, &sup_opts, |ev| {
         if !quiet {
             crate::logging::info("orchestrator", describe(ev));
         }
         elog.emit(ev.kind.tag(), shard_event_fields(ev));
         events.push(ev.clone());
+        if watch_enabled {
+            for alert in watchdog.scan(&events_path) {
+                crate::logging::warn("watchdog", &alert.message);
+                elog.emit(alert.kind, alert.fields);
+            }
+        }
     })?;
-    if opts.chaos_kill_one
+    let planned_kills = opts
+        .fault_plan
+        .as_ref()
+        .map_or(0, |p| p.kills.len());
+    if planned_kills > 0
         && outcomes.iter().all(|o| o.chaos_kills == 0)
         && !quiet
     {
         crate::logging::warn(
             "orchestrator",
             "chaos drill never fired: the fleet completed before a strike \
-             window opened (grid too small/fast for --chaos-kill)",
+             window opened (grid too small/fast for the kill specs)",
         );
     }
 
@@ -389,6 +452,14 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
             ("records", json::num(merge.compact_stats.records_out as f64)),
         ],
     );
+    // final watchdog pass: catch-up events (degraded cells, healing
+    // churn) land after the last supervision callback
+    if watch_enabled {
+        for alert in watchdog.scan(&events_path) {
+            crate::logging::warn("watchdog", &alert.message);
+            elog.emit(alert.kind, alert.fields);
+        }
+    }
     if !quiet {
         crate::logging::info(
             "orchestrator",

@@ -1,8 +1,19 @@
 //! Shard-fleet supervision: spawn one child process per [`ShardPlan`],
 //! watch liveness through checkpoint-growth heartbeats
 //! ([`crate::orchestrator::health`]), kill and relaunch crashed or
-//! stalled shards with `--resume` (bounded by a per-shard retry
-//! budget), and summarise each shard's fate.
+//! stalled shards with `--resume` under a [`RetryPolicy`], and
+//! summarise each shard's fate.
+//!
+//! The retry shape is policy-driven, not hard-coded: relaunch budgets
+//! are scoped to a *failure episode* and reset whenever the shard
+//! shows fresh checkpoint progress (so a long campaign with occasional
+//! independent failures does not die by attrition), a global campaign
+//! budget bounds fleet-wide relaunches (the guard against a crash loop
+//! that happens to append bytes each attempt), relaunches back off
+//! exponentially with deterministic jitter, and a shard that gives up
+//! without progress has its checkpoint *quarantined* — renamed aside
+//! so the merge catch-up re-executes its cells from scratch, keeping
+//! the campaign artifact byte-identical.
 //!
 //! The supervisor is generic over the *spawner* — any
 //! `FnMut(&ShardPlan, attempt) -> Result<Child>` — so tests can
@@ -10,22 +21,100 @@
 //! sweep` command line, and every decision it makes is surfaced as a
 //! [`ShardEvent`] through the caller's callback.
 //!
+//! Scripted chaos ([`crate::orchestrator::chaos::FaultPlan`]) is
+//! executed from inside the poll loop: kill specs strike at their poll
+//! tick (relaunches from an injected kill never consume retry budget),
+//! corruption specs damage a shard's checkpoint in flight, and slow
+//! specs delay a shard's first spawn.
+//!
 //! Correctness never depends on supervision: children checkpoint every
 //! completed scenario, relaunches resume from those checkpoints, and
 //! the merge step audits coverage and re-runs any gap in-process — so
-//! a kill at any point (including the injected chaos kill) costs only
-//! the in-flight work, never the artifact's bytes.
+//! a kill at any point (including injected chaos) costs only the
+//! in-flight work, never the artifact's bytes.
 
+use std::path::PathBuf;
 use std::process::Child;
 use std::time::{Duration, Instant};
 
 use crate::error::Result;
+use crate::logging;
+use crate::orchestrator::chaos::{self, CorruptMode, CorruptSpec, FaultPlan, KillSpec};
 use crate::orchestrator::health::{probe_len, HeartbeatMonitor};
 use crate::orchestrator::plan::ShardPlan;
+use crate::util;
+
+/// File-name suffix appended to a quarantined shard checkpoint. The
+/// rename changes the extension away from `.jsonl`, which is what
+/// excludes the file from every campaign-state glob (launch resume,
+/// merge inputs, `memfine status`).
+pub const QUARANTINE_SUFFIX: &str = ".quarantined";
+
+/// The relaunch policy: how hard supervision fights for a shard
+/// before handing its cells to the merge catch-up.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Relaunches allowed per failure episode. An episode ends (and
+    /// the budget resets) when the shard's checkpoint shows observed
+    /// progress.
+    pub episode_retries: u32,
+    /// Fleet-wide relaunch budget across the whole campaign; 0 means
+    /// unlimited. This is the backstop against a shard that crashes
+    /// in a loop while still appending bytes each attempt — every
+    /// such append resets its episode budget, so only a global bound
+    /// can stop it.
+    pub campaign_retries: u32,
+    /// Base delay before the first relaunch of an episode; doubles
+    /// per relaunch. Zero disables backoff entirely.
+    pub backoff_base: Duration,
+    /// Ceiling for the exponential backoff.
+    pub backoff_cap: Duration,
+    /// Seed for the deterministic backoff jitter (derived from the
+    /// campaign dir by `launch`, so drills replay exactly).
+    pub jitter_seed: u64,
+    /// Rename a persistently-failing shard's checkpoint aside
+    /// ([`QUARANTINE_SUFFIX`]) when it gives up without progress, so
+    /// the merge redistributes its cells through catch-up.
+    pub quarantine: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            episode_retries: 2,
+            campaign_retries: 16,
+            backoff_base: Duration::from_millis(100),
+            backoff_cap: Duration::from_secs(10),
+            jitter_seed: 0,
+            quarantine: true,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Deterministic backoff before relaunch `relaunch` (1-based) of
+    /// `shard`: `min(base * 2^(relaunch-1), cap)` plus a jittered
+    /// fraction in `[0, 25%)` keyed on (jitter_seed, shard, relaunch).
+    pub fn backoff(&self, shard: usize, relaunch: u32) -> Duration {
+        if self.backoff_base.is_zero() {
+            return Duration::ZERO;
+        }
+        let exp = relaunch.saturating_sub(1).min(16);
+        let base = self
+            .backoff_base
+            .saturating_mul(1u32 << exp)
+            .min(self.backoff_cap);
+        let mut h = util::fnv1a_64(&self.jitter_seed.to_le_bytes());
+        h = util::fnv1a_64_update(h, &(shard as u64).to_le_bytes());
+        h = util::fnv1a_64_update(h, &relaunch.to_le_bytes());
+        let frac = (h % 1000) as f64 / 4000.0;
+        base + base.mul_f64(frac)
+    }
+}
 
 /// Supervision knobs (see [`crate::config::LaunchConfig`] for the
 /// serialisable source of these values).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SuperviseOptions {
     /// Kill a shard whose checkpoint has not changed for this long.
     /// The heartbeat ticks once per completed trace cell, so this
@@ -35,15 +124,12 @@ pub struct SuperviseOptions {
     pub stall_timeout: Duration,
     /// How often to poll child exits and heartbeats.
     pub poll_interval: Duration,
-    /// Relaunches allowed per shard beyond its initial spawn.
-    pub max_retries: u32,
-    /// Chaos injection: once, kill the first shard observed with
-    /// checkpoint progress — falling back to any running shard after
-    /// a few polls, so the drill always fires while the fleet is
-    /// alive (the crash-recovery drill the launch smoke tests and CI
-    /// run). The injected kill does not consume the shard's retry
-    /// budget.
-    pub chaos_kill_one: bool,
+    /// The relaunch policy.
+    pub policy: RetryPolicy,
+    /// Scripted chaos to execute during supervision (kill storms,
+    /// checkpoint corruption, slow spawns). IO fault specs are armed
+    /// by `launch`, not here.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 /// What happened to a shard, as told to the event callback.
@@ -55,18 +141,26 @@ pub enum ShardEventKind {
     Progress { checkpoint_bytes: u64 },
     /// The chaos drill killed this shard's child.
     ChaosKilled { pid: u32 },
+    /// The chaos drill damaged this shard's checkpoint file.
+    ChaosCorrupted { mode: String, bytes: u64 },
     /// No checkpoint change for longer than the stall timeout; the
     /// child was killed and is eligible for relaunch.
     Stalled { idle_ms: u64 },
     /// The child exited unsuccessfully.
     Crashed { exit_code: Option<i32> },
+    /// A relaunch was scheduled after a backoff delay.
+    Backoff { delay_ms: u64 },
     /// The child exited successfully.
     Completed,
-    /// The supervisor stopped trying (retry budget exhausted, or a
+    /// The supervisor stopped trying (a retry budget exhausted, or a
     /// relaunch failed to spawn — the reason says which). The merge
     /// catch-up will re-run this shard's missing scenarios
     /// in-process.
     GaveUp { reason: String },
+    /// The shard's checkpoint was renamed aside
+    /// ([`QUARANTINE_SUFFIX`]) after it gave up without progress; its
+    /// planned cells will be redistributed through merge catch-up.
+    Quarantined { reason: String },
 }
 
 impl ShardEventKind {
@@ -78,10 +172,13 @@ impl ShardEventKind {
             ShardEventKind::Spawned { .. } => "shard_spawned",
             ShardEventKind::Progress { .. } => "shard_progress",
             ShardEventKind::ChaosKilled { .. } => "shard_chaos_killed",
+            ShardEventKind::ChaosCorrupted { .. } => "shard_chaos_corrupted",
             ShardEventKind::Stalled { .. } => "shard_stalled",
             ShardEventKind::Crashed { .. } => "shard_crashed",
+            ShardEventKind::Backoff { .. } => "shard_backoff",
             ShardEventKind::Completed => "shard_completed",
             ShardEventKind::GaveUp { .. } => "shard_gave_up",
+            ShardEventKind::Quarantined { .. } => "shard_quarantined",
         }
     }
 }
@@ -107,6 +204,8 @@ pub struct ShardOutcome {
     pub chaos_kills: u32,
     /// Whether some attempt exited successfully.
     pub completed: bool,
+    /// Whether the shard's checkpoint was quarantined aside.
+    pub quarantined: bool,
     /// Exit code of the last observed exit (`None` after a kill).
     pub last_exit_code: Option<i32>,
 }
@@ -114,7 +213,11 @@ pub struct ShardOutcome {
 struct ShardState {
     child: Option<Child>,
     monitor: HeartbeatMonitor,
-    retries_used: u32,
+    /// Relaunches consumed in the current failure episode; reset to 0
+    /// on observed checkpoint progress.
+    episode_retries_used: u32,
+    /// Deferred relaunch deadline (exponential backoff).
+    respawn_at: Option<Instant>,
     outcome: ShardOutcome,
 }
 
@@ -147,14 +250,104 @@ where
     Ok(())
 }
 
+/// The quarantine destination for a shard checkpoint:
+/// `shard-i-of-n.jsonl` → `shard-i-of-n.jsonl.quarantined`.
+pub fn quarantine_path(checkpoint: &std::path::Path) -> PathBuf {
+    let mut name = checkpoint.as_os_str().to_os_string();
+    name.push(QUARANTINE_SUFFIX);
+    PathBuf::from(name)
+}
+
+/// Report a shard as given up; when `quarantine_eligible` (episode
+/// budget exhausted — the shard failed repeatedly *without* progress)
+/// and the policy allows it, rename its checkpoint aside so merge
+/// catch-up redistributes the cells.
+fn give_up<E>(
+    shard: usize,
+    plan: &ShardPlan,
+    st: &mut ShardState,
+    policy: &RetryPolicy,
+    reason: String,
+    quarantine_eligible: bool,
+    on_event: &mut E,
+) where
+    E: FnMut(&ShardEvent),
+{
+    on_event(&ShardEvent {
+        shard,
+        kind: ShardEventKind::GaveUp { reason: reason.clone() },
+    });
+    if !(quarantine_eligible && policy.quarantine) || !plan.checkpoint.exists() {
+        return;
+    }
+    let aside = quarantine_path(&plan.checkpoint);
+    match std::fs::rename(&plan.checkpoint, &aside) {
+        Ok(()) => {
+            st.outcome.quarantined = true;
+            on_event(&ShardEvent {
+                shard,
+                kind: ShardEventKind::Quarantined { reason },
+            });
+        }
+        Err(e) => logging::warn(
+            "orchestrator",
+            format!(
+                "failed to quarantine {}: {e}; merge will read it as-is",
+                plan.checkpoint.display()
+            ),
+        ),
+    }
+}
+
+/// Consume budget and schedule the relaunch of a failed shard, or
+/// give up (and possibly quarantine) when a budget is exhausted.
+fn schedule_respawn<E>(
+    shard: usize,
+    plan: &ShardPlan,
+    st: &mut ShardState,
+    policy: &RetryPolicy,
+    campaign_relaunches: &mut u32,
+    on_event: &mut E,
+) where
+    E: FnMut(&ShardEvent),
+{
+    if st.episode_retries_used >= policy.episode_retries {
+        let reason = format!(
+            "episode retry budget exhausted ({} relaunches without checkpoint progress)",
+            policy.episode_retries
+        );
+        give_up(shard, plan, st, policy, reason, true, on_event);
+        return;
+    }
+    if policy.campaign_retries > 0 && *campaign_relaunches >= policy.campaign_retries {
+        let reason = format!(
+            "campaign failure budget exhausted ({} relaunches fleet-wide)",
+            policy.campaign_retries
+        );
+        give_up(shard, plan, st, policy, reason, false, on_event);
+        return;
+    }
+    st.episode_retries_used += 1;
+    *campaign_relaunches += 1;
+    let delay = policy.backoff(shard, st.outcome.spawns);
+    if !delay.is_zero() {
+        on_event(&ShardEvent {
+            shard,
+            kind: ShardEventKind::Backoff { delay_ms: delay.as_millis() as u64 },
+        });
+    }
+    st.respawn_at = Some(Instant::now() + delay);
+}
+
 /// Run the fleet to completion: spawn every shard, poll exits and
-/// heartbeats, heal crashes/stalls within the retry budget, and return
-/// one [`ShardOutcome`] per shard. A shard that exhausts its budget is
-/// reported (`completed: false`) rather than failing the call — the
-/// merge layer decides whether the launch can still be healed. Only a
-/// *first* spawn failure is fatal (a broken binary/config would fail
-/// every shard identically); on that path all already-spawned children
-/// are killed before returning.
+/// heartbeats, heal crashes/stalls under the retry policy, execute any
+/// scripted chaos, and return one [`ShardOutcome`] per shard. A shard
+/// that exhausts a budget is reported (`completed: false`, possibly
+/// `quarantined`) rather than failing the call — the merge layer
+/// decides whether the launch can still be healed. Only a *first*
+/// spawn failure is fatal (a broken binary/config would fail every
+/// shard identically); on that path all already-spawned children are
+/// killed before returning.
 pub fn supervise<S, E>(
     shards: &[ShardPlan],
     mut spawn: S,
@@ -170,7 +363,8 @@ where
         .map(|i| ShardState {
             child: None,
             monitor: HeartbeatMonitor::new(now),
-            retries_used: 0,
+            episode_retries_used: 0,
+            respawn_at: None,
             outcome: ShardOutcome {
                 shard: i,
                 spawns: 0,
@@ -178,12 +372,22 @@ where
                 crashes: 0,
                 chaos_kills: 0,
                 completed: false,
+                quarantined: false,
                 last_exit_code: None,
             },
         })
         .collect();
 
+    let plan = opts.fault_plan.clone().unwrap_or_default();
+    let mut pending_kills: Vec<KillSpec> = plan.kills.clone();
+    let mut pending_corrupt: Vec<CorruptSpec> = plan.corrupt.clone();
+
     for i in 0..states.len() {
+        if let Some(slow) = plan.slow.iter().find(|s| s.shard % shards.len() == i) {
+            // a simulated slow host: the shard's first spawn lags the
+            // rest of the fleet
+            std::thread::sleep(Duration::from_millis(slow.delay_ms));
+        }
         if let Err(e) =
             spawn_into(i, &shards[i], &mut states[i], &mut spawn, &mut on_event)
         {
@@ -196,10 +400,32 @@ where
         }
     }
 
-    let mut chaos_pending = opts.chaos_kill_one;
+    let mut campaign_relaunches: u32 = 0;
     let mut polls: u64 = 0;
     loop {
         polls += 1;
+
+        // deferred (backed-off) relaunches whose deadline has passed
+        for i in 0..states.len() {
+            let due = states[i]
+                .respawn_at
+                .is_some_and(|at| Instant::now() >= at);
+            if !due {
+                continue;
+            }
+            states[i].respawn_at = None;
+            if let Err(e) =
+                spawn_into(i, &shards[i], &mut states[i], &mut spawn, &mut on_event)
+            {
+                on_event(&ShardEvent {
+                    shard: i,
+                    kind: ShardEventKind::GaveUp {
+                        reason: format!("relaunch failed to spawn: {e}"),
+                    },
+                });
+            }
+        }
+
         for i in 0..states.len() {
             let st = &mut states[i];
             let Some(child) = st.child.as_mut() else { continue };
@@ -233,6 +459,9 @@ where
                     let timeout = opts.stall_timeout
                         * (1u32 << (st.outcome.spawns.saturating_sub(1)).min(6));
                     if st.monitor.observe(len, now) {
+                        // fresh checkpoint progress closes the current
+                        // failure episode: the relaunch budget resets
+                        st.episode_retries_used = 0;
                         on_event(&ShardEvent {
                             shard: i,
                             kind: ShardEventKind::Progress {
@@ -269,56 +498,52 @@ where
                 }
             }
             if respawn {
-                let st = &mut states[i];
-                if st.retries_used < opts.max_retries {
-                    st.retries_used += 1;
-                    if let Err(e) =
-                        spawn_into(i, &shards[i], st, &mut spawn, &mut on_event)
-                    {
-                        on_event(&ShardEvent {
-                            shard: i,
-                            kind: ShardEventKind::GaveUp {
-                                reason: format!("relaunch failed to spawn: {e}"),
-                            },
-                        });
-                    }
-                } else {
-                    on_event(&ShardEvent {
-                        shard: i,
-                        kind: ShardEventKind::GaveUp {
-                            reason: format!(
-                                "retry budget exhausted ({} relaunches)",
-                                opts.max_retries
-                            ),
-                        },
-                    });
-                }
+                schedule_respawn(
+                    i,
+                    &shards[i],
+                    &mut states[i],
+                    &opts.policy,
+                    &mut campaign_relaunches,
+                    &mut on_event,
+                );
             }
         }
 
-        // Chaos drill: kill one child, exactly once — preferably the
-        // first still-running shard with demonstrable checkpoint
-        // progress (a true mid-flight kill); if no child has shown
-        // progress after a few polls, any running child will do, so
-        // the drill cannot silently no-op on fast grids. Relaunch is
-        // unconditional — an injected fault must not consume the
-        // shard's own retry budget.
-        if chaos_pending {
-            let running_with_progress = (0..states.len()).find(|&i| {
-                states[i].child.is_some()
-                    && states[i].monitor.last_len().unwrap_or(0) > 0
-            });
-            let target = running_with_progress.or_else(|| {
-                if polls >= 3 {
-                    (0..states.len()).find(|&i| states[i].child.is_some())
-                } else {
-                    None
+        // Scripted kills: at most one strike per poll. A spec with an
+        // explicit shard waits for that shard to be running; a
+        // heuristic spec (shard: None) prefers the first still-running
+        // shard with demonstrable checkpoint progress (a true
+        // mid-flight kill), falling back to any running child once a
+        // few polls have elapsed, so the drill cannot silently no-op
+        // on fast grids. Relaunch is unconditional and immediate — an
+        // injected fault must not consume the shard's retry budget.
+        if let Some(k) = pending_kills
+            .iter()
+            .position(|k| polls >= k.at_poll)
+        {
+            let spec = pending_kills[k].clone();
+            let target = match spec.shard {
+                Some(s) => {
+                    let i = s % states.len();
+                    states[i].child.is_some().then_some(i)
                 }
-            });
+                None => (0..states.len())
+                    .find(|&i| {
+                        states[i].child.is_some()
+                            && states[i].monitor.last_len().unwrap_or(0) > 0
+                    })
+                    .or_else(|| {
+                        if polls >= spec.at_poll.max(3) {
+                            (0..states.len()).find(|&i| states[i].child.is_some())
+                        } else {
+                            None
+                        }
+                    }),
+            };
             if let Some(i) = target {
                 let st = &mut states[i];
                 // a candidate that exited between polls is no strike:
-                // leave the drill pending and let the normal exit path
+                // leave the spec pending and let the normal exit path
                 // reap it next iteration
                 let still_running = matches!(
                     st.child.as_mut().expect("target is running").try_wait(),
@@ -344,15 +569,74 @@ where
                             },
                         });
                     }
-                    chaos_pending = false;
+                    pending_kills.remove(k);
                 }
             }
         }
 
-        if states.iter().all(|s| s.child.is_none()) {
+        // Scripted checkpoint corruption: a spec stays pending until
+        // its shard's checkpoint has enough content to damage.
+        let mut c = 0;
+        while c < pending_corrupt.len() {
+            let spec = pending_corrupt[c].clone();
+            if polls < spec.at_poll {
+                c += 1;
+                continue;
+            }
+            let i = spec.shard % shards.len();
+            let applied = match spec.mode {
+                CorruptMode::MiddleRecord => {
+                    chaos::corrupt_middle_record(&shards[i].checkpoint)
+                }
+                CorruptMode::TruncateTail { bytes } => {
+                    chaos::truncate_tail(&shards[i].checkpoint, bytes)
+                }
+            };
+            match applied {
+                Ok(Some(bytes)) => {
+                    on_event(&ShardEvent {
+                        shard: i,
+                        kind: ShardEventKind::ChaosCorrupted {
+                            mode: spec.mode.tag().to_string(),
+                            bytes,
+                        },
+                    });
+                    pending_corrupt.remove(c);
+                }
+                Ok(None) => c += 1, // not enough content yet
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => c += 1,
+                Err(e) => {
+                    logging::warn(
+                        "chaos",
+                        format!(
+                            "corrupt spec for {} failed ({e}); dropping it",
+                            shards[i].checkpoint.display()
+                        ),
+                    );
+                    pending_corrupt.remove(c);
+                }
+            }
+        }
+
+        if states
+            .iter()
+            .all(|s| s.child.is_none() && s.respawn_at.is_none())
+        {
             break;
         }
         std::thread::sleep(opts.poll_interval);
+    }
+
+    if !pending_kills.is_empty() || !pending_corrupt.is_empty() {
+        logging::warn(
+            "chaos",
+            format!(
+                "fleet finished with {} kill and {} corrupt spec(s) still pending \
+                 (the drill outran the work)",
+                pending_kills.len(),
+                pending_corrupt.len()
+            ),
+        );
     }
 
     Ok(states.into_iter().map(|s| s.outcome).collect())
@@ -399,8 +683,15 @@ mod tests {
         SuperviseOptions {
             stall_timeout: Duration::from_millis(400),
             poll_interval: Duration::from_millis(20),
-            max_retries: 2,
-            chaos_kill_one: false,
+            policy: RetryPolicy {
+                episode_retries: 2,
+                campaign_retries: 0,
+                backoff_base: Duration::ZERO,
+                backoff_cap: Duration::ZERO,
+                jitter_seed: 0,
+                quarantine: false,
+            },
+            fault_plan: None,
         }
     }
 
@@ -410,15 +701,46 @@ mod tests {
             ShardEventKind::Spawned { pid: 1, attempt: 1 },
             ShardEventKind::Progress { checkpoint_bytes: 0 },
             ShardEventKind::ChaosKilled { pid: 1 },
+            ShardEventKind::ChaosCorrupted { mode: String::new(), bytes: 0 },
             ShardEventKind::Stalled { idle_ms: 0 },
             ShardEventKind::Crashed { exit_code: None },
+            ShardEventKind::Backoff { delay_ms: 0 },
             ShardEventKind::Completed,
             ShardEventKind::GaveUp { reason: String::new() },
+            ShardEventKind::Quarantined { reason: String::new() },
         ];
         let tags: std::collections::BTreeSet<_> =
             kinds.iter().map(|k| k.tag()).collect();
         assert_eq!(tags.len(), kinds.len());
         assert!(tags.iter().all(|t| t.starts_with("shard_")));
+    }
+
+    #[test]
+    fn deterministic_backoff_doubles_and_caps() {
+        let policy = RetryPolicy {
+            backoff_base: Duration::from_millis(100),
+            backoff_cap: Duration::from_secs(1),
+            jitter_seed: 7,
+            ..RetryPolicy::default()
+        };
+        // deterministic: same inputs, same delay
+        assert_eq!(policy.backoff(0, 1), policy.backoff(0, 1));
+        // jitter separates shards and attempts (with this seed)
+        assert_ne!(policy.backoff(0, 1), policy.backoff(1, 1));
+        for k in 1..=12u32 {
+            let d = policy.backoff(0, k);
+            let un_jittered = Duration::from_millis(100)
+                .saturating_mul(1 << (k - 1).min(16))
+                .min(Duration::from_secs(1));
+            assert!(d >= un_jittered, "jitter only adds: {d:?} < {un_jittered:?}");
+            assert!(
+                d <= un_jittered.mul_f64(1.25),
+                "jitter bounded by 25%: {d:?}"
+            );
+        }
+        // zero base disables backoff
+        let off = RetryPolicy { backoff_base: Duration::ZERO, ..policy };
+        assert_eq!(off.backoff(0, 5), Duration::ZERO);
     }
 
     #[test]
@@ -454,7 +776,9 @@ mod tests {
             |ev| events.push(ev.clone()),
         )
         .unwrap();
-        // initial spawn + max_retries relaunches, then give up
+        // initial spawn + episode_retries relaunches, then give up —
+        // the crashes never touch the checkpoint, so the episode
+        // budget never resets
         assert!(!outcomes[0].completed);
         assert_eq!(outcomes[0].spawns, 3);
         assert_eq!(outcomes[0].crashes, 3);
@@ -466,24 +790,28 @@ mod tests {
     }
 
     #[test]
-    fn retry_budget_is_lifetime_even_when_episodes_heal() {
-        // Pins the current retry shape: `retries_used` never resets,
-        // so a shard that shows fresh checkpoint progress before every
-        // crash still exhausts its lifetime budget and gives up — even
-        // though each episode healed. A long campaign with occasional
-        // independent failures therefore dies by attrition.
-        let shards = one_shard("lifetime");
+    fn episode_budget_resets_on_observed_progress() {
+        // The fix for the lifetime-counter bug pinned by the previous
+        // revision of this test: a shard that shows fresh checkpoint
+        // progress before every crash opens a new failure episode each
+        // time, so it heals even though its total relaunch count far
+        // exceeds episode_retries.
+        let shards = one_shard("episodes");
         std::fs::remove_file(&shards[0].checkpoint).ok();
         let mut events = Vec::new();
         let outcomes = supervise(
             &shards,
-            |plan, _| {
-                // every attempt appends (observable progress), lingers
-                // long enough for the supervisor to see it, then dies
-                sh(format!(
-                    "printf line >> {}; sleep 0.3; exit 1",
-                    plan.checkpoint.display()
-                ))
+            |plan, attempt| {
+                if attempt <= 4 {
+                    // append (observable progress), linger long enough
+                    // for the supervisor to see it, then die
+                    sh(format!(
+                        "printf line >> {}; sleep 0.3; exit 1",
+                        plan.checkpoint.display()
+                    ))
+                } else {
+                    sh(format!("printf line >> {}", plan.checkpoint.display()))
+                }
             },
             &fast_opts(),
             |ev| events.push(ev.clone()),
@@ -495,13 +823,132 @@ mod tests {
                 .any(|e| matches!(e.kind, ShardEventKind::Progress { .. })),
             "progress must have been observed between crashes"
         );
+        assert!(
+            outcomes[0].completed,
+            "4 healing episodes must outlive an episode budget of 2"
+        );
+        assert_eq!(outcomes[0].spawns, 5);
+        assert_eq!(outcomes[0].crashes, 4);
+        assert!(!outcomes[0].quarantined);
+        assert!(!events
+            .iter()
+            .any(|e| matches!(e.kind, ShardEventKind::GaveUp { .. })));
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+    }
+
+    #[test]
+    fn campaign_budget_bounds_a_progressing_crash_loop() {
+        // The backstop for the pathological flip side of episode
+        // resets: a crash loop that appends bytes on every attempt
+        // resets its episode budget forever, so only the fleet-wide
+        // campaign budget can stop it.
+        let shards = one_shard("campaign");
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+        let mut opts = fast_opts();
+        opts.policy.campaign_retries = 3;
+        opts.policy.quarantine = true;
+        let mut events = Vec::new();
+        let outcomes = supervise(
+            &shards,
+            |plan, _| {
+                sh(format!(
+                    "printf line >> {}; sleep 0.3; exit 1",
+                    plan.checkpoint.display()
+                ))
+            },
+            &opts,
+            |ev| events.push(ev.clone()),
+        )
+        .unwrap();
         assert!(!outcomes[0].completed);
-        // initial spawn + max_retries relaunches, healing notwithstanding
-        assert_eq!(outcomes[0].spawns, 3);
+        assert_eq!(outcomes[0].spawns, 4, "initial + campaign_retries");
         assert!(events
             .iter()
             .any(|e| matches!(&e.kind, ShardEventKind::GaveUp { reason }
-                if reason.contains("retry budget exhausted"))));
+                if reason.contains("campaign failure budget"))));
+        // campaign exhaustion is not the shard's fault: its checkpoint
+        // (with real records) is NOT quarantined
+        assert!(!outcomes[0].quarantined);
+        assert!(shards[0].checkpoint.exists());
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+    }
+
+    #[test]
+    fn exhausted_shard_checkpoint_is_quarantined_aside() {
+        let shards = one_shard("quarantine");
+        let aside = quarantine_path(&shards[0].checkpoint);
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+        std::fs::remove_file(&aside).ok();
+        let mut opts = fast_opts();
+        opts.policy.quarantine = true;
+        let mut events = Vec::new();
+        let outcomes = supervise(
+            &shards,
+            |plan, attempt| {
+                if attempt == 1 {
+                    // write once so there is a file to quarantine
+                    sh(format!(
+                        "printf garbage >> {}; sleep 0.3; exit 1",
+                        plan.checkpoint.display()
+                    ))
+                } else {
+                    // then fail instantly, without progress
+                    sh("exit 1".into())
+                }
+            },
+            &opts,
+            |ev| events.push(ev.clone()),
+        )
+        .unwrap();
+        assert!(!outcomes[0].completed);
+        assert_eq!(outcomes[0].spawns, 3);
+        assert!(outcomes[0].quarantined);
+        assert!(!shards[0].checkpoint.exists(), "checkpoint renamed aside");
+        assert!(aside.exists());
+        assert_eq!(
+            aside.extension().and_then(|e| e.to_str()),
+            Some("quarantined"),
+            "the rename must leave the campaign-state globs (*.jsonl) blind to it"
+        );
+        assert!(events
+            .iter()
+            .any(|e| matches!(&e.kind, ShardEventKind::Quarantined { reason }
+                if reason.contains("episode retry budget"))));
+        std::fs::remove_file(&aside).ok();
+    }
+
+    #[test]
+    fn backoff_defers_relaunch_and_is_reported() {
+        let shards = one_shard("backoff");
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+        let mut opts = fast_opts();
+        opts.policy.backoff_base = Duration::from_millis(60);
+        opts.policy.backoff_cap = Duration::from_millis(500);
+        let mut events = Vec::new();
+        let outcomes = supervise(
+            &shards,
+            |plan, attempt| {
+                if attempt == 1 {
+                    sh("exit 1".into())
+                } else {
+                    sh(format!("printf line >> {}", plan.checkpoint.display()))
+                }
+            },
+            &opts,
+            |ev| events.push(ev.clone()),
+        )
+        .unwrap();
+        assert!(outcomes[0].completed);
+        assert_eq!(outcomes[0].spawns, 2);
+        let backoff_pos = events
+            .iter()
+            .position(|e| matches!(&e.kind, ShardEventKind::Backoff { delay_ms } if *delay_ms >= 60))
+            .expect("a backoff event with the base delay");
+        let respawn_pos = events
+            .iter()
+            .position(|e| matches!(&e.kind, ShardEventKind::Spawned { attempt, .. } if *attempt == 2))
+            .expect("the deferred relaunch");
+        assert!(backoff_pos < respawn_pos);
         std::fs::remove_file(&shards[0].checkpoint).ok();
     }
 
@@ -558,7 +1005,11 @@ mod tests {
     fn chaos_kills_a_progressing_child_once_and_heals() {
         let shards = one_shard("chaos");
         std::fs::remove_file(&shards[0].checkpoint).ok();
-        let opts = SuperviseOptions { chaos_kill_one: true, ..fast_opts() };
+        let opts = SuperviseOptions {
+            stall_timeout: Duration::from_secs(30),
+            fault_plan: Some(FaultPlan::kill_one()),
+            ..fast_opts()
+        };
         let mut events = Vec::new();
         let outcomes = supervise(
             &shards,
@@ -570,7 +1021,7 @@ mod tests {
                     plan.checkpoint.display()
                 ))
             },
-            &SuperviseOptions { stall_timeout: Duration::from_secs(30), ..opts },
+            &opts,
             |ev| events.push(ev.clone()),
         )
         .unwrap();
@@ -581,6 +1032,50 @@ mod tests {
         assert!(events
             .iter()
             .any(|e| matches!(e.kind, ShardEventKind::ChaosKilled { .. })));
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+    }
+
+    #[test]
+    fn scripted_corruption_damages_the_middle_record_in_flight() {
+        let shards = one_shard("corrupt-live");
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+        let opts = SuperviseOptions {
+            fault_plan: Some(FaultPlan {
+                corrupt: vec![CorruptSpec {
+                    at_poll: 1,
+                    shard: 0,
+                    mode: CorruptMode::MiddleRecord,
+                }],
+                ..FaultPlan::default()
+            }),
+            ..fast_opts()
+        };
+        let mut events = Vec::new();
+        let outcomes = supervise(
+            &shards,
+            |plan, _| {
+                // three complete lines at once, then linger so the
+                // corruption lands while the child is alive
+                sh(format!(
+                    "printf 'aaaa\\nbbbb\\ncccc\\n' >> {}; sleep 0.3",
+                    plan.checkpoint.display()
+                ))
+            },
+            &opts,
+            |ev| events.push(ev.clone()),
+        )
+        .unwrap();
+        assert!(outcomes[0].completed);
+        assert!(
+            events.iter().any(|e| matches!(
+                &e.kind,
+                ShardEventKind::ChaosCorrupted { mode, bytes }
+                    if mode == "middle" && *bytes == 4
+            )),
+            "{events:?}"
+        );
+        let data = std::fs::read(&shards[0].checkpoint).unwrap();
+        assert_eq!(&data[..], b"aaaa\nxxxx\ncccc\n");
         std::fs::remove_file(&shards[0].checkpoint).ok();
     }
 

@@ -597,11 +597,16 @@ impl CheckpointWriter {
 
     /// Record one completed scenario. One compact-JSON line, written
     /// and flushed atomically enough for the torn-line loader: a kill
-    /// mid-write corrupts at most the final line.
+    /// mid-write corrupts at most the final line. This is the
+    /// streaming write path chaos drills inject IO faults into
+    /// ([`crate::faultfs`]); the sweep engine runs it through a
+    /// degradation ladder, so a failed record costs re-execution on
+    /// resume, never the run.
     pub fn record(&mut self, hash: &str, result: &ScenarioResult) -> Result<()> {
         let Some(f) = self.out.as_mut() else {
             return Ok(());
         };
+        crate::faultfs::check(crate::faultfs::SITE_CHECKPOINT).map_err(Error::Io)?;
         let line = json::obj(vec![
             ("hash", json::s(hash.to_string())),
             ("result", result.to_json()),
@@ -843,6 +848,46 @@ mod tests {
         assert_eq!(set.len(), 1);
         assert_eq!(set.skipped_lines, 1);
         assert!(set.get(&hash).is_some());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loader_skips_corrupted_middle_record() {
+        // Mid-file corruption (a chaos drill's corrupt_middle_record,
+        // bit rot, a partial overwrite) must degrade exactly like a
+        // torn tail: the damaged line is skipped and counted, every
+        // intact neighbour still loads, and the lost scenario is
+        // simply re-executed by resume/merge catch-up.
+        let path = tmp_path("corrupt-middle");
+        let runs = [
+            paper_run(model_i(), Method::FullRecompute),
+            paper_run(model_i(), Method::FixedChunk(8)),
+            paper_run(model_i(), Method::Mact(vec![1, 2, 4, 8])),
+        ];
+        let hashes: Vec<String> =
+            runs.iter().map(|r| scenario_hash(r, &seq())).collect();
+        {
+            let mut w = CheckpointWriter::create(&path, Some(&seq())).unwrap();
+            for (i, h) in hashes.iter().enumerate() {
+                w.record(h, &sample_result(i, 7)).unwrap();
+            }
+        }
+        let healthy = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
+        assert_eq!(healthy.len(), 3);
+        // damage the middle record in place (same length, so the tail
+        // records keep their byte offsets — exactly what the chaos
+        // helper does)
+        let n = crate::orchestrator::chaos::corrupt_middle_record(&path)
+            .unwrap()
+            .expect("three records is enough to corrupt");
+        assert!(n > 0);
+        let set = CheckpointSet::load(std::slice::from_ref(&path)).unwrap();
+        assert_eq!(set.len(), 2, "both intact neighbours survive");
+        assert_eq!(set.skipped_lines, 1, "the damage is counted, not fatal");
+        assert_eq!(set.header_lines, 1, "the header is never the target");
+        assert!(set.get(&hashes[0]).is_some());
+        assert!(set.get(&hashes[1]).is_none(), "the middle record is the loss");
+        assert!(set.get(&hashes[2]).is_some());
         std::fs::remove_file(&path).ok();
     }
 

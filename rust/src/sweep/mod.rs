@@ -91,7 +91,7 @@ use std::sync::Arc;
 use crate::config::{ShardSpec, SweepConfig};
 use crate::error::{Error, Result};
 use crate::json;
-use crate::obs::EventLog;
+use crate::obs::{DegradeLadder, EventLog, LadderVerdict};
 use crate::router::GatingSim;
 use crate::sim;
 use crate::trace::provenance::{RngVersion, RouterSampler, TraceProvenance};
@@ -569,6 +569,14 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
     // kill-safety, then fold); slices park in the assembly map until
     // their cell is complete, then fold in range order and emit the
     // same way.
+    //
+    // Record writes run through the unified degradation ladder rather
+    // than failing the sweep: one in-place retry masks a transient, a
+    // lost record is counted and emitted as `checkpoint_degraded` (the
+    // row stays in the reducer; resume/merge catch-up re-executes it),
+    // and a persistently dead disk quarantines the writer so the run
+    // finishes on in-memory results alone.
+    let ckpt_ladder = DegradeLadder::new(crate::faultfs::SITE_CHECKPOINT, 1, 3);
     let mut first_err: Option<Error> = None;
     let sampler = opts.sampler;
     let rng = opts.rng;
@@ -635,10 +643,23 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
                 events.emit("cell_eval", fields);
                 let n_rows = cell.rows.len();
                 for (hash, row) in cell.rows {
-                    if let Err(e) = writer.record(&hash, &row) {
-                        if first_err.is_none() {
-                            first_err = Some(e);
-                        }
+                    let (_, verdict) = ckpt_ladder.run(|| writer.record(&hash, &row));
+                    if matches!(
+                        verdict,
+                        LadderVerdict::Degraded | LadderVerdict::Quarantined
+                    ) {
+                        events.emit(
+                            "checkpoint_degraded",
+                            vec![
+                                ("hash", json::s(hash.as_str())),
+                                (
+                                    "quarantined",
+                                    json::Value::Bool(
+                                        verdict == LadderVerdict::Quarantined,
+                                    ),
+                                ),
+                            ],
+                        );
                     }
                     reducer.push(row);
                 }
@@ -691,10 +712,24 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
                                 out.method == sc.method && sc.run.seed == sc.seed
                             );
                             let row = ScenarioResult::from_summary(sc, &out.summary);
-                            if let Err(e) = writer.record(hash, &row) {
-                                if first_err.is_none() {
-                                    first_err = Some(e);
-                                }
+                            let (_, verdict) =
+                                ckpt_ladder.run(|| writer.record(hash, &row));
+                            if matches!(
+                                verdict,
+                                LadderVerdict::Degraded | LadderVerdict::Quarantined
+                            ) {
+                                events.emit(
+                                    "checkpoint_degraded",
+                                    vec![
+                                        ("hash", json::s(hash.as_str())),
+                                        (
+                                            "quarantined",
+                                            json::Value::Bool(
+                                                verdict == LadderVerdict::Quarantined,
+                                            ),
+                                        ),
+                                    ],
+                                );
                             }
                             reducer.push(row);
                         }
@@ -727,6 +762,7 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
     metrics.count("sweep.skipped", skipped as u64);
     metrics.count("checkpoint.records_written", writer.records_written());
     metrics.count("checkpoint.skipped_lines", done.skipped_lines as u64);
+    metrics.count("checkpoint.write_degraded", ckpt_ladder.degraded());
     metrics.count("pool.jobs", pool_stats.jobs_total());
     metrics.count("pool.steals_attempted", pool_stats.steals_attempted());
     metrics.count("pool.steals_succeeded", pool_stats.steals_succeeded());

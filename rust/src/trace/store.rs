@@ -167,6 +167,10 @@ impl TraceStore {
         // the on-disk format implies full coverage from iteration 0;
         // range traces (intra-cell splits) are never cached
         assert_eq!(trace.first_iteration, 0, "trace store only holds whole-cell traces");
+        // chaos drills inject IO faults here; callers already treat a
+        // failed save as cache-degrade (count it, keep the in-memory
+        // trace), so an injected ENOSPC exercises that exact path
+        crate::faultfs::check(crate::faultfs::SITE_TRACE_STORE).map_err(Error::Io)?;
         let moe_layers = trace.moe_layers() as u64;
         let key_u64 = u64::from_str_radix(key, 16)
             .map_err(|_| Error::config(format!("trace key '{key}' is not 16 hex chars")))?;

@@ -13,7 +13,9 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use memfine::config::{derive_seeds, LaunchConfig, Method, SweepConfig};
-use memfine::orchestrator::{self, LaunchOptions, ShardEventKind, SuperviseOptions};
+use memfine::orchestrator::{
+    self, FaultPlan, LaunchOptions, RetryPolicy, ShardEventKind, SuperviseOptions,
+};
 use memfine::sweep;
 
 /// The 24-scenario determinism grid every sweep integration test pins.
@@ -45,7 +47,7 @@ fn quiet_opts(dir: &PathBuf) -> LaunchOptions {
     LaunchOptions {
         dir: dir.clone(),
         binary: Some(bin()),
-        chaos_kill_one: false,
+        fault_plan: None,
         quiet: true,
     }
 }
@@ -125,7 +127,7 @@ fn chaos_killed_child_is_healed_to_identical_bytes() {
     cfg.poll_ms = 10;
     let dir = tmp_dir("chaos");
     let mut opts = quiet_opts(&dir);
-    opts.chaos_kill_one = true;
+    opts.fault_plan = Some(FaultPlan::kill_one());
     let launched = orchestrator::launch(&cfg, &opts).expect("launch");
 
     // exactly one child was chaos-killed mid-flight and relaunched
@@ -210,8 +212,15 @@ fn stalled_shard_is_killed_relaunched_and_merges_identically() {
     let sup = SuperviseOptions {
         stall_timeout: Duration::from_millis(cfg.stall_timeout_ms),
         poll_interval: Duration::from_millis(cfg.poll_ms),
-        max_retries: 2,
-        chaos_kill_one: false,
+        policy: RetryPolicy {
+            episode_retries: 2,
+            campaign_retries: 0,
+            backoff_base: Duration::ZERO,
+            backoff_cap: Duration::ZERO,
+            jitter_seed: 0,
+            quarantine: false,
+        },
+        fault_plan: None,
     };
     let mut events = Vec::new();
     let outcomes = orchestrator::supervise(
@@ -294,8 +303,15 @@ fn shard_that_gives_up_is_healed_by_the_merge_catchup() {
     let sup = SuperviseOptions {
         stall_timeout: Duration::from_secs(30),
         poll_interval: Duration::from_millis(10),
-        max_retries: 1,
-        chaos_kill_one: false,
+        policy: RetryPolicy {
+            episode_retries: 1,
+            campaign_retries: 0,
+            backoff_base: Duration::ZERO,
+            backoff_cap: Duration::ZERO,
+            jitter_seed: 0,
+            quarantine: false,
+        },
+        fault_plan: None,
     };
     let outcomes = orchestrator::supervise(
         &plan.shards,
@@ -347,6 +363,178 @@ fn shard_that_gives_up_is_healed_by_the_merge_catchup() {
         merge.report.to_json().to_string_pretty(),
         direct.to_json().to_string_pretty(),
         "gave-up-shard artifact diverged from the single-process run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// THE acceptance drill of the fault plane: a seeded `FaultPlan` (kill
+/// storm + mid-file corruption + injected ENOSPC on every child's
+/// checkpoint writer) thrown at a real 3-process launch, which must
+/// still converge to the byte-identical single-process artifact —
+/// narrating the damage (checkpoint_degraded) and raising the
+/// watchdog's io-degrade alert along the way.
+#[test]
+#[cfg(unix)]
+fn seeded_chaos_drill_heals_to_identical_bytes_and_raises_alerts() {
+    let mut cfg = LaunchConfig::new(grid_3x2x4());
+    cfg.procs = 3;
+    cfg.poll_ms = 10;
+    let dir = tmp_dir("seeded-chaos");
+    let mut opts = quiet_opts(&dir);
+    opts.fault_plan = Some(FaultPlan::from_seed(7, &dir));
+    let launched = orchestrator::launch(&cfg, &opts).expect("launch");
+
+    // the fleet healed: every shard eventually completed (chaos kills
+    // relaunch unconditionally; they never consume retry budget) and
+    // the merge audit covers the whole grid
+    assert!(launched.outcomes.iter().all(|o| o.completed));
+    assert!(launched.merge.audit.complete());
+
+    // THE acceptance bytes, under fire
+    let direct = sweep::run_sweep(&grid_3x2x4(), 1).expect("direct sweep");
+    assert_eq!(
+        launched.merge.report.to_json().to_string_pretty(),
+        direct.to_json().to_string_pretty(),
+        "seeded chaos drill diverged from the single-process run"
+    );
+
+    // every first-attempt child runs with checkpoint:enospc:2 armed;
+    // the write ladder retries once in place, so the pair of charges
+    // surfaces as exactly one degraded (lost, later healed) record in
+    // at least one child — narrated as checkpoint_degraded and
+    // escalated once by the watchdog. Kill/corrupt strikes are
+    // opportunistic (fast fleets may finish first), so only the IO
+    // fault is asserted strictly.
+    let (events, torn) =
+        memfine::obs::read_events(&dir.join("events.jsonl")).expect("read event log");
+    assert_eq!(torn, 0, "a finished campaign leaves no torn event lines");
+    let kinds = memfine::obs::summarize(&events);
+    assert!(
+        kinds.get("checkpoint_degraded").copied().unwrap_or(0) >= 1,
+        "injected ENOSPC must surface as a degraded record: {kinds:?}"
+    );
+    assert_eq!(
+        kinds.get("alert_io_degrade_burst"),
+        Some(&1),
+        "watchdog must raise the io-degrade alert exactly once: {kinds:?}"
+    );
+    assert_eq!(kinds.get("merge_done"), Some(&1));
+
+    // degraded records are missing from shard checkpoints, so the
+    // catch-up pass re-executed them in-process
+    assert!(launched.merge.healed >= 1, "degraded records must be healed");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A shard that makes real checkpoint progress and then crashes on
+/// every relaunch exhausts its episode budget and has its checkpoint
+/// quarantined aside: the merge must ignore the quarantined records,
+/// re-execute every one of the shard's scenarios in-process, and still
+/// produce the single-process bytes.
+#[test]
+#[cfg(unix)]
+fn quarantined_shard_checkpoint_is_ignored_and_healed_identically() {
+    let mut cfg = LaunchConfig::new(grid_3x2x4());
+    cfg.procs = 3;
+    cfg.poll_ms = 10;
+    let dir = tmp_dir("quarantine");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan = orchestrator::plan_shards(&cfg, &dir).expect("plan");
+    let sweep_json = dir.join("sweep.json");
+    std::fs::write(
+        &sweep_json,
+        format!("{}\n", cfg.sweep.to_json().to_string_pretty()),
+    )
+    .unwrap();
+
+    let sup = SuperviseOptions {
+        stall_timeout: Duration::from_secs(30),
+        poll_interval: Duration::from_millis(10),
+        policy: RetryPolicy {
+            episode_retries: 1,
+            campaign_retries: 0,
+            backoff_base: Duration::ZERO,
+            backoff_cap: Duration::ZERO,
+            jitter_seed: 0,
+            quarantine: true,
+        },
+        fault_plan: None,
+    };
+    let mut events = Vec::new();
+    let outcomes = orchestrator::supervise(
+        &plan.shards,
+        |shard, attempt| {
+            use std::process::{Command, Stdio};
+            let mut cmd;
+            if shard.index == 2 && attempt >= 2 {
+                // every relaunch crashes without touching the checkpoint
+                cmd = Command::new("false");
+            } else if shard.index == 2 {
+                // first attempt: the full shard sweep succeeds (the
+                // supervisor observes real checkpoint progress, which
+                // resets the episode budget), then the child dies — so
+                // the quarantined file holds genuine records the merge
+                // must refuse to trust
+                cmd = Command::new("sh");
+                cmd.arg("-c").arg(format!(
+                    "{} sweep --config {} --shard {}/{} --checkpoint {} --resume \
+                     --workers 1 --out - >/dev/null 2>&1; sleep 0.3; exit 1",
+                    bin().display(),
+                    sweep_json.display(),
+                    shard.spec.index,
+                    shard.spec.count,
+                    shard.checkpoint.display(),
+                ));
+            } else {
+                cmd = Command::new(bin());
+                cmd.arg("sweep")
+                    .arg("--config")
+                    .arg(&sweep_json)
+                    .arg("--shard")
+                    .arg(format!("{}/{}", shard.spec.index, shard.spec.count))
+                    .arg("--checkpoint")
+                    .arg(&shard.checkpoint)
+                    .arg("--resume")
+                    .arg("--workers")
+                    .arg("1")
+                    .arg("--out")
+                    .arg("-");
+            }
+            cmd.stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .spawn()
+                .map_err(memfine::Error::Io)
+        },
+        &sup,
+        |ev| events.push(ev.clone()),
+    )
+    .expect("supervise");
+
+    assert!(!outcomes[2].completed);
+    assert!(outcomes[2].quarantined, "shard 2 must have been quarantined");
+    assert_eq!(outcomes[2].spawns, 2); // progress reset the budget once
+    assert!(outcomes[0].completed && outcomes[1].completed);
+    let aside = orchestrator::supervise::quarantine_path(&plan.shards[2].checkpoint);
+    assert!(aside.exists(), "checkpoint must be renamed aside, not deleted");
+    assert!(
+        !plan.shards[2].checkpoint.exists(),
+        "the live checkpoint path must be vacated"
+    );
+    assert!(events
+        .iter()
+        .any(|e| e.shard == 2 && matches!(e.kind, ShardEventKind::Quarantined { .. })));
+
+    // the quarantined records are dead to the merge: every shard-2
+    // scenario is redistributed to the in-process catch-up pass
+    let merge = orchestrator::merge_and_finish(&cfg, &plan, &dir, &[]).expect("merge");
+    assert_eq!(merge.healed, plan.shards[2].scenarios);
+    assert!(merge.audit.complete());
+    let direct = sweep::run_sweep(&grid_3x2x4(), 1).expect("direct sweep");
+    assert_eq!(
+        merge.report.to_json().to_string_pretty(),
+        direct.to_json().to_string_pretty(),
+        "quarantine-healed artifact diverged from the single-process run"
     );
     std::fs::remove_dir_all(&dir).ok();
 }
