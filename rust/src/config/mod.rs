@@ -817,6 +817,19 @@ pub struct LaunchConfig {
     /// never part of any scenario identity, never perturbs artifact
     /// bytes.
     pub telemetry: bool,
+    /// Host specs the fleet spawns across (`"local"` or
+    /// `"ssh:target"`, see [`crate::orchestrator::HostSpec`]).
+    /// Empty (the default) = classic single-host launch with no lease
+    /// plane. With one or more entries, shards round-robin across the
+    /// hosts and every host maintains a renewal lease in the campaign
+    /// dir; a host whose lease stops renewing is declared lost and its
+    /// shards are reassigned to survivors. Execution-only.
+    pub hosts: Vec<String>,
+    /// A host whose lease has not renewed for this long is declared
+    /// lost (multi-host launches only). Expiry is renewal-driven — the
+    /// supervisor watches the lease's counter against its own
+    /// monotonic clock, so cross-host wall-clock skew cannot fire it.
+    pub lease_timeout_ms: u64,
 }
 
 impl LaunchConfig {
@@ -839,6 +852,8 @@ impl LaunchConfig {
             rng: RngVersion::default(),
             pin_cores: false,
             telemetry: true,
+            hosts: Vec::new(),
+            lease_timeout_ms: 10_000,
         }
     }
 
@@ -872,6 +887,11 @@ impl LaunchConfig {
                 self.stall_timeout_ms, self.poll_ms
             )));
         }
+        if !self.hosts.is_empty() && self.lease_timeout_ms == 0 {
+            return Err(Error::config(
+                "lease_timeout_ms must be positive for a multi-host launch",
+            ));
+        }
         Ok(())
     }
 
@@ -890,6 +910,11 @@ impl LaunchConfig {
             ("rng", json::s(self.rng.tag().to_string())),
             ("pin_cores", Value::Bool(self.pin_cores)),
             ("telemetry", Value::Bool(self.telemetry)),
+            (
+                "hosts",
+                json::arr(self.hosts.iter().map(|h| json::s(h.as_str())).collect()),
+            ),
+            ("lease_timeout_ms", json::num(self.lease_timeout_ms as f64)),
         ])
     }
 
@@ -941,6 +966,25 @@ impl LaunchConfig {
             // (telemetry is sidecar, so enabling it retroactively
             // cannot change what those campaigns compute)
             telemetry: v.get("telemetry").and_then(Value::as_bool).unwrap_or(true),
+            // absent in pre-multi-host launch.json files — empty, the
+            // classic single-host launch with no lease plane
+            hosts: match v.get("hosts") {
+                Some(arr) => arr
+                    .as_arr()
+                    .ok_or_else(|| Error::config("launch hosts must be an array"))?
+                    .iter()
+                    .map(|h| {
+                        h.as_str().map(str::to_string).ok_or_else(|| {
+                            Error::config("launch hosts entries must be strings")
+                        })
+                    })
+                    .collect::<Result<Vec<String>>>()?,
+                None => Vec::new(),
+            },
+            lease_timeout_ms: v
+                .get("lease_timeout_ms")
+                .and_then(Value::as_u64)
+                .unwrap_or(10_000),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -1205,6 +1249,8 @@ mod tests {
         cfg.rng = RngVersion::V2;
         cfg.pin_cores = true;
         cfg.telemetry = false;
+        cfg.hosts = vec!["local".into(), "ssh:worker-2".into()];
+        cfg.lease_timeout_ms = 4_000;
         cfg.validate().unwrap();
         let back = LaunchConfig::from_json(
             &crate::json::parse(&cfg.to_json().to_string_pretty()).unwrap(),
@@ -1221,11 +1267,18 @@ mod tests {
             // pre-telemetry files carry no "telemetry" — absent means
             // on (sidecar, so retroactively harmless)
             map.remove("telemetry");
+            // pre-multi-host files carry neither "hosts" nor
+            // "lease_timeout_ms" — absent means the classic
+            // single-host launch
+            map.remove("hosts");
+            map.remove("lease_timeout_ms");
         }
         let legacy = LaunchConfig::from_json(&doc).unwrap();
         assert!(!legacy.pin_cores);
         assert_eq!(legacy.rng, RngVersion::V1);
         assert!(legacy.telemetry);
+        assert!(legacy.hosts.is_empty());
+        assert_eq!(legacy.lease_timeout_ms, 10_000);
         // defaults are sane and validate; the sampler default is the
         // post-flip splitting multinomial, the RNG default is v1
         let d = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
@@ -1298,6 +1351,17 @@ mod tests {
         let mut cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
         cfg.sweep.models.clear();
         assert!(cfg.validate().is_err());
+        // a multi-host launch needs a live lease plane
+        let mut cfg = LaunchConfig::new(SweepConfig::paper_grid(7, 2, 10));
+        cfg.hosts = vec!["local".into()];
+        cfg.lease_timeout_ms = 0;
+        assert!(cfg.validate().is_err());
+        cfg.lease_timeout_ms = 2_000;
+        cfg.validate().unwrap();
+        // single-host configs don't care about the lease knob
+        cfg.hosts.clear();
+        cfg.lease_timeout_ms = 0;
+        cfg.validate().unwrap();
     }
 
     #[test]

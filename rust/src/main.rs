@@ -15,15 +15,19 @@
 //!                 parallel scenario grid, resumable/shardable
 //! memfine launch  [grid flags | --config FILE] [--procs N] [--dir DIR]
 //!                 [--stall-timeout-ms N] [--poll-ms N] [--retries N]
-//!                 [--chaos-kill] [--no-telemetry] [--out FILE]
+//!                 [--hosts local,ssh:h1,...] [--lease-timeout-ms N]
+//!                 [--trace-cache GLOBAL] [--chaos-kill] [--no-telemetry]
+//!                 [--out FILE]
 //!                 orchestrated multi-process sweep: spawn, supervise,
-//!                 heal, auto-merge
+//!                 heal, auto-merge — optionally across hosts under
+//!                 lease-based whole-host loss healing
 //! memfine status  [DIR]                     campaign status: shard table,
 //!                 coverage, cache hit rate, ETA (heartbeats + event log)
 //! memfine events  [DIR|FILE] [--type T] [--shard N] [--hash H] [--summary]
 //!                 filter or summarise a campaign's events.jsonl
 //! memfine checkpoint compact FILE... [--out FILE]
 //! memfine checkpoint audit FILE... --config FILE [--router seq|split] [--rng v1|v2]
+//! memfine trace-cache stats|gc DIR [--max-age-h N]   shared cache upkeep
 //! memfine repro   table4|fig2|fig4|fig5      regenerate a paper artifact
 //! memfine train   [--steps N] [--artifacts DIR]  E2E mini-model training
 //! memfine coord   [--policy mact|fixed] [--budget-mb N]  real EP layer pass
@@ -50,6 +54,7 @@ const VALUE_OPTS: &[&str] = &[
     "stall-timeout-ms", "poll-ms", "retries", "campaign-retries",
     "backoff-ms", "chaos-plan", "chaos-seed", "router", "trace-cache",
     "pool", "channel", "rng", "split-iters", "events", "type", "hash",
+    "hosts", "lease-timeout-ms", "max-age-h",
 ];
 
 fn main() {
@@ -75,6 +80,7 @@ fn main() {
         "status" => cmd_status(&parsed),
         "events" => cmd_events(&parsed),
         "checkpoint" => cmd_checkpoint(&parsed),
+        "trace-cache" => cmd_trace_cache(&parsed),
         "repro" => cmd_repro(&parsed),
         "train" => cmd_train(&parsed),
         "coord" => cmd_coord(&parsed),
@@ -104,6 +110,7 @@ fn print_usage() {
                 ("status", "campaign status: shard table, coverage, cache hit rate, ETA"),
                 ("events", "filter/summarise a campaign event log (events.jsonl)"),
                 ("checkpoint", "checkpoint tools: compact FILE... | audit FILE... --config F"),
+                ("trace-cache", "shared trace-cache tools: stats DIR | gc DIR --max-age-h N"),
                 ("repro", "regenerate a paper artifact: table4|fig2|fig4|fig5"),
                 ("train", "end-to-end mini-model training via PJRT"),
                 ("coord", "real EP coordinator layer pass"),
@@ -127,7 +134,7 @@ fn print_usage() {
                 OptSpec { name: "router", help: "routing sampler: split (binomial-splitting, fast) or seq (pre-flip sequential; different sample, hash-distinct)", takes_value: true, default: Some("split") },
                 OptSpec { name: "rng", help: "trace generator: v1 (sequential xoshiro forks; the frozen default) or v2 (counter-based Philox; O(1) stream access, enables intra-cell splitting; hash-distinct)", takes_value: true, default: Some("v1") },
                 OptSpec { name: "split-iters", help: "sweep: force the v2 intra-cell split width (iterations per job; 0 = auto, v2 only)", takes_value: true, default: Some("0") },
-                OptSpec { name: "trace-cache", help: "sweep: on-disk routed-trace cache dir (launch manages its own under --dir)", takes_value: true, default: None },
+                OptSpec { name: "trace-cache", help: "sweep: routed-trace cache DIR[,GLOBAL] (campaign tier, optional global tier); launch: cross-campaign GLOBAL root behind the campaign cache under --dir", takes_value: true, default: None },
                 OptSpec { name: "pool", help: "sweep worker schedule: stealing (per-worker deques) or injector (shared queue); never changes artifact bytes", takes_value: true, default: Some("stealing") },
                 OptSpec { name: "channel", help: "sweep result channel: bounded (backpressure, ~4x workers) or std (unbounded mpsc)", takes_value: true, default: Some("bounded") },
                 OptSpec { name: "pin-cores", help: "sweep/launch: best-effort pin worker k to core k (Linux sched_setaffinity; no-op elsewhere)", takes_value: false, default: None },
@@ -143,6 +150,9 @@ fn print_usage() {
                 OptSpec { name: "campaign-retries", help: "launch: fleet-wide relaunch budget for the campaign (0 = unlimited)", takes_value: true, default: Some("16") },
                 OptSpec { name: "backoff-ms", help: "launch: base relaunch backoff, doubling per relaunch with deterministic jitter (0 = none)", takes_value: true, default: Some("100") },
                 OptSpec { name: "no-quarantine", help: "launch: keep a given-up shard's checkpoint in place instead of renaming it aside", takes_value: false, default: None },
+                OptSpec { name: "hosts", help: "launch: comma-separated host specs (local | ssh:target); shards round-robin across them under the lease plane", takes_value: true, default: None },
+                OptSpec { name: "lease-timeout-ms", help: "launch: declare a host lost when its lease stops renewing this long (multi-host only)", takes_value: true, default: Some("10000") },
+                OptSpec { name: "max-age-h", help: "trace-cache gc: evict entries older than this many hours", takes_value: true, default: Some("168") },
                 OptSpec { name: "chaos-kill", help: "launch: kill one progressing child once (recovery drill)", takes_value: false, default: None },
                 OptSpec { name: "chaos-seed", help: "launch: run the seeded chaos drill (kill storm + checkpoint corruption + child ENOSPC), deterministic in seed+dir", takes_value: true, default: None },
                 OptSpec { name: "chaos-plan", help: "launch: run the scripted chaos drill from a JSON fault-plan file", takes_value: true, default: None },
@@ -380,6 +390,18 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         (None, Some(p)) => p.rng()?,
         (None, None) => RngVersion::default(),
     };
+    // --trace-cache DIR[,GLOBAL]: the campaign tier, optionally backed
+    // by a cross-campaign global root (how launch wires its children)
+    let trace_cache_arg: Vec<std::path::PathBuf> = args
+        .get("trace-cache")
+        .map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(std::path::PathBuf::from)
+                .collect()
+        })
+        .unwrap_or_default();
     let opts = memfine::sweep::SweepRunOptions {
         workers: args.get_u64("workers", 0)? as usize,
         checkpoint,
@@ -390,7 +412,8 @@ fn cmd_sweep(args: &Args) -> memfine::Result<()> {
         rng,
         split_iters: args.get_u64("split-iters", 0)?,
         unfused: args.has_flag("unfused"),
-        trace_cache: args.get("trace-cache").map(std::path::PathBuf::from),
+        trace_cache: trace_cache_arg.first().cloned(),
+        trace_cache_global: trace_cache_arg.get(1).cloned(),
         pool: memfine::sweep::Schedule::parse(&args.get_or("pool", "stealing"))?,
         channel: memfine::sweep::ChannelKind::parse(&args.get_or("channel", "bounded"))?,
         pin_cores: args.has_flag("pin-cores"),
@@ -522,6 +545,17 @@ fn cmd_launch(args: &Args) -> memfine::Result<()> {
     if args.has_flag("no-telemetry") {
         cfg.telemetry = false;
     }
+    if let Some(list) = args.get("hosts") {
+        cfg.hosts = list
+            .split(',')
+            .map(str::trim)
+            .filter(|h| !h.is_empty())
+            .map(str::to_string)
+            .collect();
+    }
+    if args.get("lease-timeout-ms").is_some() {
+        cfg.lease_timeout_ms = args.get_u64("lease-timeout-ms", 10_000)?;
+    }
 
     let dir = std::path::PathBuf::from(args.get_or("dir", "launch-run"));
     // Chaos drill sources, in precedence order: an explicit plan file,
@@ -552,6 +586,9 @@ fn cmd_launch(args: &Args) -> memfine::Result<()> {
         binary: None,
         fault_plan,
         quiet: false,
+        // launch's --trace-cache is the cross-campaign global root; the
+        // campaign tier always lives under --dir
+        trace_cache_global: args.get("trace-cache").map(std::path::PathBuf::from),
     };
     let launched = memfine::orchestrator::launch(&cfg, &opts)?;
 
@@ -710,6 +747,48 @@ fn cmd_status(args: &Args) -> memfine::Result<()> {
     let counts = memfine::obs::summarize(&events);
     let count_of = |k: &str| counts.get(k).copied().unwrap_or(0);
 
+    // Host plane (multi-host campaigns): current shard assignment by
+    // replaying the host tag on shard events (initial round-robin,
+    // last tag wins — the same fold the supervisor's emitter used),
+    // losses from shard_host_lost, lease freshness from lease files.
+    let host_specs = if cfg.hosts.is_empty() {
+        Vec::new()
+    } else {
+        memfine::orchestrator::HostSpec::parse_list(&cfg.hosts)?
+    };
+    let multi_host = !host_specs.is_empty();
+    let mut host_of: Vec<usize> = (0..plan.shards.len())
+        .map(|i| i % host_specs.len().max(1))
+        .collect();
+    let mut lost_hosts: std::collections::BTreeSet<&str> =
+        std::collections::BTreeSet::new();
+    if multi_host {
+        let index_of: std::collections::BTreeMap<&str, usize> = host_specs
+            .iter()
+            .enumerate()
+            .map(|(i, h)| (h.id.as_str(), i))
+            .collect();
+        for ev in &events {
+            if ev.kind == "shard_host_lost" {
+                if let Some(h) = ev.field_str("host") {
+                    lost_hosts.insert(h);
+                }
+                continue;
+            }
+            if !ev.kind.starts_with("shard_") {
+                continue;
+            }
+            if let (Some(s), Some(h)) = (ev.field_u64("shard"), ev.field_str("host"))
+            {
+                if let Some(&hi) = index_of.get(h) {
+                    if (s as usize) < host_of.len() {
+                        host_of[s as usize] = hi;
+                    }
+                }
+            }
+        }
+    }
+
     println!(
         "campaign {}: {} scenario(s) in {} trace cell(s) over {} shard proc(s)",
         dir.display(),
@@ -765,30 +844,52 @@ fn cmd_status(args: &Args) -> memfine::Result<()> {
             .filter(|k| k.starts_with("alert_"))
             .map(|k| k.as_str())
             .collect();
-        if quarantined > 0 || !alerts.is_empty() {
+        if quarantined > 0 || !alerts.is_empty() || !lost_hosts.is_empty() {
             println!(
-                "health:    {} quarantined checkpoint(s); alerts: {}",
+                "health:    {} quarantined checkpoint(s); alerts: {}{}",
                 quarantined,
                 if alerts.is_empty() {
                     "none".to_string()
                 } else {
                     alerts.join(", ")
                 },
+                if lost_hosts.is_empty() {
+                    String::new()
+                } else {
+                    format!(
+                        "; hosts LOST: {}",
+                        lost_hosts.iter().copied().collect::<Vec<_>>().join(", ")
+                    )
+                },
             );
         }
     }
 
     println!();
+    let host_col = |shard: usize| -> String {
+        if multi_host {
+            format!(" {:>6}", host_specs[host_of[shard]].id)
+        } else {
+            String::new()
+        }
+    };
     println!(
-        "{:>5} {:>9} {:>9} {:>12} {:>10}  {}",
-        "shard", "cells", "scenarios", "checkpoint", "heartbeat", "last event"
+        "{:>5}{} {:>9} {:>9} {:>12} {:>10}  {}",
+        "shard",
+        if multi_host { format!(" {:>6}", "host") } else { String::new() },
+        "cells",
+        "scenarios",
+        "checkpoint",
+        "heartbeat",
+        "last event"
     );
     for shard in &plan.shards {
         let len = memfine::orchestrator::probe_len(&shard.checkpoint);
         let age = memfine::orchestrator::probe_mtime_age(&shard.checkpoint);
         println!(
-            "{:>5} {:>9} {:>9} {:>12} {:>10}  {}",
+            "{:>5}{} {:>9} {:>9} {:>12} {:>10}  {}",
             shard.index,
+            host_col(shard.index),
             shard.cells,
             shard.scenarios,
             match len {
@@ -812,6 +913,38 @@ fn cmd_status(args: &Args) -> memfine::Result<()> {
         );
     }
     println!();
+
+    // Per-host view: spec, lease freshness (mtime of the lease file —
+    // renewal-driven expiry lives in the supervisor; this is just an
+    // observability read), and the shards currently assigned.
+    if multi_host {
+        println!(
+            "{:>5} {:>14} {:>10} {:>6}  {}",
+            "host", "spec", "lease", "state", "shards"
+        );
+        for (i, spec) in host_specs.iter().enumerate() {
+            let lease = memfine::orchestrator::lease_path(&dir, &spec.id);
+            let lease_age = memfine::orchestrator::probe_mtime_age(&lease);
+            let shards: Vec<String> = host_of
+                .iter()
+                .enumerate()
+                .filter(|(_, &h)| h == i)
+                .map(|(s, _)| s.to_string())
+                .collect();
+            println!(
+                "{:>5} {:>14} {:>10} {:>6}  {}",
+                spec.id,
+                cfg.hosts.get(i).map(String::as_str).unwrap_or("local"),
+                match lease_age {
+                    Some(a) => format!("{:.0}s ago", a.as_secs_f64()),
+                    None => "-".into(),
+                },
+                if lost_hosts.contains(spec.id.as_str()) { "LOST" } else { "ok" },
+                if shards.is_empty() { "-".into() } else { shards.join(",") },
+            );
+        }
+        println!();
+    }
 
     if audit.complete() || merged_records.is_some() {
         println!(
@@ -1030,6 +1163,57 @@ fn cmd_checkpoint(args: &Args) -> memfine::Result<()> {
         }
         other => Err(memfine::Error::Cli(format!(
             "unknown checkpoint subcommand '{other}' (compact|audit)"
+        ))),
+    }
+}
+
+/// Upkeep for a shared (cross-campaign) trace-cache root: `stats`
+/// reports entry count and bytes, `gc` evicts entries older than
+/// `--max-age-h`. Safe at any time — content addressing means an
+/// evicted trace just regenerates on next use.
+fn cmd_trace_cache(args: &Args) -> memfine::Result<()> {
+    use memfine::trace::store::TraceStore;
+    let sub = args.positional.first().map(String::as_str).unwrap_or("");
+    let dir = args
+        .positional
+        .get(1)
+        .cloned()
+        .or_else(|| args.get("trace-cache").map(str::to_string))
+        .ok_or_else(|| {
+            memfine::Error::Cli("trace-cache needs a cache directory".into())
+        })?;
+    let store = TraceStore::open(&dir)?;
+    match sub {
+        "stats" => {
+            let s = store.stats();
+            println!(
+                "trace cache {}: {} entr{}, {}",
+                dir,
+                s.entries,
+                if s.entries == 1 { "y" } else { "ies" },
+                fmt_bytes(s.bytes),
+            );
+            Ok(())
+        }
+        "gc" => {
+            let hours = args.get_u64("max-age-h", 168)?;
+            let gone =
+                store.gc(std::time::Duration::from_secs(hours.saturating_mul(3600)));
+            let left = store.stats();
+            println!(
+                "trace cache {}: evicted {} entr{} ({}) older than {}h; {} left ({})",
+                dir,
+                gone.removed,
+                if gone.removed == 1 { "y" } else { "ies" },
+                fmt_bytes(gone.bytes),
+                hours,
+                left.entries,
+                fmt_bytes(left.bytes),
+            );
+            Ok(())
+        }
+        other => Err(memfine::Error::Cli(format!(
+            "unknown trace-cache subcommand '{other}' (stats|gc)"
         ))),
     }
 }

@@ -30,6 +30,9 @@ pub const ALERT_STEAL_STORM: &str = "alert_steal_storm";
 /// records lost to the ladder, or cells that fell back to uncached
 /// trace generation after a store failure).
 pub const ALERT_IO_DEGRADE_BURST: &str = "alert_io_degrade_burst";
+/// Alert kind tag: `host_loss`+ whole hosts declared lost (lease
+/// expired; their shards were reassigned to survivors).
+pub const ALERT_HOST_LOST: &str = "alert_host_lost";
 
 /// Thresholds for raising alerts. All are inclusive (`count >=
 /// threshold` raises); a threshold of 0 disables that alert.
@@ -43,6 +46,9 @@ pub struct WatchConfig {
     pub steal_storm: u64,
     /// Degraded IO writes before an IO degrade burst.
     pub degrade_burst: u64,
+    /// Hosts declared lost before the host-loss alert. Losing even one
+    /// whole host is remarkable, so the default threshold is 1.
+    pub host_loss: u64,
 }
 
 impl Default for WatchConfig {
@@ -52,6 +58,7 @@ impl Default for WatchConfig {
             stall_burst: 3,
             steal_storm: 100_000,
             degrade_burst: 1,
+            host_loss: 1,
         }
     }
 }
@@ -76,6 +83,7 @@ pub struct Watchdog {
     stalls: u64,
     steals: u64,
     degrades: u64,
+    lost_hosts: Vec<String>,
     max_attempt: BTreeMap<u64, u64>,
     skipped: usize,
     raised: BTreeSet<&'static str>,
@@ -89,6 +97,7 @@ impl Watchdog {
             stalls: 0,
             steals: 0,
             degrades: 0,
+            lost_hosts: Vec::new(),
             max_attempt: BTreeMap::new(),
             skipped: 0,
             raised: BTreeSet::new(),
@@ -128,6 +137,10 @@ impl Watchdog {
                     if ev.field_str("cache") == Some("degrade") {
                         self.degrades += 1;
                     }
+                }
+                "shard_host_lost" => {
+                    self.lost_hosts
+                        .push(ev.field_str("host").unwrap_or("?").to_string());
                 }
                 _ => {}
             }
@@ -182,6 +195,22 @@ impl Watchdog {
                 kind: ALERT_IO_DEGRADE_BURST,
                 message: format!("IO degrade burst: {} degraded writes", self.degrades),
                 fields: vec![("degraded", json::num(self.degrades as f64))],
+            });
+        }
+        if self.cfg.host_loss > 0
+            && self.lost_hosts.len() as u64 >= self.cfg.host_loss
+            && self.raised.insert(ALERT_HOST_LOST)
+        {
+            alerts.push(Alert {
+                kind: ALERT_HOST_LOST,
+                message: format!(
+                    "host lost: lease expired on {} (shards reassigned to survivors)",
+                    self.lost_hosts.join(", ")
+                ),
+                fields: vec![
+                    ("host", json::s(self.lost_hosts.join(","))),
+                    ("hosts_lost", json::num(self.lost_hosts.len() as f64)),
+                ],
             });
         }
         alerts
@@ -276,6 +305,32 @@ mod tests {
         let log = EventLog::open(&path);
         log.emit(ALERT_STALL_BURST, vec![("stalls", json::num(99.0))]);
         assert!(dog.scan(&path).is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn host_loss_raises_once_and_names_the_host() {
+        let path = tmp("hostloss.jsonl");
+        let log = EventLog::open(&path);
+        let mut dog = Watchdog::new(WatchConfig::default());
+        log.emit(
+            "shard_host_lost",
+            vec![("shard", json::num(1.0)), ("host", json::s("h1"))],
+        );
+        let alerts = dog.scan(&path);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].kind, ALERT_HOST_LOST);
+        assert!(alerts[0].message.contains("h1"), "{}", alerts[0].message);
+        assert!(alerts[0]
+            .fields
+            .iter()
+            .any(|(k, v)| *k == "host" && v.as_str() == Some("h1")));
+        // a second loss does not re-raise
+        log.emit(
+            "shard_host_lost",
+            vec![("shard", json::num(3.0)), ("host", json::s("h2"))],
+        );
+        assert!(dog.scan(&path).is_empty(), "raised at most once");
         std::fs::remove_file(&path).unwrap();
     }
 

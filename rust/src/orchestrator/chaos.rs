@@ -28,7 +28,8 @@
 //!               {"at_poll": 9, "shard": 2, "mode": "truncate", "bytes": 17}],
 //!   "slow":    [{"shard": 1, "delay_ms": 50}],
 //!   "io":      [{"site": "checkpoint", "kind": "enospc", "count": 1,
-//!                "scope": "children"}]
+//!                "scope": "children"}],
+//!   "host_loss": [{"at_poll": 3, "host": 1}]
 //! }
 //! ```
 
@@ -115,6 +116,19 @@ pub struct IoFaultSpec {
     pub scope: IoScope,
 }
 
+/// Lose a whole host at (or after) a supervision poll tick: every
+/// child assigned to `host` is killed *and* the host's lease stops
+/// renewing, so the supervisor must detect the expiry and reassign
+/// the shards to survivors. Host indices are taken modulo the host
+/// count. Only meaningful on a multi-host launch with a lease plane;
+/// a single-host launch drops the spec with a warning (nothing could
+/// ever declare the loss).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostLossSpec {
+    pub at_poll: u64,
+    pub host: usize,
+}
+
 /// A complete drill script. See the module docs for the file format.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct FaultPlan {
@@ -123,6 +137,7 @@ pub struct FaultPlan {
     pub corrupt: Vec<CorruptSpec>,
     pub slow: Vec<SlowSpec>,
     pub io: Vec<IoFaultSpec>,
+    pub host_loss: Vec<HostLossSpec>,
 }
 
 /// splitmix64 finalizer — the plan generator's only mixing primitive.
@@ -187,12 +202,17 @@ impl FaultPlan {
                 count: 2,
                 scope: IoScope::Children,
             }],
+            host_loss: Vec::new(),
         }
     }
 
     /// Whether the plan schedules anything at all.
     pub fn is_empty(&self) -> bool {
-        self.kills.is_empty() && self.corrupt.is_empty() && self.slow.is_empty() && self.io.is_empty()
+        self.kills.is_empty()
+            && self.corrupt.is_empty()
+            && self.slow.is_empty()
+            && self.io.is_empty()
+            && self.host_loss.is_empty()
     }
 
     /// The env-var value arming this plan's children-scoped IO specs
@@ -267,12 +287,23 @@ impl FaultPlan {
                 ])
             })
             .collect();
+        let host_loss = self
+            .host_loss
+            .iter()
+            .map(|h| {
+                json::obj(vec![
+                    ("at_poll", json::num(h.at_poll as f64)),
+                    ("host", json::num(h.host as f64)),
+                ])
+            })
+            .collect();
         json::obj(vec![
             ("seed", json::num(self.seed as f64)),
             ("kills", json::arr(kills)),
             ("corrupt", json::arr(corrupt)),
             ("slow", json::arr(slow)),
             ("io", json::arr(io)),
+            ("host_loss", json::arr(host_loss)),
         ])
     }
 
@@ -338,6 +369,12 @@ impl FaultPlan {
                 kind,
                 count: s.get("count").and_then(Value::as_u64).unwrap_or(1),
                 scope,
+            });
+        }
+        for h in section("host_loss") {
+            plan.host_loss.push(HostLossSpec {
+                at_poll: h.req_u64("at_poll")?,
+                host: h.req_u64("host")? as usize,
             });
         }
         Ok(plan)
@@ -423,7 +460,8 @@ mod tests {
         assert_eq!(a.io[0].scope, IoScope::Children);
         assert_eq!(
             a.child_fault_env().as_deref(),
-            Some("checkpoint:enospc:1")
+            Some("checkpoint:enospc:2"),
+            "two charges: the ladder retries a record write once in place"
         );
         assert!(!a.is_empty());
     }
@@ -451,6 +489,7 @@ mod tests {
                 count: 2,
                 scope: IoScope::Supervisor,
             }],
+            host_loss: vec![HostLossSpec { at_poll: 3, host: 1 }],
         };
         let round = FaultPlan::from_json(&plan.to_json()).unwrap();
         assert_eq!(round, plan);

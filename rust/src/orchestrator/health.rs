@@ -11,6 +11,8 @@
 //! sleeping.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Once;
 use std::time::{Duration, Instant};
 
 /// Current checkpoint size in bytes, `None` while the file does not
@@ -19,11 +21,45 @@ pub fn probe_len(path: &Path) -> Option<u64> {
     std::fs::metadata(path).ok().map(|m| m.len())
 }
 
+/// Times this process observed a file mtime in the future — the
+/// `health.clock_skew` counter. On a shared campaign dir (NFS between
+/// hosts) a writer's clock running ahead of ours puts mtimes in our
+/// future; each such probe bumps this instead of erasing the
+/// heartbeat.
+static CLOCK_SKEW: AtomicU64 = AtomicU64::new(0);
+static CLOCK_SKEW_WARN: Once = Once::new();
+
+/// How many mtime probes hit cross-host clock skew so far (the
+/// `health.clock_skew` metric; process-lifetime, observability only).
+pub fn clock_skew_count() -> u64 {
+    CLOCK_SKEW.load(Ordering::Relaxed)
+}
+
 /// Time since the file was last modified — `memfine status` renders it
-/// as heartbeat freshness. `None` when the file does not exist, the
-/// filesystem has no mtimes, or the clock reads before the mtime.
+/// as heartbeat freshness. `None` when the file does not exist or the
+/// filesystem has no mtimes. An mtime in the future (another host's
+/// skewed clock wrote it) clamps to `Some(ZERO)` — the file was just
+/// touched, which is the freshest heartbeat there is — and counts a
+/// `health.clock_skew` metric with a one-time warning, rather than
+/// reading as a dead file.
 pub fn probe_mtime_age(path: &Path) -> Option<Duration> {
-    std::fs::metadata(path).ok()?.modified().ok()?.elapsed().ok()
+    let mtime = std::fs::metadata(path).ok()?.modified().ok()?;
+    match mtime.elapsed() {
+        Ok(age) => Some(age),
+        Err(skew) => {
+            CLOCK_SKEW.fetch_add(1, Ordering::Relaxed);
+            CLOCK_SKEW_WARN.call_once(|| {
+                eprintln!(
+                    "memfine: warning: {} has an mtime {:.1}s in the future \
+                     (cross-host clock skew?); clamping heartbeat age to 0 \
+                     [health.clock_skew]",
+                    path.display(),
+                    skew.duration().as_secs_f64(),
+                );
+            });
+            Some(Duration::ZERO)
+        }
+    }
 }
 
 /// Progress tracker for one shard's checkpoint file.
@@ -146,6 +182,35 @@ mod tests {
         std::fs::write(&p, b"x").unwrap();
         let age = probe_mtime_age(&p).expect("file exists");
         assert!(age < Duration::from_secs(60));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn future_mtime_clamps_to_zero_and_counts_skew() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("memfine-health-skew-{}", std::process::id()));
+        std::fs::write(&p, b"x").unwrap();
+        // stamp the file one hour into the future, as a skewed peer
+        // host writing the shared campaign dir would (GNU touch -d)
+        let future = std::time::SystemTime::now() + Duration::from_secs(3600);
+        let epoch = future
+            .duration_since(std::time::SystemTime::UNIX_EPOCH)
+            .unwrap()
+            .as_secs();
+        let ok = std::process::Command::new("touch")
+            .arg("-d")
+            .arg(format!("@{epoch}"))
+            .arg(&p)
+            .status()
+            .map(|s| s.success())
+            .unwrap_or(false);
+        assert!(ok, "GNU touch -d @epoch available on linux CI");
+        let before = clock_skew_count();
+        // not None (the old behaviour: a skewed writer read as dead)
+        // but a zero age: freshest possible heartbeat
+        assert_eq!(probe_mtime_age(&p), Some(Duration::ZERO));
+        assert!(clock_skew_count() > before);
         std::fs::remove_file(&p).ok();
     }
 }

@@ -1,0 +1,689 @@
+//! Host abstraction for multi-host launches: where a shard child
+//! runs, how its host proves liveness, and what happens when a whole
+//! machine disappears.
+//!
+//! The supervisor was already generic over the *spawner*
+//! ([`crate::orchestrator::supervise`] takes any
+//! `FnMut(&ShardPlan, attempt) -> Result<Child>`); a [`HostPool`]
+//! lifts that seam one level: each [`HostSpec`] owns a boxed spawner
+//! of the same shape (local `Command` today, an `ssh`-wrapped command
+//! for remote hosts, a scripted closure for `SimHost`-style tests),
+//! plus a shard→host assignment the supervisor can rewrite when a
+//! host is lost.
+//!
+//! Liveness is a **lease file** per host in the shared campaign dir
+//! (`host-<id>.lease`), renewed by bumping a monotone counter and
+//! atomically renaming a pid-unique tmp into place. Expiry is
+//! *clock-skew tolerant by construction*: the observing
+//! [`LeaseMonitor`] never compares wall-clock timestamps across
+//! machines — it watches the renewal **counter** for change against
+//! its own monotonic clock, so a host whose clock is hours off still
+//! holds its lease as long as it keeps renewing, and a dead host
+//! expires exactly `timeout` after its last observed renewal no
+//! matter what any mtime says.
+//!
+//! Losing a host is survivable, not fatal: the supervisor reassigns
+//! its shards to surviving hosts under the normal retry budgets, and
+//! the merge catch-up heals anything the dead host never wrote — the
+//! campaign artifact stays byte-identical to a single-process sweep
+//! (pinned by the `HostLossSpec` chaos drills).
+
+use std::path::{Path, PathBuf};
+use std::process::Child;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::json;
+use crate::logging;
+use crate::orchestrator::plan::ShardPlan;
+
+/// Where a host's shard children actually execute.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HostKind {
+    /// Spawn on this machine (also the `SimHost` vehicle in tests:
+    /// a scripted local spawner stands in for the remote side).
+    Local,
+    /// Spawn through `ssh <target> '<quoted command>'`; the campaign
+    /// dir must be shared storage visible to the target.
+    Ssh { target: String },
+}
+
+/// One host in a launch: a stable id (position-derived, `h0`, `h1`,
+/// ...) plus where it runs commands.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostSpec {
+    pub id: String,
+    pub kind: HostKind,
+}
+
+impl HostSpec {
+    /// Parse `LaunchConfig.hosts` entries: `"local"` or
+    /// `"ssh:user@machine"`. Ids are positional (`h0`..) so a config
+    /// edit that reorders hosts renames them — deterministic, and the
+    /// lease files say which is which.
+    pub fn parse_list(specs: &[String]) -> Result<Vec<HostSpec>> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(i, raw)| {
+                let kind = match raw.trim() {
+                    "local" => HostKind::Local,
+                    s if s.starts_with("ssh:") => {
+                        let target = s["ssh:".len()..].trim().to_string();
+                        if target.is_empty() {
+                            return Err(Error::config(format!(
+                                "host spec '{raw}': ssh target is empty"
+                            )));
+                        }
+                        HostKind::Ssh { target }
+                    }
+                    other => {
+                        return Err(Error::config(format!(
+                            "unknown host spec '{other}' (local|ssh:<target>)"
+                        )))
+                    }
+                };
+                Ok(HostSpec { id: format!("h{i}"), kind })
+            })
+            .collect()
+    }
+}
+
+/// Quote one argv word for `sh` on the remote side of an ssh hop.
+/// Plain words pass through; anything else is single-quoted with the
+/// standard `'\''` escape.
+pub fn shell_quote(s: &str) -> String {
+    let plain = !s.is_empty()
+        && s.bytes().all(|b| {
+            b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-' | b'/' | b'=' | b':' | b',' | b'@')
+        });
+    if plain {
+        s.to_string()
+    } else {
+        format!("'{}'", s.replace('\'', "'\\''"))
+    }
+}
+
+/// Build the `ssh` invocation that runs `argv` (program + args) on
+/// `target`, with an optional `VAR=value` environment prefix (ssh
+/// does not forward the local environment).
+pub fn ssh_command(
+    target: &str,
+    argv: &[String],
+    env: Option<(&str, &str)>,
+) -> std::process::Command {
+    let mut remote = String::new();
+    if let Some((k, v)) = env {
+        remote.push_str(k);
+        remote.push('=');
+        remote.push_str(&shell_quote(v));
+        remote.push(' ');
+    }
+    for (i, a) in argv.iter().enumerate() {
+        if i > 0 {
+            remote.push(' ');
+        }
+        remote.push_str(&shell_quote(a));
+    }
+    let mut cmd = std::process::Command::new("ssh");
+    cmd.arg("-oBatchMode=yes").arg(target).arg(remote);
+    cmd
+}
+
+/// The lease file for `host` inside the campaign dir. The `.lease`
+/// extension keeps these out of every campaign-state glob (`*.jsonl`).
+pub fn lease_path(dir: &Path, host: &str) -> PathBuf {
+    dir.join(format!("host-{host}.lease"))
+}
+
+/// Writer side of one host lease: a renewal counter persisted by
+/// atomic tmp+rename, so readers never see a torn file.
+#[derive(Debug)]
+pub struct Lease {
+    path: PathBuf,
+    host: String,
+    renewals: u64,
+}
+
+impl Lease {
+    /// Write the first renewal (counter 1) and return the live lease.
+    pub fn acquire(dir: &Path, host: &str) -> Result<Lease> {
+        let mut lease = Lease {
+            path: lease_path(dir, host),
+            host: host.to_string(),
+            renewals: 0,
+        };
+        lease.renew()?;
+        Ok(lease)
+    }
+
+    /// Bump the counter and republish the file. Each write goes
+    /// through a pid-unique tmp name, so two supervisors fighting
+    /// over the same dir corrupt nothing (the last rename wins).
+    pub fn renew(&mut self) -> Result<()> {
+        self.renewals += 1;
+        let body = json::obj(vec![
+            ("host", json::s(self.host.clone())),
+            ("pid", json::num(f64::from(std::process::id()))),
+            ("renewals", json::num(self.renewals as f64)),
+        ]);
+        let tmp = self.path.with_file_name(format!(
+            "host-{}.lease.tmp.{}",
+            self.host,
+            std::process::id()
+        ));
+        std::fs::write(&tmp, format!("{}\n", body.to_string_compact()))?;
+        std::fs::rename(&tmp, &self.path).map_err(Error::Io)
+    }
+
+    pub fn renewals(&self) -> u64 {
+        self.renewals
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Read a lease file's renewal counter; `None` for missing or
+/// unparsable files (a torn or garbage lease reads as "no renewal
+/// observed", which only ever *delays* expiry detection by one poll).
+pub fn read_renewals(path: &Path) -> Option<u64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    json::parse(&text).ok()?.as_obj()?.get("renewals")?.as_u64()
+}
+
+/// Observer side of one lease: tracks the last seen renewal counter
+/// against the *observer's* monotonic clock. Cross-host wall-clock
+/// skew cannot touch it — only "the counter stopped changing for
+/// `timeout` of my own time" expires a lease.
+#[derive(Clone, Debug)]
+pub struct LeaseMonitor {
+    last: Option<u64>,
+    changed_at: Instant,
+}
+
+impl LeaseMonitor {
+    pub fn new(now: Instant) -> Self {
+        LeaseMonitor { last: None, changed_at: now }
+    }
+
+    /// Record an observation; returns whether the counter changed
+    /// (any change — including the file appearing or vanishing —
+    /// counts as liveness evidence and resets the expiry clock).
+    pub fn observe(&mut self, renewals: Option<u64>, now: Instant) -> bool {
+        if renewals != self.last {
+            self.last = renewals;
+            self.changed_at = now;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Time since the last observed counter change.
+    pub fn idle(&self, now: Instant) -> Duration {
+        now.saturating_duration_since(self.changed_at)
+    }
+
+    pub fn expired(&self, timeout: Duration, now: Instant) -> bool {
+        self.idle(now) >= timeout
+    }
+}
+
+/// One host slot in the pool: its spec, its spawner, and whether the
+/// supervisor has declared it lost.
+pub struct HostSlot<'a> {
+    pub spec: HostSpec,
+    spawn: Box<dyn FnMut(&ShardPlan, u32) -> Result<Child> + 'a>,
+    lost: bool,
+}
+
+impl<'a> HostSlot<'a> {
+    pub fn new(
+        spec: HostSpec,
+        spawn: Box<dyn FnMut(&ShardPlan, u32) -> Result<Child> + 'a>,
+    ) -> Self {
+        HostSlot { spec, spawn, lost: false }
+    }
+}
+
+/// The lease plane: writer leases for hosts this process renews
+/// in-process (local hosts), remote renewer children for ssh hosts,
+/// and one monitor per host. `None` writer = renewal stopped (chaos
+/// pause, declared loss, or a remote renews instead).
+struct LeasePlane {
+    timeout: Duration,
+    paths: Vec<PathBuf>,
+    writers: Vec<Option<Lease>>,
+    renewers: Vec<Option<Child>>,
+    monitors: Vec<LeaseMonitor>,
+}
+
+impl Drop for LeasePlane {
+    fn drop(&mut self) {
+        for child in self.renewers.iter_mut().filter_map(Option::take) {
+            let mut child = child;
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// The fleet's view of its hosts: per-host spawners, the live
+/// shard→host assignment, and (in multi-host mode) the lease plane.
+///
+/// A single-host pool without leases is the exact legacy supervision
+/// path: `HostPool::single_local` is what the source-compatible
+/// `supervise()` wrapper builds, and it adds no file traffic and no
+/// events.
+pub struct HostPool<'a> {
+    slots: Vec<HostSlot<'a>>,
+    assignment: Vec<usize>,
+    lease: Option<LeasePlane>,
+}
+
+impl<'a> HostPool<'a> {
+    pub fn new(slots: Vec<HostSlot<'a>>) -> Result<Self> {
+        if slots.is_empty() {
+            return Err(Error::config("a host pool needs at least one host"));
+        }
+        Ok(HostPool { slots, assignment: Vec::new(), lease: None })
+    }
+
+    /// The legacy seam: one anonymous local host, no lease plane.
+    pub fn single_local(
+        spawn: Box<dyn FnMut(&ShardPlan, u32) -> Result<Child> + 'a>,
+    ) -> Self {
+        HostPool {
+            slots: vec![HostSlot::new(
+                HostSpec { id: "h0".into(), kind: HostKind::Local },
+                spawn,
+            )],
+            assignment: Vec::new(),
+            lease: None,
+        }
+    }
+
+    /// Install the lease plane: acquire one lease per host in `dir`
+    /// (local hosts renew in-process each tick; ssh hosts get a
+    /// remote renewer loop spawned over ssh) and start the expiry
+    /// monitors at `now`.
+    pub fn with_leases(
+        &mut self,
+        dir: &Path,
+        timeout: Duration,
+        now: Instant,
+    ) -> Result<()> {
+        if timeout.is_zero() {
+            return Err(Error::config("lease timeout must be positive"));
+        }
+        let mut paths = Vec::new();
+        let mut writers = Vec::new();
+        let mut renewers = Vec::new();
+        let mut monitors = Vec::new();
+        for slot in &self.slots {
+            let path = lease_path(dir, &slot.spec.id);
+            match &slot.spec.kind {
+                HostKind::Local => {
+                    writers.push(Some(Lease::acquire(dir, &slot.spec.id)?));
+                    renewers.push(None);
+                }
+                HostKind::Ssh { target } => {
+                    // the remote renews its own lease, so the lease
+                    // proves the *host* (and the shared mount) is
+                    // alive, not merely this supervisor
+                    writers.push(None);
+                    let interval = (timeout / 4).max(Duration::from_millis(10));
+                    let script = format!(
+                        "n=0; while :; do n=$((n+1)); \
+                         printf '{{\"host\":\"%s\",\"renewals\":%d}}\\n' {id} $n \
+                         > {tmp} && mv {tmp} {lease}; sleep {s}; done",
+                        id = shell_quote(&slot.spec.id),
+                        // `$$` must sit outside the quoting to expand
+                        tmp = format!(
+                            "{}.tmp.$$",
+                            shell_quote(&path.display().to_string())
+                        ),
+                        lease = shell_quote(&path.display().to_string()),
+                        s = interval.as_secs_f64().max(0.01),
+                    );
+                    let child = std::process::Command::new("ssh")
+                        .arg("-oBatchMode=yes")
+                        .arg(target)
+                        .arg(script)
+                        .stdin(std::process::Stdio::null())
+                        .stdout(std::process::Stdio::null())
+                        .stderr(std::process::Stdio::null())
+                        .spawn()
+                        .map_err(Error::Io)?;
+                    renewers.push(Some(child));
+                }
+            }
+            paths.push(path);
+            monitors.push(LeaseMonitor::new(now));
+        }
+        self.lease = Some(LeasePlane { timeout, paths, writers, renewers, monitors });
+        Ok(())
+    }
+
+    pub fn has_leases(&self) -> bool {
+        self.lease.is_some()
+    }
+
+    pub fn n_hosts(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn host_id(&self, host: usize) -> &str {
+        &self.slots[host].spec.id
+    }
+
+    pub fn is_lost(&self, host: usize) -> bool {
+        self.slots[host].lost
+    }
+
+    /// Round-robin the shards over the hosts (the initial placement;
+    /// host loss rewrites entries via [`HostPool::reassign`]).
+    pub fn init_assignment(&mut self, n_shards: usize) {
+        self.assignment = (0..n_shards).map(|s| s % self.slots.len()).collect();
+    }
+
+    pub fn host_of(&self, shard: usize) -> usize {
+        self.assignment.get(shard).copied().unwrap_or(0)
+    }
+
+    /// Spawn `shard` on its currently assigned host.
+    pub fn spawn(
+        &mut self,
+        shard: usize,
+        plan: &ShardPlan,
+        attempt: u32,
+    ) -> Result<Child> {
+        let host = self.host_of(shard);
+        (self.slots[host].spawn)(plan, attempt)
+    }
+
+    /// Stop renewing a host's lease (the chaos drill's "the machine
+    /// went dark": children are killed separately, and the lease now
+    /// ages toward expiry like a real dead host's would).
+    pub fn pause_lease(&mut self, host: usize) {
+        if let Some(plane) = &mut self.lease {
+            plane.writers[host] = None;
+            if let Some(mut child) = plane.renewers[host].take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+
+    /// One supervision tick: renew every live in-process lease, then
+    /// observe all lease files and return hosts whose leases *newly*
+    /// expired (they are marked lost here; callers do the shard
+    /// reassignment).
+    pub fn tick(&mut self, now: Instant) -> Vec<usize> {
+        let Some(plane) = &mut self.lease else { return Vec::new() };
+        let mut newly_lost = Vec::new();
+        for h in 0..self.slots.len() {
+            if self.slots[h].lost {
+                continue;
+            }
+            if let Some(w) = plane.writers[h].as_mut() {
+                if let Err(e) = w.renew() {
+                    logging::warn(
+                        "host",
+                        format!("lease renew for {} failed: {e}", self.slots[h].spec.id),
+                    );
+                }
+            }
+            let seen = read_renewals(&plane.paths[h]);
+            plane.monitors[h].observe(seen, now);
+            if plane.monitors[h].expired(plane.timeout, now) {
+                self.slots[h].lost = true;
+                newly_lost.push(h);
+            }
+        }
+        newly_lost
+    }
+
+    /// Age of a host's lease as this pool's monitor sees it.
+    pub fn lease_idle(&self, host: usize, now: Instant) -> Option<Duration> {
+        self.lease.as_ref().map(|p| p.monitors[host].idle(now))
+    }
+
+    /// Move `shard` to a surviving host (deterministic: round-robin
+    /// by shard index over the survivors). `None` when every host is
+    /// lost.
+    pub fn reassign(&mut self, shard: usize) -> Option<usize> {
+        let survivors: Vec<usize> =
+            (0..self.slots.len()).filter(|&h| !self.slots[h].lost).collect();
+        if survivors.is_empty() {
+            return None;
+        }
+        let to = survivors[shard % survivors.len()];
+        if let Some(slot) = self.assignment.get_mut(shard) {
+            *slot = to;
+        }
+        Some(to)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("memfine-host-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn host_specs_parse_and_get_positional_ids() {
+        let specs = HostSpec::parse_list(&[
+            "local".to_string(),
+            "ssh:user@node7".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].id, "h0");
+        assert_eq!(specs[0].kind, HostKind::Local);
+        assert_eq!(specs[1].id, "h1");
+        assert_eq!(
+            specs[1].kind,
+            HostKind::Ssh { target: "user@node7".into() }
+        );
+        assert!(HostSpec::parse_list(&["pbs:queue".to_string()]).is_err());
+        assert!(HostSpec::parse_list(&["ssh:".to_string()]).is_err());
+        assert!(HostSpec::parse_list(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn shell_quoting_protects_metacharacters() {
+        assert_eq!(shell_quote("plain-word_1.0"), "plain-word_1.0");
+        assert_eq!(shell_quote("/a/b,c:d@e"), "/a/b,c:d@e");
+        assert_eq!(shell_quote("two words"), "'two words'");
+        assert_eq!(shell_quote("a'b"), "'a'\\''b'");
+        assert_eq!(shell_quote(""), "''");
+        assert_eq!(shell_quote("$(rm -rf /)"), "'$(rm -rf /)'");
+    }
+
+    #[test]
+    fn ssh_command_wraps_and_quotes_the_remote_argv() {
+        let cmd = ssh_command(
+            "user@node7",
+            &["memfine".into(), "sweep".into(), "--out".into(), "a b".into()],
+            Some(("MEMFINE_FAULTS", "x;y")),
+        );
+        assert_eq!(cmd.get_program(), "ssh");
+        let args: Vec<String> = cmd
+            .get_args()
+            .map(|a| a.to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(args[0], "-oBatchMode=yes");
+        assert_eq!(args[1], "user@node7");
+        assert_eq!(args[2], "MEMFINE_FAULTS='x;y' memfine sweep --out 'a b'");
+    }
+
+    #[test]
+    fn lease_roundtrips_and_tolerates_garbage() {
+        let dir = tmp_dir("lease-rt");
+        let mut lease = Lease::acquire(&dir, "h3").unwrap();
+        assert_eq!(read_renewals(lease.path()), Some(1));
+        lease.renew().unwrap();
+        lease.renew().unwrap();
+        assert_eq!(read_renewals(lease.path()), Some(3));
+        assert_eq!(
+            lease.path().extension().and_then(|e| e.to_str()),
+            Some("lease"),
+            "lease files must stay invisible to the *.jsonl campaign globs"
+        );
+        // garbage and absence both read as "nothing observed"
+        std::fs::write(lease.path(), "not json at all").unwrap();
+        assert_eq!(read_renewals(lease.path()), None);
+        assert_eq!(read_renewals(&dir.join("host-h9.lease")), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn monitor_expires_exactly_at_the_idle_boundary() {
+        let t0 = Instant::now();
+        let timeout = 200 * MS;
+        let mut m = LeaseMonitor::new(t0);
+        // the file appearing is itself a change
+        assert!(m.observe(Some(1), t0 + 5 * MS));
+        assert!(!m.observe(Some(1), t0 + 10 * MS));
+        assert!(!m.expired(timeout, t0 + 5 * MS + 199 * MS));
+        assert!(m.expired(timeout, t0 + 5 * MS + 200 * MS));
+        // a renewal resets the clock
+        assert!(m.observe(Some(2), t0 + 100 * MS));
+        assert!(!m.expired(timeout, t0 + 299 * MS));
+        assert!(m.expired(timeout, t0 + 300 * MS));
+        // the file vanishing also counts as a change (one last grace
+        // period before the host is declared dead)
+        assert!(m.observe(None, t0 + 310 * MS));
+        assert!(!m.expired(timeout, t0 + 509 * MS));
+        assert!(m.expired(timeout, t0 + 510 * MS));
+    }
+
+    #[test]
+    fn monitor_expiry_is_renewal_driven_under_arbitrary_skew() {
+        // Property: feed the monitor a schedule of observation gaps
+        // with renewals that stop at some point; it must stay live
+        // through every gap < timeout while renewals continue, and
+        // expire exactly once the post-stop idle time reaches the
+        // timeout — regardless of the (simulated) wall-clock skew,
+        // which never enters the computation at all.
+        let timeout = 1_000 * MS;
+        let gen = crate::prop::PairGen(
+            crate::prop::VecGen(crate::prop::U64Range(1, 999), 12),
+            crate::prop::U64Range(0, 11),
+        );
+        crate::prop::assert_prop(11, 200, &gen, |(gaps, stop_at)| {
+            let t0 = Instant::now();
+            let mut m = LeaseMonitor::new(t0);
+            let mut t = t0;
+            let mut counter = 0u64;
+            let mut last_change = t0;
+            for (i, gap) in gaps.iter().enumerate() {
+                t += *gap as u32 * MS;
+                if (i as u64) < *stop_at {
+                    counter += 1;
+                }
+                if m.observe(Some(counter), t) {
+                    last_change = t;
+                }
+                let renewed_this_step = (i as u64) < *stop_at;
+                if renewed_this_step && m.expired(timeout, t) {
+                    return Err(format!(
+                        "expired immediately after renewal {counter} at step {i}"
+                    ));
+                }
+            }
+            // idle grows from the last counter change: still live one
+            // tick before the timeout boundary, dead exactly at it
+            if m.expired(timeout, last_change + 999 * MS) {
+                return Err("expired before the idle boundary".into());
+            }
+            if !m.expired(timeout, last_change + 1_000 * MS) {
+                return Err("still live at the idle boundary".into());
+            }
+            Ok(())
+        });
+    }
+
+    fn sh_slot(id: &str, script: &'static str) -> HostSlot<'static> {
+        HostSlot::new(
+            HostSpec { id: id.into(), kind: HostKind::Local },
+            Box::new(move |_, _| {
+                std::process::Command::new("sh")
+                    .arg("-c")
+                    .arg(script)
+                    .stdin(std::process::Stdio::null())
+                    .stdout(std::process::Stdio::null())
+                    .stderr(std::process::Stdio::null())
+                    .spawn()
+                    .map_err(Error::Io)
+            }),
+        )
+    }
+
+    #[test]
+    fn pool_assigns_round_robin_and_reassigns_off_lost_hosts() {
+        let mut pool = HostPool::new(vec![
+            sh_slot("h0", "true"),
+            sh_slot("h1", "true"),
+            sh_slot("h2", "true"),
+        ])
+        .unwrap();
+        pool.init_assignment(5);
+        assert_eq!(
+            (0..5).map(|s| pool.host_of(s)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 1]
+        );
+        pool.slots[1].lost = true;
+        // survivors [0, 2]: shard 1 -> survivors[1 % 2] = h2
+        assert_eq!(pool.reassign(1), Some(2));
+        assert_eq!(pool.host_of(1), 2);
+        assert_eq!(pool.reassign(4), Some(0));
+        pool.slots[0].lost = true;
+        pool.slots[2].lost = true;
+        assert_eq!(pool.reassign(1), None);
+        assert!(HostPool::new(vec![]).is_err());
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn lease_plane_declares_a_paused_host_lost_after_timeout() {
+        let dir = tmp_dir("lease-plane");
+        let mut pool =
+            HostPool::new(vec![sh_slot("h0", "true"), sh_slot("h1", "true")])
+                .unwrap();
+        pool.init_assignment(2);
+        let t0 = Instant::now();
+        pool.with_leases(&dir, 120 * MS, t0).unwrap();
+        assert!(pool.has_leases());
+        assert!(lease_path(&dir, "h0").exists());
+        assert!(lease_path(&dir, "h1").exists());
+        // both hosts renew: ticks well past the timeout lose nobody
+        for step in 1..=8u32 {
+            assert!(pool.tick(t0 + step * 30 * MS).is_empty());
+        }
+        // h1 goes dark; h0 keeps renewing
+        pool.pause_lease(1);
+        let t1 = t0 + 8 * 30 * MS;
+        let mut lost = Vec::new();
+        for step in 1..=6u32 {
+            lost.extend(pool.tick(t1 + step * 30 * MS));
+        }
+        assert_eq!(lost, vec![1], "exactly h1 expires, exactly once");
+        assert!(pool.is_lost(1));
+        assert!(!pool.is_lost(0));
+        // already-lost hosts never re-expire
+        assert!(pool.tick(t1 + 7 * 30 * MS).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -52,11 +52,15 @@ pub struct MergeOutcome {
 /// successful compaction every absorbed source file is removed:
 /// `merged.jsonl` alone carries the campaign forward, so long
 /// campaigns don't accumulate per-topology shard files.
+/// `trace_cache_global` stacks a cross-campaign cache root behind the
+/// campaign tier, so healing after a lost host (or a second campaign
+/// over the same grid) regenerates nothing already drawn anywhere.
 pub fn merge_and_finish(
     cfg: &LaunchConfig,
     plan: &LaunchPlan,
     dir: &Path,
     prior_state: &[PathBuf],
+    trace_cache_global: Option<&Path>,
 ) -> Result<MergeOutcome> {
     let mut paths: Vec<PathBuf> =
         plan.shards.iter().map(|s| s.checkpoint.clone()).collect();
@@ -77,6 +81,7 @@ pub fn merge_and_finish(
         sampler: cfg.sampler,
         rng: cfg.rng,
         trace_cache: Some(dir.join("trace-cache")),
+        trace_cache_global: trace_cache_global.map(Path::to_path_buf),
         pin_cores: cfg.pin_cores,
         // the catch-up pass logs into the same campaign event log the
         // shards appended to (sidecar: never affects merged bytes)

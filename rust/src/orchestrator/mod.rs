@@ -32,22 +32,24 @@
 
 pub mod chaos;
 pub mod health;
+pub mod host;
 pub mod merge;
 pub mod plan;
 pub mod supervise;
 
 pub use chaos::FaultPlan;
 pub use health::{probe_len, probe_mtime_age, HeartbeatMonitor};
+pub use host::{lease_path, HostKind, HostPool, HostSlot, HostSpec, LeaseMonitor};
 pub use merge::{merge_and_finish, MergeOutcome};
 pub use plan::{plan_shards, LaunchPlan, ShardPlan};
 pub use supervise::{
-    supervise, RetryPolicy, ShardEvent, ShardEventKind, ShardOutcome,
-    SuperviseOptions, QUARANTINE_SUFFIX,
+    supervise, supervise_fleet, RetryPolicy, ShardEvent, ShardEventKind,
+    ShardOutcome, SuperviseOptions, QUARANTINE_SUFFIX,
 };
 
 use std::path::PathBuf;
 use std::process::{Command, Stdio};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::LaunchConfig;
 use crate::error::{Error, Result};
@@ -70,10 +72,17 @@ pub struct LaunchOptions {
     /// benches pass `CARGO_BIN_EXE_memfine`).
     pub binary: Option<PathBuf>,
     /// Run a chaos drill against the fleet: scripted kills, checkpoint
-    /// corruption, slow shards, and injected IO faults (see
-    /// [`chaos::FaultPlan`]). `FaultPlan::kill_one()` reproduces the
-    /// legacy `--chaos-kill` drill.
+    /// corruption, slow shards, whole-host losses, and injected IO
+    /// faults (see [`chaos::FaultPlan`]). `FaultPlan::kill_one()`
+    /// reproduces the legacy `--chaos-kill` drill.
     pub fault_plan: Option<chaos::FaultPlan>,
+    /// Global trace-cache root shared *across campaigns* (and hosts on
+    /// shared storage): children and the merge catch-up stack it
+    /// behind the per-campaign tier, so a cell's routed stream is
+    /// drawn at most once per fleet, not once per campaign.
+    /// Execution-only — cache placement can never reach the artifact
+    /// bytes.
+    pub trace_cache_global: Option<PathBuf>,
     /// Suppress the per-event log lines (library/bench use).
     pub quiet: bool,
 }
@@ -84,6 +93,7 @@ impl LaunchOptions {
             dir: dir.into(),
             binary: None,
             fault_plan: None,
+            trace_cache_global: None,
             quiet: false,
         }
     }
@@ -132,6 +142,12 @@ fn describe(ev: &ShardEvent) -> String {
         ShardEventKind::ChaosCorrupted { mode, bytes } => {
             format!("shard {s}: CHAOS corrupted checkpoint ({mode}, {bytes} B)")
         }
+        ShardEventKind::HostLost { host } => {
+            format!("host {host}: lease expired, declaring the host LOST")
+        }
+        ShardEventKind::Reassigned { from_host, to_host } => {
+            format!("shard {s}: reassigned {from_host} -> {to_host}")
+        }
     }
 }
 
@@ -176,6 +192,13 @@ fn shard_event_fields(ev: &ShardEvent) -> Vec<(&'static str, Value)> {
         ShardEventKind::ChaosCorrupted { mode, bytes } => {
             fields.push(("mode", json::s(mode.clone())));
             fields.push(("bytes", json::num(*bytes as f64)));
+        }
+        ShardEventKind::HostLost { host } => {
+            fields.push(("host", json::s(host.clone())));
+        }
+        ShardEventKind::Reassigned { from_host, to_host } => {
+            fields.push(("from_host", json::s(from_host.clone())));
+            fields.push(("to_host", json::s(to_host.clone())));
         }
     }
     fields
@@ -290,6 +313,22 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
         .collect();
     prior_state.sort();
 
+    // Multi-host mode: parse the host list up front (a bad spec must
+    // fail before any child spawns), and refuse comma-bearing global
+    // cache paths for the same reason the dir must be comma-free —
+    // they travel to children inside a comma-separated flag value.
+    let host_specs = host::HostSpec::parse_list(&cfg.hosts)?;
+    let multi_host = !host_specs.is_empty();
+    if let Some(g) = &opts.trace_cache_global {
+        if g.display().to_string().contains(',') {
+            return Err(Error::config(format!(
+                "global trace cache {} contains ',' — the child flag is \
+                 comma-separated, pick another --trace-cache",
+                g.display()
+            )));
+        }
+    }
+
     let workers = cfg.workers_per_proc;
     let sampler = cfg.sampler;
     let rng = cfg.rng;
@@ -328,7 +367,13 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
     // it across runs.
     let trace_cache = opts.dir.join("trace-cache");
     let prior = &prior_state;
-    let spawner = |shard: &ShardPlan, attempt: u32| -> Result<std::process::Child> {
+    let events_enabled = elog.enabled();
+    // The one command builder every host shares; only *where* it runs
+    // differs (a local Command vs. an ssh wrap of the same argv).
+    let spawn_cmd = |kind: &host::HostKind,
+                     shard: &ShardPlan,
+                     attempt: u32|
+     -> Result<std::process::Child> {
         let log = std::fs::File::options()
             .create(true)
             .append(true)
@@ -341,44 +386,67 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
             checkpoints.push(',');
             checkpoints.push_str(&src.display().to_string());
         }
-        let mut cmd = Command::new(&binary);
-        cmd.arg("sweep")
-            .arg("--config")
-            .arg(&sweep_json)
-            .arg("--shard")
-            .arg(format!("{}/{}", shard.spec.index, shard.spec.count))
-            .arg("--checkpoint")
-            .arg(checkpoints)
+        // per-campaign tier, with the cross-campaign global root
+        // stacked behind it when configured
+        let cache_arg = match &opts.trace_cache_global {
+            Some(g) => format!("{},{}", trace_cache.display(), g.display()),
+            None => trace_cache.display().to_string(),
+        };
+        let mut argv: Vec<String> = vec![
+            "sweep".into(),
+            "--config".into(),
+            sweep_json.display().to_string(),
+            "--shard".into(),
+            format!("{}/{}", shard.spec.index, shard.spec.count),
+            "--checkpoint".into(),
+            checkpoints,
             // always resume: relaunches continue from the checkpoint,
             // first launches find nothing and start clean
-            .arg("--resume")
-            .arg("--workers")
-            .arg(workers.to_string())
+            "--resume".into(),
+            "--workers".into(),
+            workers.to_string(),
             // explicit sampler and generator: children must not depend
             // on defaults matching across binary versions
-            .arg("--router")
-            .arg(sampler.tag())
-            .arg("--rng")
-            .arg(rng.tag())
-            .arg("--trace-cache")
-            .arg(&trace_cache)
-            .arg("--out")
-            .arg("-");
+            "--router".into(),
+            sampler.tag().to_string(),
+            "--rng".into(),
+            rng.tag().to_string(),
+            "--trace-cache".into(),
+            cache_arg,
+            "--out".into(),
+            "-".into(),
+        ];
         if pin_cores {
             // execution-only: pinned and unpinned shards produce the
             // same checkpoint bytes, this just steadies throughput
-            cmd.arg("--pin-cores");
+            argv.push("--pin-cores".into());
         }
-        if elog.enabled() {
+        if events_enabled {
             // children append their engine events (cell_eval, cache
             // hit/miss, checkpoint appends) to the same campaign log
-            cmd.arg("--events").arg(&events_path);
+            argv.push("--events".into());
+            argv.push(events_path.display().to_string());
         }
-        if attempt == 1 {
-            if let Some(env) = &child_fault_env {
-                cmd.env(crate::faultfs::FAULT_ENV, env);
+        let fault = if attempt == 1 { child_fault_env.as_deref() } else { None };
+        let mut cmd = match kind {
+            host::HostKind::Local => {
+                let mut cmd = Command::new(&binary);
+                cmd.args(&argv);
+                if let Some(env) = fault {
+                    cmd.env(crate::faultfs::FAULT_ENV, env);
+                }
+                cmd
             }
-        }
+            host::HostKind::Ssh { target } => {
+                let mut full = vec![binary.display().to_string()];
+                full.extend(argv.iter().cloned());
+                host::ssh_command(
+                    target,
+                    &full,
+                    fault.map(|v| (crate::faultfs::FAULT_ENV, v)),
+                )
+            }
+        };
         cmd.stdin(Stdio::null())
             .stdout(Stdio::null())
             .stderr(Stdio::from(log));
@@ -389,6 +457,38 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
             ))
         })
     };
+    let spawn_ref = &spawn_cmd;
+    let slots: Vec<host::HostSlot<'_>> = if multi_host {
+        host_specs
+            .iter()
+            .map(|spec| {
+                let kind = spec.kind.clone();
+                host::HostSlot::new(
+                    spec.clone(),
+                    Box::new(move |shard: &ShardPlan, attempt: u32| {
+                        spawn_ref(&kind, shard, attempt)
+                    }),
+                )
+            })
+            .collect()
+    } else {
+        vec![host::HostSlot::new(
+            host::HostSpec { id: "h0".into(), kind: host::HostKind::Local },
+            Box::new(move |shard: &ShardPlan, attempt: u32| {
+                spawn_ref(&host::HostKind::Local, shard, attempt)
+            }),
+        )]
+    };
+    let mut pool = host::HostPool::new(slots)?;
+    if multi_host {
+        // the lease plane lives in the campaign dir: every host's
+        // `.lease` file sits next to the checkpoints it vouches for
+        pool.with_leases(
+            &opts.dir,
+            Duration::from_millis(cfg.lease_timeout_ms),
+            Instant::now(),
+        )?;
+    }
 
     let sup_opts = SuperviseOptions {
         stall_timeout: Duration::from_millis(cfg.stall_timeout_ms),
@@ -413,19 +513,44 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
     let mut watchdog = Watchdog::new(WatchConfig::default());
     let mut events: Vec<ShardEvent> = Vec::new();
     let watch_enabled = elog.enabled();
-    let outcomes = supervise::supervise(&plan.shards, spawner, &sup_opts, |ev| {
-        if !quiet {
-            crate::logging::info("orchestrator", describe(ev));
-        }
-        elog.emit(ev.kind.tag(), shard_event_fields(ev));
-        events.push(ev.clone());
-        if watch_enabled {
-            for alert in watchdog.scan(&events_path) {
-                crate::logging::warn("watchdog", &alert.message);
-                elog.emit(alert.kind, alert.fields);
+    // Host-tagged telemetry: in multi-host mode every shard event
+    // carries the shard's current host id. The map is rebuilt from the
+    // event stream itself (initial round-robin + Reassigned updates),
+    // which is exactly how `memfine status` reconstructs it later.
+    let host_names: Option<Vec<String>> = if multi_host {
+        Some(host_specs.iter().map(|h| h.id.clone()).collect())
+    } else {
+        None
+    };
+    let mut host_of: Vec<usize> = (0..plan.shards.len())
+        .map(|i| i % host_specs.len().max(1))
+        .collect();
+    let outcomes =
+        supervise::supervise_fleet(&plan.shards, &mut pool, &sup_opts, |ev| {
+            if !quiet {
+                crate::logging::info("orchestrator", describe(ev));
             }
-        }
-    })?;
+            let mut fields = shard_event_fields(ev);
+            if let Some(names) = &host_names {
+                if let ShardEventKind::Reassigned { to_host, .. } = &ev.kind {
+                    if let Some(h) = names.iter().position(|n| n == to_host) {
+                        host_of[ev.shard] = h;
+                    }
+                }
+                // HostLost already carries its own host field
+                if !matches!(ev.kind, ShardEventKind::HostLost { .. }) {
+                    fields.push(("host", json::s(names[host_of[ev.shard]].clone())));
+                }
+            }
+            elog.emit(ev.kind.tag(), fields);
+            events.push(ev.clone());
+            if watch_enabled {
+                for alert in watchdog.scan(&events_path) {
+                    crate::logging::warn("watchdog", &alert.message);
+                    elog.emit(alert.kind, alert.fields);
+                }
+            }
+        })?;
     let planned_kills = opts
         .fault_plan
         .as_ref()
@@ -441,7 +566,13 @@ pub fn launch(cfg: &LaunchConfig, opts: &LaunchOptions) -> Result<LaunchReport> 
         );
     }
 
-    let merge = merge::merge_and_finish(cfg, &plan, &opts.dir, &prior_state)?;
+    let merge = merge::merge_and_finish(
+        cfg,
+        &plan,
+        &opts.dir,
+        &prior_state,
+        opts.trace_cache_global.as_deref(),
+    )?;
     elog.emit(
         "merge_done",
         vec![

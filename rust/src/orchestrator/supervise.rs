@@ -19,13 +19,20 @@
 //! `FnMut(&ShardPlan, attempt) -> Result<Child>` — so tests can
 //! inject wedged or crashing fakes without touching the real `memfine
 //! sweep` command line, and every decision it makes is surfaced as a
-//! [`ShardEvent`] through the caller's callback.
+//! [`ShardEvent`] through the caller's callback. [`supervise_fleet`]
+//! lifts the same seam to a [`HostPool`]: one spawner per host, a
+//! live shard→host assignment, and a lease plane whose expiry the
+//! poll loop treats as **whole-host loss** — the dead host's shards
+//! are reassigned to survivors under the same retry budgets/backoff,
+//! and merge catch-up heals whatever the host never wrote.
 //!
 //! Scripted chaos ([`crate::orchestrator::chaos::FaultPlan`]) is
 //! executed from inside the poll loop: kill specs strike at their poll
 //! tick (relaunches from an injected kill never consume retry budget),
-//! corruption specs damage a shard's checkpoint in flight, and slow
-//! specs delay a shard's first spawn.
+//! corruption specs damage a shard's checkpoint in flight, slow specs
+//! delay a shard's first spawn, and host-loss specs kill every child
+//! on one host and stop its lease — the shards then wait for the
+//! lease to expire, exactly as they would under a real machine loss.
 //!
 //! Correctness never depends on supervision: children checkpoint every
 //! completed scenario, relaunches resume from those checkpoints, and
@@ -39,8 +46,11 @@ use std::time::{Duration, Instant};
 
 use crate::error::Result;
 use crate::logging;
-use crate::orchestrator::chaos::{self, CorruptMode, CorruptSpec, FaultPlan, KillSpec};
+use crate::orchestrator::chaos::{
+    self, CorruptMode, CorruptSpec, FaultPlan, HostLossSpec, KillSpec,
+};
 use crate::orchestrator::health::{probe_len, HeartbeatMonitor};
+use crate::orchestrator::host::HostPool;
 use crate::orchestrator::plan::ShardPlan;
 use crate::util;
 
@@ -161,6 +171,13 @@ pub enum ShardEventKind {
     /// ([`QUARANTINE_SUFFIX`]) after it gave up without progress; its
     /// planned cells will be redistributed through merge catch-up.
     Quarantined { reason: String },
+    /// A host's lease expired: the whole machine is declared lost.
+    /// Emitted once per lost host (the shard index is the first shard
+    /// that was assigned to it, or 0 if it owned none).
+    HostLost { host: String },
+    /// This shard was moved off a lost host onto a survivor; a
+    /// relaunch there follows under the normal retry budget.
+    Reassigned { from_host: String, to_host: String },
 }
 
 impl ShardEventKind {
@@ -179,6 +196,8 @@ impl ShardEventKind {
             ShardEventKind::Completed => "shard_completed",
             ShardEventKind::GaveUp { .. } => "shard_gave_up",
             ShardEventKind::Quarantined { .. } => "shard_quarantined",
+            ShardEventKind::HostLost { .. } => "shard_host_lost",
+            ShardEventKind::Reassigned { .. } => "shard_reassigned",
         }
     }
 }
@@ -218,6 +237,10 @@ struct ShardState {
     episode_retries_used: u32,
     /// Deferred relaunch deadline (exponential backoff).
     respawn_at: Option<Instant>,
+    /// The shard's host went dark (chaos-killed or lease paused) and
+    /// it must not respawn until the lease expires and the supervisor
+    /// reassigns it to a survivor.
+    awaiting_host: bool,
     outcome: ShardOutcome,
 }
 
@@ -227,19 +250,18 @@ fn kill_and_reap(mut child: Child) {
     let _ = child.wait();
 }
 
-fn spawn_into<S, E>(
+fn spawn_into<E>(
     shard: usize,
     plan: &ShardPlan,
     st: &mut ShardState,
-    spawn: &mut S,
+    pool: &mut HostPool<'_>,
     on_event: &mut E,
 ) -> Result<()>
 where
-    S: FnMut(&ShardPlan, u32) -> Result<Child>,
     E: FnMut(&ShardEvent),
 {
     let attempt = st.outcome.spawns + 1;
-    let child = spawn(plan, attempt)?;
+    let child = pool.spawn(shard, plan, attempt)?;
     st.outcome.spawns = attempt;
     st.monitor.reset(Instant::now());
     on_event(&ShardEvent {
@@ -350,21 +372,44 @@ fn schedule_respawn<E>(
 /// killed before returning.
 pub fn supervise<S, E>(
     shards: &[ShardPlan],
-    mut spawn: S,
+    spawn: S,
     opts: &SuperviseOptions,
-    mut on_event: E,
+    on_event: E,
 ) -> Result<Vec<ShardOutcome>>
 where
     S: FnMut(&ShardPlan, u32) -> Result<Child>,
     E: FnMut(&ShardEvent),
 {
+    let mut pool = HostPool::single_local(Box::new(spawn));
+    supervise_fleet(shards, &mut pool, opts, on_event)
+}
+
+/// [`supervise`], generalised over a [`HostPool`]: shards spawn on
+/// their assigned hosts, the pool's lease plane (if installed via
+/// [`HostPool::with_leases`]) is ticked every poll, and an expired
+/// lease is handled as whole-host loss — one `HostLost` event, then
+/// per shard a `Reassigned` event and a relaunch on a survivor under
+/// the normal retry budget (or `GaveUp` when no host survives). A
+/// single-host pool without leases behaves exactly like the legacy
+/// seam.
+pub fn supervise_fleet<E>(
+    shards: &[ShardPlan],
+    pool: &mut HostPool<'_>,
+    opts: &SuperviseOptions,
+    mut on_event: E,
+) -> Result<Vec<ShardOutcome>>
+where
+    E: FnMut(&ShardEvent),
+{
     let now = Instant::now();
+    pool.init_assignment(shards.len());
     let mut states: Vec<ShardState> = (0..shards.len())
         .map(|i| ShardState {
             child: None,
             monitor: HeartbeatMonitor::new(now),
             episode_retries_used: 0,
             respawn_at: None,
+            awaiting_host: false,
             outcome: ShardOutcome {
                 shard: i,
                 spawns: 0,
@@ -381,6 +426,12 @@ where
     let plan = opts.fault_plan.clone().unwrap_or_default();
     let mut pending_kills: Vec<KillSpec> = plan.kills.clone();
     let mut pending_corrupt: Vec<CorruptSpec> = plan.corrupt.clone();
+    let mut pending_host_loss: Vec<HostLossSpec> = plan.host_loss.clone();
+    // hosts a chaos spec has silenced but the lease plane has not yet
+    // declared lost: they keep the poll loop alive, so a drill can
+    // never terminate with its loss half-executed
+    let mut chaos_pending_hosts: std::collections::BTreeSet<usize> =
+        std::collections::BTreeSet::new();
 
     for i in 0..states.len() {
         if let Some(slow) = plan.slow.iter().find(|s| s.shard % shards.len() == i) {
@@ -389,7 +440,7 @@ where
             std::thread::sleep(Duration::from_millis(slow.delay_ms));
         }
         if let Err(e) =
-            spawn_into(i, &shards[i], &mut states[i], &mut spawn, &mut on_event)
+            spawn_into(i, &shards[i], &mut states[i], pool, &mut on_event)
         {
             for st in states.iter_mut() {
                 if let Some(child) = st.child.take() {
@@ -413,9 +464,17 @@ where
             if !due {
                 continue;
             }
+            // never respawn onto a host that is dark or already lost:
+            // park the shard until the lease plane reassigns it
+            let host = pool.host_of(i);
+            if chaos_pending_hosts.contains(&host) || pool.is_lost(host) {
+                states[i].respawn_at = None;
+                states[i].awaiting_host = true;
+                continue;
+            }
             states[i].respawn_at = None;
             if let Err(e) =
-                spawn_into(i, &shards[i], &mut states[i], &mut spawn, &mut on_event)
+                spawn_into(i, &shards[i], &mut states[i], pool, &mut on_event)
             {
                 on_event(&ShardEvent {
                     shard: i,
@@ -560,7 +619,7 @@ where
                         kind: ShardEventKind::ChaosKilled { pid },
                     });
                     if let Err(e) =
-                        spawn_into(i, &shards[i], st, &mut spawn, &mut on_event)
+                        spawn_into(i, &shards[i], st, pool, &mut on_event)
                     {
                         on_event(&ShardEvent {
                             shard: i,
@@ -618,23 +677,146 @@ where
             }
         }
 
-        if states
-            .iter()
-            .all(|s| s.child.is_none() && s.respawn_at.is_none())
+        // Scripted host loss: kill every child on the target host and
+        // silence its lease. The shards are parked (`awaiting_host`)
+        // rather than respawned — exactly like a real machine loss,
+        // nothing moves until the lease expires below.
+        let mut hl = 0;
+        while hl < pending_host_loss.len() {
+            let spec = pending_host_loss[hl].clone();
+            if polls < spec.at_poll {
+                hl += 1;
+                continue;
+            }
+            if !pool.has_leases() {
+                logging::warn(
+                    "chaos",
+                    "host_loss spec ignored: no lease plane \
+                     (single-host launch cannot declare a host lost)",
+                );
+                pending_host_loss.remove(hl);
+                continue;
+            }
+            let host = spec.host % pool.n_hosts();
+            if pool.is_lost(host) || chaos_pending_hosts.contains(&host) {
+                pending_host_loss.remove(hl);
+                continue;
+            }
+            for i in 0..states.len() {
+                if pool.host_of(i) != host {
+                    continue;
+                }
+                let st = &mut states[i];
+                let running = st
+                    .child
+                    .as_mut()
+                    .map(|c| matches!(c.try_wait(), Ok(None)))
+                    .unwrap_or(false);
+                if running {
+                    let child = st.child.take().expect("checked running");
+                    let pid = child.id();
+                    kill_and_reap(child);
+                    st.outcome.chaos_kills += 1;
+                    st.outcome.last_exit_code = None;
+                    st.awaiting_host = true;
+                    on_event(&ShardEvent {
+                        shard: i,
+                        kind: ShardEventKind::ChaosKilled { pid },
+                    });
+                } else if st.respawn_at.is_some() {
+                    st.respawn_at = None;
+                    st.awaiting_host = true;
+                }
+            }
+            pool.pause_lease(host);
+            chaos_pending_hosts.insert(host);
+            pending_host_loss.remove(hl);
+        }
+
+        // Lease plane: renew our own hosts' leases, observe everyone's,
+        // and treat an expiry as whole-host loss — reassign the dead
+        // host's unfinished shards to survivors under the normal retry
+        // budget; merge catch-up heals anything nobody re-runs.
+        for host in pool.tick(Instant::now()) {
+            chaos_pending_hosts.remove(&host);
+            let host_id = pool.host_id(host).to_string();
+            let anchor = (0..states.len())
+                .find(|&i| pool.host_of(i) == host)
+                .unwrap_or(0);
+            on_event(&ShardEvent {
+                shard: anchor,
+                kind: ShardEventKind::HostLost { host: host_id.clone() },
+            });
+            for i in 0..states.len() {
+                if pool.host_of(i) != host {
+                    continue;
+                }
+                let st = &mut states[i];
+                let active =
+                    st.child.is_some() || st.respawn_at.is_some() || st.awaiting_host;
+                if !active {
+                    continue; // completed or already given up
+                }
+                if let Some(child) = st.child.take() {
+                    kill_and_reap(child);
+                    st.outcome.last_exit_code = None;
+                }
+                st.respawn_at = None;
+                st.awaiting_host = false;
+                match pool.reassign(i) {
+                    Some(to) => {
+                        let to_id = pool.host_id(to).to_string();
+                        on_event(&ShardEvent {
+                            shard: i,
+                            kind: ShardEventKind::Reassigned {
+                                from_host: host_id.clone(),
+                                to_host: to_id,
+                            },
+                        });
+                        schedule_respawn(
+                            i,
+                            &shards[i],
+                            st,
+                            &opts.policy,
+                            &mut campaign_relaunches,
+                            &mut on_event,
+                        );
+                    }
+                    None => give_up(
+                        i,
+                        &shards[i],
+                        st,
+                        &opts.policy,
+                        format!("host {host_id} lost with no surviving hosts"),
+                        false,
+                        &mut on_event,
+                    ),
+                }
+            }
+        }
+
+        if chaos_pending_hosts.is_empty()
+            && states.iter().all(|s| {
+                s.child.is_none() && s.respawn_at.is_none() && !s.awaiting_host
+            })
         {
             break;
         }
         std::thread::sleep(opts.poll_interval);
     }
 
-    if !pending_kills.is_empty() || !pending_corrupt.is_empty() {
+    if !pending_kills.is_empty()
+        || !pending_corrupt.is_empty()
+        || !pending_host_loss.is_empty()
+    {
         logging::warn(
             "chaos",
             format!(
-                "fleet finished with {} kill and {} corrupt spec(s) still pending \
-                 (the drill outran the work)",
+                "fleet finished with {} kill, {} corrupt and {} host-loss \
+                 spec(s) still pending (the drill outran the work)",
                 pending_kills.len(),
-                pending_corrupt.len()
+                pending_corrupt.len(),
+                pending_host_loss.len()
             ),
         );
     }
@@ -708,6 +890,11 @@ mod tests {
             ShardEventKind::Completed,
             ShardEventKind::GaveUp { reason: String::new() },
             ShardEventKind::Quarantined { reason: String::new() },
+            ShardEventKind::HostLost { host: String::new() },
+            ShardEventKind::Reassigned {
+                from_host: String::new(),
+                to_host: String::new(),
+            },
         ];
         let tags: std::collections::BTreeSet<_> =
             kinds.iter().map(|k| k.tag()).collect();
@@ -1076,6 +1263,115 @@ mod tests {
         );
         let data = std::fs::read(&shards[0].checkpoint).unwrap();
         assert_eq!(&data[..], b"aaaa\nxxxx\ncccc\n");
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+    }
+
+    #[test]
+    fn whole_host_loss_reassigns_shards_to_the_survivor() {
+        use crate::orchestrator::host::{HostKind, HostPool, HostSlot, HostSpec};
+        let dir = tmp("fleet-drill-dir");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut shards = one_shard("fleet-0");
+        shards.push(ShardPlan {
+            index: 1,
+            count: 2,
+            spec: ShardSpec { index: 1, count: 2 },
+            checkpoint: tmp("fleet-1.jsonl"),
+            log: tmp("fleet-1.log"),
+            cells: 1,
+            scenarios: 1,
+        });
+        for s in &shards {
+            std::fs::remove_file(&s.checkpoint).ok();
+        }
+        // h0 writes the checkpoint and exits clean; h1 wedges forever
+        // — so shard 1 can only ever finish after it is reassigned
+        let slot = |id: &str, healthy: bool| {
+            HostSlot::new(
+                HostSpec { id: id.into(), kind: HostKind::Local },
+                Box::new(move |plan: &ShardPlan, _| {
+                    if healthy {
+                        sh(format!("printf line >> {}", plan.checkpoint.display()))
+                    } else {
+                        sh("sleep 30".into())
+                    }
+                }),
+            )
+        };
+        let mut pool =
+            HostPool::new(vec![slot("h0", true), slot("h1", false)]).unwrap();
+        pool.with_leases(&dir, Duration::from_millis(240), Instant::now())
+            .unwrap();
+        let opts = SuperviseOptions {
+            stall_timeout: Duration::from_secs(30),
+            fault_plan: Some(FaultPlan {
+                host_loss: vec![chaos::HostLossSpec { at_poll: 1, host: 1 }],
+                ..FaultPlan::default()
+            }),
+            ..fast_opts()
+        };
+        let mut events = Vec::new();
+        let outcomes =
+            supervise_fleet(&shards, &mut pool, &opts, |ev| events.push(ev.clone()))
+                .unwrap();
+        assert!(outcomes[0].completed, "h0's shard is untouched");
+        assert_eq!(outcomes[0].spawns, 1);
+        assert!(
+            outcomes[1].completed,
+            "shard 1 must heal on the survivor: {events:?}"
+        );
+        assert_eq!(outcomes[1].spawns, 2);
+        assert_eq!(outcomes[1].chaos_kills, 1);
+        let lost: Vec<_> = events
+            .iter()
+            .filter_map(|e| match &e.kind {
+                ShardEventKind::HostLost { host } => Some(host.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(lost, vec!["h1".to_string()], "exactly one loss, of h1");
+        assert!(
+            events.iter().any(|e| matches!(&e.kind,
+                ShardEventKind::Reassigned { from_host, to_host }
+                    if from_host == "h1" && to_host == "h0" && e.shard == 1)),
+            "{events:?}"
+        );
+        assert!(!events
+            .iter()
+            .any(|e| matches!(e.kind, ShardEventKind::GaveUp { .. })));
+        for s in &shards {
+            std::fs::remove_file(&s.checkpoint).ok();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn host_loss_without_a_lease_plane_is_dropped_loudly() {
+        let shards = one_shard("no-lease-hostloss");
+        std::fs::remove_file(&shards[0].checkpoint).ok();
+        let opts = SuperviseOptions {
+            fault_plan: Some(FaultPlan {
+                host_loss: vec![chaos::HostLossSpec { at_poll: 1, host: 0 }],
+                ..FaultPlan::default()
+            }),
+            ..fast_opts()
+        };
+        // the legacy single-host seam: the spec must not wedge the loop
+        let outcomes = supervise(
+            &shards,
+            |plan, _| {
+                sh(format!(
+                    "printf line >> {}; sleep 0.2",
+                    plan.checkpoint.display()
+                ))
+            },
+            &opts,
+            |_| {},
+        )
+        .unwrap();
+        assert!(outcomes[0].completed);
+        assert_eq!(outcomes[0].chaos_kills, 0);
         std::fs::remove_file(&shards[0].checkpoint).ok();
     }
 

@@ -150,6 +150,12 @@ pub struct SweepRunOptions {
     /// campaign over the same (model, seed) axes. Execution-only —
     /// warm and cold runs are pinned byte-identical.
     pub trace_cache: Option<PathBuf>,
+    /// Optional global trace-cache root stacked behind `trace_cache`
+    /// ([`TraceStore::open_tiered`]): shared across campaigns and
+    /// hosts, consulted on campaign-tier misses, populated on every
+    /// save. Used alone it serves as the only tier. Execution-only,
+    /// like the campaign tier.
+    pub trace_cache_global: Option<PathBuf>,
     /// Worker-pool schedule: work stealing (default) or the legacy
     /// shared injector, kept as the A/B reference. Execution-only —
     /// the chaos tests pin byte-identity across both.
@@ -432,7 +438,13 @@ pub fn run_sweep_with(cfg: &SweepConfig, opts: &SweepRunOptions) -> Result<Sweep
         Some(p) if opts.resume => checkpoint::CheckpointWriter::append(p, Some(&prov))?,
         Some(p) => checkpoint::CheckpointWriter::create(p, Some(&prov))?,
     };
-    let store = opts.trace_cache.as_deref().map(TraceStore::open).transpose()?;
+    // the campaign cache fronts the optional global root; a global
+    // root alone serves as the only tier
+    let store = match (opts.trace_cache.as_deref(), opts.trace_cache_global.as_deref()) {
+        (Some(dir), global) => Some(TraceStore::open_tiered(dir, global)?),
+        (None, Some(global)) => Some(TraceStore::open(global)?),
+        (None, None) => None,
+    };
 
     let mut reducer = SweepReducer::new(cfg.clone(), prov.clone())?;
     let mut resumed = 0usize;

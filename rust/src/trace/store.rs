@@ -24,8 +24,20 @@
 //! * **Concurrency-safe**: shard processes own disjoint cells, and
 //!   even racing writers of the same key write identical bytes, so
 //!   the atomic rename makes the last one win harmlessly.
+//!
+//! The store is **tiered** (PR 10): a per-campaign tier sits in front
+//! of an optional global root shared across campaigns and hosts
+//! (`--trace-cache` on `memfine launch`). Loads fall through to the
+//! global tier on a campaign miss and promote hits forward; saves
+//! populate both. Content-addressed keys make the sharing safe — two
+//! campaigns that agree on a key agree on the bytes — and a corrupt
+//! global entry degrades to a regenerate-miss exactly like a corrupt
+//! campaign entry, never a failed sweep. `memfine trace-cache
+//! stats|gc` keeps a long-lived global root bounded.
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 use crate::config::{ModelConfig, ParallelConfig};
 use crate::error::{Error, Result};
@@ -64,28 +76,73 @@ pub fn trace_key(
     format!("{:016x}", fnv1a_64(doc.to_string_compact().as_bytes()))
 }
 
-/// A directory of cached traces, one `<key>.trace` file per cell.
+/// In-flight tmp files older than this are debris from a dead writer
+/// (a crashed or chaos-killed shard) and are swept on `open`. Live
+/// writers rename within milliseconds; an hour is conservatively far
+/// from any race.
+const TMP_TTL: Duration = Duration::from_secs(3600);
+
+/// Aggregate size of a cache tier, for `memfine trace-cache stats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Complete `.trace` entries.
+    pub entries: usize,
+    /// Their total size in bytes.
+    pub bytes: u64,
+}
+
+/// What an age-based `gc` pass evicted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GcStats {
+    /// Entries (and stale tmp files) removed.
+    pub removed: usize,
+    /// Bytes reclaimed.
+    pub bytes: u64,
+}
+
+/// A directory of cached traces, one `<key>.trace` file per cell,
+/// optionally backed by a second, cross-campaign global tier.
 #[derive(Clone, Debug)]
 pub struct TraceStore {
     dir: PathBuf,
+    global: Option<PathBuf>,
 }
 
 impl TraceStore {
-    /// Open (creating if missing) a cache rooted at `dir`.
+    /// Open (creating if missing) a single-tier cache rooted at `dir`.
     pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
-        let dir = dir.into();
-        std::fs::create_dir_all(&dir).map_err(|e| {
-            Error::Io(std::io::Error::new(
-                e.kind(),
-                format!("trace cache {}: {e}", dir.display()),
-            ))
-        })?;
-        Ok(TraceStore { dir })
+        Self::open_tiered(dir, None)
     }
 
-    /// The cache file a key maps to.
+    /// Open a cache rooted at `dir` with an optional global tier
+    /// behind it. Both directories are created if missing, and stale
+    /// in-flight tmp files (older than [`TMP_TTL`]) are swept from
+    /// each — debris from writers that died mid-save.
+    pub fn open_tiered(
+        dir: impl Into<PathBuf>,
+        global: Option<&Path>,
+    ) -> Result<Self> {
+        let dir = dir.into();
+        ensure_tier(&dir)?;
+        let global = match global {
+            Some(g) if g == dir => None, // same root twice: one tier
+            Some(g) => {
+                ensure_tier(g)?;
+                Some(g.to_path_buf())
+            }
+            None => None,
+        };
+        Ok(TraceStore { dir, global })
+    }
+
+    /// The cache file a key maps to in the campaign (front) tier.
     pub fn path(&self, key: &str) -> PathBuf {
         self.dir.join(format!("{key}.trace"))
+    }
+
+    /// The global-tier root, if this store is tiered.
+    pub fn global_dir(&self) -> Option<&Path> {
+        self.global.as_deref()
     }
 
     /// Complete `.trace` entries currently on disk (tmp files and
@@ -104,9 +161,12 @@ impl TraceStore {
     }
 
     /// Load the trace cached under `key`, reconstructing it against
-    /// the caller's (model, parallel) identity. Returns `None` — a
-    /// cache miss — on a missing, torn, corrupt, or mismatched file;
-    /// the caller regenerates and overwrites.
+    /// the caller's (model, parallel) identity. The campaign tier is
+    /// consulted first; on a miss (including a torn or corrupt file)
+    /// the global tier is tried, and a global hit is promoted forward
+    /// into the campaign tier best-effort. Returns `None` — a cache
+    /// miss — only when no tier holds a valid entry; the caller
+    /// regenerates and overwrites.
     pub fn load(
         &self,
         key: &str,
@@ -115,54 +175,28 @@ impl TraceStore {
         seed: u64,
         iterations: u64,
     ) -> Option<SharedRoutingTrace> {
-        let bytes = std::fs::read(self.path(key)).ok()?;
-        if bytes.len() < HEADER_BYTES + 8 || &bytes[..8] != MAGIC {
-            return None;
+        if let Ok(bytes) = std::fs::read(self.path(key)) {
+            if let Some(t) = decode(&bytes, key, model, parallel, seed, iterations) {
+                return Some(t);
+            }
         }
-        let payload = &bytes[..bytes.len() - 8];
-        if fnv1a_64(payload) != read_u64(&bytes, bytes.len() - 8) {
-            return None;
-        }
-        let file_key = read_u64(&bytes, 8);
-        let file_seed = read_u64(&bytes, 16);
-        let file_iterations = read_u64(&bytes, 24);
-        let moe_layers = read_u64(&bytes, 32);
-        let count = read_u64(&bytes, 40);
-        let want_moe = model.layers - model.dense_layers;
-        if u64::from_str_radix(key, 16).ok()? != file_key
-            || file_seed != seed
-            || file_iterations != iterations
-            || moe_layers != want_moe
-            || count != iterations.saturating_mul(moe_layers)
-            || bytes.len() != HEADER_BYTES + count as usize * RECORD_BYTES + 8
-        {
-            return None;
-        }
-        let mut records = Vec::with_capacity(count as usize);
-        for i in 0..count as usize {
-            let off = HEADER_BYTES + i * RECORD_BYTES;
-            records.push(RoutingRecord {
-                iteration: i as u64 / moe_layers,
-                layer: model.dense_layers + i as u64 % moe_layers,
-                min_recv: read_u64(&bytes, off),
-                mean_recv: f64::from_bits(read_u64(&bytes, off + 8)),
-                max_recv: read_u64(&bytes, off + 16),
-            });
-        }
-        Some(SharedRoutingTrace {
-            seed,
-            iterations,
-            model: model.clone(),
-            parallel: parallel.clone(),
-            first_iteration: 0,
-            records,
-        })
+        let global = self.global.as_deref()?;
+        let bytes = std::fs::read(global.join(format!("{key}.trace"))).ok()?;
+        let trace = decode(&bytes, key, model, parallel, seed, iterations)?;
+        // promote: the bytes just validated, so the campaign tier can
+        // adopt them verbatim; failure to promote is just a slower hit
+        // next time, never an error
+        write_entry(&self.dir, key, &bytes).ok();
+        Some(trace)
     }
 
-    /// Cache `trace` under `key`: serialise to a per-process temp file
-    /// and atomically rename into place, so readers only ever see a
-    /// complete file and racing writers of the same key are harmless
-    /// (identical content by determinism).
+    /// Cache `trace` under `key`: serialise to a pid+counter-unique
+    /// temp file and atomically rename into place, so readers only
+    /// ever see a complete file and racing writers of the same key —
+    /// even threads within one process — are harmless (identical
+    /// content by determinism). The campaign tier is authoritative
+    /// (its write errors surface as cache-degrade); the global tier,
+    /// when present, is populated best-effort.
     pub fn save(&self, key: &str, trace: &SharedRoutingTrace) -> Result<()> {
         // the on-disk format implies full coverage from iteration 0;
         // range traces (intra-cell splits) are never cached
@@ -190,20 +224,181 @@ impl TraceStore {
         let checksum = fnv1a_64(&bytes);
         bytes.extend_from_slice(&checksum.to_le_bytes());
 
-        let tmp = self.dir.join(format!("{key}.tmp.{}", std::process::id()));
-        std::fs::write(&tmp, &bytes).map_err(|e| {
+        write_entry(&self.dir, key, &bytes).map_err(|e| {
             Error::Io(std::io::Error::new(
                 e.kind(),
-                format!("write trace cache {}: {e}", tmp.display()),
+                format!("write trace cache {}/{key}.trace: {e}", self.dir.display()),
             ))
         })?;
-        std::fs::rename(&tmp, self.path(key)).map_err(|e| {
-            Error::Io(std::io::Error::new(
-                e.kind(),
-                format!("rename trace cache {} -> {key}.trace: {e}", tmp.display()),
-            ))
-        })
+        if let Some(global) = &self.global {
+            // best-effort: a full or read-only global root must never
+            // fail the sweep that already has its campaign-tier copy
+            write_entry(global, key, &bytes).ok();
+        }
+        Ok(())
     }
+
+    /// Entry count and byte total for the campaign tier (or the only
+    /// tier of a single-tier store) — `memfine trace-cache stats`.
+    /// Unreadable directories read as empty, never an error.
+    pub fn stats(&self) -> StoreStats {
+        tier_stats(&self.dir)
+    }
+
+    /// Evict every `.trace` entry (and any tmp debris) in the campaign
+    /// tier whose mtime is older than `max_age` — `memfine trace-cache
+    /// gc`. Content-addressing makes eviction always safe: a future
+    /// sweep that wants an evicted trace regenerates it.
+    pub fn gc(&self, max_age: Duration) -> GcStats {
+        tier_gc(&self.dir, max_age)
+    }
+}
+
+/// Create a tier directory and sweep stale tmp debris from it.
+fn ensure_tier(dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir).map_err(|e| {
+        Error::Io(std::io::Error::new(
+            e.kind(),
+            format!("trace cache {}: {e}", dir.display()),
+        ))
+    })?;
+    sweep_stale_tmp(dir, TMP_TTL);
+    Ok(())
+}
+
+/// Remove in-flight tmp files older than `ttl` — writers that died
+/// between write and rename leave them behind forever otherwise.
+fn sweep_stale_tmp(dir: &Path, ttl: Duration) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for e in entries.filter_map(|e| e.ok()) {
+        let path = e.path();
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !name.contains(".tmp.") {
+            continue;
+        }
+        // a future mtime reads as age zero: clock skew must not make
+        // a live writer's tmp file look ancient
+        let age = e
+            .metadata()
+            .ok()
+            .and_then(|m| m.modified().ok())
+            .map(|t| t.elapsed().unwrap_or(Duration::ZERO))
+            .unwrap_or(Duration::ZERO);
+        if age >= ttl {
+            std::fs::remove_file(&path).ok();
+        }
+    }
+}
+
+/// Atomically install `bytes` as `dir/<key>.trace` via a
+/// pid+counter-unique tmp name (no two live writers ever share one).
+fn write_entry(dir: &Path, key: &str, bytes: &[u8]) -> std::io::Result<()> {
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = dir.join(format!("{key}.tmp.{}.{seq}", std::process::id()));
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, dir.join(format!("{key}.trace"))).map_err(|e| {
+        std::fs::remove_file(&tmp).ok();
+        e
+    })
+}
+
+/// Decode and validate one cache file against the caller's identity.
+/// Any structural or identity mismatch is `None` — a miss.
+fn decode(
+    bytes: &[u8],
+    key: &str,
+    model: &ModelConfig,
+    parallel: &ParallelConfig,
+    seed: u64,
+    iterations: u64,
+) -> Option<SharedRoutingTrace> {
+    if bytes.len() < HEADER_BYTES + 8 || &bytes[..8] != MAGIC {
+        return None;
+    }
+    let payload = &bytes[..bytes.len() - 8];
+    if fnv1a_64(payload) != read_u64(bytes, bytes.len() - 8) {
+        return None;
+    }
+    let file_key = read_u64(bytes, 8);
+    let file_seed = read_u64(bytes, 16);
+    let file_iterations = read_u64(bytes, 24);
+    let moe_layers = read_u64(bytes, 32);
+    let count = read_u64(bytes, 40);
+    let want_moe = model.layers - model.dense_layers;
+    if u64::from_str_radix(key, 16).ok()? != file_key
+        || file_seed != seed
+        || file_iterations != iterations
+        || moe_layers != want_moe
+        || count != iterations.saturating_mul(moe_layers)
+        || bytes.len() != HEADER_BYTES + count as usize * RECORD_BYTES + 8
+    {
+        return None;
+    }
+    let mut records = Vec::with_capacity(count as usize);
+    for i in 0..count as usize {
+        let off = HEADER_BYTES + i * RECORD_BYTES;
+        records.push(RoutingRecord {
+            iteration: i as u64 / moe_layers,
+            layer: model.dense_layers + i as u64 % moe_layers,
+            min_recv: read_u64(bytes, off),
+            mean_recv: f64::from_bits(read_u64(bytes, off + 8)),
+            max_recv: read_u64(bytes, off + 16),
+        });
+    }
+    Some(SharedRoutingTrace {
+        seed,
+        iterations,
+        model: model.clone(),
+        parallel: parallel.clone(),
+        first_iteration: 0,
+        records,
+    })
+}
+
+/// Entry count + bytes of complete `.trace` files under `dir`.
+fn tier_stats(dir: &Path) -> StoreStats {
+    let mut stats = StoreStats { entries: 0, bytes: 0 };
+    let Ok(entries) = std::fs::read_dir(dir) else { return stats };
+    for e in entries.filter_map(|e| e.ok()) {
+        if e.path().extension().and_then(|x| x.to_str()) != Some("trace") {
+            continue;
+        }
+        stats.entries += 1;
+        stats.bytes += e.metadata().map(|m| m.len()).unwrap_or(0);
+    }
+    stats
+}
+
+/// Age-based eviction under `dir`: `.trace` entries older than
+/// `max_age` go, as does any tmp debris past the same age.
+fn tier_gc(dir: &Path, max_age: Duration) -> GcStats {
+    let mut out = GcStats { removed: 0, bytes: 0 };
+    let Ok(entries) = std::fs::read_dir(dir) else { return out };
+    for e in entries.filter_map(|e| e.ok()) {
+        let path = e.path();
+        let is_trace =
+            path.extension().and_then(|x| x.to_str()) == Some("trace");
+        let is_tmp = e
+            .file_name()
+            .to_str()
+            .is_some_and(|n| n.contains(".tmp."));
+        if !is_trace && !is_tmp {
+            continue;
+        }
+        let Ok(meta) = e.metadata() else { continue };
+        let age = meta
+            .modified()
+            .ok()
+            .map(|t| t.elapsed().unwrap_or(Duration::ZERO))
+            .unwrap_or(Duration::ZERO);
+        if age >= max_age && std::fs::remove_file(&path).is_ok() {
+            out.removed += 1;
+            out.bytes += meta.len();
+        }
+    }
+    out
 }
 
 #[inline]
@@ -358,6 +553,159 @@ mod tests {
         );
         std::fs::copy(store.path(&key), store.path(&other)).unwrap();
         assert!(store.load(&other, &trace.model, &trace.parallel, 12, 2).is_none());
+        std::fs::remove_dir_all(store.dir).ok();
+    }
+
+    #[test]
+    fn global_tier_serves_misses_and_promotes_hits() {
+        let global = tmp_store("tier-global");
+        let trace = sample_trace(21, 2);
+        let key = trace_key(
+            &trace.model,
+            &trace.parallel,
+            21,
+            2,
+            &TraceProvenance::default(),
+        );
+        global.save(&key, &trace).unwrap();
+
+        let mut campaign_dir = std::env::temp_dir();
+        campaign_dir
+            .push(format!("memfine-trace-store-{}-tier-front", std::process::id()));
+        std::fs::remove_dir_all(&campaign_dir).ok();
+        let store =
+            TraceStore::open_tiered(&campaign_dir, Some(&global.dir)).unwrap();
+        assert_eq!(store.global_dir(), Some(global.dir.as_path()));
+
+        // cold campaign tier, warm global: load is a hit...
+        let back = store
+            .load(&key, &trace.model, &trace.parallel, 21, 2)
+            .expect("global tier hit");
+        assert_eq!(back.records.len(), trace.records.len());
+        // ...and the entry was promoted into the campaign tier
+        assert!(store.path(&key).exists(), "promotion writes the front tier");
+
+        std::fs::remove_dir_all(&campaign_dir).ok();
+        std::fs::remove_dir_all(global.dir).ok();
+    }
+
+    #[test]
+    fn corrupt_global_entry_is_a_miss_never_an_error() {
+        let global = tmp_store("tier-corrupt-global");
+        let trace = sample_trace(23, 2);
+        let key = trace_key(
+            &trace.model,
+            &trace.parallel,
+            23,
+            2,
+            &TraceProvenance::default(),
+        );
+        global.save(&key, &trace).unwrap();
+        // another host tore the shared entry mid-write
+        let gpath = global.path(&key);
+        let bytes = std::fs::read(&gpath).unwrap();
+        std::fs::write(&gpath, &bytes[..bytes.len() / 3]).unwrap();
+
+        let mut campaign_dir = std::env::temp_dir();
+        campaign_dir.push(format!(
+            "memfine-trace-store-{}-tier-corrupt-front",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&campaign_dir).ok();
+        let store =
+            TraceStore::open_tiered(&campaign_dir, Some(&global.dir)).unwrap();
+        // degrade to regenerate-miss: no panic, no Err, no promotion
+        assert!(store.load(&key, &trace.model, &trace.parallel, 23, 2).is_none());
+        assert!(!store.path(&key).exists());
+        // regeneration overwrites both tiers and heals the global entry
+        store.save(&key, &trace).unwrap();
+        assert!(store.load(&key, &trace.model, &trace.parallel, 23, 2).is_some());
+        let healed = std::fs::read(&gpath).unwrap();
+        assert_eq!(healed, bytes, "global tier healed to canonical bytes");
+
+        std::fs::remove_dir_all(&campaign_dir).ok();
+        std::fs::remove_dir_all(global.dir).ok();
+    }
+
+    #[test]
+    fn save_populates_both_tiers_and_same_root_collapses() {
+        let global = tmp_store("tier-both-global");
+        let mut campaign_dir = std::env::temp_dir();
+        campaign_dir.push(format!(
+            "memfine-trace-store-{}-tier-both-front",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&campaign_dir).ok();
+        let store =
+            TraceStore::open_tiered(&campaign_dir, Some(&global.dir)).unwrap();
+        let trace = sample_trace(25, 2);
+        let key = trace_key(
+            &trace.model,
+            &trace.parallel,
+            25,
+            2,
+            &TraceProvenance::default(),
+        );
+        store.save(&key, &trace).unwrap();
+        assert!(store.path(&key).exists());
+        assert!(global.path(&key).exists());
+        // identical bytes in both tiers — content addressing holds
+        assert_eq!(
+            std::fs::read(store.path(&key)).unwrap(),
+            std::fs::read(global.path(&key)).unwrap()
+        );
+
+        // pointing the global tier at the campaign root is one tier
+        let flat = TraceStore::open_tiered(&campaign_dir, Some(&campaign_dir))
+            .unwrap();
+        assert!(flat.global_dir().is_none());
+
+        std::fs::remove_dir_all(&campaign_dir).ok();
+        std::fs::remove_dir_all(global.dir).ok();
+    }
+
+    #[test]
+    fn stale_tmp_debris_is_swept_by_ttl() {
+        let store = tmp_store("tmp-sweep");
+        std::fs::write(store.dir.join("deadbeef.tmp.42.0"), b"debris").unwrap();
+        std::fs::write(store.dir.join("cafe.trace"), b"keep").unwrap();
+        // a fresh tmp survives the real TTL (a live writer's file)...
+        sweep_stale_tmp(&store.dir, TMP_TTL);
+        assert!(store.dir.join("deadbeef.tmp.42.0").exists());
+        // ...and a zero TTL treats everything as stale
+        sweep_stale_tmp(&store.dir, Duration::ZERO);
+        assert!(!store.dir.join("deadbeef.tmp.42.0").exists());
+        assert!(store.dir.join("cafe.trace").exists(), "entries never swept");
+        std::fs::remove_dir_all(store.dir).ok();
+    }
+
+    #[test]
+    fn stats_and_gc_account_for_entries() {
+        let store = tmp_store("stats-gc");
+        assert_eq!(store.stats(), StoreStats { entries: 0, bytes: 0 });
+        for seed in [31, 32] {
+            let trace = sample_trace(seed, 2);
+            let key = trace_key(
+                &trace.model,
+                &trace.parallel,
+                seed,
+                2,
+                &TraceProvenance::default(),
+            );
+            store.save(&key, &trace).unwrap();
+        }
+        let stats = store.stats();
+        assert_eq!(stats.entries, 2);
+        assert!(stats.bytes > 0);
+        // nothing is an hour old yet
+        let kept = store.gc(Duration::from_secs(3600));
+        assert_eq!(kept, GcStats { removed: 0, bytes: 0 });
+        assert_eq!(store.stats().entries, 2);
+        // max-age zero evicts everything
+        let gone = store.gc(Duration::ZERO);
+        assert_eq!(gone.removed, 2);
+        assert_eq!(gone.bytes, stats.bytes);
+        assert_eq!(store.stats(), StoreStats { entries: 0, bytes: 0 });
         std::fs::remove_dir_all(store.dir).ok();
     }
 

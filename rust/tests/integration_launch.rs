@@ -48,6 +48,7 @@ fn quiet_opts(dir: &PathBuf) -> LaunchOptions {
         dir: dir.clone(),
         binary: Some(bin()),
         fault_plan: None,
+        trace_cache_global: None,
         quiet: true,
     }
 }
@@ -269,7 +270,8 @@ fn stalled_shard_is_killed_relaunched_and_merges_identically() {
         .iter()
         .any(|e| e.shard == 1 && matches!(e.kind, ShardEventKind::Stalled { .. })));
 
-    let merge = orchestrator::merge_and_finish(&cfg, &plan, &dir, &[]).expect("merge");
+    let merge =
+        orchestrator::merge_and_finish(&cfg, &plan, &dir, &[], None).expect("merge");
     assert_eq!(merge.healed, 0, "all scenarios came from the healed fleet");
     assert!(merge.audit.complete());
     let direct = sweep::run_sweep(&tiny, 1).expect("direct sweep");
@@ -355,7 +357,8 @@ fn shard_that_gives_up_is_healed_by_the_merge_catchup() {
     assert!(outcomes[0].completed && outcomes[1].completed);
 
     // merge heals the abandoned shard's scenarios in-process
-    let merge = orchestrator::merge_and_finish(&cfg, &plan, &dir, &[]).expect("merge");
+    let merge =
+        orchestrator::merge_and_finish(&cfg, &plan, &dir, &[], None).expect("merge");
     assert_eq!(merge.healed, plan.shards[2].scenarios);
     assert!(merge.audit.complete());
     let direct = sweep::run_sweep(&grid_3x2x4(), 1).expect("direct sweep");
@@ -527,7 +530,8 @@ fn quarantined_shard_checkpoint_is_ignored_and_healed_identically() {
 
     // the quarantined records are dead to the merge: every shard-2
     // scenario is redistributed to the in-process catch-up pass
-    let merge = orchestrator::merge_and_finish(&cfg, &plan, &dir, &[]).expect("merge");
+    let merge =
+        orchestrator::merge_and_finish(&cfg, &plan, &dir, &[], None).expect("merge");
     assert_eq!(merge.healed, plan.shards[2].scenarios);
     assert!(merge.audit.complete());
     let direct = sweep::run_sweep(&grid_3x2x4(), 1).expect("direct sweep");
@@ -537,4 +541,144 @@ fn quarantined_shard_checkpoint_is_ignored_and_healed_identically() {
         "quarantine-healed artifact diverged from the single-process run"
     );
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// THE acceptance drill of the multi-host plane: a 2-"host" launch
+/// (both local, same machine — the ssh seam shares this exact code
+/// path) loses host `h1` wholesale at the first supervision poll. The
+/// chaos spec kills h1's children and silences its lease; the
+/// supervisor must detect the expiry, declare the host lost exactly
+/// once, reassign its shards to the survivor under the normal retry
+/// budget, and still merge to the byte-identical single-process
+/// artifact. The watchdog turns the loss into `alert_host_lost` in
+/// the campaign event log.
+#[test]
+#[cfg(unix)]
+fn whole_host_loss_drill_heals_to_identical_bytes() {
+    let mut cfg = LaunchConfig::new(grid_3x2x4());
+    cfg.procs = 4;
+    cfg.workers_per_proc = 1;
+    cfg.poll_ms = 10;
+    cfg.hosts = vec!["local".into(), "local".into()];
+    cfg.lease_timeout_ms = 500;
+    let dir = tmp_dir("host-loss");
+    let mut opts = quiet_opts(&dir);
+    opts.fault_plan = Some(FaultPlan {
+        host_loss: vec![orchestrator::chaos::HostLossSpec { at_poll: 1, host: 1 }],
+        ..FaultPlan::default()
+    });
+    let launched = orchestrator::launch(&cfg, &opts).expect("launch");
+
+    // the loss was declared exactly once, for h1
+    let lost: Vec<_> = launched
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            ShardEventKind::HostLost { host } => Some(host.clone()),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(lost, vec!["h1".to_string()], "exactly one loss, of h1");
+
+    // h1's in-flight shards were chaos-killed and moved to the survivor
+    let chaos_kills: u32 = launched.outcomes.iter().map(|o| o.chaos_kills).sum();
+    assert!(chaos_kills >= 1, "the strike must land on a running child");
+    assert!(
+        launched.events.iter().any(|e| matches!(&e.kind,
+            ShardEventKind::Reassigned { from_host, to_host }
+                if from_host == "h1" && to_host == "h0")),
+        "a lost shard must be reassigned to the survivor: {:?}",
+        launched.events
+    );
+    assert!(launched.outcomes.iter().all(|o| o.completed));
+    assert!(launched.merge.audit.complete());
+
+    // THE acceptance bytes, across a machine loss
+    let direct = sweep::run_sweep(&grid_3x2x4(), 1).expect("direct sweep");
+    assert_eq!(
+        launched.merge.report.to_json().to_string_pretty(),
+        direct.to_json().to_string_pretty(),
+        "host-loss drill diverged from the single-process run"
+    );
+
+    // the event log narrates the loss and the watchdog escalates it
+    // exactly once
+    let (events, torn) =
+        memfine::obs::read_events(&dir.join("events.jsonl")).expect("read event log");
+    assert_eq!(torn, 0);
+    let kinds = memfine::obs::summarize(&events);
+    assert_eq!(kinds.get("shard_host_lost"), Some(&1), "{kinds:?}");
+    assert_eq!(kinds.get("alert_host_lost"), Some(&1), "{kinds:?}");
+    assert!(
+        kinds.get("shard_reassigned").copied().unwrap_or(0) >= 1,
+        "{kinds:?}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The cross-campaign tier of the trace cache: two sequential
+/// campaigns over the same grid share one global `--trace-cache`
+/// root. The second campaign must regenerate nothing — every
+/// `cell_eval` it emits is a cache hit served through the global
+/// tier — and both artifacts must be byte-identical to each other
+/// and to the single-process run.
+#[test]
+fn warm_global_trace_cache_serves_a_second_campaign_without_regeneration() {
+    let mut cfg = LaunchConfig::new(grid_3x2x4());
+    cfg.procs = 2;
+    cfg.workers_per_proc = 2;
+    cfg.poll_ms = 20;
+    let global = tmp_dir("warm-global-root");
+    let dir_a = tmp_dir("warm-a");
+    let dir_b = tmp_dir("warm-b");
+
+    let mut opts_a = quiet_opts(&dir_a);
+    opts_a.trace_cache_global = Some(global.clone());
+    let a = orchestrator::launch(&cfg, &opts_a).expect("launch a");
+
+    // the first campaign populated the shared root with content-keyed
+    // entries (best-effort writes, but on a healthy disk they land)
+    let warmed = std::fs::read_dir(&global)
+        .expect("global root exists")
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            e.path()
+                .extension()
+                .is_some_and(|x| x == "trace")
+        })
+        .count();
+    assert!(warmed >= 1, "campaign A must warm the global tier");
+
+    let mut opts_b = quiet_opts(&dir_b);
+    opts_b.trace_cache_global = Some(global.clone());
+    let b = orchestrator::launch(&cfg, &opts_b).expect("launch b");
+
+    // zero regenerations: every cell evaluation in campaign B was
+    // served from cache (its own campaign tier is cold, so the hits
+    // necessarily came through the global tier)
+    let (events, _) =
+        memfine::obs::read_events(&dir_b.join("events.jsonl")).expect("read event log");
+    let cell_evals: Vec<_> =
+        events.iter().filter(|e| e.kind == "cell_eval").collect();
+    assert!(!cell_evals.is_empty());
+    for ev in &cell_evals {
+        assert_eq!(
+            ev.field_str("cache"),
+            Some("hit"),
+            "warm-cache campaign must not regenerate: {:?}",
+            ev.fields.to_string_compact()
+        );
+    }
+
+    let direct = sweep::run_sweep(&grid_3x2x4(), 1).expect("direct sweep");
+    for (name, launched) in [("a", &a), ("b", &b)] {
+        assert_eq!(
+            launched.merge.report.to_json().to_string_pretty(),
+            direct.to_json().to_string_pretty(),
+            "campaign {name} diverged from the single-process run"
+        );
+    }
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+    std::fs::remove_dir_all(&global).ok();
 }
